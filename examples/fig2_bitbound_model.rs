@@ -1,0 +1,97 @@
+//! Regenerate paper **Fig. 2**: BitBound modeling.
+//!
+//!   2a — database bit-count distribution + Gaussian fit (Eq. 3)
+//!   2b — pruned search space at Sc = 0.3
+//!   2c — pruned search space at Sc = 0.8
+//!   2d — speedup vs similarity cutoff (model and measured)
+//!
+//! ```text
+//! cargo run --release --example fig2_bitbound_model -- [--n-db 200000]
+//! ```
+
+use molfpga::fingerprint::{ChemblModel, Database};
+use molfpga::index::BitBoundIndex;
+use molfpga::util::cli::Args;
+use molfpga::util::minijson::{append_jsonl, Json};
+use molfpga::util::stats::Histogram;
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let n = args.get_or("n-db", 200_000usize)?;
+    let seed = args.get_or("seed", 42u64)?;
+    let db = Arc::new(Database::synthesize(n, &ChemblModel::default(), seed));
+    let out = std::path::PathBuf::from("results/fig2.jsonl");
+    let _ = std::fs::remove_file(&out);
+
+    // --- 2a: popcount histogram + Gaussian fit ---
+    let idx = BitBoundIndex::new(db.clone(), 0.8);
+    let g = idx.popcount_model();
+    println!("Fig 2a: bit-count distribution, Gaussian fit mu={:.1} sigma={:.1}", g.mu, g.sigma);
+    let mut h = Histogram::new(0.0, 160.0, 32);
+    for &c in &db.counts {
+        h.add(c as f64);
+    }
+    let centers = h.centers();
+    let density = h.density();
+    println!("{:>8} | {:>10} | {:>10}", "popcnt", "measured", "gaussian");
+    for (c, d) in centers.iter().zip(&density) {
+        let bar = "#".repeat((d * 400.0) as usize);
+        println!("{c:>8.0} | {d:>10.5} | {:>10.5}  {bar}", g.pdf(*c));
+        append_jsonl(
+            &out,
+            &Json::obj()
+                .set("experiment", "fig2a")
+                .set("popcount", *c)
+                .set("density", *d)
+                .set("gaussian_pdf", g.pdf(*c)),
+        )?;
+    }
+
+    // --- 2b / 2c: pruned search space at Sc = 0.3 and 0.8 ---
+    let queries = db.sample_queries(200, seed ^ 1);
+    for sc in [0.3, 0.8] {
+        let bb = BitBoundIndex::new(db.clone(), sc);
+        let kept = bb.mean_kept_fraction(&queries);
+        let modeled: f64 = queries
+            .iter()
+            .map(|q| bb.modeled_kept_fraction(q.count_ones()))
+            .sum::<f64>()
+            / queries.len() as f64;
+        println!(
+            "\nFig 2{}: Sc={sc} → search space kept {:.1}% measured, {:.1}% modeled (pruned {:.1}%)",
+            if sc == 0.3 { 'b' } else { 'c' },
+            kept * 100.0,
+            modeled * 100.0,
+            (1.0 - kept) * 100.0
+        );
+        append_jsonl(
+            &out,
+            &Json::obj()
+                .set("experiment", "fig2bc")
+                .set("cutoff", sc)
+                .set("kept_measured", kept)
+                .set("kept_modeled", modeled),
+        )?;
+    }
+
+    // --- 2d: speedup vs cutoff ---
+    println!("\nFig 2d: BitBound speedup vs similarity cutoff");
+    println!("{:>6} | {:>14} | {:>14}", "Sc", "speedup(model)", "speedup(meas)");
+    for sc in [0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9] {
+        let bb = BitBoundIndex::new(db.clone(), sc);
+        let model_speedup = bb.modeled_speedup();
+        let measured_speedup = 1.0 / bb.mean_kept_fraction(&queries).max(1e-9);
+        println!("{sc:>6.1} | {model_speedup:>14.2} | {measured_speedup:>14.2}");
+        append_jsonl(
+            &out,
+            &Json::obj()
+                .set("experiment", "fig2d")
+                .set("cutoff", sc)
+                .set("speedup_model", model_speedup)
+                .set("speedup_measured", measured_speedup),
+        )?;
+    }
+    println!("\n[fig2] wrote {}", out.display());
+    Ok(())
+}

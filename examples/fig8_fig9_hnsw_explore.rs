@@ -1,0 +1,104 @@
+//! Regenerate paper **Fig. 8** (FPGA HNSW QPS vs M and ef) and **Fig. 9**
+//! (design-space exploration: QPS vs recall scatter for the grid search).
+//!
+//! The per-query work profile (distance evaluations, hops) is *measured*
+//! by running our HNSW on the synthetic database at each grid point, then
+//! extrapolated to Chembl scale (log-ratio) and priced by the U280 model.
+//!
+//! Paper grid: M ∈ {5,10,…,50}, ef ∈ {20,40,…,200}. Default here is a
+//! subsampled grid sized for a single-core box; pass --full-grid for the
+//! paper's.
+//!
+//! ```text
+//! cargo run --release --example fig8_fig9_hnsw_explore -- [--n-db 20000]
+//! ```
+
+use molfpga::fingerprint::{ChemblModel, Database};
+use molfpga::util::cli::Args;
+use molfpga::util::minijson::{append_jsonl, Json};
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let n = args.get_or("n-db", 20_000usize)?;
+    let nq = args.get_or("queries", 40usize)?;
+    let k = args.get_or("k", 20usize)?;
+    let seed = args.get_or("seed", 42u64)?;
+    let (ms, efs): (Vec<usize>, Vec<usize>) = if args.flag("full-grid") {
+        ((1..=10).map(|i| i * 5).collect(), (1..=10).map(|i| i * 20).collect())
+    } else {
+        (
+            args.get_list("m", &[5usize, 10, 20, 50])?,
+            args.get_list("ef", &[20usize, 60, 120, 200])?,
+        )
+    };
+
+    eprintln!("[fig8-9] db n={n}, grid M={ms:?} × ef={efs:?} ({} builds)…", ms.len());
+    let db = Arc::new(Database::synthesize(n, &ChemblModel::default(), seed));
+    let queries = db.sample_queries(nq, seed ^ 3);
+    let points = molfpga::exp::hnsw_grid(&db, &queries, k, &ms, &efs);
+    let out = std::path::PathBuf::from("results/fig8_fig9.jsonl");
+    let _ = std::fs::remove_file(&out);
+
+    // --- Fig 8: QPS surface ---
+    println!("Fig 8: modeled FPGA HNSW QPS (rows: M, cols: ef)");
+    print!("{:>4}", "M");
+    for ef in &efs {
+        print!(" | ef={ef:<9}");
+    }
+    println!();
+    for &m in &ms {
+        print!("{m:>4}");
+        for &ef in &efs {
+            let p = points.iter().find(|p| p.m == m && p.ef == ef).unwrap();
+            print!(" | {:>12.0}", p.fpga_qps);
+        }
+        println!();
+    }
+
+    // --- Fig 9: QPS vs recall scatter ---
+    println!("\nFig 9: QPS vs recall (grid search){}", "");
+    println!(
+        "{:>4} {:>5} | {:>8} | {:>12} | {:>12} | {:>10} {:>8}",
+        "M", "ef", "recall", "fpga QPS", "cpu QPS", "dist evals", "hops"
+    );
+    for p in &points {
+        println!(
+            "{:>4} {:>5} | {:>8.3} | {:>12.0} | {:>12.0} | {:>10.0} {:>8.1}",
+            p.m, p.ef, p.recall, p.fpga_qps, p.cpu_qps, p.distance_evals, p.hops
+        );
+        append_jsonl(
+            &out,
+            &Json::obj()
+                .set("experiment", "fig8_fig9")
+                .set("M", p.m)
+                .set("ef", p.ef)
+                .set("recall", p.recall)
+                .set("fpga_qps", p.fpga_qps)
+                .set("cpu_qps", p.cpu_qps)
+                .set("distance_evals", p.distance_evals)
+                .set("hops", p.hops)
+                .set("engines", p.engines)
+                .set("engine_lut", p.engine_lut),
+        )?;
+    }
+
+    // Pareto frontier of the grid (the Fig. 9 envelope).
+    let pts: Vec<_> = points
+        .iter()
+        .map(|p| {
+            molfpga::hwmodel::ParetoPoint::new(
+                p.recall,
+                p.fpga_qps,
+                format!("M={} ef={}", p.m, p.ef),
+            )
+        })
+        .collect();
+    println!("\nPareto frontier of the grid:");
+    for f in molfpga::hwmodel::pareto_frontier(&pts) {
+        println!("  recall {:.3} → {:>9.0} QPS  ({})", f.recall, f.qps, f.label);
+    }
+    println!("\npaper anchor: H4 = 103385 QPS @ recall 0.92");
+    println!("[fig8-9] wrote {}", out.display());
+    Ok(())
+}

@@ -1,0 +1,90 @@
+//! Quickstart: the full chemistry → fingerprint → search path on the
+//! bundled drug set plus a synthetic Chembl-like database.
+//!
+//! ```text
+//! cargo run --release --example quickstart [-- --n-db 50000]
+//! ```
+
+use molfpga::fingerprint::{dataset::DRUG_SMILES, morgan::MorganGenerator, ChemblModel, Database};
+use molfpga::index::{BruteForceIndex, SearchIndex};
+use molfpga::util::cli::Args;
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+
+    // 1. Chemistry path: parse real drug SMILES with our own parser, build
+    //    Morgan fingerprints (the RDKit substitute), search for aspirin
+    //    analogues among the bundled drugs.
+    println!("== bundled drugs: aspirin nearest neighbours (Morgan-1024, Tanimoto) ==");
+    let drugs = Arc::new(Database::from_bundled_drugs());
+    let gen = MorganGenerator::default();
+    let aspirin =
+        gen.fingerprint_smiles("CC(=O)Oc1ccccc1C(=O)O").map_err(anyhow::Error::msg)?;
+    let brute = BruteForceIndex::new(drugs.clone());
+    for (rank, hit) in brute.search(&aspirin, 6).iter().enumerate() {
+        println!(
+            "  {}. {:<18} tanimoto {:.3}",
+            rank + 1,
+            DRUG_SMILES[hit.id as usize].0,
+            hit.score
+        );
+    }
+
+    // 2. Scale path: synthetic Chembl-like database, exhaustive vs
+    //    BitBound & folding vs HNSW on the same query.
+    let n = args.get_or("n-db", 50_000usize)?;
+    println!("\n== synthetic Chembl-like database (n = {n}) ==");
+    let db = Arc::new(Database::synthesize(n, &ChemblModel::default(), 42));
+    let query = db.sample_queries(1, 7)[0].clone();
+
+    let t0 = std::time::Instant::now();
+    let exact = BruteForceIndex::new(db.clone()).search(&query, 10);
+    println!(
+        "brute force      : top hit row {} @ {:.4}  ({:?})",
+        exact[0].id,
+        exact[0].score,
+        t0.elapsed()
+    );
+
+    let t0 = std::time::Instant::now();
+    let idx = molfpga::index::BitBoundFoldingIndex::new(db.clone(), 4, 0.8);
+    let fast = idx.search(&query, 10);
+    println!(
+        "bitbound+folding : top hit row {} @ {:.4}  ({:?} incl. index build)",
+        fast[0].id,
+        fast[0].score,
+        t0.elapsed()
+    );
+
+    let t0 = std::time::Instant::now();
+    let graph = molfpga::coordinator::backend::NativeHnsw::build_graph(&db, 8, 64, 1);
+    let built = t0.elapsed();
+    let mut searcher = molfpga::hnsw::Searcher::new(&graph, &db);
+    let t0 = std::time::Instant::now();
+    let (approx, stats) = searcher.knn(&query, 10, 64);
+    println!(
+        "hnsw             : top hit row {} @ {:.4}  ({:?} search, {built:?} build, {} dist evals)",
+        approx[0].id,
+        approx[0].score,
+        t0.elapsed(),
+        stats.distance_evals
+    );
+
+    // 3. The FPGA hardware model's view of the same workload.
+    println!("\n== modeled Alveo U280 throughput at Chembl scale (1.9M) ==");
+    let bf = molfpga::hwmodel::BruteForceDesign::default();
+    println!(
+        "  brute force      : {:>8.0} QPS  ({} kernels @ 450 MHz, paper: 1638)",
+        bf.qps(1_900_000),
+        bf.kernels()
+    );
+    let bb = molfpga::index::BitBoundIndex::new(db.clone(), 0.8);
+    let kept = bb.mean_kept_fraction(&db.sample_queries(50, 3));
+    let fd = molfpga::hwmodel::FoldingDesign::new(8, 20, kept);
+    println!(
+        "  bitbound+folding : {:>8.0} QPS  (m=8, Sc=0.8, kept {kept:.2}, paper: 25403)",
+        fd.qps(1_900_000)
+    );
+    Ok(())
+}

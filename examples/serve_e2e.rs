@@ -1,0 +1,160 @@
+//! End-to-end serving driver: proves all three layers compose on a real
+//! small workload.
+//!
+//! Starts the full coordinator stack (router → batcher → engine pools)
+//! over a synthetic Chembl-like database with BOTH engine families — the
+//! exhaustive pool running the **PJRT AOT artifacts** (Layer 1/2 compiled
+//! into HLO, executed from rust; pass --native to swap in host popcount)
+//! and the HNSW pool — plus the TCP server. Then drives a batched client
+//! workload over TCP and reports throughput, latency percentiles, and
+//! recall vs brute-force ground truth. Results are recorded in
+//! EXPERIMENTS.md §E2E.
+//!
+//! ```text
+//! cargo run --release --example serve_e2e -- \
+//!     [--n-db 50000] [--requests 300] [--clients 4] [--native] [--m 4]
+//! ```
+
+use molfpga::coordinator::backend::{NativeExhaustive, NativeHnsw, PjrtExhaustive};
+use molfpga::coordinator::batcher::BatchPolicy;
+use molfpga::coordinator::metrics::Metrics;
+use molfpga::coordinator::server::{Client, Server};
+use molfpga::coordinator::{EnginePool, Router};
+use molfpga::fingerprint::{ChemblModel, Database};
+use molfpga::index::{recall_at_k, BruteForceIndex, SearchIndex};
+use molfpga::topk::Scored;
+use molfpga::util::cli::Args;
+use molfpga::util::minijson::{append_jsonl, Json};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let n = args.get_or("n-db", 50_000usize)?;
+    let requests = args.get_or("requests", 300usize)?;
+    let clients = args.get_or("clients", 4usize)?;
+    let k = args.get_or("k", 10usize)?;
+    let m = args.get_or("m", 4usize)?;
+    let cutoff = args.get_or("cutoff", 0.8)?;
+    let native = args.flag("native");
+    let seed = args.get_or("seed", 42u64)?;
+
+    let use_pjrt = !native
+        && molfpga::runtime::ArtifactSet::default_dir().join("manifest.txt").exists();
+    eprintln!(
+        "[e2e] db n={n}, {requests} requests × {clients} clients, exhaustive backend: {}",
+        if use_pjrt { "pjrt (AOT artifacts)" } else { "native popcount" }
+    );
+
+    let db = Arc::new(Database::synthesize(n, &ChemblModel::default(), seed));
+    let metrics = Arc::new(Metrics::new());
+
+    // Exhaustive pool (PJRT three-layer path by default).
+    let dbc = db.clone();
+    let ex = Arc::new(EnginePool::new("exhaustive", 1, 64, metrics.clone(), move |_| {
+        if use_pjrt {
+            PjrtExhaustive::factory(dbc.clone(), m, cutoff)
+        } else {
+            NativeExhaustive::factory(dbc.clone(), m, cutoff)
+        }
+    }));
+    // HNSW pool.
+    eprintln!("[e2e] building HNSW graph…");
+    let graph = NativeHnsw::build_graph(&db, 8, 96, 7);
+    let dbc2 = db.clone();
+    let ap = Arc::new(EnginePool::new("approximate", 1, 64, metrics.clone(), move |_| {
+        NativeHnsw::factory(dbc2.clone(), graph.clone(), 64)
+    }));
+    let router = Arc::new(Router::new(
+        ex,
+        ap,
+        BatchPolicy { max_batch: 16, max_wait: Duration::from_millis(1) },
+        metrics.clone(),
+    ));
+
+    // TCP server on an ephemeral port.
+    let server = Arc::new(Server::new(router));
+    let stop = server.stop_handle();
+    let (addr_tx, addr_rx) = std::sync::mpsc::channel();
+    let srv = server.clone();
+    let server_thread = std::thread::spawn(move || {
+        srv.serve("127.0.0.1:0", move |a| {
+            let _ = addr_tx.send(a);
+        })
+        .unwrap();
+    });
+    let addr = addr_rx.recv_timeout(Duration::from_secs(10))?;
+    eprintln!("[e2e] server on {addr}");
+
+    // Ground truth for recall measurement.
+    let queries = db.sample_queries(requests, seed ^ 9);
+    let brute = BruteForceIndex::new(db.clone());
+    eprintln!("[e2e] computing ground truth…");
+    let truth: Vec<Vec<Scored>> = queries.iter().map(|q| brute.search(q, k)).collect();
+
+    // Fire the workload: `clients` threads, half exhaustive, half HNSW.
+    eprintln!("[e2e] firing workload…");
+    let queries = Arc::new(queries);
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let queries = queries.clone();
+        let mode = if c % 2 == 0 { "exact" } else { "hnsw" };
+        handles.push(std::thread::spawn(move || -> anyhow::Result<Vec<(usize, Vec<(u64, f64)>)>> {
+            let mut client = Client::connect(addr)?;
+            let mut out = Vec::new();
+            let mut i = c;
+            while i < queries.len() {
+                let hits = client.search(&queries[i], 10, mode)?;
+                out.push((i, hits));
+                i += clients;
+            }
+            Ok(out)
+        }));
+    }
+    let mut results: Vec<(usize, Vec<(u64, f64)>)> = Vec::new();
+    for h in handles {
+        results.extend(h.join().expect("client thread")?);
+    }
+    let wall = t0.elapsed();
+
+    // Recall.
+    let mut rec_sum = 0.0;
+    for (qi, hits) in &results {
+        let got: Vec<Scored> = hits.iter().map(|&(id, s)| Scored::new(s, id)).collect();
+        rec_sum += recall_at_k(&got, &truth[*qi], k);
+    }
+    let recall = rec_sum / results.len() as f64;
+    let qps = results.len() as f64 / wall.as_secs_f64();
+    let snap = metrics.snapshot();
+
+    println!("\n== end-to-end serving results ==");
+    println!("database rows       : {n}");
+    println!("requests served     : {} ({} clients over TCP)", results.len(), clients);
+    println!("exhaustive backend  : {}", if use_pjrt { "pjrt-aot" } else { "native" });
+    println!("wall time           : {:.2}s", wall.as_secs_f64());
+    println!("throughput          : {qps:.1} QPS");
+    println!("mean recall@{k}     : {recall:.3} (mixed exact+hnsw traffic)");
+    println!("server metrics      : {}", snap.report());
+
+    append_jsonl(
+        &std::path::PathBuf::from("results/serve_e2e.jsonl"),
+        &Json::obj()
+            .set("experiment", "serve_e2e")
+            .set("n", n)
+            .set("requests", results.len())
+            .set("clients", clients)
+            .set("backend", if use_pjrt { "pjrt" } else { "native" })
+            .set("wall_s", wall.as_secs_f64())
+            .set("qps", qps)
+            .set("recall", recall)
+            .set("p50_ms", snap.p50_s * 1e3)
+            .set("p99_ms", snap.p99_s * 1e3),
+    )?;
+
+    stop.store(true, Ordering::Relaxed);
+    let _ = server_thread.join();
+    println!("[e2e] wrote results/serve_e2e.jsonl");
+    Ok(())
+}

@@ -1,0 +1,6 @@
+# Layer-1 Pallas kernels: the paper's FPGA compute modules re-thought for a
+# tiled vector unit (see DESIGN.md "Hardware adaptation"):
+#   tanimoto.py — TFC module (2): popcount Tanimoto over a DB tile
+#   bitcount.py — BitCnt module (1): per-row popcount
+#   fold.py     — modulo-OR sectional compression (Fig. 3 scheme 1)
+#   ref.py      — pure-jnp oracles every kernel is pytest-verified against

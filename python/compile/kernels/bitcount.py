@@ -1,0 +1,40 @@
+"""BitCnt Pallas kernel — paper module (1).
+
+Per-row popcount of a fingerprint tile. The FPGA module is a tree of
+LUT6-packed 6:3 compressors whose resource usage "scales linearly with the
+binary fingerprint length"; the vector version is a population_count and a
+row-sum per block. Used at index-build time (the BitBound index needs every
+row's popcount) and exported as its own artifact so the rust runtime can
+build indexes through PJRT as well as natively.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+BLOCK_ROWS = 512
+
+
+def _bitcnt_kernel(rows_ref, o_ref):
+    rows = rows_ref[...]
+    o_ref[...] = jnp.sum(lax.population_count(rows), axis=1).astype(jnp.uint32)[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def popcount_rows(rows, *, block_rows=BLOCK_ROWS):
+    """rows: (T, W) uint32, T % block_rows == 0 -> (T,) uint32."""
+    t, w = rows.shape
+    block_rows = min(block_rows, t)
+    assert t % block_rows == 0
+    out = pl.pallas_call(
+        _bitcnt_kernel,
+        grid=(t // block_rows,),
+        in_specs=[pl.BlockSpec((block_rows, w), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_rows, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, 1), jnp.uint32),
+        interpret=True,
+    )(rows)
+    return out[:, 0]

@@ -1,0 +1,47 @@
+"""Sectional modulo-OR folding Pallas kernel — paper Fig. 3 scheme 1.
+
+Compresses a tile of fingerprints from W to W/m uint32 words by OR-ing the
+m word-aligned sections together (the higher-accuracy scheme Table I
+selects). Exported per folding level so the rust runtime can compress DB
+tiles on-device; the rust `Fingerprint::fold_sectional_fast` is the native
+equivalent and the integration tests assert bit-identical output.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_ROWS = 512
+
+
+def _fold_kernel(rows_ref, o_ref, *, m: int):
+    rows = rows_ref[...]  # (BLOCK_ROWS, W)
+    n, w = rows.shape
+    wout = w // m
+    sections = rows.reshape(n, m, wout)
+    out = sections[:, 0, :]
+    for s in range(1, m):
+        out = jnp.bitwise_or(out, sections[:, s, :])
+    o_ref[...] = out
+
+
+@functools.partial(jax.jit, static_argnames=("m", "block_rows"))
+def fold_sectional(rows, *, m: int, block_rows=BLOCK_ROWS):
+    """rows: (T, W) uint32 -> (T, W // m) uint32. m must divide W."""
+    t, w = rows.shape
+    assert w % m == 0, f"m={m} must divide {w}"
+    block_rows = min(block_rows, t)
+    assert t % block_rows == 0
+    if m == 1:
+        return rows
+    wout = w // m
+    return pl.pallas_call(
+        functools.partial(_fold_kernel, m=m),
+        grid=(t // block_rows,),
+        in_specs=[pl.BlockSpec((block_rows, w), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_rows, wout), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, wout), jnp.uint32),
+        interpret=True,
+    )(rows)

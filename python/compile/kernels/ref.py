@@ -1,0 +1,79 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the ground truth the L1 kernels are verified against (pytest +
+hypothesis in python/tests/). They use only plain jax.numpy ops — no Pallas —
+and implement the paper's math directly:
+
+  Eq. 1   S(A, B) = |A & B| / |A | B|  =  inter / (cntA + cntB - inter)
+  Fig. 3  sectional modulo-OR folding (scheme 1)
+  mod (2) 12-bit fixed-point score quantization
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def popcount_rows(rows: jnp.ndarray) -> jnp.ndarray:
+    """BitCnt (1): per-row popcount of uint32 words. rows: (N, W) uint32 ->
+    (N,) uint32."""
+    return jnp.sum(lax.population_count(rows), axis=1).astype(jnp.uint32)
+
+
+def tanimoto_scores(
+    query: jnp.ndarray,
+    db: jnp.ndarray,
+    query_count: jnp.ndarray,
+    db_counts: jnp.ndarray,
+) -> jnp.ndarray:
+    """TFC (2): Tanimoto similarity of one query against a DB tile.
+
+    query: (1, W) uint32; db: (T, W) uint32; query_count: (1, 1) uint32;
+    db_counts: (T, 1) uint32 -> (T,) float32.
+
+    Uses the one-pass identity union = cntA + cntB - inter (so the kernel
+    popcounts only the AND, not the OR — the same trick the FPGA TFC module
+    uses to halve its popcount adders). Zero-union pairs score 0 (chemfp
+    convention, matches the rust implementation).
+    """
+    inter = jnp.sum(lax.population_count(jnp.bitwise_and(db, query)), axis=1)
+    union = query_count[0, 0] + db_counts[:, 0] - inter
+    scores = inter.astype(jnp.float32) / jnp.maximum(union, 1).astype(jnp.float32)
+    return jnp.where(union == 0, 0.0, scores)
+
+
+def fold_sectional(rows: jnp.ndarray, m: int) -> jnp.ndarray:
+    """Fig. 3 scheme 1: OR the m sections of W/m words together.
+
+    rows: (N, W) uint32, m divides W -> (N, W // m) uint32.
+
+    Section s of a row is words [s*(W/m), (s+1)*(W/m)); the folded row is
+    the bitwise OR across sections. (Word-aligned sections — the same
+    layout `Fingerprint::fold_sectional_fast` uses on the rust side.)
+    """
+    n, w = rows.shape
+    assert w % m == 0, f"m={m} must divide word count {w}"
+    wout = w // m
+    sections = rows.reshape(n, m, wout)
+    out = sections[:, 0, :]
+    for s in range(1, m):
+        out = jnp.bitwise_or(out, sections[:, s, :])
+    return out
+
+
+def quantize12(scores: jnp.ndarray) -> jnp.ndarray:
+    """12-bit fixed-point quantization of [0,1] scores (module (2) stores
+    Tanimoto factors as 12-bit fixed point)."""
+    return jnp.round(scores * 4095.0).astype(jnp.uint16)
+
+
+def topk_sorted(scores: jnp.ndarray, k: int):
+    """Descending top-k via sort (NOT lax.top_k: jax >= 0.8 lowers top_k to
+    an HLO `topk` instruction whose `largest` attribute the xla_extension
+    0.5.1 text parser rejects — see DESIGN.md and /opt/xla-example).
+
+    Returns (values f32[k], indices s32[k]).
+    """
+    t = scores.shape[0]
+    idx = lax.iota(jnp.int32, t)
+    neg_sorted, idx_sorted = lax.sort_key_val(-scores, idx)
+    return -neg_sorted[:k], idx_sorted[:k]

@@ -1,0 +1,83 @@
+"""TFC (Tanimoto Factor Calculation) Pallas kernel — paper module (2).
+
+Hardware adaptation (DESIGN.md section 3): the FPGA TFC is a fixed-function
+popcount + divide pipeline fed one fingerprint per cycle from HBM. On a
+tiled vector machine the same schedule becomes:
+
+  * the DB tile (T x W uint32 words) is walked by the Pallas grid in
+    row-blocks of BLOCK_ROWS — each grid step's HBM->VMEM copy overlaps the
+    previous block's compute (the paper's "on-the-fly" communication/
+    computation pipelining, expressed as a BlockSpec instead of an AXI
+    burst FSM);
+  * the query (1 x W) and its popcount are broadcast into every block
+    (analogous to the query registers the FPGA engine latches per search);
+  * popcount is `lax.population_count` on the VPU — this workload is pure
+    bitwise/vector math, so the MXU plays no role (documented, not forced);
+  * union comes from the one-pass identity cntA + cntB - inter, halving
+    popcount work exactly like the FPGA module does.
+
+interpret=True everywhere: real TPU lowering emits Mosaic custom-calls the
+CPU PJRT plugin cannot execute; the interpret path lowers to plain HLO so
+the AOT artifact runs on the rust CPU client (see /opt/xla-example README).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+# Rows per grid step. 512 rows x 32 words x 4 B = 64 KiB per block: small
+# enough to double-buffer in VMEM-class scratch alongside outputs, large
+# enough that per-step overhead amortizes (see EXPERIMENTS.md section Perf
+# for the sweep that chose it).
+BLOCK_ROWS = 512
+
+
+def _tfc_kernel(q_ref, qcnt_ref, db_ref, dbcnt_ref, o_ref):
+    """One row-block: scores for BLOCK_ROWS fingerprints."""
+    q = q_ref[...]  # (1, W) uint32, broadcast against the block
+    db = db_ref[...]  # (BLOCK_ROWS, W) uint32
+    inter = jnp.sum(lax.population_count(jnp.bitwise_and(db, q)), axis=1)
+    union = qcnt_ref[0, 0] + dbcnt_ref[...][:, 0] - inter
+    score = inter.astype(jnp.float32) / jnp.maximum(union, 1).astype(jnp.float32)
+    score = jnp.where(union == 0, 0.0, score)
+    o_ref[...] = score[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def tanimoto_scores(query, db, query_count, db_counts, *, block_rows=BLOCK_ROWS):
+    """Score one query against a DB tile.
+
+    query: (1, W) uint32; db: (T, W) uint32 with T % block_rows == 0;
+    query_count: (1, 1) uint32; db_counts: (T, 1) uint32 -> (T,) float32.
+    """
+    t, w = db.shape
+    block_rows = min(block_rows, t)
+    assert t % block_rows == 0, f"tile rows {t} must be a multiple of {block_rows}"
+    grid = (t // block_rows,)
+    out = pl.pallas_call(
+        _tfc_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, w), lambda i: (0, 0)),  # query: re-broadcast
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),  # query count
+            pl.BlockSpec((block_rows, w), lambda i: (i, 0)),  # DB walk
+            pl.BlockSpec((block_rows, 1), lambda i: (i, 0)),  # counts walk
+        ],
+        out_specs=pl.BlockSpec((block_rows, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, 1), jnp.float32),
+        interpret=True,
+    )(query, query_count, db, db_counts)
+    return out[:, 0]
+
+
+def vmem_bytes(block_rows: int, words: int) -> int:
+    """Static VMEM footprint estimate for one grid step (inputs + output),
+    used by the L1 perf analysis in EXPERIMENTS.md section Perf."""
+    q = words * 4 + 4
+    db = block_rows * words * 4
+    cnt = block_rows * 4
+    out = block_rows * 4
+    return q + db + cnt + out

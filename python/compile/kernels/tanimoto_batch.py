@@ -1,0 +1,57 @@
+"""Batched-query TFC Pallas kernel: Q queries against one DB tile.
+
+The paper's engine serves one query per database pass; GPUsimilarity (its
+GPU comparator) amortizes memory traffic by batching queries per pass —
+every fetched fingerprint is scored against the whole query batch while it
+sits in on-chip memory. Same insight here: the tile is read from HBM once
+per *batch* instead of once per query, and on the CPU-PJRT testbed the
+per-dispatch overhead is amortized Q ways (EXPERIMENTS.md section Perf).
+
+Shapes: queries (Q, W), db (T, W), query_counts (Q, 1), db_counts (T, 1)
+-> scores (Q, T) float32.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+BLOCK_ROWS = 512
+
+
+def _tfc_batch_kernel(q_ref, qcnt_ref, db_ref, dbcnt_ref, o_ref):
+    qs = q_ref[...]  # (Q, W)
+    db = db_ref[...]  # (B, W)
+    # (Q, B, W) intersection popcounts, reduced over words. Q and B are
+    # small (8 x 512); the intermediate stays comfortably in VMEM class.
+    inter = jnp.sum(
+        lax.population_count(jnp.bitwise_and(qs[:, None, :], db[None, :, :])), axis=2
+    )
+    union = qcnt_ref[...][:, :1] + dbcnt_ref[...][None, :, 0] - inter
+    score = inter.astype(jnp.float32) / jnp.maximum(union, 1).astype(jnp.float32)
+    o_ref[...] = jnp.where(union == 0, 0.0, score)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def tanimoto_scores_batch(queries, db, query_counts, db_counts, *, block_rows=BLOCK_ROWS):
+    """Score a query batch against a DB tile. Returns (Q, T) float32."""
+    qn, w = queries.shape
+    t, w2 = db.shape
+    assert w == w2
+    block_rows = min(block_rows, t)
+    assert t % block_rows == 0
+    return pl.pallas_call(
+        _tfc_batch_kernel,
+        grid=(t // block_rows,),
+        in_specs=[
+            pl.BlockSpec((qn, w), lambda i: (0, 0)),
+            pl.BlockSpec((qn, 1), lambda i: (0, 0)),
+            pl.BlockSpec((block_rows, w), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((qn, block_rows), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((qn, t), jnp.float32),
+        interpret=True,
+    )(queries, query_counts, db, db_counts)

@@ -1,0 +1,157 @@
+"""Layer-2 JAX compute graphs — the paper's per-tile query dataflow.
+
+Each function here is one AOT artifact: a fused graph combining the L1
+Pallas kernels with the on-graph top-k, mirroring the FPGA engine's fusion
+of TFC (2) and top-k merge (3) into one cascaded pipeline (the design
+choice that separates the paper from [11], which round-trips scores
+through memory). Lowered once by aot.py; never imported at runtime.
+
+Top-k is sort-based (`ref.topk_sorted`), NOT `lax.top_k` — jax >= 0.8's
+`topk` HLO instruction does not parse under xla_extension 0.5.1.
+
+Shape conventions (match `runtime::artifacts` on the rust side):
+  W    full fingerprint words = 32 (1024 bits / 32)
+  W_m  folded words = W / m
+  T    tile rows (default 8192)
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import bitcount, fold, ref, tanimoto, tanimoto_batch
+
+FP_WORDS = 32
+TILE = 8192
+
+
+def k_r1(k: int, m: int) -> int:
+    """Stage-1 candidate count k_r1 = k * m * log2(2m) (paper section III-B)."""
+    if m <= 1:
+        return k
+    import math
+
+    return round(k * m * math.log2(2 * m))
+
+
+def scores_topk(query, db, query_count, db_counts, *, k_out: int):
+    """Stage-1 engine graph: TFC over a (folded) tile + fused top-k.
+
+    Returns (values f32[k_out], indices s32[k_out]); indices are tile-local
+    rows the rust coordinator rebases to database rows.
+    """
+    scores = tanimoto.tanimoto_scores(query, db, query_count, db_counts)
+    vals, idx = ref.topk_sorted(scores, k_out)
+    return vals, idx
+
+
+def scores_only(query, db, query_count, db_counts):
+    """Scores without top-k: the HNSW batched-TFC path and the ablation
+    comparator for the fused-vs-split design point (DESIGN.md section 8)."""
+    return (tanimoto.tanimoto_scores(query, db, query_count, db_counts),)
+
+
+def rescore_topk(query, cand_db, query_count, cand_counts, *, k_out: int):
+    """Stage-2 engine graph: exact full-width rescore of gathered stage-1
+    candidates + final top-k. Padding rows must carry zero fingerprints and
+    zero counts (they score 0 and sort last unless fewer than k_out real
+    candidates exist — the coordinator masks by index)."""
+    scores = tanimoto.tanimoto_scores(query, cand_db, query_count, cand_counts)
+    vals, idx = ref.topk_sorted(scores, k_out)
+    return vals, idx
+
+
+def scores_batch(queries, db, query_counts, db_counts):
+    """Batched-query stage 1: Q queries x one tile -> (Q, T) scores.
+    Dispatch-amortized path (see kernels/tanimoto_batch.py)."""
+    return (tanimoto_batch.tanimoto_scores_batch(queries, db, query_counts, db_counts),)
+
+
+def bitcount_rows(rows):
+    """BitCnt (1) over a tile (index construction path)."""
+    return (bitcount.popcount_rows(rows),)
+
+
+def fold_tile(rows, *, m: int):
+    """Sectional fold of a tile (on-device DB compression path)."""
+    return (fold.fold_sectional(rows, m=m),)
+
+
+# ---------------------------------------------------------------------------
+# Artifact catalog: name -> (build_fn, example_args). aot.py iterates this.
+# ---------------------------------------------------------------------------
+
+
+def _u32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.uint32)
+
+
+def catalog(tile: int = TILE, k: int = 20, hnsw_batch: int = 128, rescore_c: int = 4096,
+            query_batch: int = 8):
+    """The artifact set `make artifacts` produces.
+
+    Names encode every shape the rust loader needs:
+      tanimoto_topk_m{m}_t{tile}_k{k_out}   stage-1 per folding level
+      tanimoto_scores_t{T}_w{W}             scores-only (ablation, HNSW TFC)
+      rescore_topk_c{C}_k{K}                stage-2 exact rescore
+      bitcount_t{T}_w{W}                    BitCnt
+      fold_m{m}_t{T}                        on-device folding
+    """
+    entries = {}
+    for m in (1, 2, 4, 8, 16, 32):
+        w = FP_WORDS // m
+        kout = min(k_r1(k, m), tile)
+        name = f"tanimoto_topk_m{m}_t{tile}_k{kout}"
+        entries[name] = (
+            lambda q, d, qc, dc, kout=kout: scores_topk(q, d, qc, dc, k_out=kout),
+            (_u32((1, w)), _u32((tile, w)), _u32((1, 1)), _u32((tile, 1))),
+        )
+    # Scores-only modules at every folded width: the rust engine's
+    # ScoresHostMerge stage-1 path (EXPERIMENTS.md Perf) needs them.
+    for m in (1, 2, 4, 8, 16, 32):
+        w = FP_WORDS // m
+        entries[f"tanimoto_scores_t{tile}_w{w}"] = (
+            scores_only,
+            (_u32((1, w)), _u32((tile, w)), _u32((1, 1)), _u32((tile, 1))),
+        )
+    # Batched-query modules at every folded width (Q queries per tile pass).
+    for m in (1, 2, 4, 8, 16, 32):
+        w = FP_WORDS // m
+        entries[f"tanimoto_batch_b{query_batch}_t{tile}_w{w}"] = (
+            scores_batch,
+            (
+                _u32((query_batch, w)),
+                _u32((tile, w)),
+                _u32((query_batch, 1)),
+                _u32((tile, 1)),
+            ),
+        )
+    entries[f"tanimoto_scores_t{hnsw_batch}_w{FP_WORDS}"] = (
+        lambda q, d, qc, dc: (
+            tanimoto.tanimoto_scores(q, d, qc, dc, block_rows=hnsw_batch),
+        ),
+        (
+            _u32((1, FP_WORDS)),
+            _u32((hnsw_batch, FP_WORDS)),
+            _u32((1, 1)),
+            _u32((hnsw_batch, 1)),
+        ),
+    )
+    entries[f"rescore_topk_c{rescore_c}_k{64}"] = (
+        lambda q, d, qc, dc: rescore_topk(q, d, qc, dc, k_out=64),
+        (
+            _u32((1, FP_WORDS)),
+            _u32((rescore_c, FP_WORDS)),
+            _u32((1, 1)),
+            _u32((rescore_c, 1)),
+        ),
+    )
+    entries[f"bitcount_t{tile}_w{FP_WORDS}"] = (
+        bitcount_rows,
+        (_u32((tile, FP_WORDS)),),
+    )
+    for m in (2, 4, 8, 16, 32):
+        entries[f"fold_m{m}_t{tile}"] = (
+            lambda rows, m=m: fold_tile(rows, m=m),
+            (_u32((tile, FP_WORDS)),),
+        )
+    return entries

@@ -1,0 +1,88 @@
+//! Bench: the L3 serving layer — dispatch overhead, batching gain, and
+//! end-to-end router throughput with mixed traffic.
+//!
+//! This is the coordinator's own cost budget: at the paper's FPGA QPS the
+//! host layer must not be the bottleneck, so the per-query dispatch
+//! overhead (pool handoff + channels + metrics) is measured explicitly
+//! against a no-op-cheap backend.
+
+use molfpga::coordinator::backend::{NativeExhaustive, NativeHnsw};
+use molfpga::coordinator::batcher::{BatchPolicy, Batcher};
+use molfpga::coordinator::metrics::Metrics;
+use molfpga::coordinator::{EnginePool, Query, QueryMode};
+use molfpga::fingerprint::{ChemblModel, Database};
+use molfpga::util::bench::{black_box, Bencher};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn main() {
+    let mut b = Bencher::new();
+    // Tiny database ⇒ backend cost ≈ 0 ⇒ measured time ≈ dispatch overhead.
+    let db = Arc::new(Database::synthesize(256, &ChemblModel::default(), 42));
+    let metrics = Arc::new(Metrics::new());
+    let dbc = db.clone();
+    let pool = Arc::new(EnginePool::new("bench", 1, 256, metrics.clone(), move |_| {
+        NativeExhaustive::factory(dbc.clone(), 1, 0.0)
+    }));
+    let q = db.sample_queries(1, 1)[0].clone();
+
+    b.bench("dispatch_overhead/single_query", || {
+        let rx = pool
+            .submit(Query::new(0, q.clone(), 5, QueryMode::Exhaustive))
+            .expect("submit");
+        black_box(rx.recv().unwrap());
+    });
+
+    b.bench_elems("dispatch_overhead/batch_16", 16.0, || {
+        let batch: Vec<Query> =
+            (0..16).map(|i| Query::new(i, q.clone(), 5, QueryMode::Exhaustive)).collect();
+        let rx = pool.submit_batch(batch).expect("submit");
+        for _ in 0..16 {
+            black_box(rx.recv().unwrap());
+        }
+    });
+
+    // Batcher in front: deadline-batched pipeline throughput.
+    let batcher = Batcher::new(
+        pool.clone(),
+        BatchPolicy { max_batch: 16, max_wait: Duration::from_micros(200) },
+    );
+    b.bench_elems("batcher_pipeline/burst_64", 64.0, || {
+        let rxs: Vec<_> = (0..64)
+            .map(|i| batcher.submit(Query::new(i, q.clone(), 5, QueryMode::Exhaustive)))
+            .collect();
+        for rx in rxs {
+            let _ = black_box(rx.recv_timeout(Duration::from_secs(10)));
+        }
+    });
+
+    // Mixed end-to-end with a real database (exhaustive + HNSW pools).
+    let db2 = Arc::new(Database::synthesize(20_000, &ChemblModel::default(), 7));
+    let graph = NativeHnsw::build_graph(&db2, 8, 64, 3);
+    let dbe = db2.clone();
+    let ex = Arc::new(EnginePool::new("bx", 1, 256, metrics.clone(), move |_| {
+        NativeExhaustive::factory(dbe.clone(), 4, 0.8)
+    }));
+    let dba = db2.clone();
+    let ap = Arc::new(EnginePool::new("ba", 1, 256, metrics.clone(), move |_| {
+        NativeHnsw::factory(dba.clone(), graph.clone(), 64)
+    }));
+    let qs = db2.sample_queries(8, 9);
+    let mut qi = 0;
+    b.bench("router_mixed/exhaustive_20k", || {
+        let rx = ex
+            .submit(Query::new(qi as u64, qs[qi % 8].clone(), 10, QueryMode::Exhaustive))
+            .expect("submit");
+        black_box(rx.recv().unwrap());
+        qi += 1;
+    });
+    b.bench("router_mixed/hnsw_20k", || {
+        let rx = ap
+            .submit(Query::new(qi as u64, qs[qi % 8].clone(), 10, QueryMode::Approximate))
+            .expect("submit");
+        black_box(rx.recv().unwrap());
+        qi += 1;
+    });
+
+    let _ = b.write_jsonl(std::path::Path::new("results/bench_coordinator.jsonl"));
+}

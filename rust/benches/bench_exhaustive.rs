@@ -1,0 +1,50 @@
+//! Bench: exhaustive-search engines (paper Figs. 4, 7 / H2, H3 CPU-side).
+//!
+//! Measures the native CPU hot path at each folding level and cutoff —
+//! the numbers the Fig. 11 CPU frontier and the H5 speedup denominators
+//! come from — plus the raw TFC kernel rate (compounds scored per second,
+//! the CPU analogue of H1).
+
+use molfpga::fingerprint::{ChemblModel, Database};
+use molfpga::index::{BitBoundFoldingIndex, BruteForceIndex, SearchIndex};
+use molfpga::util::bench::{black_box, Bencher};
+use std::sync::Arc;
+
+fn main() {
+    let mut b = Bencher::new();
+    let n: usize = std::env::var("MOLFPGA_BENCH_N")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(50_000);
+    eprintln!("[bench_exhaustive] db n={n}");
+    let db = Arc::new(Database::synthesize(n, &ChemblModel::default(), 42));
+    let queries = db.sample_queries(16, 7);
+    let k = 20;
+
+    // Raw TFC rate: compounds scored per second (H1's CPU analogue).
+    let brute = BruteForceIndex::new(db.clone());
+    b.bench_elems(&format!("tfc_scan/n={n}"), n as f64, || {
+        black_box(brute.score_all(&queries[0]));
+    });
+
+    b.bench_elems(&format!("brute_force_topk/n={n}/k={k}"), n as f64, || {
+        black_box(brute.search(&queries[0], k));
+    });
+
+    for m in [1usize, 4, 8, 16] {
+        for cutoff in [0.0, 0.8] {
+            let idx = BitBoundFoldingIndex::new(db.clone(), m, cutoff);
+            let mut qi = 0;
+            b.bench_elems(
+                &format!("bitbound_folding/m={m}/Sc={cutoff}/n={n}"),
+                n as f64,
+                || {
+                    black_box(idx.search(&queries[qi % queries.len()], k));
+                    qi += 1;
+                },
+            );
+        }
+    }
+
+    let _ = b.write_jsonl(std::path::Path::new("results/bench_exhaustive.jsonl"));
+}

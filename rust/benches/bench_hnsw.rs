@@ -1,0 +1,46 @@
+//! Bench: HNSW build + search (paper Figs. 8/9 CPU-side, H4 denominator).
+//!
+//! Reports build time, per-query search latency across ef, and per-query
+//! work stats (distance evals — the quantity the U280 model prices).
+
+use molfpga::fingerprint::{ChemblModel, Database};
+use molfpga::hnsw::{HnswBuilder, HnswParams, Searcher};
+use molfpga::util::bench::{black_box, Bencher};
+use std::sync::Arc;
+
+fn main() {
+    let mut b = Bencher::new();
+    let n: usize = std::env::var("MOLFPGA_BENCH_N")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(20_000);
+    eprintln!("[bench_hnsw] db n={n}");
+    let db = Arc::new(Database::synthesize(n, &ChemblModel::default(), 42));
+    let queries = db.sample_queries(32, 11);
+
+    // Build cost (one-shot, measured outside the bencher loop).
+    let t0 = std::time::Instant::now();
+    let graph = HnswBuilder::new(HnswParams::new(8, 96, 7)).build(&db);
+    println!(
+        "hnsw_build/n={n}/M=8/efc=96 ... {:.2} s ({:.0} inserts/s)",
+        t0.elapsed().as_secs_f64(),
+        n as f64 / t0.elapsed().as_secs_f64()
+    );
+
+    for ef in [16usize, 64, 200] {
+        let mut searcher = Searcher::new(&graph, &db);
+        let mut qi = 0;
+        let mut evals = 0usize;
+        let mut runs = 0usize;
+        b.bench(&format!("hnsw_search/ef={ef}/n={n}"), || {
+            let (hits, stats) = searcher.knn(&queries[qi % queries.len()], 10, ef);
+            black_box(hits);
+            evals += stats.distance_evals;
+            runs += 1;
+            qi += 1;
+        });
+        println!("  mean distance evals at ef={ef}: {:.0}", evals as f64 / runs as f64);
+    }
+
+    let _ = b.write_jsonl(std::path::Path::new("results/bench_hnsw.jsonl"));
+}

@@ -1,0 +1,103 @@
+//! Bench: the PJRT runtime hot path — per-tile stage-1 execution latency,
+//! end-to-end engine search, and the fused-vs-split ablation (the design
+//! point that distinguishes the paper from [11]: keeping TFC + top-k in
+//! one lowered module vs shipping raw scores back).
+//!
+//! Requires `make artifacts`; skips gracefully otherwise.
+
+use molfpga::fingerprint::{ChemblModel, Database};
+use molfpga::runtime::{ArtifactSet, PjRt, TfcEngine};
+use molfpga::util::bench::{black_box, Bencher};
+use std::sync::Arc;
+
+fn main() {
+    if !ArtifactSet::default_dir().join("manifest.txt").exists() {
+        println!("bench_runtime skipped: run `make artifacts` first");
+        return;
+    }
+    let mut b = Bencher::new();
+    let n: usize = std::env::var("MOLFPGA_BENCH_N")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(65_536);
+    eprintln!("[bench_runtime] db n={n}");
+    let rt = Arc::new(PjRt::cpu().unwrap());
+    let artifacts = ArtifactSet::scan(&ArtifactSet::default_dir()).unwrap();
+    let db = Arc::new(Database::synthesize(n, &ChemblModel::default(), 42));
+    let queries = db.sample_queries(8, 5);
+
+    // Fused stage-1 (scores + top-k in one HLO module) across folding levels.
+    for m in [1usize, 4, 8] {
+        let engine = TfcEngine::new(rt.clone(), &artifacts, db.clone(), m, 0.0).unwrap();
+        let mut qi = 0;
+        b.bench_elems(&format!("pjrt_engine_search/m={m}/n={n}"), n as f64, || {
+            let (hits, _stats) = engine.search(&queries[qi % queries.len()], 20).unwrap();
+            black_box(hits);
+            qi += 1;
+        });
+    }
+
+    // With BitBound tile pruning at Sc=0.8 (fewer tiles executed).
+    let engine = TfcEngine::new(rt.clone(), &artifacts, db.clone(), 8, 0.8).unwrap();
+    let mut qi = 0;
+    b.bench_elems(&format!("pjrt_engine_search/m=8/Sc=0.8/n={n}"), n as f64, || {
+        let (hits, _stats) = engine.search(&queries[qi % queries.len()], 20).unwrap();
+        black_box(hits);
+        qi += 1;
+    });
+
+    // Batched-query path: 8 queries amortize each tile pass.
+    {
+        let engine = TfcEngine::new(rt.clone(), &artifacts, db.clone(), 8, 0.8).unwrap();
+        let batch: Vec<_> = db.sample_queries(8, 31);
+        b.bench_elems(&format!("pjrt_engine_batch8/m=8/Sc=0.8/n={n}"), 8.0 * n as f64, || {
+            black_box(engine.search_batch(&batch, 20).unwrap());
+        });
+    }
+
+    // Ablation: split path — scores-only artifact + host-side top-k.
+    // (Fused keeps the sort inside XLA; split ships 8192 f32 back and
+    // merges on the host. The paper's fusion argument in §I.)
+    {
+        let spec_scores = artifacts.tanimoto_scores(8192).unwrap();
+        let spec_fused = artifacts.tanimoto_topk(1).unwrap();
+        let exe_scores = rt.load(&spec_scores.path).unwrap();
+        let exe_fused = rt.load(&spec_fused.path).unwrap();
+        let tile = db.tile_u32(0, 8192);
+        let counts: Vec<u32> = (0..8192)
+            .map(|r| if r < db.len() { db.counts[r] } else { 0 })
+            .collect();
+        let q32 = queries[0].to_u32_words();
+        let db_buf = rt.upload_u32(&tile, &[8192, 32]).unwrap();
+        let cnt_buf: xla::PjRtBuffer = rt
+            .upload_u32(&counts, &[8192, 1])
+            .unwrap();
+        let q_buf = rt.upload_u32(&q32, &[1, 32]).unwrap();
+        let qc_buf = rt.upload_u32(&[queries[0].count_ones()], &[1, 1]).unwrap();
+
+        b.bench_elems("pjrt_tile_fused_topk/t=8192", 8192.0, || {
+            let r = exe_fused
+                .execute_b(&[&q_buf, &db_buf, &qc_buf, &cnt_buf])
+                .unwrap()[0][0]
+                .to_literal_sync()
+                .unwrap();
+            black_box(r.to_tuple2().unwrap());
+        });
+
+        b.bench_elems("pjrt_tile_split_scores_host_topk/t=8192", 8192.0, || {
+            let r = exe_scores
+                .execute_b(&[&q_buf, &db_buf, &qc_buf, &cnt_buf])
+                .unwrap()[0][0]
+                .to_literal_sync()
+                .unwrap();
+            let scores = r.to_tuple1().unwrap().to_vec::<f32>().unwrap();
+            let mut tk = molfpga::topk::TopKMerge::new(20);
+            for (i, &s) in scores.iter().enumerate() {
+                tk.push(molfpga::topk::Scored::new(s as f64, i as u64));
+            }
+            black_box(tk.finish());
+        });
+    }
+
+    let _ = b.write_jsonl(std::path::Path::new("results/bench_runtime.jsonl"));
+}

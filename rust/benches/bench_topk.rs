@@ -1,0 +1,47 @@
+//! Bench: top-k structures (paper modules ③ and ④) — the §IV-A resource/
+//! throughput trade-off between the merge-sort top-k and the register-array
+//! priority queue, plus the cycle-level pipeline's II=1 validation rate.
+//!
+//! Regenerates the quantitative basis of the paper's "observation 2"
+//! (merge sort scales better with k; PQ wins at small capacities).
+
+use molfpga::simulator::{QueryPipeline, StageLatency};
+use molfpga::topk::{RegisterPq, Scored, TopKMerge};
+use molfpga::util::bench::{black_box, Bencher};
+use molfpga::util::prng::Pcg64;
+
+fn main() {
+    let mut b = Bencher::new();
+    let n = 100_000usize;
+    let mut g = Pcg64::new(1);
+    let scores: Vec<f64> = (0..n).map(|_| g.next_f64()).collect();
+
+    for k in [8usize, 20, 64, 256, 1024] {
+        b.bench_elems(&format!("topk_merge/k={k}/n={n}"), n as f64, || {
+            let mut tk = TopKMerge::new(k);
+            tk.push_scores(&scores, 0);
+            black_box(tk.finish());
+        });
+    }
+    for k in [8usize, 20, 64, 256, 1024] {
+        b.bench_elems(&format!("register_pq/k={k}/n={n}"), n as f64, || {
+            let mut pq = RegisterPq::new(k);
+            for (i, &s) in scores.iter().enumerate() {
+                let _ = pq.push(Scored::new(s, i as u64));
+            }
+            black_box(pq.into_sorted());
+        });
+    }
+
+    // Cycle-level pipeline model stepping rate (the simulator's own cost).
+    let k = 20;
+    b.bench_elems(&format!("sim_pipeline/k={k}/n=8192"), 8192.0, || {
+        let mut p = QueryPipeline::with_latency(k, StageLatency::for_k(k));
+        for i in 0..8192u64 {
+            p.cycle(Some((black_box(0.5), i)));
+        }
+        black_box(p.drain());
+    });
+
+    let _ = b.write_jsonl(std::path::Path::new("results/bench_topk.jsonl"));
+}

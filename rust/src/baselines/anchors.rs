@@ -1,0 +1,52 @@
+//! Published throughput anchors (paper §II-B, §V) — constants for
+//! paper-vs-measured reporting in EXPERIMENTS.md and Fig. 11.
+
+/// Benchmark [23] on Intel Xeon E5-2690, Chembl, recall 0.9.
+pub mod xeon_e5_2690 {
+    pub const BRUTE_FORCE_QPS: f64 = 23.0;
+    pub const BITBOUND_QPS: f64 = 46.0;
+    pub const FOLDING_QPS: f64 = 121.0;
+    pub const HNSW_QPS: f64 = 950.0;
+}
+
+/// GPUsimilarity on V100s (paper §II-B).
+pub const GPU_BRUTE_FORCE_QPS: f64 = 570.0;
+
+/// The paper's FPGA results (U280, Chembl 1.9 M).
+pub mod fpga_u280 {
+    pub const BRUTE_FORCE_QPS: f64 = 1638.0;
+    pub const BITBOUND_FOLDING_QPS: f64 = 25_403.0;
+    pub const BITBOUND_FOLDING_RECALL: f64 = 0.97;
+    pub const HNSW_QPS: f64 = 103_385.0;
+    pub const HNSW_RECALL: f64 = 0.92;
+    pub const COMPOUNDS_PER_SEC_PER_ENGINE: f64 = 450e6;
+}
+
+/// The paper's claimed cross-platform speedups (H5).
+pub mod speedups {
+    /// FPGA vs CPU, brute force: "more than 25×".
+    pub const FPGA_CPU_BRUTE: f64 = 25.0;
+    /// FPGA vs GPU, brute force: "more than 3×".
+    pub const FPGA_GPU_BRUTE: f64 = 3.0;
+    /// FPGA vs CPU, BitBound & folding: "average 30×".
+    pub const FPGA_CPU_FOLDING: f64 = 30.0;
+    /// FPGA vs CPU, HNSW: "average 35×".
+    pub const FPGA_CPU_HNSW: f64 = 35.0;
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn paper_internal_consistency() {
+        // The paper's own numbers should be loosely consistent with its
+        // claimed speedups (sanity on our transcription):
+        // FPGA brute 1638 / GPU 570 ≈ 2.9 ("more than 3×" rounds this).
+        let fpga_gpu = super::fpga_u280::BRUTE_FORCE_QPS / super::GPU_BRUTE_FORCE_QPS;
+        assert!((2.5..3.5).contains(&fpga_gpu));
+        // HNSW: 103385 vs [23]'s 950 ⇒ 108× vs the same-platform CPU rerun
+        // the paper used (Xeon Gold 6244, faster than the E5-2690 in [23]);
+        // the claimed 35× implies their CPU rerun hit ≈ 2950 QPS.
+        let implied_cpu = super::fpga_u280::HNSW_QPS / super::speedups::FPGA_CPU_HNSW;
+        assert!((2000.0..4000.0).contains(&implied_cpu));
+    }
+}

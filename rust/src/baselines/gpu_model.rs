@@ -1,0 +1,56 @@
+//! Analytical GPU brute-force model — the paper's GPU comparator
+//! (GPUsimilarity [4] on 2× NVIDIA Tesla V100).
+//!
+//! Brute-force fingerprint scanning is memory-bandwidth-bound on GPUs
+//! exactly as on the FPGA: every query reads the whole database from HBM2.
+//! The roofline model therefore predicts QPS = efficiency × total_bw /
+//! (n × bytes_per_row), with an efficiency factor covering kernel launch,
+//! imperfect coalescing, and the top-k pass. Calibrated against the
+//! published 570 QPS on Chembl (§II-B), which implies ≈ 13 % of peak —
+//! consistent with GPUsimilarity batching queries only modestly.
+
+/// V100 × 2 brute-force roofline.
+#[derive(Debug, Clone)]
+pub struct GpuBruteForceModel {
+    /// Aggregate HBM2 bandwidth (2 × 900 GB/s).
+    pub total_bandwidth: f64,
+    /// Bytes per database row (1024-bit fingerprint).
+    pub bytes_per_row: usize,
+    /// Achieved fraction of the roofline (calibrated to [4]).
+    pub efficiency: f64,
+}
+
+impl Default for GpuBruteForceModel {
+    fn default() -> Self {
+        Self { total_bandwidth: 2.0 * 900e9, bytes_per_row: 128, efficiency: 0.077 }
+    }
+}
+
+impl GpuBruteForceModel {
+    pub fn qps(&self, n: usize) -> f64 {
+        self.efficiency * self.total_bandwidth / (n as f64 * self.bytes_per_row as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::anchors;
+
+    #[test]
+    fn calibrated_to_published_570_qps() {
+        let qps = GpuBruteForceModel::default().qps(1_900_000);
+        let err = (qps - anchors::GPU_BRUTE_FORCE_QPS).abs() / anchors::GPU_BRUTE_FORCE_QPS;
+        assert!(err < 0.02, "GPU model {qps:.0} vs published 570 (err {err:.3})");
+    }
+
+    #[test]
+    fn fpga_beats_gpu_3x_claim() {
+        // H5: FPGA brute force > 3× GPU. Compare model vs model at Chembl
+        // scale. (The paper rounds 1638/570 = 2.87 up to "more than 3×";
+        // we assert the >2.5× shape.)
+        let gpu = GpuBruteForceModel::default().qps(1_900_000);
+        let fpga = crate::hwmodel::BruteForceDesign::default().qps(1_900_000);
+        assert!(fpga / gpu > 2.5, "FPGA {fpga:.0} vs GPU {gpu:.0}");
+    }
+}

@@ -1,0 +1,19 @@
+//! Cross-platform baselines (paper §V-C, Fig. 11).
+//!
+//! * [`cpu`] — measured CPU implementations on *this* host: brute force,
+//!   BitBound, BitBound & folding, HNSW (the same substrates the FPGA
+//!   engines use, driven in plain single-thread loops the way [23]'s
+//!   benchmark does). Fig. 11's CPU frontier is re-measured here; the
+//!   FPGA/CPU speedups (H5) compare the hardware model against these.
+//! * [`gpu_model`] — analytical V100×2 brute-force roofline (the paper's
+//!   GPU comparator, GPUsimilarity, is HBM2-bandwidth-bound).
+//! * [`anchors`] — the published throughput numbers from the paper and
+//!   from [23], kept as constants so reports can show paper-vs-ours side
+//!   by side without network access.
+
+pub mod anchors;
+pub mod cpu;
+pub mod gpu_model;
+
+pub use cpu::CpuBaseline;
+pub use gpu_model::GpuBruteForceModel;

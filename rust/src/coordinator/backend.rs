@@ -1,0 +1,159 @@
+//! Search backends the engine pool drives.
+//!
+//! A backend is constructed *inside* its worker thread (PJRT handles are
+//! not Send), so the pool receives a [`BackendFactory`] — a Send closure —
+//! and calls it once per worker. Provided backends:
+//!
+//! * [`NativeExhaustive`] — BitBound & folding on host popcount (the CPU
+//!   baseline path, also the latency-optimal path for small batches).
+//! * [`PjrtExhaustive`] — the AOT-artifact engine (`runtime::TfcEngine`).
+//! * [`NativeHnsw`] — HNSW traversal with native TFC.
+//!
+//! All backends answer through the same `SearchBackend` trait so the
+//! router/batcher/pool stack is engine-agnostic.
+
+use crate::fingerprint::{Database, Fingerprint};
+use crate::hnsw::{HnswBuilder, HnswGraph, HnswParams, Searcher};
+use crate::index::{BitBoundFoldingIndex, SearchIndex};
+use crate::runtime::{ArtifactSet, PjRt, TfcEngine};
+use crate::topk::Scored;
+use anyhow::Result;
+use std::sync::Arc;
+
+/// A query-serving engine living on one worker thread.
+pub trait SearchBackend {
+    fn name(&self) -> &'static str;
+    /// Serve one query.
+    fn search(&mut self, fp: &Fingerprint, k: usize) -> Result<Vec<Scored>>;
+
+    /// Serve a batch (default: loop). Backends with a batched compute
+    /// path (the PJRT engine's Q-queries-per-tile-pass artifact) override
+    /// this to amortize dispatch.
+    fn search_batch(&mut self, fps: &[&Fingerprint], k: usize) -> Result<Vec<Vec<Scored>>> {
+        fps.iter().map(|fp| self.search(fp, k)).collect()
+    }
+}
+
+/// Send constructor for a backend (runs on the worker thread).
+pub type BackendFactory = Box<dyn FnOnce() -> Result<Box<dyn SearchBackend>> + Send>;
+
+/// Native (host popcount) BitBound & folding backend.
+pub struct NativeExhaustive {
+    index: BitBoundFoldingIndex,
+}
+
+impl NativeExhaustive {
+    pub fn new(db: Arc<Database>, m: usize, cutoff: f64) -> Self {
+        Self { index: BitBoundFoldingIndex::new(db, m, cutoff) }
+    }
+
+    /// Factory for the pool.
+    pub fn factory(db: Arc<Database>, m: usize, cutoff: f64) -> BackendFactory {
+        Box::new(move || Ok(Box::new(Self::new(db, m, cutoff)) as Box<dyn SearchBackend>))
+    }
+}
+
+impl SearchBackend for NativeExhaustive {
+    fn name(&self) -> &'static str {
+        "native-exhaustive"
+    }
+
+    fn search(&mut self, fp: &Fingerprint, k: usize) -> Result<Vec<Scored>> {
+        Ok(self.index.search(fp, k))
+    }
+}
+
+/// PJRT-artifact exhaustive backend (the three-layer request path).
+pub struct PjrtExhaustive {
+    engine: TfcEngine,
+}
+
+impl PjrtExhaustive {
+    pub fn new(db: Arc<Database>, m: usize, cutoff: f64) -> Result<Self> {
+        let rt = Arc::new(PjRt::cpu()?);
+        let artifacts = ArtifactSet::scan(&ArtifactSet::default_dir())?;
+        Ok(Self { engine: TfcEngine::new(rt, &artifacts, db, m, cutoff)? })
+    }
+
+    pub fn factory(db: Arc<Database>, m: usize, cutoff: f64) -> BackendFactory {
+        Box::new(move || Ok(Box::new(Self::new(db, m, cutoff)?) as Box<dyn SearchBackend>))
+    }
+}
+
+impl SearchBackend for PjrtExhaustive {
+    fn name(&self) -> &'static str {
+        "pjrt-exhaustive"
+    }
+
+    fn search(&mut self, fp: &Fingerprint, k: usize) -> Result<Vec<Scored>> {
+        let (hits, _stats) = self.engine.search(fp, k)?;
+        Ok(hits)
+    }
+
+    fn search_batch(&mut self, fps: &[&Fingerprint], k: usize) -> Result<Vec<Vec<Scored>>> {
+        let owned: Vec<Fingerprint> = fps.iter().map(|f| (*f).clone()).collect();
+        Ok(self.engine.search_batch(&owned, k)?.into_iter().map(|(h, _)| h).collect())
+    }
+}
+
+/// HNSW backend. The graph is built once (Arc-shared across workers — the
+/// graph and database are Send+Sync; only the per-worker Searcher scratch
+/// is thread-local).
+pub struct NativeHnsw {
+    db: Arc<Database>,
+    graph: Arc<HnswGraph>,
+    ef: usize,
+}
+
+impl NativeHnsw {
+    pub fn new(db: Arc<Database>, graph: Arc<HnswGraph>, ef: usize) -> Self {
+        Self { db, graph, ef }
+    }
+
+    /// Build a graph for sharing across workers.
+    pub fn build_graph(db: &Database, m: usize, ef_c: usize, seed: u64) -> Arc<HnswGraph> {
+        Arc::new(HnswBuilder::new(HnswParams::new(m, ef_c, seed)).build(db))
+    }
+
+    pub fn factory(db: Arc<Database>, graph: Arc<HnswGraph>, ef: usize) -> BackendFactory {
+        Box::new(move || Ok(Box::new(Self::new(db, graph, ef)) as Box<dyn SearchBackend>))
+    }
+}
+
+impl SearchBackend for NativeHnsw {
+    fn name(&self) -> &'static str {
+        "native-hnsw"
+    }
+
+    fn search(&mut self, fp: &Fingerprint, k: usize) -> Result<Vec<Scored>> {
+        let mut searcher = Searcher::new(&self.graph, &self.db);
+        let (hits, _stats) = searcher.knn(fp, k, self.ef.max(k));
+        Ok(hits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fingerprint::ChemblModel;
+    use crate::index::BruteForceIndex;
+
+    #[test]
+    fn native_backends_agree_with_oracles() {
+        let db = Arc::new(Database::synthesize(3000, &ChemblModel::default(), 5));
+        let brute = BruteForceIndex::new(db.clone());
+        let mut ex = NativeExhaustive::new(db.clone(), 1, 0.0);
+        let graph = NativeHnsw::build_graph(&db, 8, 48, 2);
+        let mut hn = NativeHnsw::new(db.clone(), graph, 64);
+        let q = db.sample_queries(1, 9)[0].clone();
+        let truth = brute.search(&q, 10);
+        let ex_hits = ex.search(&q, 10).unwrap();
+        assert_eq!(
+            ex_hits.iter().map(|s| s.id).collect::<Vec<_>>(),
+            truth.iter().map(|s| s.id).collect::<Vec<_>>()
+        );
+        let hn_hits = hn.search(&q, 10).unwrap();
+        let rec = crate::index::recall_at_k(&hn_hits, &truth, 10);
+        assert!(rec >= 0.8, "hnsw backend recall {rec}");
+    }
+}

@@ -1,0 +1,192 @@
+//! Dynamic batcher: size/deadline micro-batching in front of a pool.
+//!
+//! PJRT dispatch and worker handoff carry a fixed per-job cost; grouping
+//! queries amortizes it (the vLLM-router discipline adapted to similarity
+//! search). A batch closes when it reaches `max_batch` or when its oldest
+//! member has waited `max_wait` — the standard size-or-deadline policy.
+
+use super::pool::EnginePool;
+use super::request::{Query, QueryResult};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Batching policy.
+#[derive(Debug, Clone)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        Self { max_batch: 16, max_wait: Duration::from_millis(2) }
+    }
+}
+
+enum Msg {
+    Enqueue(Query, Sender<QueryResult>),
+    Flush,
+    Shutdown,
+}
+
+/// A batcher thread in front of an [`EnginePool`].
+pub struct Batcher {
+    tx: Sender<Msg>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Batcher {
+    pub fn new(pool: Arc<EnginePool>, policy: BatchPolicy) -> Self {
+        let (tx, rx) = channel::<Msg>();
+        let handle = std::thread::Builder::new()
+            .name("batcher".into())
+            .spawn(move || Self::run(pool, policy, rx))
+            .expect("spawn batcher");
+        Self { tx, handle: Some(handle) }
+    }
+
+    fn run(pool: Arc<EnginePool>, policy: BatchPolicy, rx: Receiver<Msg>) {
+        let mut pending: Vec<(Query, Sender<QueryResult>)> = Vec::new();
+        let mut oldest: Option<Instant> = None;
+        loop {
+            // Wait bounded by the flush deadline.
+            let timeout = match oldest {
+                Some(t) => policy.max_wait.saturating_sub(t.elapsed()),
+                None => Duration::from_millis(50),
+            };
+            let msg = rx.recv_timeout(timeout);
+            match msg {
+                Ok(Msg::Enqueue(q, resp)) => {
+                    if pending.is_empty() {
+                        oldest = Some(Instant::now());
+                    }
+                    pending.push((q, resp));
+                }
+                Ok(Msg::Flush) | Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
+                Ok(Msg::Shutdown) | Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                    Self::dispatch(&pool, &mut pending);
+                    return;
+                }
+            }
+            let deadline_hit =
+                oldest.map(|t| t.elapsed() >= policy.max_wait).unwrap_or(false);
+            if pending.len() >= policy.max_batch || (deadline_hit && !pending.is_empty()) {
+                Self::dispatch(&pool, &mut pending);
+                oldest = None;
+            }
+        }
+    }
+
+    fn dispatch(pool: &EnginePool, pending: &mut Vec<(Query, Sender<QueryResult>)>) {
+        if pending.is_empty() {
+            return;
+        }
+        let items: Vec<(Query, Sender<QueryResult>)> = pending.drain(..).collect();
+        let (queries, responders): (Vec<Query>, Vec<Sender<QueryResult>>) =
+            items.into_iter().unzip();
+        let by_id: std::collections::HashMap<u64, Sender<QueryResult>> = queries
+            .iter()
+            .map(|q| q.id)
+            .zip(responders)
+            .collect();
+        match pool.submit_batch(queries) {
+            Ok(rx) => {
+                // Relay thread: fan results back to per-query responders.
+                std::thread::spawn(move || {
+                    while let Ok(r) = rx.recv() {
+                        if let Some(tx) = by_id.get(&r.id) {
+                            let _ = tx.send(r);
+                        }
+                    }
+                });
+            }
+            Err(_rejected) => {
+                // Backpressure: responders dropped ⇒ callers see a closed
+                // channel and report busy.
+            }
+        }
+    }
+
+    /// Enqueue one query; the result arrives on the returned receiver (a
+    /// closed channel means the system was too busy).
+    pub fn submit(&self, q: Query) -> Receiver<QueryResult> {
+        let (tx, rx) = channel();
+        let _ = self.tx.send(Msg::Enqueue(q, tx));
+        rx
+    }
+
+    /// Force pending queries out regardless of the deadline.
+    pub fn flush(&self) {
+        let _ = self.tx.send(Msg::Flush);
+    }
+
+    pub fn shutdown(mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Batcher {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::backend::NativeExhaustive;
+    use super::super::metrics::Metrics;
+    use super::super::request::QueryMode;
+    use super::*;
+    use crate::fingerprint::{ChemblModel, Database};
+
+    fn setup(policy: BatchPolicy) -> (Arc<Database>, Batcher, Arc<Metrics>) {
+        let db = Arc::new(Database::synthesize(1500, &ChemblModel::default(), 8));
+        let metrics = Arc::new(Metrics::new());
+        let dbc = db.clone();
+        let pool = Arc::new(EnginePool::new("batch-test", 2, 16, metrics.clone(), move |_| {
+            NativeExhaustive::factory(dbc.clone(), 1, 0.0)
+        }));
+        (db, Batcher::new(pool, policy), metrics)
+    }
+
+    #[test]
+    fn batches_by_deadline() {
+        let (db, batcher, metrics) =
+            setup(BatchPolicy { max_batch: 100, max_wait: Duration::from_millis(5) });
+        let q = db.sample_queries(1, 1)[0].clone();
+        let rxs: Vec<_> = (0..5u64)
+            .map(|i| batcher.submit(Query::new(i, q.clone(), 3, QueryMode::Exhaustive)))
+            .collect();
+        for rx in rxs {
+            let r = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+            assert_eq!(r.hits.len(), 3);
+        }
+        assert_eq!(metrics.snapshot().completed, 5);
+        batcher.shutdown();
+    }
+
+    #[test]
+    fn batches_by_size() {
+        let (db, batcher, _metrics) =
+            setup(BatchPolicy { max_batch: 4, max_wait: Duration::from_secs(10) });
+        let q = db.sample_queries(1, 2)[0].clone();
+        // Exactly max_batch queries: must flush by size well before the
+        // 10-second deadline.
+        let t0 = Instant::now();
+        let rxs: Vec<_> = (0..4u64)
+            .map(|i| batcher.submit(Query::new(i, q.clone(), 2, QueryMode::Exhaustive)))
+            .collect();
+        for rx in rxs {
+            rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        }
+        assert!(t0.elapsed() < Duration::from_secs(5), "size-triggered flush");
+        batcher.shutdown();
+    }
+}

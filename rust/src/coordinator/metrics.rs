@@ -1,0 +1,137 @@
+//! Serving metrics: counters and latency percentiles.
+//!
+//! Lock-protected reservoir (queries are milliseconds-scale; a mutex per
+//! completion is far off the hot path). Snapshot-on-read so reporters
+//! never block the serving path for long.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Shared metrics sink.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub submitted: AtomicU64,
+    pub completed: AtomicU64,
+    pub rejected: AtomicU64,
+    pub errors: AtomicU64,
+    /// Completed-query latencies (seconds). Bounded reservoir.
+    latencies: Mutex<Vec<f64>>,
+}
+
+/// Reservoir cap — enough for stable p99 at any realistic test length.
+const RESERVOIR: usize = 65_536;
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_submit(&self) {
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_reject(&self) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_error(&self) {
+        self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_complete(&self, latency: Duration) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        let mut l = self.latencies.lock().unwrap();
+        if l.len() < RESERVOIR {
+            l.push(latency.as_secs_f64());
+        } else {
+            // Overwrite pseudo-randomly (index from the count) so long runs
+            // stay representative.
+            let i = (self.completed.load(Ordering::Relaxed) as usize * 2654435761) % RESERVOIR;
+            l[i] = latency.as_secs_f64();
+        }
+    }
+
+    /// Snapshot of the current state.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let mut lat = self.latencies.lock().unwrap().clone();
+        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pct = |p: f64| -> f64 {
+            if lat.is_empty() {
+                0.0
+            } else {
+                crate::util::stats::percentile(&lat, p)
+            }
+        };
+        MetricsSnapshot {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            errors: self.errors.load(Ordering::Relaxed),
+            p50_s: pct(50.0),
+            p90_s: pct(90.0),
+            p99_s: pct(99.0),
+            mean_s: if lat.is_empty() { 0.0 } else { lat.iter().sum::<f64>() / lat.len() as f64 },
+        }
+    }
+}
+
+/// Point-in-time metrics view.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricsSnapshot {
+    pub submitted: u64,
+    pub completed: u64,
+    pub rejected: u64,
+    pub errors: u64,
+    pub p50_s: f64,
+    pub p90_s: f64,
+    pub p99_s: f64,
+    pub mean_s: f64,
+}
+
+impl MetricsSnapshot {
+    pub fn report(&self) -> String {
+        format!(
+            "submitted {} completed {} rejected {} errors {} | latency mean {:.2}ms p50 {:.2}ms p90 {:.2}ms p99 {:.2}ms",
+            self.submitted,
+            self.completed,
+            self.rejected,
+            self.errors,
+            self.mean_s * 1e3,
+            self.p50_s * 1e3,
+            self.p90_s * 1e3,
+            self.p99_s * 1e3,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_percentiles() {
+        let m = Metrics::new();
+        for i in 1..=100u64 {
+            m.record_submit();
+            m.record_complete(Duration::from_millis(i));
+        }
+        m.record_reject();
+        let s = m.snapshot();
+        assert_eq!(s.submitted, 100);
+        assert_eq!(s.completed, 100);
+        assert_eq!(s.rejected, 1);
+        assert!((s.p50_s - 0.0505).abs() < 0.002, "p50 {}", s.p50_s);
+        assert!(s.p99_s > 0.098);
+        assert!(s.report().contains("completed 100"));
+    }
+
+    #[test]
+    fn reservoir_does_not_grow_unbounded() {
+        let m = Metrics::new();
+        for _ in 0..(RESERVOIR + 1000) {
+            m.record_complete(Duration::from_micros(10));
+        }
+        assert!(m.latencies.lock().unwrap().len() <= RESERVOIR);
+    }
+}

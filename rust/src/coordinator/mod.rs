@@ -1,0 +1,38 @@
+//! Layer-3 coordinator: the serving system around the query engines.
+//!
+//! The paper's contribution is the engine (Fig. 4/5); a deployable system
+//! needs the layer the paper's host code plays on the Alveo host CPU:
+//! request intake, dynamic batching, dispatch across engine replicas,
+//! backpressure, and metrics. Threaded std-only design (the vendored crate
+//! set has no async runtime; PJRT handles are `Rc`-based and **not Send**,
+//! so every engine is constructed and driven inside its own worker
+//! thread — the same discipline a per-FPGA-context host thread has):
+//!
+//! ```text
+//!  clients ─▶ server (TCP, line protocol)
+//!                │
+//!             router ──▶ batcher ──▶ engine pool (N worker threads,
+//!                │                    each owning one backend engine)
+//!             metrics ◀───────────────┘
+//! ```
+//!
+//! * [`request`] — query/response types.
+//! * [`backend`] — the `SearchBackend` trait + native/PJRT/HNSW backends.
+//! * [`batcher`] — size/deadline dynamic batching with backpressure.
+//! * [`pool`] — worker threads, per-thread engine construction, dispatch.
+//! * [`router`] — mode-based routing (exhaustive / approximate / auto).
+//! * [`metrics`] — counters + latency percentiles.
+//! * [`server`] — TCP front end with a text line protocol.
+
+pub mod backend;
+pub mod batcher;
+pub mod metrics;
+pub mod pool;
+pub mod request;
+pub mod router;
+pub mod server;
+
+pub use backend::{BackendFactory, SearchBackend};
+pub use pool::EnginePool;
+pub use request::{Query, QueryMode, QueryResult};
+pub use router::Router;

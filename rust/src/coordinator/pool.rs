@@ -1,0 +1,243 @@
+//! Engine pool: N worker threads, each owning one backend engine.
+//!
+//! PJRT handles are not Send, so workers *construct* their backend inside
+//! the thread from a Send [`BackendFactory`]. Jobs flow through a bounded
+//! queue (backpressure: `submit` fails fast when the queue is full — the
+//! server surfaces that as a retryable busy error instead of letting
+//! latency collapse, the standard serving discipline).
+
+use super::backend::BackendFactory;
+use super::metrics::Metrics;
+use super::request::{Query, QueryResult};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+
+/// One unit of work: a batch of queries + the response channel.
+struct Job {
+    batch: Vec<Query>,
+    respond: Sender<QueryResult>,
+}
+
+/// Fixed pool of engine workers sharing a bounded job queue.
+pub struct EnginePool {
+    tx: SyncSender<Job>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    metrics: Arc<Metrics>,
+    inflight: Arc<AtomicUsize>,
+    name: &'static str,
+}
+
+impl EnginePool {
+    /// Spawn `n_workers` threads; `make_factory(worker_index)` produces the
+    /// per-worker backend constructor. `queue_cap` bounds pending batches.
+    pub fn new(
+        name: &'static str,
+        n_workers: usize,
+        queue_cap: usize,
+        metrics: Arc<Metrics>,
+        mut make_factory: impl FnMut(usize) -> BackendFactory,
+    ) -> Self {
+        assert!(n_workers >= 1);
+        let (tx, rx) = sync_channel::<Job>(queue_cap);
+        let rx = Arc::new(Mutex::new(rx));
+        let inflight = Arc::new(AtomicUsize::new(0));
+        let mut workers = Vec::new();
+        for wi in 0..n_workers {
+            let factory = make_factory(wi);
+            let rx = rx.clone();
+            let metrics = metrics.clone();
+            let inflight = inflight.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("{name}-worker-{wi}"))
+                    .spawn(move || {
+                        let mut backend = match factory() {
+                            Ok(b) => b,
+                            Err(e) => {
+                                eprintln!("[{name}-worker-{wi}] backend init failed: {e:#}");
+                                return;
+                            }
+                        };
+                        loop {
+                            // Take one job (queue closed ⇒ exit).
+                            let job = {
+                                let guard = rx.lock().unwrap();
+                                guard.recv()
+                            };
+                            let Ok(job) = job else { break };
+                            // Group the batch by k so backends with a
+                            // batched compute path can amortize dispatch.
+                            let mut by_k: std::collections::BTreeMap<usize, Vec<&Query>> =
+                                std::collections::BTreeMap::new();
+                            for q in &job.batch {
+                                by_k.entry(q.k).or_default().push(q);
+                            }
+                            for (k, qs) in by_k {
+                                let fps: Vec<&crate::fingerprint::Fingerprint> =
+                                    qs.iter().map(|q| &q.fingerprint).collect();
+                                match backend.search_batch(&fps, k) {
+                                    Ok(all_hits) => {
+                                        for (q, hits) in qs.iter().zip(all_hits) {
+                                            let latency = q.submitted.elapsed();
+                                            metrics.record_complete(latency);
+                                            let _ = job.respond.send(QueryResult {
+                                                id: q.id,
+                                                hits,
+                                                latency,
+                                                backend: backend.name(),
+                                            });
+                                            inflight.fetch_sub(1, Ordering::Relaxed);
+                                        }
+                                    }
+                                    Err(e) => {
+                                        for q in &qs {
+                                            metrics.record_error();
+                                            eprintln!(
+                                                "[{name}-worker-{wi}] query {} failed: {e:#}",
+                                                q.id
+                                            );
+                                            inflight.fetch_sub(1, Ordering::Relaxed);
+                                        }
+                                    }
+                                }
+                            }
+                        }
+                    })
+                    .expect("spawn worker"),
+            );
+        }
+        Self { tx, workers, metrics, inflight, name }
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    /// Queries queued or executing.
+    pub fn inflight(&self) -> usize {
+        self.inflight.load(Ordering::Relaxed)
+    }
+
+    /// Submit a batch; responses arrive on the returned receiver (one per
+    /// query). Fails fast with the batch when the queue is full.
+    pub fn submit_batch(&self, batch: Vec<Query>) -> Result<Receiver<QueryResult>, Vec<Query>> {
+        let (rtx, rrx) = std::sync::mpsc::channel();
+        let n = batch.len();
+        for _ in 0..n {
+            self.metrics.record_submit();
+        }
+        self.inflight.fetch_add(n, Ordering::Relaxed);
+        match self.tx.try_send(Job { batch, respond: rtx }) {
+            Ok(()) => Ok(rrx),
+            Err(TrySendError::Full(job)) | Err(TrySendError::Disconnected(job)) => {
+                self.inflight.fetch_sub(n, Ordering::Relaxed);
+                for _ in 0..n {
+                    self.metrics.record_reject();
+                }
+                Err(job.batch)
+            }
+        }
+    }
+
+    /// Single-query convenience.
+    pub fn submit(&self, query: Query) -> Result<Receiver<QueryResult>, Vec<Query>> {
+        self.submit_batch(vec![query])
+    }
+
+    /// Close the queue and join the workers.
+    pub fn shutdown(self) {
+        drop(self.tx);
+        for w in self.workers {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::backend::NativeExhaustive;
+    use super::*;
+    use crate::coordinator::request::QueryMode;
+    use crate::fingerprint::{ChemblModel, Database};
+
+    fn mk_pool(workers: usize, cap: usize) -> (Arc<Database>, EnginePool, Arc<Metrics>) {
+        let db = Arc::new(Database::synthesize(2000, &ChemblModel::default(), 3));
+        let metrics = Arc::new(Metrics::new());
+        let dbc = db.clone();
+        let pool = EnginePool::new("test", workers, cap, metrics.clone(), move |_wi| {
+            NativeExhaustive::factory(dbc.clone(), 1, 0.0)
+        });
+        (db, pool, metrics)
+    }
+
+    #[test]
+    fn serves_queries_correctly() {
+        let (db, pool, metrics) = mk_pool(2, 16);
+        let queries = db.sample_queries(10, 1);
+        let brute = crate::index::BruteForceIndex::new(db.clone());
+        let mut rxs = Vec::new();
+        for (i, q) in queries.iter().enumerate() {
+            rxs.push((
+                q.clone(),
+                pool.submit(Query::new(i as u64, q.clone(), 5, QueryMode::Exhaustive)).unwrap(),
+            ));
+        }
+        for (q, rx) in rxs {
+            use crate::index::SearchIndex;
+            let r = rx.recv_timeout(std::time::Duration::from_secs(30)).unwrap();
+            let truth = brute.search(&q, 5);
+            assert_eq!(
+                r.hits.iter().map(|s| s.id).collect::<Vec<_>>(),
+                truth.iter().map(|s| s.id).collect::<Vec<_>>()
+            );
+        }
+        assert_eq!(metrics.snapshot().completed, 10);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn backpressure_rejects_when_full() {
+        // One slow worker + tiny queue ⇒ rejections under burst.
+        let (db, pool, metrics) = mk_pool(1, 1);
+        let q = db.sample_queries(1, 2)[0].clone();
+        let mut accepted = 0;
+        let mut rejected = 0;
+        let mut rxs = Vec::new();
+        for i in 0..200u64 {
+            match pool.submit(Query::new(i, q.clone(), 5, QueryMode::Exhaustive)) {
+                Ok(rx) => {
+                    accepted += 1;
+                    rxs.push(rx);
+                }
+                Err(_) => rejected += 1,
+            }
+        }
+        assert!(rejected > 0, "burst must trip backpressure");
+        for rx in rxs {
+            let _ = rx.recv_timeout(std::time::Duration::from_secs(30));
+        }
+        let s = metrics.snapshot();
+        assert_eq!(s.rejected as usize, rejected);
+        assert_eq!(s.completed as usize, accepted);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn batch_submission_answers_each_query() {
+        let (db, pool, _metrics) = mk_pool(2, 8);
+        let queries = db.sample_queries(6, 5);
+        let batch: Vec<Query> = queries
+            .iter()
+            .enumerate()
+            .map(|(i, q)| Query::new(i as u64, q.clone(), 3, QueryMode::Exhaustive))
+            .collect();
+        let rx = pool.submit_batch(batch).unwrap();
+        let mut got: Vec<u64> = (0..6)
+            .map(|_| rx.recv_timeout(std::time::Duration::from_secs(30)).unwrap().id)
+            .collect();
+        got.sort_unstable();
+        assert_eq!(got, vec![0, 1, 2, 3, 4, 5]);
+        pool.shutdown();
+    }
+}

@@ -1,0 +1,71 @@
+//! Query/response types flowing through the coordinator.
+
+use crate::fingerprint::Fingerprint;
+use crate::topk::Scored;
+use std::time::{Duration, Instant};
+
+/// Which engine family serves the query (paper's two algorithm classes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QueryMode {
+    /// Exhaustive BitBound & folding engine (high recall).
+    Exhaustive,
+    /// HNSW approximate engine (high throughput).
+    Approximate,
+    /// Router decides from the requested recall target.
+    Auto,
+}
+
+impl std::str::FromStr for QueryMode {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "exhaustive" | "exact" | "bitbound" => Ok(Self::Exhaustive),
+            "approximate" | "approx" | "hnsw" => Ok(Self::Approximate),
+            "auto" => Ok(Self::Auto),
+            other => Err(format!("unknown mode {other:?}")),
+        }
+    }
+}
+
+/// One similarity-search request.
+#[derive(Debug, Clone)]
+pub struct Query {
+    pub id: u64,
+    pub fingerprint: Fingerprint,
+    pub k: usize,
+    pub mode: QueryMode,
+    /// Desired minimum recall (Auto mode routes on this: ≥ 0.95 ⇒
+    /// exhaustive, else HNSW — the Fig. 10 crossover).
+    pub recall_target: f64,
+    pub submitted: Instant,
+}
+
+impl Query {
+    pub fn new(id: u64, fingerprint: Fingerprint, k: usize, mode: QueryMode) -> Self {
+        Self { id, fingerprint, k, mode, recall_target: 0.9, submitted: Instant::now() }
+    }
+}
+
+/// Search response.
+#[derive(Debug, Clone)]
+pub struct QueryResult {
+    pub id: u64,
+    pub hits: Vec<Scored>,
+    /// End-to-end latency (submit → complete).
+    pub latency: Duration,
+    /// Which backend served it (diagnostics).
+    pub backend: &'static str,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_parsing() {
+        assert_eq!("hnsw".parse::<QueryMode>().unwrap(), QueryMode::Approximate);
+        assert_eq!("exact".parse::<QueryMode>().unwrap(), QueryMode::Exhaustive);
+        assert_eq!("AUTO".parse::<QueryMode>().unwrap(), QueryMode::Auto);
+        assert!("nope".parse::<QueryMode>().is_err());
+    }
+}

@@ -1,0 +1,131 @@
+//! Mode-based request router over the two engine families.
+//!
+//! The Fig. 10 Pareto analysis gives the routing rule: at high recall
+//! targets the BitBound & folding engine dominates; below the crossover
+//! the HNSW engine is an order of magnitude faster. `Auto` queries route
+//! on their recall target against that crossover.
+
+use super::batcher::{BatchPolicy, Batcher};
+use super::metrics::Metrics;
+use super::pool::EnginePool;
+use super::request::{Query, QueryMode, QueryResult};
+use std::sync::mpsc::Receiver;
+use std::sync::Arc;
+
+/// Recall target at which Auto switches from HNSW to exhaustive — the
+/// Fig. 10 frontier crossover (HNSW tops out ≈ 0.95 recall on Chembl-like
+/// data before its QPS advantage evaporates).
+pub const AUTO_RECALL_CROSSOVER: f64 = 0.95;
+
+/// Two-family router with per-family batching.
+pub struct Router {
+    exhaustive: Batcher,
+    approximate: Batcher,
+    metrics: Arc<Metrics>,
+}
+
+impl Router {
+    pub fn new(
+        exhaustive_pool: Arc<EnginePool>,
+        approximate_pool: Arc<EnginePool>,
+        policy: BatchPolicy,
+        metrics: Arc<Metrics>,
+    ) -> Self {
+        Self {
+            exhaustive: Batcher::new(exhaustive_pool, policy.clone()),
+            approximate: Batcher::new(approximate_pool, policy),
+            metrics,
+        }
+    }
+
+    pub fn metrics(&self) -> &Arc<Metrics> {
+        &self.metrics
+    }
+
+    /// Which family a query lands on.
+    pub fn route_of(&self, q: &Query) -> QueryMode {
+        match q.mode {
+            QueryMode::Auto => {
+                if q.recall_target >= AUTO_RECALL_CROSSOVER {
+                    QueryMode::Exhaustive
+                } else {
+                    QueryMode::Approximate
+                }
+            }
+            m => m,
+        }
+    }
+
+    /// Submit a query; the result arrives on the receiver (closed channel
+    /// = busy/rejected).
+    pub fn submit(&self, q: Query) -> Receiver<QueryResult> {
+        match self.route_of(&q) {
+            QueryMode::Exhaustive => self.exhaustive.submit(q),
+            QueryMode::Approximate | QueryMode::Auto => self.approximate.submit(q),
+        }
+    }
+
+    pub fn flush(&self) {
+        self.exhaustive.flush();
+        self.approximate.flush();
+    }
+
+    pub fn shutdown(self) {
+        self.exhaustive.shutdown();
+        self.approximate.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::backend::{NativeExhaustive, NativeHnsw};
+    use super::*;
+    use crate::fingerprint::{ChemblModel, Database};
+    use std::time::Duration;
+
+    fn mk_router() -> (Arc<Database>, Router) {
+        let db = Arc::new(Database::synthesize(2000, &ChemblModel::default(), 4));
+        let metrics = Arc::new(Metrics::new());
+        let dbc = db.clone();
+        let ex = Arc::new(EnginePool::new("ex", 1, 8, metrics.clone(), move |_| {
+            NativeExhaustive::factory(dbc.clone(), 1, 0.0)
+        }));
+        let graph = NativeHnsw::build_graph(&db, 8, 48, 1);
+        let dbc2 = db.clone();
+        let ap = Arc::new(EnginePool::new("ap", 1, 8, metrics.clone(), move |_| {
+            NativeHnsw::factory(dbc2.clone(), graph.clone(), 48)
+        }));
+        let policy = BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) };
+        (db.clone(), Router::new(ex, ap, policy, metrics))
+    }
+
+    #[test]
+    fn explicit_modes_route_to_their_backend() {
+        let (db, router) = mk_router();
+        let q = db.sample_queries(1, 7)[0].clone();
+        let r1 = router
+            .submit(Query::new(1, q.clone(), 5, QueryMode::Exhaustive))
+            .recv_timeout(Duration::from_secs(30))
+            .unwrap();
+        assert_eq!(r1.backend, "native-exhaustive");
+        let r2 = router
+            .submit(Query::new(2, q, 5, QueryMode::Approximate))
+            .recv_timeout(Duration::from_secs(30))
+            .unwrap();
+        assert_eq!(r2.backend, "native-hnsw");
+        router.shutdown();
+    }
+
+    #[test]
+    fn auto_routes_on_recall_target() {
+        let (db, router) = mk_router();
+        let fp = db.sample_queries(1, 9)[0].clone();
+        let mut hi = Query::new(1, fp.clone(), 5, QueryMode::Auto);
+        hi.recall_target = 0.99;
+        assert_eq!(router.route_of(&hi), QueryMode::Exhaustive);
+        let mut lo = Query::new(2, fp, 5, QueryMode::Auto);
+        lo.recall_target = 0.85;
+        assert_eq!(router.route_of(&lo), QueryMode::Approximate);
+        router.shutdown();
+    }
+}

@@ -1,0 +1,308 @@
+//! TCP front end: a line-oriented text protocol over the router.
+//!
+//! Protocol (one request per line):
+//!
+//! ```text
+//! SEARCH <k> <mode> <hex fingerprint (256 hex chars = 1024 bits)>
+//!   → OK <row>:<score> <row>:<score> …
+//!   → BUSY            (backpressure rejection; retry later)
+//!   → ERR <message>
+//! STATS → OK <metrics summary>
+//! PING  → PONG
+//! QUIT  → closes the connection
+//! ```
+//!
+//! std-only (no async runtime in the vendored set): one thread per
+//! connection, which is plenty for the engine counts this serves.
+
+use super::request::{Query, QueryMode};
+use super::router::Router;
+use crate::fingerprint::{Fingerprint, FP_BITS};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Parse a 256-hex-char fingerprint (most-significant nibble first).
+pub fn fingerprint_from_hex(hex: &str) -> Result<Fingerprint, String> {
+    let hex = hex.trim();
+    if hex.len() != FP_BITS / 4 {
+        return Err(format!("expected {} hex chars, got {}", FP_BITS / 4, hex.len()));
+    }
+    let mut fp = Fingerprint::zero_full();
+    for (ci, c) in hex.chars().enumerate() {
+        let v = c.to_digit(16).ok_or_else(|| format!("bad hex char {c:?}"))?;
+        for b in 0..4 {
+            if v & (1 << b) != 0 {
+                fp.set(ci * 4 + b);
+            }
+        }
+    }
+    Ok(fp)
+}
+
+/// Render a fingerprint as protocol hex.
+pub fn fingerprint_to_hex(fp: &Fingerprint) -> String {
+    let mut s = String::with_capacity(FP_BITS / 4);
+    for ci in 0..FP_BITS / 4 {
+        let mut v = 0u32;
+        for b in 0..4 {
+            if fp.get(ci * 4 + b) {
+                v |= 1 << b;
+            }
+        }
+        s.push(char::from_digit(v, 16).unwrap());
+    }
+    s
+}
+
+/// The serving loop. Bind, accept, answer until `stop` is raised.
+pub struct Server {
+    router: Arc<Router>,
+    next_id: AtomicU64,
+    stop: Arc<AtomicBool>,
+}
+
+impl Server {
+    pub fn new(router: Arc<Router>) -> Self {
+        Self { router, next_id: AtomicU64::new(1), stop: Arc::new(AtomicBool::new(false)) }
+    }
+
+    pub fn stop_handle(&self) -> Arc<AtomicBool> {
+        self.stop.clone()
+    }
+
+    /// Serve on `addr` (e.g. "127.0.0.1:7878"). Blocks; returns the bound
+    /// address through `on_bound` (used by tests to learn the ephemeral
+    /// port).
+    pub fn serve(
+        &self,
+        addr: &str,
+        on_bound: impl FnOnce(std::net::SocketAddr),
+    ) -> std::io::Result<()> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        on_bound(listener.local_addr()?);
+        let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
+        while !self.stop.load(Ordering::Relaxed) {
+            match listener.accept() {
+                Ok((stream, _peer)) => {
+                    let router = self.router.clone();
+                    let next_id = self.next_id.fetch_add(1_000_000, Ordering::Relaxed);
+                    let stop = self.stop.clone();
+                    conns.push(std::thread::spawn(move || {
+                        let _ = handle_conn(stream, router, next_id, stop);
+                    }));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(std::time::Duration::from_millis(5));
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        for c in conns {
+            let _ = c.join();
+        }
+        Ok(())
+    }
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    router: Arc<Router>,
+    id_base: u64,
+    stop: Arc<AtomicBool>,
+) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(std::time::Duration::from_millis(200)))?;
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    let mut qid = id_base;
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            return Ok(());
+        }
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) => return Ok(()), // EOF
+            Ok(_) => {}
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue;
+            }
+            Err(e) => return Err(e),
+        }
+        let reply = dispatch_line(line.trim(), &router, &mut qid);
+        match reply {
+            Some(text) => {
+                writer.write_all(text.as_bytes())?;
+                writer.write_all(b"\n")?;
+            }
+            None => return Ok(()), // QUIT
+        }
+    }
+}
+
+fn dispatch_line(line: &str, router: &Router, qid: &mut u64) -> Option<String> {
+    let mut parts = line.split_whitespace();
+    match parts.next() {
+        Some("PING") => Some("PONG".into()),
+        Some("STATS") => Some(format!("OK {}", router.metrics().snapshot().report())),
+        Some("QUIT") => None,
+        Some("SEARCH") => {
+            let k: usize = match parts.next().and_then(|s| s.parse().ok()) {
+                Some(k) if k > 0 => k,
+                _ => return Some("ERR bad k".into()),
+            };
+            let mode: QueryMode = match parts.next().map(str::parse) {
+                Some(Ok(m)) => m,
+                _ => return Some("ERR bad mode".into()),
+            };
+            let fp = match parts.next().map(fingerprint_from_hex) {
+                Some(Ok(fp)) => fp,
+                Some(Err(e)) => return Some(format!("ERR {e}")),
+                None => return Some("ERR missing fingerprint".into()),
+            };
+            *qid += 1;
+            let rx = router.submit(Query::new(*qid, fp, k, mode));
+            match rx.recv_timeout(std::time::Duration::from_secs(60)) {
+                Ok(result) => {
+                    let body: Vec<String> = result
+                        .hits
+                        .iter()
+                        .map(|s| format!("{}:{:.6}", s.id, s.score))
+                        .collect();
+                    Some(format!("OK {}", body.join(" ")))
+                }
+                Err(_) => Some("BUSY".into()),
+            }
+        }
+        Some(other) => Some(format!("ERR unknown command {other:?}")),
+        None => Some("ERR empty".into()),
+    }
+}
+
+/// Minimal blocking client for tests/examples.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: std::net::SocketAddr) -> std::io::Result<Self> {
+        let stream = TcpStream::connect(addr)?;
+        let writer = stream.try_clone()?;
+        Ok(Self { reader: BufReader::new(stream), writer })
+    }
+
+    pub fn request(&mut self, line: &str) -> std::io::Result<String> {
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        let mut reply = String::new();
+        self.reader.read_line(&mut reply)?;
+        Ok(reply.trim_end().to_string())
+    }
+
+    /// SEARCH convenience; returns (row, score) pairs.
+    pub fn search(
+        &mut self,
+        fp: &Fingerprint,
+        k: usize,
+        mode: &str,
+    ) -> std::io::Result<Vec<(u64, f64)>> {
+        let line = format!("SEARCH {k} {mode} {}", fingerprint_to_hex(fp));
+        let reply = self.request(&line)?;
+        if let Some(body) = reply.strip_prefix("OK") {
+            Ok(body
+                .split_whitespace()
+                .filter_map(|tok| {
+                    let (id, score) = tok.split_once(':')?;
+                    Some((id.parse().ok()?, score.parse().ok()?))
+                })
+                .collect())
+        } else {
+            Err(std::io::Error::new(std::io::ErrorKind::Other, reply))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::backend::{NativeExhaustive, NativeHnsw};
+    use super::super::batcher::BatchPolicy;
+    use super::super::metrics::Metrics;
+    use super::super::pool::EnginePool;
+    use super::*;
+    use crate::fingerprint::{ChemblModel, Database};
+    use std::time::Duration;
+
+    #[test]
+    fn hex_roundtrip() {
+        let db = Database::synthesize(3, &ChemblModel::default(), 2);
+        for fp in &db.fps {
+            let hex = fingerprint_to_hex(fp);
+            assert_eq!(hex.len(), 256);
+            let back = fingerprint_from_hex(&hex).unwrap();
+            assert_eq!(&back, fp);
+        }
+        assert!(fingerprint_from_hex("zz").is_err());
+        assert!(fingerprint_from_hex(&"g".repeat(256)).is_err());
+    }
+
+    #[test]
+    fn end_to_end_tcp_search() {
+        let db = Arc::new(Database::synthesize(1000, &ChemblModel::default(), 6));
+        let metrics = Arc::new(Metrics::new());
+        let dbc = db.clone();
+        let ex = Arc::new(EnginePool::new("srv-ex", 1, 8, metrics.clone(), move |_| {
+            NativeExhaustive::factory(dbc.clone(), 1, 0.0)
+        }));
+        let graph = NativeHnsw::build_graph(&db, 6, 32, 3);
+        let dbc2 = db.clone();
+        let ap = Arc::new(EnginePool::new("srv-ap", 1, 8, metrics.clone(), move |_| {
+            NativeHnsw::factory(dbc2.clone(), graph.clone(), 32)
+        }));
+        let router = Arc::new(Router::new(
+            ex,
+            ap,
+            BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+            metrics,
+        ));
+
+        let server = Arc::new(Server::new(router));
+        let stop = server.stop_handle();
+        let (addr_tx, addr_rx) = std::sync::mpsc::channel();
+        let srv = server.clone();
+        let handle = std::thread::spawn(move || {
+            srv.serve("127.0.0.1:0", move |a| {
+                let _ = addr_tx.send(a);
+            })
+            .unwrap();
+        });
+        let addr = addr_rx.recv_timeout(Duration::from_secs(10)).unwrap();
+
+        let mut client = Client::connect(addr).unwrap();
+        assert_eq!(client.request("PING").unwrap(), "PONG");
+
+        // Query an exact database member: row must come back first with
+        // score 1.0.
+        let target = 123usize;
+        let hits = client.search(&db.fps[target], 5, "exact").unwrap();
+        assert_eq!(hits[0].0, target as u64);
+        assert!((hits[0].1 - 1.0).abs() < 1e-6);
+
+        // HNSW route answers too.
+        let hits2 = client.search(&db.fps[target], 5, "hnsw").unwrap();
+        assert_eq!(hits2[0].0, target as u64);
+
+        // Protocol errors are reported, not fatal.
+        assert!(client.request("SEARCH x y z").unwrap().starts_with("ERR"));
+        assert!(client.request("STATS").unwrap().starts_with("OK"));
+
+        assert_eq!(client.request("QUIT").ok(), Some(String::new()));
+        stop.store(true, Ordering::Relaxed);
+        let _ = handle.join();
+    }
+}

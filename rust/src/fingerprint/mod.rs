@@ -1,0 +1,23 @@
+//! Molecular fingerprints: representation, chemistry, and dataset synthesis.
+//!
+//! This is the substrate the paper takes from RDKit + Chembl; we build it
+//! from scratch (see DESIGN.md §2 for the substitution argument):
+//!
+//! * [`packed`] — bit-packed binary fingerprints (1024-bit Morgan layout as
+//!   u64 words) with popcount-based Tanimoto (paper Eq. 1), folding
+//!   (modulo-OR compression, paper Fig. 3), and 12-bit fixed-point score
+//!   quantization (paper module ②).
+//! * [`smiles`] — a minimal SMILES parser producing molecular graphs.
+//! * [`morgan`] — Morgan/ECFP-style circular fingerprints over those graphs
+//!   (RDKit substitute), radius-2, hashed and folded to 1024 bits.
+//! * [`dataset`] — Chembl-like synthetic database generator whose popcount
+//!   distribution follows the Gaussian model of paper Eq. 3 / Fig. 2a, plus
+//!   a bundled set of real drug SMILES.
+
+pub mod dataset;
+pub mod morgan;
+pub mod packed;
+pub mod smiles;
+
+pub use dataset::{ChemblModel, Database};
+pub use packed::{Fingerprint, FoldScheme, FP_BITS, FP_WORDS};

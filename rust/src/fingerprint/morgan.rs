@@ -1,0 +1,269 @@
+//! Morgan (ECFP-style) circular fingerprints.
+//!
+//! RDKit substitute (DESIGN.md §2): iterative neighborhood hashing à la
+//! ECFP (Rogers & Hahn 2010). Each atom starts from an invariant tuple
+//! (element, degree, charge, H-count, ring-bond participation, aromaticity);
+//! for `radius` rounds, each atom's identifier is re-hashed together with
+//! its (bond-order, neighbor-identifier) pairs sorted canonically. Every
+//! identifier generated at every radius sets one bit of the hashed,
+//! folded output fingerprint — the paper's 1024-bit Morgan layout.
+
+use super::packed::{Fingerprint, FP_BITS};
+use super::smiles::{parse_smiles, Molecule, SmilesError};
+
+/// FNV-1a 64-bit — stable, dependency-free hash for invariants.
+fn fnv1a(data: &[u64]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &d in data {
+        for i in 0..8 {
+            h ^= (d >> (8 * i)) & 0xff;
+            h = h.wrapping_mul(0x1000_0000_01b3);
+        }
+    }
+    h
+}
+
+fn element_number(sym: &str) -> u64 {
+    // Minimal periodic table covering the parser's element set.
+    match sym {
+        "H" => 1,
+        "B" => 5,
+        "C" => 6,
+        "N" => 7,
+        "O" => 8,
+        "F" => 9,
+        "Na" => 11,
+        "Mg" => 12,
+        "Al" => 13,
+        "Si" => 14,
+        "P" => 15,
+        "S" => 16,
+        "Cl" => 17,
+        "Ca" => 20,
+        "Cr" => 24,
+        "Mn" => 25,
+        "Fe" => 26,
+        "Co" => 27,
+        "Ni" => 28,
+        "Cu" => 29,
+        "Zn" => 30,
+        "As" => 33,
+        "Se" => 34,
+        "Br" => 35,
+        "Ag" => 47,
+        "Sn" => 50,
+        "I" => 53,
+        "Ba" => 56,
+        "Pt" => 78,
+        "Au" => 79,
+        "Hg" => 80,
+        "Pb" => 82,
+        other => {
+            // Unknown elements hash their bytes — stable, collision-unlikely.
+            fnv1a(&[other.bytes().fold(0u64, |a, b| a << 8 | b as u64)]) | 0x100
+        }
+    }
+}
+
+/// Morgan fingerprint generator.
+#[derive(Debug, Clone)]
+pub struct MorganGenerator {
+    pub radius: u32,
+    pub nbits: usize,
+}
+
+impl Default for MorganGenerator {
+    fn default() -> Self {
+        // Paper §II-A: 1024-bit Morgan binary fingerprint; radius 2 is the
+        // ECFP4-equivalent default RDKit uses.
+        Self { radius: 2, nbits: FP_BITS }
+    }
+}
+
+impl MorganGenerator {
+    pub fn new(radius: u32, nbits: usize) -> Self {
+        assert!(nbits > 0 && nbits % 64 == 0);
+        Self { radius, nbits }
+    }
+
+    /// Fingerprint a parsed molecule.
+    pub fn fingerprint_mol(&self, mol: &Molecule, bracket: &[bool]) -> Fingerprint {
+        let n = mol.atoms.len();
+        let adj = mol.adjacency();
+        // Ring-bond participation (bonds in cycles): detected per bond by
+        // "removing the bond keeps endpoints connected".
+        let ring_bond = ring_bonds(mol);
+        let in_ring: Vec<bool> = (0..n)
+            .map(|i| {
+                mol.bonds
+                    .iter()
+                    .enumerate()
+                    .any(|(bi, &(a, b, _))| ring_bond[bi] && (a == i || b == i))
+            })
+            .collect();
+
+        // Round-0 invariants (ECFP standard tuple).
+        let mut ids: Vec<u64> = (0..n)
+            .map(|i| {
+                let a = &mol.atoms[i];
+                fnv1a(&[
+                    element_number(&a.element),
+                    mol.degree(i) as u64,
+                    a.charge as i64 as u64,
+                    mol.implicit_h(i, bracket.get(i).copied().unwrap_or(false)) as u64,
+                    in_ring[i] as u64,
+                    a.aromatic as u64,
+                    a.isotope as u64,
+                ])
+            })
+            .collect();
+
+        let mut fp = Fingerprint::zero(self.nbits);
+        let mut seen_envs: std::collections::HashSet<u64> = std::collections::HashSet::new();
+        for &id in &ids {
+            seen_envs.insert(id);
+            fp.set((id % self.nbits as u64) as usize);
+        }
+
+        for _round in 0..self.radius {
+            let mut next = ids.clone();
+            for i in 0..n {
+                let mut neigh: Vec<(u32, u64)> =
+                    adj[i].iter().map(|&(j, k)| (k.code(), ids[j])).collect();
+                neigh.sort_unstable();
+                let mut data = vec![ids[i]];
+                for (bk, nid) in neigh {
+                    data.push(bk as u64);
+                    data.push(nid);
+                }
+                next[i] = fnv1a(&data);
+            }
+            ids = next;
+            for &id in &ids {
+                // ECFP de-duplicates identical environments across rounds.
+                if seen_envs.insert(id) {
+                    fp.set((id % self.nbits as u64) as usize);
+                }
+            }
+        }
+        fp
+    }
+
+    /// Parse + fingerprint a SMILES string.
+    pub fn fingerprint_smiles(&self, smiles: &str) -> Result<Fingerprint, SmilesError> {
+        let (mol, bracket) = parse_smiles(smiles)?;
+        Ok(self.fingerprint_mol(&mol, &bracket))
+    }
+}
+
+/// Mark bonds that participate in a ring: bond (a,b) is a ring bond iff b is
+/// reachable from a without traversing that bond.
+fn ring_bonds(mol: &Molecule) -> Vec<bool> {
+    let n = mol.atoms.len();
+    let adj = mol.adjacency();
+    mol.bonds
+        .iter()
+        .enumerate()
+        .map(|(bi, &(a, b, _))| {
+            // BFS from a avoiding bond bi.
+            let mut seen = vec![false; n];
+            let mut queue = std::collections::VecDeque::new();
+            seen[a] = true;
+            queue.push_back(a);
+            while let Some(x) = queue.pop_front() {
+                if x == b {
+                    return true;
+                }
+                for &(y, _) in &adj[x] {
+                    // Skip the bond under test (either direction).
+                    let is_this_bond = (x == mol.bonds[bi].0 && y == mol.bonds[bi].1)
+                        || (x == mol.bonds[bi].1 && y == mol.bonds[bi].0);
+                    if !is_this_bond && !seen[y] {
+                        seen[y] = true;
+                        queue.push_back(y);
+                    }
+                }
+            }
+            false
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fp(s: &str) -> Fingerprint {
+        MorganGenerator::default().fingerprint_smiles(s).unwrap()
+    }
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(fp("CCO").words(), fp("CCO").words());
+    }
+
+    #[test]
+    fn nonzero_and_bounded_popcount() {
+        let f = fp("CC(=O)Oc1ccccc1C(=O)O"); // aspirin
+        let c = f.count_ones();
+        assert!(c > 10, "aspirin should set >10 bits, got {c}");
+        assert!(c < 200, "1024-bit fp of a small molecule should be sparse, got {c}");
+    }
+
+    #[test]
+    fn similar_molecules_score_higher_than_dissimilar() {
+        let ethanol = fp("CCO");
+        let propanol = fp("CCCO");
+        let benzene = fp("c1ccccc1");
+        let s_similar = ethanol.tanimoto(&propanol);
+        let s_dissimilar = ethanol.tanimoto(&benzene);
+        assert!(
+            s_similar > s_dissimilar,
+            "ethanol~propanol ({s_similar:.3}) should beat ethanol~benzene ({s_dissimilar:.3})"
+        );
+        assert!(s_similar > 0.3);
+    }
+
+    #[test]
+    fn identical_molecules_unit_similarity() {
+        let a = fp("Cn1cnc2c1c(=O)n(C)c(=O)n2C");
+        let b = fp("Cn1cnc2c1c(=O)n(C)c(=O)n2C");
+        assert!((a.tanimoto(&b) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ring_bond_detection() {
+        let (m, _) = parse_smiles("C1CC1C").unwrap(); // cyclopropane + methyl
+        let rb = ring_bonds(&m);
+        assert_eq!(rb.iter().filter(|&&x| x).count(), 3, "3 ring bonds");
+        assert_eq!(rb.iter().filter(|&&x| !x).count(), 1, "1 chain bond");
+    }
+
+    #[test]
+    fn radius_increases_bits() {
+        let g0 = MorganGenerator::new(0, FP_BITS);
+        let g2 = MorganGenerator::new(2, FP_BITS);
+        let s = "CC(=O)Oc1ccccc1C(=O)O";
+        assert!(
+            g2.fingerprint_smiles(s).unwrap().count_ones()
+                > g0.fingerprint_smiles(s).unwrap().count_ones()
+        );
+    }
+
+    #[test]
+    fn charge_distinguishes() {
+        // Protonation state should change the fingerprint.
+        let a = fp("CC(=O)[O-]");
+        let b = fp("CC(=O)O");
+        assert!(a.tanimoto(&b) < 1.0);
+    }
+
+    #[test]
+    fn disconnected_component_bits_union() {
+        let salt = fp("CC(=O)[O-].[Na+]");
+        let acid_part = fp("CC(=O)[O-]");
+        // The salt fp must contain every bit of the acid fragment.
+        let inter = salt.intersection_count(&acid_part);
+        assert_eq!(inter, acid_part.count_ones());
+    }
+}

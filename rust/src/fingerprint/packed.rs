@@ -1,0 +1,429 @@
+//! Bit-packed binary molecular fingerprints.
+//!
+//! The paper uses 1024-bit Morgan binary fingerprints (§II-A). We pack them
+//! as 16 × u64 words; the PJRT artifacts view the same memory as 32 × u32
+//! words (the Pallas kernel's layout — u32 popcount maps to
+//! `lax.population_count`). All similarity math lives here:
+//!
+//! * Tanimoto coefficient, paper Eq. 1: `S(A,B) = |A∩B| / |A∪B|`,
+//!   computed as `inter / (cntA + cntB − inter)` so one popcount pass
+//!   suffices (this identity is also what the TFC kernel ② exploits).
+//! * Folding, paper Fig. 3: scheme 1 ORs the `m` length-`L/m` *sections*
+//!   together; scheme 2 ORs every adjacent group of `m` bits.
+//! * 12-bit fixed-point score quantization (paper stores Tanimoto scores as
+//!   12-bit fixed point in module ②).
+
+/// Fingerprint length in bits (1024-bit Morgan, paper §II-A).
+pub const FP_BITS: usize = 1024;
+/// u64 words per full-length fingerprint.
+pub const FP_WORDS: usize = FP_BITS / 64;
+
+/// The two modulo-OR compression (folding) schemes of paper Fig. 3.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FoldScheme {
+    /// Scheme 1: split the fingerprint into `m` sections of length `L/m`
+    /// and OR the sections together (bit `i` of the result ORs bits
+    /// `i, i+L/m, i+2L/m, …`). Higher accuracy (paper Table I) — this is
+    /// the scheme the FPGA design uses.
+    Sectional,
+    /// Scheme 2: OR every adjacent group of `m` bits (bit `i` of the result
+    /// ORs bits `m·i … m·i+m−1`).
+    Adjacent,
+}
+
+/// A bit-packed binary fingerprint of arbitrary folded length.
+///
+/// Full-length fingerprints have `FP_BITS` bits; folding by level `m`
+/// produces `FP_BITS / m` bits. Words beyond `bits` are kept zero
+/// (invariant relied on by popcount and the kernel tile packer).
+#[derive(Clone, PartialEq, Eq, Hash)]
+pub struct Fingerprint {
+    bits: usize,
+    words: Vec<u64>,
+}
+
+impl std::fmt::Debug for Fingerprint {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Fingerprint({} bits, popcount {})", self.bits, self.count_ones())
+    }
+}
+
+impl Fingerprint {
+    /// All-zero fingerprint of `bits` length (`bits` must be a multiple of 64).
+    pub fn zero(bits: usize) -> Self {
+        assert!(bits > 0 && bits % 64 == 0, "bits must be a positive multiple of 64");
+        Self { bits, words: vec![0; bits / 64] }
+    }
+
+    /// Full-length (1024-bit) all-zero fingerprint.
+    pub fn zero_full() -> Self {
+        Self::zero(FP_BITS)
+    }
+
+    /// Build from raw u64 words (length defines the bit length).
+    pub fn from_words(words: Vec<u64>) -> Self {
+        assert!(!words.is_empty());
+        Self { bits: words.len() * 64, words }
+    }
+
+    /// Number of bits.
+    #[inline]
+    pub fn bits(&self) -> usize {
+        self.bits
+    }
+
+    /// Raw words.
+    #[inline]
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    /// View as little-endian u32 words (the layout the Pallas kernel and
+    /// PJRT artifacts use).
+    pub fn to_u32_words(&self) -> Vec<u32> {
+        let mut out = Vec::with_capacity(self.words.len() * 2);
+        for &w in &self.words {
+            out.push(w as u32);
+            out.push((w >> 32) as u32);
+        }
+        out
+    }
+
+    /// Set bit `i`.
+    #[inline]
+    pub fn set(&mut self, i: usize) {
+        assert!(i < self.bits, "bit {i} out of range {}", self.bits);
+        self.words[i / 64] |= 1u64 << (i % 64);
+    }
+
+    /// Test bit `i`.
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        assert!(i < self.bits);
+        (self.words[i / 64] >> (i % 64)) & 1 == 1
+    }
+
+    /// Popcount — the BitCnt module ① of the paper.
+    #[inline]
+    pub fn count_ones(&self) -> u32 {
+        self.words.iter().map(|w| w.count_ones()).sum()
+    }
+
+    /// Popcount of the intersection |A∩B|.
+    #[inline]
+    pub fn intersection_count(&self, other: &Self) -> u32 {
+        debug_assert_eq!(self.bits, other.bits);
+        self.words.iter().zip(&other.words).map(|(a, b)| (a & b).count_ones()).sum()
+    }
+
+    /// Tanimoto similarity (paper Eq. 1). Both-empty pairs score 0 by the
+    /// chemfp convention.
+    pub fn tanimoto(&self, other: &Self) -> f64 {
+        let inter = self.intersection_count(other);
+        let union = self.count_ones() + other.count_ones() - inter;
+        if union == 0 {
+            0.0
+        } else {
+            inter as f64 / union as f64
+        }
+    }
+
+    /// Tanimoto given precomputed popcounts (the on-the-fly engine keeps
+    /// per-row popcounts in the index so the TFC kernel does one popcount
+    /// pass, not two).
+    #[inline]
+    pub fn tanimoto_with_counts(&self, other: &Self, cnt_self: u32, cnt_other: u32) -> f64 {
+        let inter = self.intersection_count(other);
+        let union = cnt_self + cnt_other - inter;
+        if union == 0 {
+            0.0
+        } else {
+            inter as f64 / union as f64
+        }
+    }
+
+    /// Fold by level `m` with the given scheme (paper Fig. 3). `m = 1`
+    /// returns a clone. `m` must divide the bit length and the folded
+    /// length must stay a multiple of 64 (all paper configurations — L=1024,
+    /// m ∈ {1,2,4,8,16} — satisfy this; m=32 gives 32 bits and is handled
+    /// by padding to one word).
+    pub fn fold(&self, m: usize, scheme: FoldScheme) -> Self {
+        assert!(m >= 1 && self.bits % m == 0, "folding level {m} must divide {}", self.bits);
+        if m == 1 {
+            return self.clone();
+        }
+        let out_bits = self.bits / m;
+        let out_words = out_bits.div_ceil(64).max(1);
+        let mut out = Self { bits: out_words * 64, words: vec![0; out_words] };
+        match scheme {
+            FoldScheme::Sectional => {
+                // OR the m sections of length out_bits together.
+                for s in 0..m {
+                    for i in 0..out_bits {
+                        if self.get(s * out_bits + i) {
+                            out.words[i / 64] |= 1u64 << (i % 64);
+                        }
+                    }
+                }
+            }
+            FoldScheme::Adjacent => {
+                // Bit i of the result ORs source bits m·i … m·i+m−1.
+                for i in 0..out_bits {
+                    let mut any = false;
+                    for j in 0..m {
+                        if self.get(i * m + j) {
+                            any = true;
+                            break;
+                        }
+                    }
+                    if any {
+                        out.words[i / 64] |= 1u64 << (i % 64);
+                    }
+                }
+            }
+        }
+        // Record the true folded bit length (may be < word capacity for m=32).
+        out.bits = out_words * 64;
+        out
+    }
+
+    /// Word-level fast path for sectional folding when `out_bits` is a
+    /// multiple of 64 — used by the index builder on the bulk path.
+    pub fn fold_sectional_fast(&self, m: usize) -> Self {
+        assert!(m >= 1 && self.bits % m == 0);
+        let out_bits = self.bits / m;
+        if m == 1 {
+            return self.clone();
+        }
+        if out_bits % 64 != 0 {
+            return self.fold(m, FoldScheme::Sectional);
+        }
+        let ow = out_bits / 64;
+        let mut words = vec![0u64; ow];
+        for s in 0..m {
+            for i in 0..ow {
+                words[i] |= self.words[s * ow + i];
+            }
+        }
+        Self { bits: out_bits, words }
+    }
+}
+
+/// Quantize a Tanimoto score in [0,1] to 12-bit fixed point (paper module ②
+/// stores scores as 12-bit fixed point "to reduce the computation and
+/// storage overhead without loss of accuracy").
+#[inline]
+pub fn quantize12(score: f64) -> u16 {
+    debug_assert!((0.0..=1.0).contains(&score));
+    // 12-bit: 4095 == 1.0. Round-to-nearest.
+    (score * 4095.0).round() as u16
+}
+
+/// Dequantize a 12-bit fixed-point score.
+#[inline]
+pub fn dequantize12(q: u16) -> f64 {
+    q as f64 / 4095.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    fn random_fp(g: &mut crate::util::prng::Pcg64, bits: usize, density: f64) -> Fingerprint {
+        let mut fp = Fingerprint::zero(bits);
+        for i in 0..bits {
+            if g.next_f64() < density {
+                fp.set(i);
+            }
+        }
+        fp
+    }
+
+    #[test]
+    fn set_get_count() {
+        let mut fp = Fingerprint::zero_full();
+        assert_eq!(fp.count_ones(), 0);
+        fp.set(0);
+        fp.set(63);
+        fp.set(64);
+        fp.set(1023);
+        assert_eq!(fp.count_ones(), 4);
+        assert!(fp.get(0) && fp.get(63) && fp.get(64) && fp.get(1023));
+        assert!(!fp.get(1));
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_range_set_panics() {
+        Fingerprint::zero_full().set(1024);
+    }
+
+    #[test]
+    fn tanimoto_identical_and_disjoint() {
+        let mut a = Fingerprint::zero_full();
+        a.set(1);
+        a.set(100);
+        assert!((a.tanimoto(&a) - 1.0).abs() < 1e-12);
+        let mut b = Fingerprint::zero_full();
+        b.set(2);
+        b.set(200);
+        assert_eq!(a.tanimoto(&b), 0.0);
+        // Both empty → 0 by convention.
+        assert_eq!(Fingerprint::zero_full().tanimoto(&Fingerprint::zero_full()), 0.0);
+    }
+
+    #[test]
+    fn tanimoto_hand_example() {
+        // A = {0,1,2,3}, B = {2,3,4,5}: inter 2, union 6 → 1/3.
+        let mut a = Fingerprint::zero_full();
+        let mut b = Fingerprint::zero_full();
+        for i in 0..4 {
+            a.set(i);
+        }
+        for i in 2..6 {
+            b.set(i);
+        }
+        assert!((a.tanimoto(&b) - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    /// Paper Fig. 3 worked example: L = 8, m = 2.
+    /// Source bits (LSB-first) 1100_0101:
+    ///   scheme 1 (sectional, sections 1100 and 0101) → 1101
+    ///   scheme 2 (adjacent pairs 11|00|01|01)         → 1011
+    #[test]
+    fn fold_fig3_example() {
+        // Use a 128-bit fp and place the example in the first 8 bits scaled
+        // up: we emulate L=8,m=2 semantics directly on a synthetic case by
+        // checking fold arithmetic on bit positions.
+        // sectional: out_bits=64 when bits=128,m=2: bit i = bit i | bit (64+i).
+        let mut fp = Fingerprint::zero(128);
+        fp.set(0);
+        fp.set(1); // section 0: bits 0,1
+        fp.set(64 + 1);
+        fp.set(64 + 3); // section 1: bits 1,3
+        let s1 = fp.fold(2, FoldScheme::Sectional);
+        assert_eq!(s1.bits(), 64);
+        assert!(s1.get(0) && s1.get(1) && s1.get(3));
+        assert_eq!(s1.count_ones(), 3);
+
+        // adjacent: out bit i = src bits 2i|2i+1. src set {0,1,65,67}
+        // → out bits 0 (from 0,1), 32 (from 64..65→ idx 32 covers 64,65),
+        //   33 (66,67).
+        let s2 = fp.fold(2, FoldScheme::Adjacent);
+        assert!(s2.get(0) && s2.get(32) && s2.get(33));
+        assert_eq!(s2.count_ones(), 3);
+    }
+
+    #[test]
+    fn fold_m1_is_identity() {
+        let mut g = crate::util::prng::Pcg64::new(1);
+        let fp = random_fp(&mut g, FP_BITS, 0.06);
+        assert_eq!(fp.fold(1, FoldScheme::Sectional), fp);
+        assert_eq!(fp.fold(1, FoldScheme::Adjacent), fp);
+    }
+
+    #[test]
+    fn fold_fast_matches_reference() {
+        check("fold_fast_eq_ref", 50, |g| {
+            let d = 0.05 + g.next_f64() * 0.2;
+            let fp = random_fp(g, FP_BITS, d);
+            for m in [2usize, 4, 8, 16] {
+                let fast = fp.fold_sectional_fast(m);
+                let slow = fp.fold(m, FoldScheme::Sectional);
+                assert_eq!(fast.words(), &slow.words()[..fast.words().len()]);
+            }
+        });
+    }
+
+    #[test]
+    fn fold_preserves_membership_superset() {
+        // Folding is an OR-compression: if a bit is set in the source, its
+        // folded image must be set (no false negatives — the property that
+        // makes 2-stage search sound, paper §III-B).
+        check("fold_superset", 50, |g| {
+            let fp = random_fp(g, FP_BITS, 0.08);
+            for m in [2usize, 4, 8, 16, 32] {
+                let out_bits = FP_BITS / m;
+                let folded = fp.fold(m, FoldScheme::Sectional);
+                for i in 0..FP_BITS {
+                    if fp.get(i) {
+                        assert!(folded.get(i % out_bits), "m={m} bit {i} lost");
+                    }
+                }
+                let folded2 = fp.fold(m, FoldScheme::Adjacent);
+                for i in 0..FP_BITS {
+                    if fp.get(i) {
+                        assert!(folded2.get(i / m), "m={m} bit {i} lost (adjacent)");
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn folded_tanimoto_upper_bounds_true_tanimoto_statistically() {
+        // OR-folding can only merge distinct bits, which inflates overlap:
+        // on sparse fingerprints the folded similarity is (with very high
+        // probability) >= true similarity. We assert the mean relationship
+        // over random sparse pairs — this is the property GPUsimilarity's
+        // 2-stage search relies on.
+        let mut g = crate::util::prng::Pcg64::new(7);
+        let mut folded_lower = 0usize;
+        let n = 300;
+        for _ in 0..n {
+            let a = random_fp(&mut g, FP_BITS, 0.06);
+            let b = random_fp(&mut g, FP_BITS, 0.06);
+            let t = a.tanimoto(&b);
+            let tf = a
+                .fold(8, FoldScheme::Sectional)
+                .tanimoto(&b.fold(8, FoldScheme::Sectional));
+            if tf < t - 0.05 {
+                folded_lower += 1;
+            }
+        }
+        assert!(
+            folded_lower < n / 20,
+            "folded similarity materially below true similarity in {folded_lower}/{n} cases"
+        );
+    }
+
+    #[test]
+    fn u32_view_preserves_popcount_and_intersection() {
+        check("u32_view", 30, |g| {
+            let a = random_fp(g, FP_BITS, 0.1);
+            let b = random_fp(g, FP_BITS, 0.1);
+            let a32 = a.to_u32_words();
+            let b32 = b.to_u32_words();
+            assert_eq!(a32.len(), 32);
+            let cnt: u32 = a32.iter().map(|w| w.count_ones()).sum();
+            assert_eq!(cnt, a.count_ones());
+            let inter: u32 = a32.iter().zip(&b32).map(|(x, y)| (x & y).count_ones()).sum();
+            assert_eq!(inter, a.intersection_count(&b));
+        });
+    }
+
+    #[test]
+    fn quantize12_roundtrip_tolerance() {
+        // 12-bit quantization error is < 1/8190 — far below the 0.01
+        // score-resolution that top-k ordering of molecular similarities
+        // needs (the paper's "without loss of accuracy" claim).
+        for i in 0..=1000 {
+            let s = i as f64 / 1000.0;
+            let err = (dequantize12(quantize12(s)) - s).abs();
+            assert!(err <= 0.5 / 4095.0 + 1e-12, "s={s} err={err}");
+        }
+    }
+
+    #[test]
+    fn tanimoto_with_counts_matches() {
+        check("tanimoto_counts", 30, |g| {
+            let (da, db) = (0.05 + 0.1 * g.next_f64(), 0.05 + 0.1 * g.next_f64());
+            let a = random_fp(g, FP_BITS, da);
+            let b = random_fp(g, FP_BITS, db);
+            let t1 = a.tanimoto(&b);
+            let t2 = a.tanimoto_with_counts(&b, a.count_ones(), b.count_ones());
+            assert!((t1 - t2).abs() < 1e-12);
+        });
+    }
+}

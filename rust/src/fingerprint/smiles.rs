@@ -1,0 +1,536 @@
+//! Minimal SMILES parser → molecular graph.
+//!
+//! RDKit substitute for the fingerprint path (DESIGN.md §2). Supports the
+//! subset of the SMILES grammar needed for drug-like molecules:
+//!
+//! * organic-subset atoms `B C N O P S F Cl Br I` and aromatic
+//!   `b c n o s p`
+//! * bracket atoms `[nH]`, `[N+]`, `[O-]`, `[13C]`, `[Fe+2]` (element,
+//!   charge, explicit H, isotope)
+//! * bonds `- = # : /` `\` (stereo bonds treated as single)
+//! * branches `( … )`
+//! * ring closures `1`-`9`, `%nn`
+//! * disconnected components `.`
+//!
+//! No stereochemistry perception and no aromaticity *perception* (aromatic
+//! input is honored as written, as in SMILES itself). Kekulized aromatic
+//! rings written with lowercase atoms get aromatic bonds between aromatic
+//! atoms, matching daylight semantics closely enough for fingerprinting.
+
+/// Bond order in the molecular graph.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Bond {
+    Single,
+    Double,
+    Triple,
+    Aromatic,
+}
+
+impl Bond {
+    /// Numeric code used in Morgan invariant hashing.
+    pub fn code(self) -> u32 {
+        match self {
+            Bond::Single => 1,
+            Bond::Double => 2,
+            Bond::Triple => 3,
+            Bond::Aromatic => 4,
+        }
+    }
+}
+
+/// An atom in the molecular graph.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Atom {
+    /// Element symbol, normalized capitalization ("C", "Cl", …).
+    pub element: String,
+    pub aromatic: bool,
+    pub charge: i8,
+    /// Explicit hydrogens from a bracket atom (implicit H are derived).
+    pub explicit_h: u8,
+    pub isotope: u16,
+}
+
+/// A molecule as a simple undirected graph.
+#[derive(Debug, Clone, Default)]
+pub struct Molecule {
+    pub atoms: Vec<Atom>,
+    /// (a, b, bond) with a < b.
+    pub bonds: Vec<(usize, usize, Bond)>,
+}
+
+impl Molecule {
+    /// Adjacency list: for each atom, (neighbor, bond).
+    pub fn adjacency(&self) -> Vec<Vec<(usize, Bond)>> {
+        let mut adj = vec![Vec::new(); self.atoms.len()];
+        for &(a, b, k) in &self.bonds {
+            adj[a].push((b, k));
+            adj[b].push((a, k));
+        }
+        adj
+    }
+
+    /// Heavy-atom degree of atom `i`.
+    pub fn degree(&self, i: usize) -> usize {
+        self.bonds.iter().filter(|&&(a, b, _)| a == i || b == i).count()
+    }
+
+    /// Sum of bond orders at atom `i` (aromatic counts 1.5, rounded up in
+    /// total), used for implicit-H estimation.
+    fn valence_used(&self, i: usize) -> f64 {
+        self.bonds
+            .iter()
+            .filter(|&&(a, b, _)| a == i || b == i)
+            .map(|&(_, _, k)| match k {
+                Bond::Single => 1.0,
+                Bond::Double => 2.0,
+                Bond::Triple => 3.0,
+                Bond::Aromatic => 1.5,
+            })
+            .sum()
+    }
+
+    /// Implicit hydrogen count by the SMILES valence model (organic subset
+    /// default valences; bracket atoms have none beyond `explicit_h`).
+    pub fn implicit_h(&self, i: usize, bracket: bool) -> u8 {
+        if bracket {
+            return self.atoms[i].explicit_h;
+        }
+        let used = self.valence_used(i).ceil() as i32;
+        let default = match self.atoms[i].element.as_str() {
+            "B" => 3,
+            "C" => 4,
+            "N" => 3,
+            "O" => 2,
+            "P" => 3,
+            "S" => 2,
+            "F" | "Cl" | "Br" | "I" => 1,
+            _ => 0,
+        };
+        (default - used).max(0) as u8
+    }
+}
+
+/// Parse error with position context.
+#[derive(Debug, thiserror::Error)]
+#[error("SMILES parse error at byte {pos} in {smiles:?}: {msg}")]
+pub struct SmilesError {
+    pub smiles: String,
+    pub pos: usize,
+    pub msg: String,
+}
+
+struct Parser<'a> {
+    src: &'a [u8],
+    pos: usize,
+    mol: Molecule,
+    /// Whether each atom came from a bracket (affects implicit H).
+    bracket: Vec<bool>,
+    /// Open ring-closure bonds: digit → (atom index, pending bond).
+    rings: std::collections::HashMap<u16, (usize, Option<Bond>)>,
+}
+
+impl<'a> Parser<'a> {
+    fn err(&self, msg: impl Into<String>) -> SmilesError {
+        SmilesError {
+            smiles: String::from_utf8_lossy(self.src).into_owned(),
+            pos: self.pos,
+            msg: msg.into(),
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.src.get(self.pos).copied()
+    }
+
+    fn bump(&mut self) -> Option<u8> {
+        let c = self.peek();
+        if c.is_some() {
+            self.pos += 1;
+        }
+        c
+    }
+
+    fn parse(mut self) -> Result<(Molecule, Vec<bool>), SmilesError> {
+        // prev atom stack for branches; None before the first atom and after '.'
+        let mut stack: Vec<usize> = Vec::new();
+        let mut prev: Option<usize> = None;
+        let mut pending_bond: Option<Bond> = None;
+
+        while let Some(c) = self.peek() {
+            match c {
+                b'(' => {
+                    self.bump();
+                    let p = prev.ok_or_else(|| self.err("branch before any atom"))?;
+                    stack.push(p);
+                }
+                b')' => {
+                    self.bump();
+                    prev = Some(stack.pop().ok_or_else(|| self.err("unmatched ')'"))?);
+                }
+                b'-' | b'/' | b'\\' => {
+                    self.bump();
+                    pending_bond = Some(Bond::Single);
+                }
+                b'=' => {
+                    self.bump();
+                    pending_bond = Some(Bond::Double);
+                }
+                b'#' => {
+                    self.bump();
+                    pending_bond = Some(Bond::Triple);
+                }
+                b':' => {
+                    self.bump();
+                    pending_bond = Some(Bond::Aromatic);
+                }
+                b'.' => {
+                    self.bump();
+                    prev = None;
+                    pending_bond = None;
+                }
+                b'0'..=b'9' | b'%' => {
+                    let n = self.parse_ring_digit()?;
+                    let p = prev.ok_or_else(|| self.err("ring closure before any atom"))?;
+                    self.close_ring(n, p, pending_bond.take())?;
+                }
+                _ => {
+                    let (idx, _arom) = self.parse_atom()?;
+                    if let Some(p) = prev {
+                        let bond = pending_bond.take().unwrap_or_else(|| {
+                            if self.mol.atoms[p].aromatic && self.mol.atoms[idx].aromatic {
+                                Bond::Aromatic
+                            } else {
+                                Bond::Single
+                            }
+                        });
+                        self.add_bond(p, idx, bond);
+                    } else if pending_bond.is_some() {
+                        return Err(self.err("dangling bond before first atom of component"));
+                    }
+                    prev = Some(idx);
+                }
+            }
+        }
+        if !stack.is_empty() {
+            return Err(self.err("unmatched '('"));
+        }
+        if !self.rings.is_empty() {
+            let keys: Vec<_> = self.rings.keys().collect();
+            return Err(self.err(format!("unclosed ring bond(s): {keys:?}")));
+        }
+        Ok((self.mol, self.bracket))
+    }
+
+    fn add_bond(&mut self, a: usize, b: usize, k: Bond) {
+        let (a, b) = if a < b { (a, b) } else { (b, a) };
+        self.mol.bonds.push((a, b, k));
+    }
+
+    fn parse_ring_digit(&mut self) -> Result<u16, SmilesError> {
+        match self.bump().unwrap() {
+            b'%' => {
+                let d1 = self.bump().ok_or_else(|| self.err("%% needs two digits"))?;
+                let d2 = self.bump().ok_or_else(|| self.err("%% needs two digits"))?;
+                if !(d1.is_ascii_digit() && d2.is_ascii_digit()) {
+                    return Err(self.err("%% needs two digits"));
+                }
+                Ok(((d1 - b'0') as u16) * 10 + (d2 - b'0') as u16)
+            }
+            d => Ok((d - b'0') as u16),
+        }
+    }
+
+    fn close_ring(&mut self, n: u16, atom: usize, bond: Option<Bond>) -> Result<(), SmilesError> {
+        if let Some((other, obond)) = self.rings.remove(&n) {
+            if other == atom {
+                return Err(self.err(format!("ring bond {n} closes on its own atom")));
+            }
+            let k = bond.or(obond).unwrap_or_else(|| {
+                if self.mol.atoms[other].aromatic && self.mol.atoms[atom].aromatic {
+                    Bond::Aromatic
+                } else {
+                    Bond::Single
+                }
+            });
+            self.add_bond(other, atom, k);
+        } else {
+            self.rings.insert(n, (atom, bond));
+        }
+        Ok(())
+    }
+
+    fn parse_atom(&mut self) -> Result<(usize, bool), SmilesError> {
+        let c = self.peek().ok_or_else(|| self.err("expected atom"))?;
+        if c == b'[' {
+            return self.parse_bracket_atom();
+        }
+        // Organic subset. Two-letter first.
+        let two: Option<&str> = if self.src.len() >= self.pos + 2 {
+            std::str::from_utf8(&self.src[self.pos..self.pos + 2]).ok()
+        } else {
+            None
+        };
+        let (element, aromatic, len) = match (two, c) {
+            (Some("Cl"), _) => ("Cl", false, 2),
+            (Some("Br"), _) => ("Br", false, 2),
+            (_, b'B') => ("B", false, 1),
+            (_, b'C') => ("C", false, 1),
+            (_, b'N') => ("N", false, 1),
+            (_, b'O') => ("O", false, 1),
+            (_, b'P') => ("P", false, 1),
+            (_, b'S') => ("S", false, 1),
+            (_, b'F') => ("F", false, 1),
+            (_, b'I') => ("I", false, 1),
+            (_, b'b') => ("B", true, 1),
+            (_, b'c') => ("C", true, 1),
+            (_, b'n') => ("N", true, 1),
+            (_, b'o') => ("O", true, 1),
+            (_, b'p') => ("P", true, 1),
+            (_, b's') => ("S", true, 1),
+            _ => return Err(self.err(format!("unexpected character {:?}", c as char))),
+        };
+        self.pos += len;
+        let idx = self.mol.atoms.len();
+        self.mol.atoms.push(Atom {
+            element: element.to_string(),
+            aromatic,
+            charge: 0,
+            explicit_h: 0,
+            isotope: 0,
+        });
+        self.bracket.push(false);
+        Ok((idx, aromatic))
+    }
+
+    fn parse_bracket_atom(&mut self) -> Result<(usize, bool), SmilesError> {
+        let open = self.bump();
+        debug_assert_eq!(open, Some(b'['));
+        // [isotope? symbol chiral? Hcount? charge? (:class)? ]
+        let mut isotope: u16 = 0;
+        while let Some(c) = self.peek() {
+            if c.is_ascii_digit() {
+                isotope = isotope * 10 + (self.bump().unwrap() - b'0') as u16;
+            } else {
+                break;
+            }
+        }
+        let c = self.bump().ok_or_else(|| self.err("unterminated bracket atom"))?;
+        let mut aromatic = c.is_ascii_lowercase();
+        let mut element = String::new();
+        element.push(c.to_ascii_uppercase() as char);
+        if let Some(n) = self.peek() {
+            // Second letter of a two-letter element must be lowercase and
+            // not one of the bracket modifiers.
+            if n.is_ascii_lowercase() && !matches!(n, b'h') {
+                // 'h' after an element letter is an H-count, except real
+                // two-letter elements like Th/Rh — not in our drug subset.
+                let candidate = format!("{}{}", element, n as char);
+                const TWO: &[&str] = &[
+                    "Cl", "Br", "Si", "Se", "As", "Na", "Ca", "Fe", "Zn", "Mg", "Al", "Li", "Cu",
+                    "Mn", "Co", "Ni", "Sn", "Ag", "Au", "Pt", "Hg", "Pb", "Cr", "Ba", "Sr",
+                ];
+                if TWO.contains(&candidate.as_str()) {
+                    element = candidate;
+                    aromatic = false;
+                    self.bump();
+                }
+            }
+        }
+        // Skip chirality markers.
+        while self.peek() == Some(b'@') {
+            self.bump();
+        }
+        let mut explicit_h: u8 = 0;
+        if self.peek() == Some(b'H') {
+            self.bump();
+            explicit_h = 1;
+            if let Some(c) = self.peek() {
+                if c.is_ascii_digit() {
+                    explicit_h = self.bump().unwrap() - b'0';
+                }
+            }
+        }
+        let mut charge: i8 = 0;
+        while let Some(c) = self.peek() {
+            match c {
+                b'+' => {
+                    self.bump();
+                    charge += 1;
+                    if let Some(d) = self.peek() {
+                        if d.is_ascii_digit() {
+                            charge = (self.bump().unwrap() - b'0') as i8;
+                        }
+                    }
+                }
+                b'-' => {
+                    self.bump();
+                    charge -= 1;
+                    if let Some(d) = self.peek() {
+                        if d.is_ascii_digit() {
+                            charge = -((self.bump().unwrap() - b'0') as i8);
+                        }
+                    }
+                }
+                b':' => {
+                    // atom class — skip digits
+                    self.bump();
+                    while self.peek().map(|d| d.is_ascii_digit()).unwrap_or(false) {
+                        self.bump();
+                    }
+                }
+                _ => break,
+            }
+        }
+        if self.bump() != Some(b']') {
+            return Err(self.err("expected ']'"));
+        }
+        let idx = self.mol.atoms.len();
+        self.mol.atoms.push(Atom { element, aromatic, charge, explicit_h, isotope });
+        self.bracket.push(true);
+        Ok((idx, aromatic))
+    }
+}
+
+/// Parse a SMILES string into a [`Molecule`] plus a per-atom bracket flag
+/// (needed for implicit-H derivation).
+pub fn parse_smiles(s: &str) -> Result<(Molecule, Vec<bool>), SmilesError> {
+    Parser {
+        src: s.as_bytes(),
+        pos: 0,
+        mol: Molecule::default(),
+        bracket: Vec::new(),
+        rings: std::collections::HashMap::new(),
+    }
+    .parse()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ethanol() {
+        let (m, _) = parse_smiles("CCO").unwrap();
+        assert_eq!(m.atoms.len(), 3);
+        assert_eq!(m.bonds.len(), 2);
+        assert_eq!(m.atoms[2].element, "O");
+        assert_eq!(m.implicit_h(0, false), 3); // CH3
+        assert_eq!(m.implicit_h(1, false), 2); // CH2
+        assert_eq!(m.implicit_h(2, false), 1); // OH
+    }
+
+    #[test]
+    fn double_and_triple_bonds() {
+        let (m, _) = parse_smiles("C=C").unwrap();
+        assert_eq!(m.bonds[0].2, Bond::Double);
+        let (m, _) = parse_smiles("C#N").unwrap();
+        assert_eq!(m.bonds[0].2, Bond::Triple);
+        assert_eq!(m.implicit_h(0, false), 1); // HCN carbon
+    }
+
+    #[test]
+    fn benzene_aromatic_ring() {
+        let (m, _) = parse_smiles("c1ccccc1").unwrap();
+        assert_eq!(m.atoms.len(), 6);
+        assert_eq!(m.bonds.len(), 6, "ring closure adds the 6th bond");
+        assert!(m.bonds.iter().all(|&(_, _, k)| k == Bond::Aromatic));
+        assert!(m.atoms.iter().all(|a| a.aromatic && a.element == "C"));
+    }
+
+    #[test]
+    fn branches_toluene() {
+        let (m, _) = parse_smiles("Cc1ccccc1").unwrap();
+        assert_eq!(m.atoms.len(), 7);
+        assert_eq!(m.bonds.len(), 7);
+        // methyl-ring bond is single (aliphatic-aromatic).
+        let methyl_bond = m.bonds.iter().find(|&&(a, b, _)| a == 0 || b == 0).unwrap();
+        assert_eq!(methyl_bond.2, Bond::Single);
+    }
+
+    #[test]
+    fn bracket_atoms_charge_h() {
+        let (m, br) = parse_smiles("[NH4+]").unwrap();
+        assert_eq!(m.atoms[0].element, "N");
+        assert_eq!(m.atoms[0].explicit_h, 4);
+        assert_eq!(m.atoms[0].charge, 1);
+        assert!(br[0]);
+        let (m, _) = parse_smiles("[O-]S(=O)(=O)[O-]").unwrap();
+        assert_eq!(m.atoms.iter().filter(|a| a.charge == -1).count(), 2);
+    }
+
+    #[test]
+    fn pyridine_and_pyrrole() {
+        let (m, _) = parse_smiles("c1ccncc1").unwrap(); // pyridine
+        assert_eq!(m.atoms.iter().filter(|a| a.element == "N").count(), 1);
+        let (m, _) = parse_smiles("c1cc[nH]c1").unwrap(); // pyrrole
+        let n = m.atoms.iter().find(|a| a.element == "N").unwrap();
+        assert!(n.aromatic);
+        assert_eq!(n.explicit_h, 1);
+    }
+
+    #[test]
+    fn ring_closure_percent_and_multi() {
+        // two fused rings: naphthalene
+        let (m, _) = parse_smiles("c1ccc2ccccc2c1").unwrap();
+        assert_eq!(m.atoms.len(), 10);
+        assert_eq!(m.bonds.len(), 11);
+        // %10 ring closure syntax
+        let (m2, _) = parse_smiles("C%10CCCCC%10").unwrap();
+        assert_eq!(m2.bonds.len(), 6);
+    }
+
+    #[test]
+    fn disconnected_components() {
+        let (m, _) = parse_smiles("CC.O").unwrap();
+        assert_eq!(m.atoms.len(), 3);
+        assert_eq!(m.bonds.len(), 1);
+    }
+
+    #[test]
+    fn aspirin_parses() {
+        // acetylsalicylic acid
+        let (m, _) = parse_smiles("CC(=O)Oc1ccccc1C(=O)O").unwrap();
+        assert_eq!(m.atoms.len(), 13);
+        assert_eq!(m.atoms.iter().filter(|a| a.element == "O").count(), 4);
+        assert_eq!(m.bonds.len(), 13);
+    }
+
+    #[test]
+    fn caffeine_parses() {
+        let (m, _) = parse_smiles("Cn1cnc2c1c(=O)n(C)c(=O)n2C").unwrap();
+        assert_eq!(m.atoms.iter().filter(|a| a.element == "N").count(), 4);
+        assert_eq!(m.atoms.iter().filter(|a| a.element == "O").count(), 2);
+    }
+
+    #[test]
+    fn chlorine_vs_carbon_disambiguation() {
+        let (m, _) = parse_smiles("ClCCl").unwrap();
+        assert_eq!(m.atoms.len(), 3);
+        assert_eq!(m.atoms[0].element, "Cl");
+        assert_eq!(m.atoms[1].element, "C");
+    }
+
+    #[test]
+    fn errors_reported() {
+        assert!(parse_smiles("C(").is_err()); // unmatched (
+        assert!(parse_smiles("C)").is_err()); // unmatched )
+        assert!(parse_smiles("C1CC").is_err()); // unclosed ring
+        assert!(parse_smiles("[C").is_err()); // unterminated bracket
+        assert!(parse_smiles("=C").is_err()); // dangling bond
+        assert!(parse_smiles("X").is_err()); // unknown element
+    }
+
+    #[test]
+    fn stereo_bonds_treated_single() {
+        let (m, _) = parse_smiles("F/C=C/F").unwrap();
+        assert_eq!(m.bonds.iter().filter(|&&(_, _, k)| k == Bond::Double).count(), 1);
+        assert_eq!(m.bonds.iter().filter(|&&(_, _, k)| k == Bond::Single).count(), 2);
+    }
+
+    #[test]
+    fn isotope_parsed() {
+        let (m, _) = parse_smiles("[13CH4]").unwrap();
+        assert_eq!(m.atoms[0].isotope, 13);
+        assert_eq!(m.atoms[0].explicit_h, 4);
+    }
+}

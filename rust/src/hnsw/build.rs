@@ -1,0 +1,343 @@
+//! HNSW graph construction (Malkov & Yashunin Algorithm 4/5, with the
+//! neighbor-selection heuristic paper §III-A credits for HNSW's recall:
+//! "it constructs a relative neighborhood graph, which has a heuristic
+//! algorithm for neighbor selection. The heuristic keeps a long-range link
+//! to help prevent a search from getting stuck in local optima").
+//!
+//! Insertion of node q at level l:
+//! 1. descend from the entry point through layers > l with greedy search;
+//! 2. on each layer ≤ l: ef_construction-bounded search for candidates,
+//!    heuristic-select up to M (2M at base) neighbors, link bidirectionally,
+//!    pruning any overfull neighbor back to its cap with the same heuristic.
+
+use super::graph::HnswGraph;
+use super::search::{SearchStats, Searcher};
+use super::HnswParams;
+use crate::fingerprint::Database;
+use crate::topk::Scored;
+use crate::util::prng::Pcg64;
+
+/// Graph builder.
+pub struct HnswBuilder {
+    params: HnswParams,
+}
+
+impl HnswBuilder {
+    pub fn new(params: HnswParams) -> Self {
+        Self { params }
+    }
+
+    /// Exponentially-distributed layer assignment: floor(-ln(U) · mL).
+    /// Public for the parallel builder (`hnsw::parallel`), which must draw
+    /// the identical level sequence.
+    pub fn draw_level_pub(&self, g: &mut Pcg64) -> usize {
+        self.draw_level(g)
+    }
+
+    fn draw_level(&self, g: &mut Pcg64) -> usize {
+        let u = loop {
+            let u = g.next_f64();
+            if u > 0.0 {
+                break u;
+            }
+        };
+        ((-u.ln()) * self.params.level_mult).floor() as usize
+    }
+
+    /// Heuristic neighbor selection (Malkov Algorithm 4): take candidates
+    /// closest-first; keep c only if c is closer to q than to every already
+    /// kept neighbor. This favors *diverse* directions — the long-range
+    /// links. Falls back to plain closest-first fill if fewer than `m`
+    /// survive.
+    pub fn select_neighbors_heuristic(
+        db: &Database,
+        q_id: u32,
+        candidates: &[Scored],
+        m: usize,
+    ) -> Vec<u32> {
+        let mut kept: Vec<u32> = Vec::with_capacity(m);
+        let mut rejected: Vec<u32> = Vec::new();
+        for cand in candidates {
+            if kept.len() >= m {
+                break;
+            }
+            let c = cand.id as u32;
+            if c == q_id {
+                continue;
+            }
+            // sim(c, q):
+            let sim_cq = cand.score;
+            // Keep iff c is closer to q than to any kept neighbor
+            // (equivalently sim(c, q) > sim(c, kept) for all kept).
+            let dominated = kept.iter().any(|&k| {
+                let sim_ck = db.fps[c as usize].tanimoto_with_counts(
+                    &db.fps[k as usize],
+                    db.counts[c as usize],
+                    db.counts[k as usize],
+                );
+                sim_ck > sim_cq
+            });
+            if dominated {
+                rejected.push(c);
+            } else {
+                kept.push(c);
+            }
+        }
+        // Fill from rejected, closest-first, if underfull.
+        for &c in &rejected {
+            if kept.len() >= m {
+                break;
+            }
+            kept.push(c);
+        }
+        kept
+    }
+
+    /// Build the graph over the whole database (sequential insertion; the
+    /// paper's parallel construction variant is a batching of this loop —
+    /// see `coordinator` for the multi-engine analogue).
+    pub fn build(&self, db: &Database) -> HnswGraph {
+        let mut graph = HnswGraph::new(self.params.clone(), db.len());
+        let mut g = Pcg64::with_stream(self.params.seed, 0x44E5);
+        for node in 0..db.len() as u32 {
+            let level = self.draw_level(&mut g);
+            self.insert(&mut graph, db, node, level);
+        }
+        graph
+    }
+
+    /// Insert one node (graph must already contain rows 0..node).
+    pub fn insert(&self, graph: &mut HnswGraph, db: &Database, node: u32, level: usize) {
+        let entry = graph.entry_point();
+        graph.add_node(node, level);
+        let Some((mut ep, top_layer)) = entry else {
+            return; // first node
+        };
+        let q = db.fps[node as usize].clone();
+        let qc = db.counts[node as usize];
+        let mut stats = SearchStats::default();
+
+        // Phase 1: greedy descent through layers above `level`.
+        {
+            let searcher_graph: &HnswGraph = graph;
+            let mut searcher = Searcher::new(searcher_graph, db);
+            for l in ((level + 1)..=top_layer).rev() {
+                let (best, _) = searcher.search_layer_top(&q, qc, ep, l, &mut stats);
+                ep = best;
+            }
+        }
+
+        // Phase 2: per layer ≤ level (top-down): candidate search, heuristic
+        // selection, bidirectional linking with prune.
+        for l in (0..=level.min(top_layer)).rev() {
+            let candidates = {
+                let searcher_graph: &HnswGraph = graph;
+                let mut searcher = Searcher::new(searcher_graph, db);
+                searcher.search_layer_base(
+                    &q,
+                    qc,
+                    &[ep],
+                    self.params.ef_construction,
+                    l,
+                    &mut stats,
+                )
+            };
+            if candidates.is_empty() {
+                continue;
+            }
+            let cap = if l == 0 { self.params.m_base() } else { self.params.m };
+            let m_sel = self.params.m.min(cap);
+            let selected = Self::select_neighbors_heuristic(db, node, &candidates, m_sel);
+            graph.layer_mut(l).set_neighbors(node, &selected);
+            // Bidirectional links + prune overfull neighbors.
+            for &nb in &selected {
+                if !graph.layer_mut(l).try_add_neighbor(nb, node) {
+                    // Neighbor full: re-select its best `cap` from current
+                    // list + node, with the heuristic.
+                    let mut cand: Vec<Scored> = graph
+                        .layer(l)
+                        .neighbors(nb)
+                        .chain(std::iter::once(node))
+                        .map(|x| {
+                            let s = db.fps[nb as usize].tanimoto_with_counts(
+                                &db.fps[x as usize],
+                                db.counts[nb as usize],
+                                db.counts[x as usize],
+                            );
+                            Scored::new(s, x as u64)
+                        })
+                        .collect();
+                    cand.sort_by(|a, b| {
+                        b.score.partial_cmp(&a.score).unwrap().then(a.id.cmp(&b.id))
+                    });
+                    let keep = Self::select_neighbors_heuristic(db, nb, &cand, cap);
+                    graph.layer_mut(l).set_neighbors(nb, &keep);
+                }
+            }
+            ep = candidates[0].id as u32;
+        }
+    }
+
+    /// Commit one insert using candidates precomputed against a (possibly
+    /// slightly stale) graph snapshot — the parallel builder's phase 2.
+    /// Level-0 nodes reuse the precomputed base-layer candidates; rarer
+    /// multi-layer nodes (P = 1/M per layer) fall back to a fresh
+    /// sequential insert so upper-layer links stay exact.
+    pub fn insert_with_candidates(
+        &self,
+        graph: &mut HnswGraph,
+        db: &Database,
+        node: u32,
+        level: usize,
+        _ep: u32,
+        candidates: Vec<Scored>,
+    ) {
+        if level > 0 || candidates.is_empty() {
+            self.insert(graph, db, node, level);
+            return;
+        }
+        graph.add_node(node, 0);
+        let cap = self.params.m_base();
+        let selected =
+            Self::select_neighbors_heuristic(db, node, &candidates, self.params.m.min(cap));
+        graph.layer_mut(0).set_neighbors(node, &selected);
+        for &nb in &selected {
+            if !graph.layer_mut(0).try_add_neighbor(nb, node) {
+                let mut cand: Vec<Scored> = graph
+                    .layer(0)
+                    .neighbors(nb)
+                    .chain(std::iter::once(node))
+                    .map(|x| {
+                        let s = db.fps[nb as usize].tanimoto_with_counts(
+                            &db.fps[x as usize],
+                            db.counts[nb as usize],
+                            db.counts[x as usize],
+                        );
+                        Scored::new(s, x as u64)
+                    })
+                    .collect();
+                cand.sort_by(|a, b| {
+                    b.score.partial_cmp(&a.score).unwrap().then(a.id.cmp(&b.id))
+                });
+                let keep = Self::select_neighbors_heuristic(db, nb, &cand, cap);
+                graph.layer_mut(0).set_neighbors(nb, &keep);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fingerprint::ChemblModel;
+
+    fn db(n: usize, seed: u64) -> Database {
+        Database::synthesize(n, &ChemblModel::default(), seed)
+    }
+
+    #[test]
+    fn build_valid_graph() {
+        let d = db(600, 3);
+        let graph = HnswBuilder::new(HnswParams::new(6, 40, 11)).build(&d);
+        assert_eq!(graph.len(), 600);
+        graph.validate().expect("graph invariants");
+        assert!(graph.entry_point().is_some());
+    }
+
+    #[test]
+    fn level_distribution_exponential() {
+        let builder = HnswBuilder::new(HnswParams::new(16, 32, 5));
+        let mut g = Pcg64::with_stream(5, 0x44E5);
+        let n = 100_000;
+        let levels: Vec<usize> = (0..n).map(|_| builder.draw_level(&mut g)).collect();
+        let l0 = levels.iter().filter(|&&l| l == 0).count() as f64 / n as f64;
+        // P(level 0) = 1 - 1/M for mL = 1/ln M ⇒ 1 - 1/16 = 0.9375.
+        assert!((l0 - 0.9375).abs() < 0.01, "P(l=0)={l0:.4}");
+        let max = *levels.iter().max().unwrap();
+        assert!(max <= 8, "extreme levels should be rare, max={max}");
+    }
+
+    #[test]
+    fn base_layer_connected_for_clustered_data() {
+        // Reachability from the entry point on the base layer: every node
+        // should be reachable (the property that makes greedy search work).
+        let d = db(400, 17);
+        let graph = HnswBuilder::new(HnswParams::new(8, 48, 2)).build(&d);
+        let (ep, _) = graph.entry_point().unwrap();
+        let mut seen = vec![false; graph.len()];
+        let mut stack = vec![ep];
+        seen[ep as usize] = true;
+        let mut count = 1;
+        while let Some(x) = stack.pop() {
+            for nb in graph.layer(0).neighbors(x) {
+                if !seen[nb as usize] {
+                    seen[nb as usize] = true;
+                    count += 1;
+                    stack.push(nb);
+                }
+            }
+        }
+        let frac = count as f64 / graph.len() as f64;
+        assert!(frac > 0.99, "base layer reachability {frac:.3}");
+    }
+
+    #[test]
+    fn heuristic_prefers_diverse_neighbors() {
+        // Construct a degenerate case: q at origin-ish, candidates in two
+        // tight clusters. The heuristic must pick one from each cluster
+        // rather than two from the nearest cluster.
+        let mut fps = Vec::new();
+        // q = bits 0..40
+        let mut q = crate::fingerprint::Fingerprint::zero_full();
+        for i in 0..40 {
+            q.set(i);
+        }
+        fps.push(q.clone()); // id 0 = q
+        // cluster A: share bits 0..30 (very close to q and to each other)
+        for v in 0..2 {
+            let mut f = crate::fingerprint::Fingerprint::zero_full();
+            for i in 0..30 {
+                f.set(i);
+            }
+            f.set(100 + v);
+            fps.push(f);
+        }
+        // cluster B: share bits 10..40 (close to q, far from A's extras)
+        let mut b = crate::fingerprint::Fingerprint::zero_full();
+        for i in 5..40 {
+            b.set(i);
+        }
+        b.set(200);
+        fps.push(b);
+        let d = Database::new(fps);
+        // Candidates sorted by similarity to q (ids 1..=3).
+        let mut cands: Vec<Scored> = (1..4u64)
+            .map(|i| Scored::new(d.fps[0].tanimoto(&d.fps[i as usize]), i))
+            .collect();
+        cands.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap());
+        let kept = HnswBuilder::select_neighbors_heuristic(&d, 0, &cands, 2);
+        assert_eq!(kept.len(), 2);
+        // The two A members are closer to each other than to q — the
+        // heuristic must not keep both.
+        let both_a = kept.contains(&1) && kept.contains(&2);
+        assert!(!both_a, "heuristic kept both redundant cluster-A members: {kept:?}");
+    }
+
+    #[test]
+    fn incremental_insert_matches_batch_build_statistics() {
+        let d = db(300, 23);
+        let params = HnswParams::new(6, 32, 9);
+        let batch = HnswBuilder::new(params.clone()).build(&d);
+        // Insert one more node incrementally into a copy.
+        let mut extended_db_fps = d.fps.clone();
+        extended_db_fps.push(d.fps[0].clone());
+        let d2 = Database::new(extended_db_fps);
+        let mut graph2 = HnswBuilder::new(params.clone()).build(&d);
+        HnswBuilder::new(params).insert(&mut graph2, &d2, 300, 0);
+        assert_eq!(graph2.len(), batch.len() + 1);
+        graph2.validate().expect("incremental insert keeps invariants");
+        // The duplicate of node 0 should link near node 0.
+        let nbrs: Vec<u32> = graph2.layer(0).neighbors(300).collect();
+        assert!(!nbrs.is_empty());
+    }
+}

@@ -1,0 +1,299 @@
+//! HNSW layered graph storage.
+//!
+//! Flat, cache-friendly adjacency: each node's neighbors per layer live in
+//! fixed-capacity slabs (capacity M for upper layers, 2M for the base
+//! layer), mirroring how the FPGA design streams "up to 2M adjacency list
+//! elements" per visited vertex from HBM (paper §V-B). Degrees are bounded
+//! by construction, so slab storage wastes little and keeps traversal
+//! allocation-free.
+
+use super::HnswParams;
+
+/// Compressed sparse adjacency for one layer.
+#[derive(Debug, Clone)]
+pub struct Layer {
+    /// Capacity per node in this layer.
+    cap: usize,
+    /// Neighbor ids, `cap` slots per member node (u32::MAX = empty slot).
+    slots: Vec<u32>,
+    /// Node id → slab index within this layer (u32::MAX = not a member).
+    member: Vec<u32>,
+    /// Number of member nodes.
+    n_members: usize,
+}
+
+pub const NO_NODE: u32 = u32::MAX;
+
+impl Layer {
+    fn new(cap: usize, n_total_hint: usize) -> Self {
+        Self { cap, slots: Vec::new(), member: vec![NO_NODE; n_total_hint], n_members: 0 }
+    }
+
+    fn ensure_node_table(&mut self, node: usize) {
+        if node >= self.member.len() {
+            self.member.resize(node + 1, NO_NODE);
+        }
+    }
+
+    /// Add a node to this layer (no neighbors yet).
+    fn add_member(&mut self, node: u32) {
+        self.ensure_node_table(node as usize);
+        debug_assert_eq!(self.member[node as usize], NO_NODE, "node already in layer");
+        self.member[node as usize] = self.n_members as u32;
+        self.slots.extend(std::iter::repeat(NO_NODE).take(self.cap));
+        self.n_members += 1;
+    }
+
+    fn slab(&self, node: u32) -> Option<&[u32]> {
+        let idx = *self.member.get(node as usize)?;
+        if idx == NO_NODE {
+            return None;
+        }
+        let start = idx as usize * self.cap;
+        Some(&self.slots[start..start + self.cap])
+    }
+
+    fn slab_mut(&mut self, node: u32) -> Option<&mut [u32]> {
+        let idx = *self.member.get(node as usize)?;
+        if idx == NO_NODE {
+            return None;
+        }
+        let start = idx as usize * self.cap;
+        Some(&mut self.slots[start..start + self.cap])
+    }
+
+    /// Neighbors of `node` (empty iterator if not a member).
+    pub fn neighbors(&self, node: u32) -> impl Iterator<Item = u32> + '_ {
+        self.slab(node).into_iter().flatten().copied().filter(|&n| n != NO_NODE)
+    }
+
+    pub fn degree(&self, node: u32) -> usize {
+        self.neighbors(node).count()
+    }
+
+    pub fn is_member(&self, node: u32) -> bool {
+        self.member.get(node as usize).map(|&m| m != NO_NODE).unwrap_or(false)
+    }
+
+    /// Replace `node`'s neighbor list (used by the pruning step).
+    pub fn set_neighbors(&mut self, node: u32, neighbors: &[u32]) {
+        let cap = self.cap;
+        assert!(neighbors.len() <= cap, "neighbor list exceeds layer cap {cap}");
+        let slab = self.slab_mut(node).expect("set_neighbors on non-member");
+        slab.fill(NO_NODE);
+        slab[..neighbors.len()].copy_from_slice(neighbors);
+    }
+
+    /// Append one neighbor if capacity allows; returns false when full.
+    pub fn try_add_neighbor(&mut self, node: u32, neighbor: u32) -> bool {
+        let slab = self.slab_mut(node).expect("try_add_neighbor on non-member");
+        for s in slab.iter_mut() {
+            if *s == NO_NODE {
+                *s = neighbor;
+                return true;
+            }
+            if *s == neighbor {
+                return true; // already linked
+            }
+        }
+        false
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn n_members(&self) -> usize {
+        self.n_members
+    }
+}
+
+/// The full multi-layer graph. Node ids are database row indices.
+#[derive(Debug, Clone)]
+pub struct HnswGraph {
+    pub params: HnswParams,
+    /// layers[0] is the base layer.
+    layers: Vec<Layer>,
+    /// Top-layer entry point.
+    entry: Option<(u32, usize)>,
+    /// Per-node top layer.
+    node_level: Vec<u8>,
+    n_nodes: usize,
+}
+
+impl HnswGraph {
+    pub fn new(params: HnswParams, n_hint: usize) -> Self {
+        let base = Layer::new(params.m_base(), n_hint);
+        Self { params, layers: vec![base], entry: None, node_level: Vec::new(), n_nodes: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.n_nodes
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n_nodes == 0
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// The (entry node, top layer) pair the search descends from.
+    pub fn entry_point(&self) -> Option<(u32, usize)> {
+        self.entry
+    }
+
+    pub fn layer(&self, l: usize) -> &Layer {
+        &self.layers[l]
+    }
+
+    pub fn layer_mut(&mut self, l: usize) -> &mut Layer {
+        &mut self.layers[l]
+    }
+
+    pub fn node_level(&self, node: u32) -> usize {
+        self.node_level[node as usize] as usize
+    }
+
+    /// Register a node at `level`, creating layers as needed. The node is
+    /// added as a member of layers 0..=level.
+    pub fn add_node(&mut self, node: u32, level: usize) {
+        assert_eq!(node as usize, self.n_nodes, "nodes must be added densely in id order");
+        while self.layers.len() <= level {
+            let cap = self.params.m;
+            let hint = self.node_level.len();
+            self.layers.push(Layer::new(cap, hint));
+        }
+        for l in 0..=level {
+            self.layers[l].add_member(node);
+        }
+        self.node_level.push(level.min(u8::MAX as usize) as u8);
+        self.n_nodes += 1;
+        match self.entry {
+            None => self.entry = Some((node, level)),
+            Some((_, top)) if level > top => self.entry = Some((node, level)),
+            _ => {}
+        }
+    }
+
+    /// Mean base-layer degree (diagnostics; the 2M traffic figure).
+    pub fn mean_base_degree(&self) -> f64 {
+        if self.n_nodes == 0 {
+            return 0.0;
+        }
+        let total: usize = (0..self.n_nodes as u32).map(|n| self.layers[0].degree(n)).sum();
+        total as f64 / self.n_nodes as f64
+    }
+
+    /// Graph invariant checks (used by tests and failure injection):
+    /// symmetric base layer is NOT required by HNSW, but every neighbor id
+    /// must be a valid member of that layer and degrees must respect caps.
+    pub fn validate(&self) -> Result<(), String> {
+        for (li, layer) in self.layers.iter().enumerate() {
+            for node in 0..self.n_nodes as u32 {
+                if !layer.is_member(node) {
+                    continue;
+                }
+                let mut seen = std::collections::HashSet::new();
+                for nb in layer.neighbors(node) {
+                    if nb as usize >= self.n_nodes {
+                        return Err(format!("layer {li}: node {node} → invalid neighbor {nb}"));
+                    }
+                    if !layer.is_member(nb) {
+                        return Err(format!(
+                            "layer {li}: node {node} → neighbor {nb} not a member of layer"
+                        ));
+                    }
+                    if nb == node {
+                        return Err(format!("layer {li}: node {node} self-loop"));
+                    }
+                    if !seen.insert(nb) {
+                        return Err(format!("layer {li}: node {node} duplicate neighbor {nb}"));
+                    }
+                }
+                if layer.degree(node) > layer.capacity() {
+                    return Err(format!("layer {li}: node {node} exceeds degree cap"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params() -> HnswParams {
+        HnswParams::new(4, 16, 1)
+    }
+
+    #[test]
+    fn add_nodes_and_layers() {
+        let mut g = HnswGraph::new(params(), 10);
+        g.add_node(0, 0);
+        g.add_node(1, 2);
+        g.add_node(2, 1);
+        assert_eq!(g.n_layers(), 3);
+        assert_eq!(g.entry_point(), Some((1, 2)));
+        assert_eq!(g.node_level(1), 2);
+        assert!(g.layer(2).is_member(1));
+        assert!(!g.layer(2).is_member(2));
+        assert!(g.layer(1).is_member(2));
+        assert_eq!(g.len(), 3);
+    }
+
+    #[test]
+    fn base_layer_has_double_capacity() {
+        let g = HnswGraph::new(params(), 4);
+        assert_eq!(g.layer(0).capacity(), 8);
+        let mut g2 = HnswGraph::new(params(), 4);
+        g2.add_node(0, 1);
+        assert_eq!(g2.layer(1).capacity(), 4);
+    }
+
+    #[test]
+    fn neighbor_set_and_get() {
+        let mut g = HnswGraph::new(params(), 4);
+        g.add_node(0, 0);
+        g.add_node(1, 0);
+        g.add_node(2, 0);
+        g.layer_mut(0).set_neighbors(0, &[1, 2]);
+        assert!(g.layer_mut(0).try_add_neighbor(1, 0));
+        let n0: Vec<u32> = g.layer(0).neighbors(0).collect();
+        assert_eq!(n0, vec![1, 2]);
+        assert_eq!(g.layer(0).degree(1), 1);
+        assert_eq!(g.layer(0).degree(2), 0);
+        assert!(g.validate().is_ok());
+    }
+
+    #[test]
+    fn try_add_respects_capacity_and_dedup() {
+        let mut g = HnswGraph::new(HnswParams::new(2, 8, 0), 8);
+        for i in 0..6 {
+            g.add_node(i, 0);
+        }
+        // base cap = 4
+        assert!(g.layer_mut(0).try_add_neighbor(0, 1));
+        assert!(g.layer_mut(0).try_add_neighbor(0, 1), "dedup counts as success");
+        assert_eq!(g.layer(0).degree(0), 1);
+        assert!(g.layer_mut(0).try_add_neighbor(0, 2));
+        assert!(g.layer_mut(0).try_add_neighbor(0, 3));
+        assert!(g.layer_mut(0).try_add_neighbor(0, 4));
+        assert!(!g.layer_mut(0).try_add_neighbor(0, 5), "full at 2M=4");
+    }
+
+    #[test]
+    fn validate_catches_violations() {
+        let mut g = HnswGraph::new(params(), 4);
+        g.add_node(0, 0);
+        g.add_node(1, 0);
+        g.layer_mut(0).set_neighbors(0, &[0]); // self loop
+        assert!(g.validate().is_err());
+        g.layer_mut(0).set_neighbors(0, &[1, 1]); // duplicate
+        assert!(g.validate().is_err());
+        g.layer_mut(0).set_neighbors(0, &[1]);
+        assert!(g.validate().is_ok());
+    }
+}

@@ -1,0 +1,61 @@
+//! Hierarchical Navigable Small World (HNSW) graph index, from scratch
+//! (Malkov & Yashunin 2018; paper §III-C, §IV-B).
+//!
+//! The approximate-search half of the paper. Components:
+//!
+//! * [`graph`] — the layered adjacency structure: base layer with up to
+//!   `2M` neighbors per node, upper layers with up to `M`, exponentially
+//!   decaying layer assignment.
+//! * [`build`] — insertion with the **heuristic neighbor selection** of the
+//!   original paper (keeps long-range links that prevent the search from
+//!   getting stuck in local optima — the property §III-A credits for
+//!   HNSW's high recall).
+//! * [`search`] — the two traversal kernels as the paper's hardware
+//!   formulates them: `SEARCH-LAYER-TOP` (Algorithm 1, greedy descent) and
+//!   `SEARCH-LAYER-BASE` (Algorithm 2, `ef`-bounded best-first with the
+//!   candidate set C and result set M held in
+//!   [`crate::topk::RegisterPq`]s — the register-array priority queues of
+//!   module ④).
+//!
+//! Distance convention: the graph stores *similarities* (Tanimoto, higher =
+//! closer); `distance(a,b) = 1 − S(a,b)` where the algorithms' comparisons
+//! need a metric orientation. Search statistics (hops, distance
+//! evaluations) are recorded per query — they are the work measure the
+//! hardware model converts to FPGA cycles (Fig. 8).
+
+pub mod build;
+pub mod graph;
+pub mod parallel;
+pub mod search;
+
+pub use build::HnswBuilder;
+pub use parallel::ParallelBuild;
+pub use graph::HnswGraph;
+pub use search::{SearchStats, Searcher};
+
+/// HNSW construction/search hyperparameters (paper notation).
+#[derive(Debug, Clone)]
+pub struct HnswParams {
+    /// M — max adjacency list size in upper layers; base layer allows 2M
+    /// (paper §V-B: "The base layer of the graph provides every element up
+    /// to 2M adjacency list elements").
+    pub m: usize,
+    /// ef during construction.
+    pub ef_construction: usize,
+    /// Layer-assignment normalization (Malkov's mL = 1/ln(M)).
+    pub level_mult: f64,
+    /// Random seed for layer assignment.
+    pub seed: u64,
+}
+
+impl HnswParams {
+    pub fn new(m: usize, ef_construction: usize, seed: u64) -> Self {
+        assert!(m >= 2, "M must be at least 2");
+        Self { m, ef_construction, level_mult: 1.0 / (m as f64).ln(), seed }
+    }
+
+    /// Base-layer adjacency cap (2M).
+    pub fn m_base(&self) -> usize {
+        self.m * 2
+    }
+}

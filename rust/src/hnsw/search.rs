@@ -1,0 +1,303 @@
+//! HNSW graph traversal — the paper's Algorithms 1 and 2.
+//!
+//! `SEARCH-LAYER-TOP` (Algorithm 1): greedy hill-climb on one upper layer —
+//! move to the best neighbor until no neighbor improves, return the local
+//! optimum. One TFC distance evaluation per adjacency entry.
+//!
+//! `SEARCH-LAYER-BASE` (Algorithm 2): `ef`-bounded best-first search on the
+//! base layer. The candidate set C and the result set M are both held in
+//! register-array priority queues sized `ef` (paper: "Algorithm 2 utilizes
+//! 2 register arrays based priority queue, and both of the priority queues
+//! are sized as ef"). Termination: when the closest candidate is further
+//! than the furthest retained result.
+//!
+//! [`SearchStats`] counts hops and distance (TFC) evaluations; the FPGA
+//! model charges `distance_evals` TFC cycles + queue ops to produce the
+//! Fig. 8 QPS surface.
+
+use super::graph::HnswGraph;
+use crate::fingerprint::{Database, Fingerprint};
+use crate::topk::{RegisterPq, Scored};
+
+/// Per-query traversal statistics (work profile for the hardware model).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SearchStats {
+    /// Distance (TFC kernel) evaluations.
+    pub distance_evals: usize,
+    /// Nodes whose adjacency lists were fetched (HBM reads of ≤2M entries).
+    pub hops: usize,
+    /// Upper-layer greedy steps.
+    pub upper_steps: usize,
+    /// Priority-queue operations (enqueue/dequeue) on C and M.
+    pub pq_ops: usize,
+}
+
+/// Searcher borrowing the graph and the fingerprint database.
+pub struct Searcher<'a> {
+    pub graph: &'a HnswGraph,
+    pub db: &'a Database,
+    /// Scratch visited-set (epoch-tagged to avoid clearing per query).
+    visited: Vec<u32>,
+    epoch: u32,
+}
+
+impl<'a> Searcher<'a> {
+    pub fn new(graph: &'a HnswGraph, db: &'a Database) -> Self {
+        Self { graph, db, visited: vec![0; db.len()], epoch: 0 }
+    }
+
+    #[inline]
+    fn similarity(&self, q: &Fingerprint, qc: u32, node: u32, stats: &mut SearchStats) -> f64 {
+        stats.distance_evals += 1;
+        let n = node as usize;
+        q.tanimoto_with_counts(&self.db.fps[n], qc, self.db.counts[n])
+    }
+
+    fn begin_query(&mut self) {
+        self.epoch = self.epoch.wrapping_add(1);
+        if self.epoch == 0 {
+            self.visited.fill(0);
+            self.epoch = 1;
+        }
+        if self.visited.len() < self.db.len() {
+            self.visited.resize(self.db.len(), 0);
+        }
+    }
+
+    #[inline]
+    fn mark_visited(&mut self, node: u32) -> bool {
+        let v = &mut self.visited[node as usize];
+        if *v == self.epoch {
+            false
+        } else {
+            *v = self.epoch;
+            true
+        }
+    }
+
+    /// Algorithm 1: greedy descent on layer `l` from entry `ep`; returns
+    /// the closest node found and its similarity.
+    pub fn search_layer_top(
+        &mut self,
+        q: &Fingerprint,
+        qc: u32,
+        ep: u32,
+        layer: usize,
+        stats: &mut SearchStats,
+    ) -> (u32, f64) {
+        let mut cur = ep;
+        let mut cur_sim = self.similarity(q, qc, cur, stats);
+        loop {
+            stats.upper_steps += 1;
+            stats.hops += 1;
+            let mut best = cur;
+            let mut best_sim = cur_sim;
+            let neighbors: Vec<u32> = self.graph.layer(layer).neighbors(cur).collect();
+            for e in neighbors {
+                let s = self.similarity(q, qc, e, stats);
+                if s > best_sim {
+                    best = e;
+                    best_sim = s;
+                }
+            }
+            if best == cur {
+                return (cur, cur_sim);
+            }
+            cur = best;
+            cur_sim = best_sim;
+        }
+    }
+
+    /// Algorithm 2: ef-bounded best-first search on `layer` (normally the
+    /// base layer). Returns up to `ef` results, best-first.
+    pub fn search_layer_base(
+        &mut self,
+        q: &Fingerprint,
+        qc: u32,
+        eps: &[u32],
+        ef: usize,
+        layer: usize,
+        stats: &mut SearchStats,
+    ) -> Vec<Scored> {
+        self.begin_query();
+        // C: candidates (pop closest); M: results (evict furthest). Both
+        // are the register-array PQs of module ④, sized ef.
+        let mut c = RegisterPq::new(ef.max(eps.len()));
+        let mut m = RegisterPq::new(ef);
+        for &ep in eps {
+            if !self.mark_visited(ep) {
+                continue;
+            }
+            let s = self.similarity(q, qc, ep, stats);
+            let sc = Scored::new(s, ep as u64);
+            let _ = c.push(sc);
+            let _ = m.push(sc);
+            stats.pq_ops += 2;
+        }
+        while let Some(top) = c.pop_best() {
+            stats.pq_ops += 1;
+            // Termination: closest candidate worse than the furthest
+            // retained result and M is full.
+            if m.is_full() {
+                let fur = m.peek_worst().unwrap();
+                if fur.beats(&top) {
+                    break;
+                }
+            }
+            stats.hops += 1;
+            let neighbors: Vec<u32> =
+                self.graph.layer(layer).neighbors(top.id as u32).collect();
+            for e in neighbors {
+                if !self.mark_visited(e) {
+                    continue;
+                }
+                // Paper line 15–16: only evaluate/keep if M not full or e
+                // beats the furthest result.
+                let s = self.similarity(q, qc, e, stats);
+                let sc = Scored::new(s, e as u64);
+                let keep = !m.is_full() || {
+                    let f = m.peek_worst().unwrap();
+                    sc.beats(&f)
+                };
+                if keep {
+                    let _ = c.push(sc);
+                    let _ = m.push(sc); // RegisterPq evicts the furthest itself
+                    stats.pq_ops += 2;
+                }
+            }
+        }
+        m.into_sorted()
+    }
+
+    /// Full KNN search (paper Fig. 5 dataflow): descend Algorithm 1 through
+    /// the upper layers, run Algorithm 2 on the base layer with `ef`, then
+    /// final top-k of the ef returned results.
+    pub fn knn(&mut self, q: &Fingerprint, k: usize, ef: usize) -> (Vec<Scored>, SearchStats) {
+        let mut stats = SearchStats::default();
+        let Some((mut ep, top_layer)) = self.graph.entry_point() else {
+            return (Vec::new(), stats);
+        };
+        let qc = q.count_ones();
+        for layer in (1..=top_layer).rev() {
+            let (best, _) = self.search_layer_top(q, qc, ep, layer, &mut stats);
+            ep = best;
+        }
+        let ef = ef.max(k);
+        let mut results = self.search_layer_base(q, qc, &[ep], ef, 0, &mut stats);
+        results.truncate(k);
+        (results, stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{build::HnswBuilder, HnswParams};
+    use super::*;
+    use crate::fingerprint::ChemblModel;
+    use crate::index::{recall_at_k, BruteForceIndex, SearchIndex};
+    use std::sync::Arc;
+
+    fn small_world() -> (Arc<Database>, HnswGraph) {
+        let db = Arc::new(Database::synthesize(800, &ChemblModel::default(), 31));
+        let graph = HnswBuilder::new(HnswParams::new(8, 64, 7)).build(&db);
+        (db, graph)
+    }
+
+    #[test]
+    fn knn_self_query_finds_self() {
+        let (db, graph) = small_world();
+        let mut searcher = Searcher::new(&graph, &db);
+        for i in [0u32, 17, 399, 799] {
+            let (res, _stats) = searcher.knn(&db.fps[i as usize].clone(), 1, 32);
+            assert_eq!(res[0].id, i as u64, "self-query must return self");
+            assert!((res[0].score - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn recall_reasonable_vs_brute() {
+        let (db, graph) = small_world();
+        let brute = BruteForceIndex::new(db.clone());
+        let mut searcher = Searcher::new(&graph, &db);
+        let queries = db.sample_queries(30, 5);
+        let k = 10;
+        let mean: f64 = queries
+            .iter()
+            .map(|q| {
+                let truth = brute.search(q, k);
+                let (got, _) = searcher.knn(q, k, 64);
+                recall_at_k(&got, &truth, k)
+            })
+            .sum::<f64>()
+            / queries.len() as f64;
+        assert!(mean > 0.85, "HNSW recall at ef=64 on 800 rows: {mean:.3}");
+    }
+
+    #[test]
+    fn recall_increases_with_ef() {
+        let (db, graph) = small_world();
+        let brute = BruteForceIndex::new(db.clone());
+        let mut searcher = Searcher::new(&graph, &db);
+        let queries = db.sample_queries(25, 9);
+        let k = 10;
+        let mean_at = |searcher: &mut Searcher, ef: usize| -> f64 {
+            queries
+                .iter()
+                .map(|q| {
+                    let truth = brute.search(q, k);
+                    let (got, _) = searcher.knn(q, k, ef);
+                    recall_at_k(&got, &truth, k)
+                })
+                .sum::<f64>()
+                / queries.len() as f64
+        };
+        let r_lo = mean_at(&mut searcher, 10);
+        let r_hi = mean_at(&mut searcher, 120);
+        assert!(r_hi >= r_lo - 0.02, "recall must not degrade with ef: {r_lo:.3} → {r_hi:.3}");
+        assert!(r_hi > 0.9, "ef=120 recall {r_hi:.3}");
+    }
+
+    #[test]
+    fn stats_grow_with_ef() {
+        let (db, graph) = small_world();
+        let mut searcher = Searcher::new(&graph, &db);
+        let q = db.sample_queries(1, 3)[0].clone();
+        let (_, s_small) = searcher.knn(&q, 10, 10);
+        let (_, s_large) = searcher.knn(&q, 10, 150);
+        assert!(
+            s_large.distance_evals > s_small.distance_evals,
+            "ef=150 must evaluate more distances: {} vs {}",
+            s_large.distance_evals,
+            s_small.distance_evals
+        );
+        assert!(s_large.distance_evals < db.len(), "far fewer than brute force");
+    }
+
+    #[test]
+    fn empty_graph() {
+        let db = Database::synthesize(10, &ChemblModel::default(), 1);
+        let graph = HnswGraph::new(HnswParams::new(4, 8, 0), 0);
+        let mut s = Searcher::new(&graph, &db);
+        let (res, _) = s.knn(&db.fps[0].clone(), 5, 16);
+        assert!(res.is_empty());
+    }
+
+    #[test]
+    fn algorithm1_descends_to_local_optimum() {
+        let (db, graph) = small_world();
+        let mut searcher = Searcher::new(&graph, &db);
+        let q = db.fps[42].clone();
+        let qc = q.count_ones();
+        if graph.n_layers() < 2 {
+            return; // layer assignment produced a flat graph — fine for 800 rows
+        }
+        let (ep, top) = graph.entry_point().unwrap();
+        let mut stats = SearchStats::default();
+        let (best, best_sim) = searcher.search_layer_top(&q, qc, ep, top.min(1), &mut stats);
+        // Local optimality: no neighbor of `best` on that layer is closer.
+        for nb in graph.layer(top.min(1)).neighbors(best) {
+            let s = q.tanimoto(&db.fps[nb as usize]);
+            assert!(s <= best_sim + 1e-12, "neighbor {nb} closer than the local optimum");
+        }
+    }
+}

@@ -1,0 +1,28 @@
+//! Analytical Alveo U280 hardware model — the substitution for the paper's
+//! physical FPGA (DESIGN.md §2).
+//!
+//! The paper's evaluation numbers are *derived quantities* of a small set
+//! of module-level facts it discloses (§IV, §V): per-module resource cost
+//! functions, a 450 MHz kernel clock, initiation interval 1, 57.6 GB/s of
+//! HBM traffic per full-width kernel, and a 410 GB/s usable-bandwidth
+//! budget. This module re-derives every figure from those facts plus the
+//! *measured* algorithm statistics (BitBound kept fractions, HNSW hop and
+//! distance counts) produced by the algorithm substrates:
+//!
+//! * [`u280`]   — board constants (resources, HBM, clock).
+//! * [`modules`]— per-module cost functions (BitCnt ①, TFC ②, top-k merge
+//!   ③, register-array PQ ④, traversal control), calibrated to the
+//!   anchor points the paper states (brute kernel ≈ 0.4 % LUT, ③ is
+//!   O(log k), ④ is linear in k).
+//! * [`qps`]    — throughput estimators for brute force, BitBound &
+//!   folding (Figs. 6–7, H2, H3), and HNSW (Fig. 8, H4).
+//! * [`pareto`] — Pareto-frontier extraction for Figs. 10/11.
+
+pub mod modules;
+pub mod pareto;
+pub mod qps;
+pub mod u280;
+
+pub use pareto::{pareto_frontier, ParetoPoint};
+pub use qps::{BruteForceDesign, FoldingDesign, HnswDesign};
+pub use u280::U280;

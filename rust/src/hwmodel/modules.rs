@@ -1,0 +1,213 @@
+//! Per-module FPGA resource cost functions (paper §IV).
+//!
+//! Calibration anchors, all stated in the paper:
+//!   * a full brute-force kernel (fetch + BitCnt + TFC + top-20 merge) is
+//!     ≈ 0.4 % of the U280's 1.3 M LUT ⇒ ≈ 5 200 LUT (§V-B);
+//!   * top-k merge (③) uses `log2K + 1` comparators and `log2K + 2K`
+//!     FIFO entries; resource "roughly scales in O(log k)" (§IV-A);
+//!   * register-array PQ (④): comparators and LUT/FF scale linearly in k,
+//!     entries are 12-bit score + id (§IV-B);
+//!   * BitCnt (①) "scales linearly with the binary fingerprint length";
+//!   * TFC (②) = 2 bit-count accumulation kernels + one 12-bit fixed-point
+//!     divide (§IV-A).
+//!
+//! Absolute LUT counts per primitive are standard FPGA craft numbers
+//! (6-LUT popcount compressor trees ≈ L/2 LUT for L bits; a W-bit compare
+//! ≈ W/2 LUT; a 12-bit divider ≈ 350 LUT) scaled to meet the 0.4 % anchor.
+
+use super::u280::U280;
+
+/// Resource vector (same axes the paper's Fig. 6a reports).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Resources {
+    pub lut: f64,
+    pub ff: f64,
+    pub bram: f64,
+    pub dsp: f64,
+}
+
+impl Resources {
+    pub fn add(self, other: Resources) -> Resources {
+        Resources {
+            lut: self.lut + other.lut,
+            ff: self.ff + other.ff,
+            bram: self.bram + other.bram,
+            dsp: self.dsp + other.dsp,
+        }
+    }
+
+    pub fn scale(self, f: f64) -> Resources {
+        Resources { lut: self.lut * f, ff: self.ff * f, bram: self.bram * f, dsp: self.dsp * f }
+    }
+
+    /// Utilization fraction against the board (max over axes) — the number
+    /// that bounds how many kernel replicas fit.
+    pub fn utilization(&self, board: &U280) -> f64 {
+        let l = self.lut / board.usable_lut();
+        let b = self.bram / board.usable_bram();
+        let f = self.ff / (board.ff as f64 * (1.0 - board.shell_overhead));
+        l.max(b).max(f)
+    }
+}
+
+/// Entry width in the sorters: 12-bit fixed-point score (②) + row id bits.
+pub const SCORE_BITS: usize = 12;
+/// Row id bits (1.9 M rows ⇒ 21 bits).
+pub const ID_BITS: usize = 21;
+
+/// BitCnt ①: popcount of an L-bit word per cycle — a compressor tree,
+/// ≈ L/2 LUT (6:3 compressors) + pipeline FF.
+pub fn bitcnt(l_bits: usize) -> Resources {
+    Resources { lut: l_bits as f64 / 2.0, ff: l_bits as f64 / 2.0, bram: 0.0, dsp: 0.0 }
+}
+
+/// TFC ②: intersection popcount (one BitCnt on A&B), the union adder
+/// (cntA + cntB − inter) and a 12-bit fixed-point divider (§IV-A: "2 bit
+/// count accumulation kernels and 1 fixed-point division operation").
+pub fn tfc(l_bits: usize) -> Resources {
+    let popcounts = bitcnt(l_bits).scale(2.0);
+    let divider = Resources { lut: 350.0, ff: 250.0, bram: 0.0, dsp: 0.0 };
+    popcounts.add(divider)
+}
+
+/// Top-k merge ③: `log2K+1` comparators + `log2K+2K` FIFO entries.
+/// Small FIFOs sit in registers; beyond ~1 Kb the tools map them to BRAM
+/// (paper: "small size FIFO can be built upon the register, and the large
+/// size FIFO can be built BRAM block").
+pub fn topk_merge(k: usize) -> Resources {
+    let k = k.max(2);
+    let stages = (k as f64).log2().ceil() + 1.0;
+    let entry_bits = (SCORE_BITS + ID_BITS) as f64;
+    let cmp_lut = stages * (entry_bits / 2.0 + 20.0); // compare + steer mux
+    let fifo_entries = (k as f64).log2().ceil() + 2.0 * k as f64;
+    let fifo_bits = fifo_entries * entry_bits;
+    // Register FIFOs below 1 Kb; BRAM18 blocks (18 Kb) above.
+    let (fifo_lut, fifo_ff, bram) = if fifo_bits <= 1024.0 {
+        (fifo_bits / 2.0, fifo_bits, 0.0)
+    } else {
+        // BRAM-backed FIFO: LUT pays only for the per-block interface
+        // (address counters + handshake), not per entry — this is what
+        // keeps module ③'s LUT growth ~O(log k) (paper §IV-A).
+        let blocks = (fifo_bits / (18.0 * 1024.0)).ceil();
+        (blocks * 200.0, blocks * 150.0, blocks)
+    };
+    Resources { lut: cmp_lut + fifo_lut, ff: cmp_lut + fifo_ff, bram, dsp: 0.0 }
+}
+
+/// Register-array PQ ④: one register + comparator + swap mux per entry —
+/// strictly linear in capacity (§IV-B).
+pub fn register_pq(capacity: usize) -> Resources {
+    let entry_bits = (SCORE_BITS + ID_BITS) as f64;
+    let per_entry = Resources {
+        lut: entry_bits / 2.0 + 25.0, // compare-and-swap + insert mux
+        ff: entry_bits,
+        bram: 0.0,
+        dsp: 0.0,
+    };
+    per_entry.scale(capacity as f64)
+}
+
+/// Fetch/control overhead of one streaming kernel (AXI burst FSM, query
+/// registers, result DMA) — sized so the full brute kernel meets the 0.4 %
+/// LUT anchor.
+pub fn stream_control(l_bits: usize) -> Resources {
+    Resources { lut: 1500.0 + l_bits as f64 / 4.0, ff: 2000.0, bram: 2.0, dsp: 0.0 }
+}
+
+/// A complete exhaustive-search kernel at folding level `m` with per-tile
+/// top-k of `k_out` (the paper's Fig. 4 engine; Fig. 6a reproduces its
+/// LUT/BRAM vs `m` curve).
+pub fn exhaustive_kernel(m: usize, k_out: usize) -> Resources {
+    let l = crate::fingerprint::FP_BITS / m;
+    bitcnt(l) // query-side popcount (db counts are precomputed)
+        .add(tfc(l))
+        .add(topk_merge(k_out))
+        .add(stream_control(l))
+}
+
+/// A complete HNSW traversal engine: TFC at full width, two PQs sized ef,
+/// visited-set filter, and traversal control (Fig. 5).
+pub fn hnsw_engine(ef: usize) -> Resources {
+    let l = crate::fingerprint::FP_BITS;
+    let visited_filter = Resources { lut: 2500.0, ff: 1500.0, bram: 8.0, dsp: 0.0 };
+    let control = Resources { lut: 3000.0, ff: 2500.0, bram: 4.0, dsp: 0.0 };
+    tfc(l)
+        .add(register_pq(ef).scale(2.0)) // C and M
+        .add(visited_filter)
+        .add(control)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn brute_kernel_meets_paper_lut_anchor() {
+        // §V-B: brute-force kernel ≈ 0.4 % of total LUT (≈ 5200).
+        let r = exhaustive_kernel(1, 20);
+        let frac = r.lut / 1_300_000.0;
+        assert!(
+            (0.0025..0.006).contains(&frac),
+            "brute kernel LUT fraction {frac:.4} should be ≈ 0.4 %"
+        );
+    }
+
+    #[test]
+    fn topk_merge_scales_logarithmically() {
+        let r32 = topk_merge(32).lut;
+        let r1024 = topk_merge(1024).lut;
+        // 32x capacity growth must cost far less than 32x LUT (it's the
+        // FIFO entries that grow, mapped to BRAM).
+        assert!(r1024 < r32 * 8.0, "merge sort LUT must scale ~O(log k): {r32} → {r1024}");
+        assert!(topk_merge(1024).bram > topk_merge(8).bram, "large FIFOs move to BRAM");
+    }
+
+    #[test]
+    fn register_pq_scales_linearly() {
+        let r20 = register_pq(20).lut;
+        let r200 = register_pq(200).lut;
+        let ratio = r200 / r20;
+        assert!((9.0..11.0).contains(&ratio), "PQ LUT must scale linearly: ratio {ratio:.2}");
+    }
+
+    #[test]
+    fn pq_beats_merge_small_loses_large() {
+        // The paper's design rationale: PQ for small HNSW queues, merge
+        // sort for the large exhaustive k (§IV-A observation 2).
+        assert!(register_pq(16).lut < topk_merge(16).lut * 4.0);
+        assert!(register_pq(1024).lut > topk_merge(1024).lut);
+    }
+
+    #[test]
+    fn fig6a_resource_u_shape() {
+        // Fig. 6a: with rising folding level, kernel resources first drop
+        // (smaller TFC) then rise again (k_r1 merge sort grows).
+        let k = 20;
+        let luts: Vec<f64> = [1usize, 2, 4, 8, 16, 32]
+            .iter()
+            .map(|&m| {
+                let kout = crate::index::folding::k_r1(k, m);
+                exhaustive_kernel(m, kout).lut
+            })
+            .collect();
+        assert!(luts[1] < luts[0], "m=2 smaller than m=1: {luts:?}");
+        assert!(
+            luts[5] > *luts[1..4].iter().min_by(|a, b| a.partial_cmp(b).unwrap()).unwrap(),
+            "m=32 should rise from the minimum (merge sort growth): {luts:?}"
+        );
+    }
+
+    #[test]
+    fn hnsw_engine_lut_grows_with_ef() {
+        let e20 = hnsw_engine(20).lut;
+        let e200 = hnsw_engine(200).lut;
+        assert!(e200 > e20 * 2.0, "ef=200 engine much larger: {e20} → {e200}");
+    }
+
+    #[test]
+    fn utilization_math() {
+        let board = U280::default();
+        let r = Resources { lut: board.usable_lut() / 2.0, ff: 0.0, bram: 0.0, dsp: 0.0 };
+        assert!((r.utilization(&board) - 0.5).abs() < 1e-9);
+    }
+}

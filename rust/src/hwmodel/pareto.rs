@@ -1,0 +1,78 @@
+//! Pareto-frontier extraction over (recall, QPS) design points —
+//! paper Figs. 9, 10, 11.
+
+/// One evaluated design point.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParetoPoint {
+    pub recall: f64,
+    pub qps: f64,
+    /// Free-form description of the configuration (e.g. "hnsw m=10 ef=40").
+    pub label: String,
+}
+
+impl ParetoPoint {
+    pub fn new(recall: f64, qps: f64, label: impl Into<String>) -> Self {
+        Self { recall, qps, label: label.into() }
+    }
+
+    /// `self` dominates `other` if it is at least as good on both axes and
+    /// strictly better on one.
+    pub fn dominates(&self, other: &ParetoPoint) -> bool {
+        (self.recall >= other.recall && self.qps >= other.qps)
+            && (self.recall > other.recall || self.qps > other.qps)
+    }
+}
+
+/// Non-dominated subset, sorted by recall ascending (QPS therefore
+/// descending) — the frontier the paper plots.
+pub fn pareto_frontier(points: &[ParetoPoint]) -> Vec<ParetoPoint> {
+    let mut front: Vec<ParetoPoint> = Vec::new();
+    for p in points {
+        if points.iter().any(|q| q.dominates(p)) {
+            continue;
+        }
+        // Deduplicate identical coordinates.
+        if !front.iter().any(|f| f.recall == p.recall && f.qps == p.qps) {
+            front.push(p.clone());
+        }
+    }
+    front.sort_by(|a, b| a.recall.partial_cmp(&b.recall).unwrap());
+    front
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frontier_removes_dominated() {
+        let pts = vec![
+            ParetoPoint::new(0.9, 1000.0, "a"),
+            ParetoPoint::new(0.8, 500.0, "dominated"),
+            ParetoPoint::new(0.95, 800.0, "b"),
+            ParetoPoint::new(0.7, 2000.0, "c"),
+            ParetoPoint::new(0.9, 900.0, "dominated2"),
+        ];
+        let front = pareto_frontier(&pts);
+        let labels: Vec<&str> = front.iter().map(|p| p.label.as_str()).collect();
+        assert_eq!(labels, vec!["c", "a", "b"]);
+        // Sorted by recall ascending, qps descending.
+        for w in front.windows(2) {
+            assert!(w[0].recall < w[1].recall);
+            assert!(w[0].qps >= w[1].qps);
+        }
+    }
+
+    #[test]
+    fn frontier_of_empty_and_single() {
+        assert!(pareto_frontier(&[]).is_empty());
+        let one = vec![ParetoPoint::new(0.5, 1.0, "x")];
+        assert_eq!(pareto_frontier(&one).len(), 1);
+    }
+
+    #[test]
+    fn duplicate_points_deduplicated() {
+        let pts = vec![ParetoPoint::new(0.9, 100.0, "a"), ParetoPoint::new(0.9, 100.0, "b")];
+        assert_eq!(pareto_frontier(&pts).len(), 1);
+    }
+}

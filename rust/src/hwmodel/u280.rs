@@ -1,0 +1,90 @@
+//! Xilinx Alveo U280 board constants (paper §V-A).
+
+/// Alveo U280 resource and memory envelope.
+#[derive(Debug, Clone, Copy)]
+pub struct U280 {
+    /// Lookup tables.
+    pub lut: u64,
+    /// Flip-flops.
+    pub ff: u64,
+    /// 18 Kb BRAM blocks.
+    pub bram: u64,
+    /// URAM blocks.
+    pub uram: u64,
+    /// DSP48E slices.
+    pub dsp: u64,
+    /// Kernel clock in Hz (paper: all kernels tuned to 450 MHz).
+    pub clock_hz: f64,
+    /// Peak HBM bandwidth, bytes/s.
+    pub hbm_peak: f64,
+    /// Usable bandwidth budget for linear access (paper limits to 410 GB/s
+    /// "to provide suitable overhead").
+    pub hbm_usable: f64,
+    /// Fraction of the die the shell + interconnect reserve (kernels can
+    /// use the rest). Vitis shells typically take ~20 %.
+    pub shell_overhead: f64,
+}
+
+impl Default for U280 {
+    fn default() -> Self {
+        Self {
+            lut: 1_300_000,
+            ff: 2_600_000,
+            bram: 4032,
+            uram: 960,
+            dsp: 9024,
+            clock_hz: 450e6,
+            hbm_peak: 460e9,
+            hbm_usable: 410e9,
+            shell_overhead: 0.20,
+        }
+    }
+}
+
+impl U280 {
+    /// LUTs available to kernels after the shell.
+    pub fn usable_lut(&self) -> f64 {
+        self.lut as f64 * (1.0 - self.shell_overhead)
+    }
+
+    pub fn usable_bram(&self) -> f64 {
+        self.bram as f64 * (1.0 - self.shell_overhead)
+    }
+
+    /// Streaming bandwidth one full-width (1024-bit) II=1 kernel consumes:
+    /// 128 B/cycle × 450 MHz = 57.6 GB/s (paper §IV-A).
+    pub fn kernel_stream_bw(&self, bytes_per_row: usize) -> f64 {
+        self.clock_hz * bytes_per_row as f64
+    }
+
+    /// Max kernels by the usable-bandwidth budget for a given per-row size.
+    pub fn kernels_by_bandwidth(&self, bytes_per_row: usize) -> usize {
+        (self.hbm_usable / self.kernel_stream_bw(bytes_per_row)).floor() as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_anchor_57_6_gbps() {
+        let u = U280::default();
+        assert!((u.kernel_stream_bw(128) - 57.6e9).abs() < 1e6);
+    }
+
+    #[test]
+    fn paper_anchor_7_brute_kernels() {
+        // §V-B: "7 kernels can be used" — 410 / 57.6 = 7.1 → 7.
+        let u = U280::default();
+        assert_eq!(u.kernels_by_bandwidth(128), 7);
+    }
+
+    #[test]
+    fn folding_increases_kernel_budget() {
+        let u = U280::default();
+        // m=8 → 16 B/row → 7.2 GB/s per kernel → 56 kernels by bandwidth.
+        assert_eq!(u.kernels_by_bandwidth(16), 56);
+        assert_eq!(u.kernels_by_bandwidth(4), 227); // m=32
+    }
+}

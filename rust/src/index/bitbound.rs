@@ -1,0 +1,315 @@
+//! BitBound index (Swamidass & Baldi 2007) — paper Eq. 2 and Fig. 2.
+//!
+//! For a query A and similarity cutoff `Sc`, any database fingerprint B with
+//! Tanimoto(A, B) ≥ Sc must satisfy
+//!
+//! ```text
+//! Cnt(A)·Sc ≤ Cnt(B) ≤ Cnt(A)/Sc            (paper Eq. 2)
+//! ```
+//!
+//! so sorting the database by popcount turns the cutoff into one contiguous
+//! candidate range found by two binary searches. The index also carries the
+//! Gaussian model of the popcount distribution (paper Eq. 3) used by the
+//! Fig. 2 pruned-search-space analysis and the FPGA QPS estimator.
+
+use super::SearchIndex;
+use crate::fingerprint::{Database, Fingerprint};
+use crate::topk::{Scored, TopKMerge};
+use crate::util::stats::Gaussian;
+use std::sync::Arc;
+
+/// Popcount-sorted exhaustive index with cutoff-based pruning.
+#[derive(Clone)]
+pub struct BitBoundIndex {
+    db: Arc<Database>,
+    /// Database row ids sorted by popcount (ascending).
+    order: Vec<u32>,
+    /// Popcounts in sorted order (binary-search key).
+    sorted_counts: Vec<u32>,
+    /// Similarity cutoff Sc.
+    cutoff: f64,
+    /// Gaussian fit of the popcount distribution (paper Eq. 3).
+    model: Gaussian,
+}
+
+impl BitBoundIndex {
+    pub fn new(db: Arc<Database>, cutoff: f64) -> Self {
+        assert!((0.0..=1.0).contains(&cutoff));
+        let mut order: Vec<u32> = (0..db.len() as u32).collect();
+        order.sort_by_key(|&i| db.counts[i as usize]);
+        let sorted_counts: Vec<u32> = order.iter().map(|&i| db.counts[i as usize]).collect();
+        let model = Gaussian::fit(&db.counts.iter().map(|&c| c as f64).collect::<Vec<_>>())
+            .unwrap_or(Gaussian { mu: 0.0, sigma: 1.0 });
+        Self { db, order, sorted_counts, cutoff, model }
+    }
+
+    pub fn cutoff(&self) -> f64 {
+        self.cutoff
+    }
+
+    /// The fitted popcount Gaussian (paper Eq. 3 / Fig. 2a).
+    pub fn popcount_model(&self) -> Gaussian {
+        self.model
+    }
+
+    /// Candidate popcount bounds for a query (paper Eq. 2). Cutoff 0 ⇒
+    /// the whole range.
+    pub fn bounds(&self, query_count: u32) -> (u32, u32) {
+        if self.cutoff <= 0.0 {
+            return (0, u32::MAX);
+        }
+        let lo = (query_count as f64 * self.cutoff).ceil() as u32;
+        let hi = (query_count as f64 / self.cutoff).floor() as u32;
+        (lo, hi)
+    }
+
+    /// Index range (into the popcount-sorted order) scanned for a query.
+    pub fn candidate_range(&self, query_count: u32) -> std::ops::Range<usize> {
+        let (lo, hi) = self.bounds(query_count);
+        let start = self.sorted_counts.partition_point(|&c| c < lo);
+        let end = self.sorted_counts.partition_point(|&c| c <= hi);
+        start..end
+    }
+
+    /// Fraction of the database scanned for a query — the *measured*
+    /// pruning ratio (Fig. 2b/2c shaded fraction).
+    pub fn kept_fraction(&self, query_count: u32) -> f64 {
+        if self.db.is_empty() {
+            return 0.0;
+        }
+        self.candidate_range(query_count).len() as f64 / self.db.len() as f64
+    }
+
+    /// *Modeled* kept fraction from the Gaussian (paper's analytical
+    /// approach: Fig. 2 derives the pruned space from Eq. 3).
+    pub fn modeled_kept_fraction(&self, query_count: u32) -> f64 {
+        let (lo, hi) = self.bounds(query_count);
+        self.model.mass_between(lo as f64 - 0.5, hi as f64 + 0.5)
+    }
+
+    /// Expected speedup over brute force at this cutoff, averaged over
+    /// queries drawn from the database's own popcount distribution —
+    /// reproduces paper Fig. 2d. Computed from the Gaussian model by
+    /// numerical integration over query popcounts.
+    pub fn modeled_speedup(&self) -> f64 {
+        let g = self.model;
+        let lo = (g.mu - 4.0 * g.sigma).max(1.0);
+        let hi = g.mu + 4.0 * g.sigma;
+        let steps = 200;
+        let mut acc = 0.0;
+        let mut wsum = 0.0;
+        for i in 0..steps {
+            let x = lo + (hi - lo) * (i as f64 + 0.5) / steps as f64;
+            let w = g.pdf(x);
+            let kept = self.modeled_kept_fraction(x.round() as u32).max(1e-9);
+            acc += w * kept;
+            wsum += w;
+        }
+        let mean_kept = acc / wsum;
+        1.0 / mean_kept
+    }
+
+    /// Threshold search (chemfp semantics): *all* database entries with
+    /// Tanimoto >= the index cutoff, best-first. Exact by the Eq. 2
+    /// soundness guarantee — this is the query type BitBound was invented
+    /// for (Swamidass & Baldi's "fast exact searches ... in linear and
+    /// sublinear time").
+    pub fn threshold_search(&self, query: &Fingerprint) -> Vec<Scored> {
+        let qc = query.count_ones();
+        let range = self.candidate_range(qc);
+        let mut out = Vec::new();
+        for &row in &self.order[range] {
+            let fp = &self.db.fps[row as usize];
+            let s = query.tanimoto_with_counts(fp, qc, self.db.counts[row as usize]);
+            if s >= self.cutoff {
+                out.push(Scored::new(s, row as u64));
+            }
+        }
+        out.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap().then(a.id.cmp(&b.id)));
+        out
+    }
+
+    /// Measured-average kept fraction over a query set.
+    pub fn mean_kept_fraction(&self, queries: &[Fingerprint]) -> f64 {
+        if queries.is_empty() {
+            return 1.0;
+        }
+        queries.iter().map(|q| self.kept_fraction(q.count_ones())).sum::<f64>()
+            / queries.len() as f64
+    }
+}
+
+impl SearchIndex for BitBoundIndex {
+    fn search(&self, query: &Fingerprint, k: usize) -> Vec<Scored> {
+        let qc = query.count_ones();
+        let range = self.candidate_range(qc);
+        let mut tk = TopKMerge::new(k);
+        for &row in &self.order[range] {
+            let fp = &self.db.fps[row as usize];
+            let s = query.tanimoto_with_counts(fp, qc, self.db.counts[row as usize]);
+            // The bound guarantees everything ≥ cutoff is in range; scores
+            // below the cutoff inside the range are still pushed (they can
+            // fill the top-k when fewer than k hits clear the cutoff, same
+            // as chemfp's behaviour for k-NN-with-threshold).
+            tk.push(Scored::new(s, row as u64));
+        }
+        tk.finish()
+    }
+
+    fn name(&self) -> &'static str {
+        "bitbound"
+    }
+
+    fn expected_candidates(&self, query: &Fingerprint) -> usize {
+        self.candidate_range(query.count_ones()).len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{recall_at_k, BruteForceIndex};
+    use super::*;
+    use crate::fingerprint::ChemblModel;
+    use crate::util::proptest::check;
+
+    fn db(n: usize, seed: u64) -> Arc<Database> {
+        Arc::new(Database::synthesize(n, &ChemblModel::default(), seed))
+    }
+
+    #[test]
+    fn bounds_formula() {
+        let idx = BitBoundIndex::new(db(100, 1), 0.8);
+        let (lo, hi) = idx.bounds(64);
+        assert_eq!(lo, (64.0f64 * 0.8).ceil() as u32); // 52
+        assert_eq!(hi, (64.0f64 / 0.8).floor() as u32); // 80
+        let idx0 = BitBoundIndex::new(db(100, 1), 0.0);
+        assert_eq!(idx0.bounds(64), (0, u32::MAX));
+    }
+
+    /// Soundness: no fingerprint with Tanimoto ≥ cutoff is ever pruned.
+    /// This is THE invariant of Eq. 2 (a pruned true positive would be a
+    /// recall bug the FPGA engine inherits).
+    #[test]
+    fn never_prunes_above_cutoff() {
+        check("bitbound_sound", 20, |g| {
+            let seed = g.next_u64();
+            let database = db(500, seed);
+            let cutoff = 0.3 + 0.6 * g.next_f64();
+            let idx = BitBoundIndex::new(database.clone(), cutoff);
+            let q = database.sample_queries(1, seed ^ 1)[0].clone();
+            let qc = q.count_ones();
+            let range = idx.candidate_range(qc);
+            let in_range: std::collections::HashSet<u64> =
+                idx.order[range].iter().map(|&r| r as u64).collect();
+            for (i, fp) in database.fps.iter().enumerate() {
+                let s = q.tanimoto(fp);
+                if s >= cutoff {
+                    assert!(
+                        in_range.contains(&(i as u64)),
+                        "row {i} with similarity {s:.3} >= cutoff {cutoff:.3} was pruned"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn recall_one_for_hits_above_cutoff() {
+        // When the true top-k all clear the cutoff, BitBound must return
+        // exactly the brute-force answer.
+        let database = db(2000, 42);
+        let brute = BruteForceIndex::new(database.clone());
+        let idx = BitBoundIndex::new(database.clone(), 0.6);
+        let queries = database.sample_queries(10, 7);
+        for q in queries {
+            let truth = brute.search(&q, 5);
+            if truth.iter().all(|s| s.score >= 0.6) {
+                let got = idx.search(&q, 5);
+                assert_eq!(recall_at_k(&got, &truth, 5), 1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn kept_fraction_decreases_with_cutoff() {
+        let database = db(5000, 3);
+        let q = database.sample_queries(1, 9)[0].clone();
+        let mut prev = 1.01;
+        for cutoff in [0.1, 0.3, 0.5, 0.7, 0.9] {
+            let idx = BitBoundIndex::new(database.clone(), cutoff);
+            let f = idx.kept_fraction(q.count_ones());
+            assert!(f <= prev + 1e-9, "kept fraction must shrink: Sc={cutoff} f={f}");
+            prev = f;
+        }
+    }
+
+    #[test]
+    fn model_tracks_measurement() {
+        // The Gaussian model's kept fraction should track the measured one
+        // (paper Fig. 2 derives speedups from the model).
+        let database = db(20_000, 5);
+        let idx = BitBoundIndex::new(database.clone(), 0.8);
+        let queries = database.sample_queries(50, 11);
+        let measured = idx.mean_kept_fraction(&queries);
+        let modeled: f64 = queries
+            .iter()
+            .map(|q| idx.modeled_kept_fraction(q.count_ones()))
+            .sum::<f64>()
+            / queries.len() as f64;
+        assert!(
+            (measured - modeled).abs() < 0.1,
+            "model {modeled:.3} vs measured {measured:.3}"
+        );
+    }
+
+    #[test]
+    fn modeled_speedup_increases_with_cutoff() {
+        let database = db(10_000, 8);
+        let mut prev = 0.0;
+        for cutoff in [0.3, 0.5, 0.7, 0.8, 0.9] {
+            let s = BitBoundIndex::new(database.clone(), cutoff).modeled_speedup();
+            assert!(s > prev, "speedup should grow with cutoff: Sc={cutoff} s={s:.2}");
+            prev = s;
+        }
+        // At Sc=0.8 the count-bound alone gives ~2x on a Gaussian popcount
+        // distribution; the paper's 15.5x H3 speedup is the *composite*
+        // BitBound (~2x) x folding bandwidth reduction (~8x).
+        let s08 = BitBoundIndex::new(database, 0.8).modeled_speedup();
+        assert!(s08 > 1.5, "Sc=0.8 modeled speedup {s08:.2}");
+    }
+
+    #[test]
+    fn threshold_search_exact_vs_linear_scan() {
+        check("threshold_exact", 15, |g| {
+            let seed = g.next_u64();
+            let database = db(800, seed);
+            let cutoff = 0.4 + 0.4 * g.next_f64();
+            let idx = BitBoundIndex::new(database.clone(), cutoff);
+            let q = database.sample_queries(1, seed ^ 3)[0].clone();
+            let got = idx.threshold_search(&q);
+            // Oracle: full linear scan.
+            let mut want: Vec<(u64, f64)> = database
+                .fps
+                .iter()
+                .enumerate()
+                .map(|(i, fp)| (i as u64, q.tanimoto(fp)))
+                .filter(|&(_, s)| s >= cutoff)
+                .collect();
+            want.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+            assert_eq!(
+                got.iter().map(|s| s.id).collect::<Vec<_>>(),
+                want.iter().map(|&(i, _)| i).collect::<Vec<_>>(),
+                "threshold search must be exact (cutoff {cutoff:.2})"
+            );
+        });
+    }
+
+    #[test]
+    fn empty_and_degenerate() {
+        let database = Arc::new(Database::new(vec![]));
+        let idx = BitBoundIndex::new(database, 0.8);
+        let q = crate::fingerprint::Fingerprint::zero_full();
+        assert!(idx.search(&q, 5).is_empty());
+        assert_eq!(idx.kept_fraction(0), 0.0);
+    }
+}

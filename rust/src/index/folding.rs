@@ -1,0 +1,266 @@
+//! Folded (modulo-OR-compressed) database and the 2-stage search
+//! (paper §III-B, Fig. 3, Table I).
+//!
+//! Folding level `m` compresses each fingerprint from L to L/m bits by
+//! bitwise OR (scheme 1: between sections; scheme 2: between adjacent
+//! groups). Compression cuts the memory traffic per candidate by `m` —
+//! the FPGA design's lever on HBM bandwidth (Fig. 6b) — at the cost of
+//! score distortion.
+//!
+//! Accuracy is recovered with the 2-stage search of GPUsimilarity: stage 1
+//! ranks the *folded* database and keeps the best `k_r1 = k·m·log2(2m)`
+//! candidates; stage 2 rescores those candidates at full length and
+//! returns the exact-ordered top k. Table I measures the residual error.
+
+use super::SearchIndex;
+use crate::fingerprint::{packed::FoldScheme, Database, Fingerprint};
+use crate::topk::{Scored, TopKMerge};
+use std::sync::Arc;
+
+/// First-round candidate count for the 2-stage search — the paper's
+/// relationship `k_r1 = k · m · log2(2m)` (§III-B).
+pub fn k_r1(k: usize, m: usize) -> usize {
+    if m <= 1 {
+        return k;
+    }
+    let factor = (m as f64) * ((2 * m) as f64).log2();
+    (k as f64 * factor).round() as usize
+}
+
+/// A database folded at level `m`, retaining a handle to the full-length
+/// original for stage-2 rescoring.
+#[derive(Clone)]
+pub struct FoldedDatabase {
+    full: Arc<Database>,
+    folded: Vec<Fingerprint>,
+    folded_counts: Vec<u32>,
+    m: usize,
+    scheme: FoldScheme,
+}
+
+impl FoldedDatabase {
+    pub fn build(full: Arc<Database>, m: usize, scheme: FoldScheme) -> Self {
+        let folded: Vec<Fingerprint> = full
+            .fps
+            .iter()
+            .map(|fp| match scheme {
+                FoldScheme::Sectional => fp.fold_sectional_fast(m),
+                FoldScheme::Adjacent => fp.fold(m, FoldScheme::Adjacent),
+            })
+            .collect();
+        let folded_counts = folded.iter().map(|f| f.count_ones()).collect();
+        Self { full, folded, folded_counts, m, scheme }
+    }
+
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    pub fn scheme(&self) -> FoldScheme {
+        self.scheme
+    }
+
+    pub fn full(&self) -> &Arc<Database> {
+        &self.full
+    }
+
+    pub fn folded_fps(&self) -> &[Fingerprint] {
+        &self.folded
+    }
+
+    pub fn folded_counts(&self) -> &[u32] {
+        &self.folded_counts
+    }
+
+    /// Fold a query the same way.
+    pub fn fold_query(&self, q: &Fingerprint) -> Fingerprint {
+        match self.scheme {
+            FoldScheme::Sectional => q.fold_sectional_fast(self.m),
+            FoldScheme::Adjacent => q.fold(self.m, FoldScheme::Adjacent),
+        }
+    }
+
+    /// Stage 1: rank the folded database, return the best `k1` rows.
+    pub fn stage1(&self, folded_query: &Fingerprint, k1: usize) -> Vec<Scored> {
+        let qc = folded_query.count_ones();
+        let mut tk = TopKMerge::new(k1);
+        for (i, (fp, &c)) in self.folded.iter().zip(&self.folded_counts).enumerate() {
+            tk.push(Scored::new(folded_query.tanimoto_with_counts(fp, qc, c), i as u64));
+        }
+        tk.finish()
+    }
+
+    /// Stage 2: rescore candidate rows at full length, exact top-k.
+    pub fn stage2(&self, query: &Fingerprint, candidates: &[Scored], k: usize) -> Vec<Scored> {
+        let qc = query.count_ones();
+        let mut tk = TopKMerge::new(k);
+        for c in candidates {
+            let row = c.id as usize;
+            let s =
+                query.tanimoto_with_counts(&self.full.fps[row], qc, self.full.counts[row]);
+            tk.push(Scored::new(s, c.id));
+        }
+        tk.finish()
+    }
+
+    /// Bytes of database traffic per full scan (per candidate: L/m bits) —
+    /// the Fig. 6b memory-bandwidth quantity.
+    pub fn bytes_per_candidate(&self) -> usize {
+        (crate::fingerprint::FP_BITS / self.m) / 8
+    }
+}
+
+impl SearchIndex for FoldedDatabase {
+    /// Full 2-stage search with the paper's `k_r1` sizing.
+    fn search(&self, query: &Fingerprint, k: usize) -> Vec<Scored> {
+        if self.m <= 1 {
+            // No compression: single exact pass.
+            let qc = query.count_ones();
+            let mut tk = TopKMerge::new(k);
+            for (i, (fp, &c)) in self.full.fps.iter().zip(&self.full.counts).enumerate() {
+                tk.push(Scored::new(query.tanimoto_with_counts(fp, qc, c), i as u64));
+            }
+            return tk.finish();
+        }
+        let fq = self.fold_query(query);
+        let k1 = k_r1(k, self.m).min(self.full.len());
+        let cands = self.stage1(&fq, k1);
+        self.stage2(query, &cands, k)
+    }
+
+    fn name(&self) -> &'static str {
+        "folding-2stage"
+    }
+
+    fn expected_candidates(&self, _query: &Fingerprint) -> usize {
+        // Stage 1 scans everything (folded) + k_r1 full-width rescores; in
+        // folded-candidate units the dominant term is the full scan.
+        self.full.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{recall_at_k, BruteForceIndex, SearchIndex};
+    use super::*;
+    use crate::fingerprint::ChemblModel;
+
+    fn db(n: usize, seed: u64) -> Arc<Database> {
+        Arc::new(Database::synthesize(n, &ChemblModel::default(), seed))
+    }
+
+    #[test]
+    fn k_r1_formula_matches_paper_table1() {
+        // Paper Table I column m·log2(2m): 1→1, 2→4, 4→12, 8→32, 16→80, 32→192.
+        assert_eq!(k_r1(1, 1), 1);
+        assert_eq!(k_r1(1, 2), 4);
+        assert_eq!(k_r1(1, 4), 12);
+        assert_eq!(k_r1(1, 8), 32);
+        assert_eq!(k_r1(1, 16), 80);
+        assert_eq!(k_r1(1, 32), 192);
+        assert_eq!(k_r1(20, 8), 640);
+    }
+
+    #[test]
+    fn m1_is_exact() {
+        let database = db(1000, 1);
+        let brute = BruteForceIndex::new(database.clone());
+        let folded = FoldedDatabase::build(database.clone(), 1, FoldScheme::Sectional);
+        let q = database.sample_queries(1, 2)[0].clone();
+        let a = brute.search(&q, 10);
+        let b = folded.search(&q, 10);
+        assert_eq!(
+            a.iter().map(|s| s.id).collect::<Vec<_>>(),
+            b.iter().map(|s| s.id).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn two_stage_recall_degrades_gracefully_with_m() {
+        // Table I shape: scheme 1 keeps ≥~97% recall through m=8, then
+        // collapses by m=32.
+        // n must dwarf k_r1(20, 32) = 3840 for the m=32 collapse to be
+        // visible (on Chembl n = 1.9M; here 24k suffices for the ordering).
+        let database = db(24_000, 7);
+        let brute = BruteForceIndex::new(database.clone());
+        let queries = database.sample_queries(15, 3);
+        let k = 20;
+        let mut recalls = Vec::new();
+        for m in [2usize, 8, 32] {
+            let folded = FoldedDatabase::build(database.clone(), m, FoldScheme::Sectional);
+            let mean: f64 = queries
+                .iter()
+                .map(|q| {
+                    let truth = brute.search(q, k);
+                    let got = folded.search(q, k);
+                    recall_at_k(&got, &truth, k)
+                })
+                .sum::<f64>()
+                / queries.len() as f64;
+            recalls.push((m, mean));
+        }
+        let r2 = recalls[0].1;
+        let r8 = recalls[1].1;
+        let r32 = recalls[2].1;
+        assert!(r2 > 0.9, "m=2 recall {r2:.3}");
+        assert!(r2 >= r8 - 0.05, "recall should not grow with m: r2={r2:.3} r8={r8:.3}");
+        assert!(r32 < r8, "m=32 must be materially worse (paper: 31.7%): r32={r32:.3}");
+    }
+
+    #[test]
+    fn scheme1_beats_scheme2() {
+        // Paper Table I: sectional folding (scheme 1) has higher accuracy.
+        let database = db(3000, 13);
+        let brute = BruteForceIndex::new(database.clone());
+        let queries = database.sample_queries(40, 5);
+        let k = 20;
+        let m = 8;
+        let mean_recall = |scheme: FoldScheme| -> f64 {
+            let folded = FoldedDatabase::build(database.clone(), m, scheme);
+            queries
+                .iter()
+                .map(|q| recall_at_k(&folded.search(q, k), &brute.search(q, k), k))
+                .sum::<f64>()
+                / queries.len() as f64
+        };
+        let s1 = mean_recall(FoldScheme::Sectional);
+        let s2 = mean_recall(FoldScheme::Adjacent);
+        assert!(
+            s1 >= s2 - 0.02,
+            "sectional {s1:.3} should not lose to adjacent {s2:.3} (paper Table I)"
+        );
+    }
+
+    #[test]
+    fn stage2_rescore_is_exact_on_candidates() {
+        let database = db(500, 21);
+        let folded = FoldedDatabase::build(database.clone(), 4, FoldScheme::Sectional);
+        let q = database.sample_queries(1, 8)[0].clone();
+        let cands: Vec<Scored> = (0..100u64).map(|i| Scored::new(0.0, i * 5)).collect();
+        let out = folded.stage2(&q, &cands, 10);
+        // Every output score must equal the true full-length Tanimoto.
+        for s in &out {
+            let want = q.tanimoto(&database.fps[s.id as usize]);
+            assert!((s.score - want).abs() < 1e-12);
+        }
+        // And be the best 10 of the candidate set.
+        let mut all: Vec<Scored> = cands
+            .iter()
+            .map(|c| Scored::new(q.tanimoto(&database.fps[c.id as usize]), c.id))
+            .collect();
+        all.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap().then(a.id.cmp(&b.id)));
+        assert_eq!(
+            out.iter().map(|s| s.id).collect::<Vec<_>>(),
+            all[..10].iter().map(|s| s.id).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn bytes_per_candidate_shrinks_with_m() {
+        let database = db(10, 1);
+        for (m, bytes) in [(1usize, 128usize), (2, 64), (4, 32), (8, 16), (16, 8), (32, 4)] {
+            let f = FoldedDatabase::build(database.clone(), m, FoldScheme::Sectional);
+            assert_eq!(f.bytes_per_candidate(), bytes);
+        }
+    }
+}

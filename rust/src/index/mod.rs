@@ -1,0 +1,83 @@
+//! Exhaustive-search indexes: brute force, BitBound, folding, two-stage.
+//!
+//! These are the algorithm substrates behind the paper's exhaustive query
+//! engine (§III-B, §IV-A):
+//!
+//! * [`brute`] — linear-scan Tanimoto top-k. The correctness oracle for
+//!   everything else and the "brute force" row of Figs. 10/11.
+//! * [`bitbound`] — the Swamidass–Baldi popcount bound (paper Eq. 2):
+//!   database sorted by popcount, per-query candidate range by binary
+//!   search. Includes the Gaussian search-space model of Fig. 2.
+//! * [`folding`] — modulo-OR-compressed database (paper Fig. 3) and the
+//!   2-stage search with `k_r1 = k·m·log2(2m)` (GPUsimilarity's scheme).
+//! * [`two_stage`] — the combined **BitBound & folding** index the FPGA
+//!   engine runs: BitBound pruning on the folded database for stage 1,
+//!   exact rescoring for stage 2.
+//!
+//! Every index implements [`SearchIndex`] so engines, baselines, and the
+//! recall harness treat them interchangeably.
+
+pub mod bitbound;
+pub mod brute;
+pub mod folding;
+pub mod two_stage;
+
+pub use bitbound::BitBoundIndex;
+pub use brute::BruteForceIndex;
+pub use folding::FoldedDatabase;
+pub use two_stage::BitBoundFoldingIndex;
+
+use crate::fingerprint::Fingerprint;
+use crate::topk::Scored;
+
+/// A K-nearest-neighbor similarity index over a fingerprint database.
+pub trait SearchIndex {
+    /// Top-k most Tanimoto-similar database entries, best-first.
+    /// `Scored::id` is the database row index.
+    fn search(&self, query: &Fingerprint, k: usize) -> Vec<Scored>;
+
+    /// Human-readable name for reports.
+    fn name(&self) -> &'static str;
+
+    /// Number of database fingerprints *scored* for this query — the work
+    /// metric the hardware model turns into cycles (1 per fingerprint at
+    /// II=1). Brute force: n.
+    fn expected_candidates(&self, query: &Fingerprint) -> usize;
+}
+
+/// Top-k recall of `got` against ground truth `truth` (paper's accuracy
+/// metric: "Top-K search matching rate between the proposed and brute-force
+/// algorithms").
+pub fn recall_at_k(got: &[Scored], truth: &[Scored], k: usize) -> f64 {
+    if k == 0 || truth.is_empty() {
+        return 1.0;
+    }
+    let truth_ids: std::collections::HashSet<u64> =
+        truth.iter().take(k).map(|s| s.id).collect();
+    let hit = got.iter().take(k).filter(|s| truth_ids.contains(&s.id)).count();
+    hit as f64 / truth_ids.len() as f64
+}
+
+/// Mean recall over query batches (the experiment drivers' aggregate).
+pub fn mean_recall(results: &[(Vec<Scored>, Vec<Scored>)], k: usize) -> f64 {
+    if results.is_empty() {
+        return 0.0;
+    }
+    results.iter().map(|(g, t)| recall_at_k(g, t, k)).sum::<f64>() / results.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recall_math() {
+        let truth: Vec<Scored> = (0..10).map(|i| Scored::new(1.0 - i as f64 * 0.01, i)).collect();
+        let mut got = truth.clone();
+        assert_eq!(recall_at_k(&got, &truth, 10), 1.0);
+        got[9] = Scored::new(0.5, 99);
+        assert!((recall_at_k(&got, &truth, 10) - 0.9).abs() < 1e-12);
+        assert_eq!(recall_at_k(&[], &truth, 10), 0.0);
+        assert_eq!(recall_at_k(&got, &[], 10), 1.0, "empty truth trivially matched");
+    }
+}

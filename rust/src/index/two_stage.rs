@@ -1,0 +1,196 @@
+//! BitBound & folding — the paper's combined exhaustive index (§III-A:
+//! "Those algorithms are combined as BitBound & folding algorithm").
+//!
+//! Query flow (mirroring the FPGA engine of Fig. 4):
+//!
+//! 1. **BitCnt** — the query popcount (module ①) selects the candidate
+//!    popcount range via Eq. 2 on the *full-length* counts.
+//! 2. **Stage 1** — the folded fingerprints of the candidate range are
+//!    streamed through TFC (②) + top-k merge (③), keeping
+//!    `k_r1 = k·m·log2(2m)` candidates.
+//! 3. **Stage 2** — those candidates are rescored at full length and the
+//!    exact top-k of the candidate set is returned.
+//!
+//! The per-query scored-candidate count (the QPS-determining work) is
+//! `kept_fraction · n` folded rows + `k_r1` full rows; the hardware model
+//! charges exactly this (Fig. 7).
+
+use super::bitbound::BitBoundIndex;
+use super::folding::{k_r1, FoldedDatabase};
+use super::SearchIndex;
+use crate::fingerprint::{packed::FoldScheme, Database, Fingerprint};
+use crate::topk::{Scored, TopKMerge};
+use std::sync::Arc;
+
+/// Combined BitBound + folding 2-stage exhaustive index.
+#[derive(Clone)]
+pub struct BitBoundFoldingIndex {
+    folded: FoldedDatabase,
+    bitbound: BitBoundIndex,
+    /// Rows sorted by full-length popcount (shared with the BitBound order).
+    order: Vec<u32>,
+}
+
+impl BitBoundFoldingIndex {
+    pub fn new(db: Arc<Database>, m: usize, cutoff: f64) -> Self {
+        Self::with_scheme(db, m, cutoff, FoldScheme::Sectional)
+    }
+
+    pub fn with_scheme(db: Arc<Database>, m: usize, cutoff: f64, scheme: FoldScheme) -> Self {
+        let folded = FoldedDatabase::build(db.clone(), m, scheme);
+        let bitbound = BitBoundIndex::new(db.clone(), cutoff);
+        let mut order: Vec<u32> = (0..db.len() as u32).collect();
+        order.sort_by_key(|&i| db.counts[i as usize]);
+        Self { folded, bitbound, order }
+    }
+
+    pub fn m(&self) -> usize {
+        self.folded.m()
+    }
+
+    pub fn cutoff(&self) -> f64 {
+        self.bitbound.cutoff()
+    }
+
+    pub fn bitbound(&self) -> &BitBoundIndex {
+        &self.bitbound
+    }
+
+    pub fn folded(&self) -> &FoldedDatabase {
+        &self.folded
+    }
+
+    /// Work profile for a query: (folded rows scored, full rows rescored).
+    pub fn work(&self, query: &Fingerprint, k: usize) -> (usize, usize) {
+        let range = self.bitbound.candidate_range(query.count_ones());
+        let stage1 = range.len();
+        let stage2 = k_r1(k, self.m()).min(stage1);
+        (stage1, stage2)
+    }
+}
+
+impl SearchIndex for BitBoundFoldingIndex {
+    fn search(&self, query: &Fingerprint, k: usize) -> Vec<Scored> {
+        let qc = query.count_ones();
+        let range = self.bitbound.candidate_range(qc);
+        let db = self.folded.full();
+
+        if self.m() <= 1 {
+            // Pure BitBound: exact scan of the candidate range.
+            let mut tk = TopKMerge::new(k);
+            for &row in &self.order[range] {
+                let fp = &db.fps[row as usize];
+                tk.push(Scored::new(
+                    query.tanimoto_with_counts(fp, qc, db.counts[row as usize]),
+                    row as u64,
+                ));
+            }
+            return tk.finish();
+        }
+
+        // Stage 1: folded scores over the candidate range only.
+        let fq = self.folded.fold_query(query);
+        let fqc = fq.count_ones();
+        let k1 = k_r1(k, self.m()).min(range.len().max(k));
+        let mut tk1 = TopKMerge::new(k1.max(1));
+        let folded_fps = self.folded.folded_fps();
+        let folded_counts = self.folded.folded_counts();
+        for &row in &self.order[range] {
+            let r = row as usize;
+            tk1.push(Scored::new(
+                fq.tanimoto_with_counts(&folded_fps[r], fqc, folded_counts[r]),
+                row as u64,
+            ));
+        }
+        // Stage 2: exact rescore.
+        self.folded.stage2(query, &tk1.finish(), k)
+    }
+
+    fn name(&self) -> &'static str {
+        "bitbound+folding"
+    }
+
+    fn expected_candidates(&self, query: &Fingerprint) -> usize {
+        self.bitbound.candidate_range(query.count_ones()).len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{recall_at_k, BruteForceIndex};
+    use super::*;
+    use crate::fingerprint::ChemblModel;
+
+    fn db(n: usize, seed: u64) -> Arc<Database> {
+        Arc::new(Database::synthesize(n, &ChemblModel::default(), seed))
+    }
+
+    #[test]
+    fn cutoff_zero_m1_equals_brute() {
+        let database = db(1500, 4);
+        let brute = BruteForceIndex::new(database.clone());
+        let idx = BitBoundFoldingIndex::new(database.clone(), 1, 0.0);
+        for q in database.sample_queries(5, 6) {
+            let a = brute.search(&q, 10);
+            let b = idx.search(&q, 10);
+            assert_eq!(
+                a.iter().map(|s| s.id).collect::<Vec<_>>(),
+                b.iter().map(|s| s.id).collect::<Vec<_>>()
+            );
+        }
+    }
+
+    #[test]
+    fn high_recall_at_paper_operating_point() {
+        // Paper H3 operating point: Sc = 0.8, recall 0.97 at the chosen m.
+        // Queries near database entries (similarity > 0.8 neighbors exist)
+        // must come back with high top-20 recall.
+        let database = db(5000, 9);
+        let brute = BruteForceIndex::new(database.clone());
+        let idx = BitBoundFoldingIndex::new(database.clone(), 4, 0.8);
+        let queries = database.sample_queries(25, 17);
+        let k = 20;
+        // Recall against the brute-force *top matches above cutoff*: the
+        // BitBound contract only covers candidates >= Sc.
+        let mut recs = Vec::new();
+        for q in &queries {
+            let truth: Vec<_> =
+                brute.search(q, k).into_iter().filter(|s| s.score >= 0.8).collect();
+            if truth.is_empty() {
+                continue;
+            }
+            let got = idx.search(q, k);
+            recs.push(recall_at_k(&got, &truth, truth.len()));
+        }
+        assert!(!recs.is_empty());
+        let mean = recs.iter().sum::<f64>() / recs.len() as f64;
+        assert!(mean > 0.9, "mean recall above cutoff {mean:.3}");
+    }
+
+    #[test]
+    fn work_shrinks_with_cutoff_and_m_constant() {
+        let database = db(10_000, 2);
+        let q = database.sample_queries(1, 3)[0].clone();
+        let w_low = BitBoundFoldingIndex::new(database.clone(), 4, 0.3).work(&q, 20);
+        let w_high = BitBoundFoldingIndex::new(database.clone(), 4, 0.8).work(&q, 20);
+        assert!(w_high.0 < w_low.0, "higher cutoff prunes more: {w_high:?} vs {w_low:?}");
+        assert_eq!(w_high.1.min(640), w_high.1, "stage2 bounded by k_r1");
+    }
+
+    #[test]
+    fn matches_plain_folding_when_cutoff_zero() {
+        let database = db(2000, 12);
+        let plain = FoldedDatabase::build(database.clone(), 4, FoldScheme::Sectional);
+        let combined = BitBoundFoldingIndex::new(database.clone(), 4, 0.0);
+        for q in database.sample_queries(5, 14) {
+            let a = plain.search(&q, 10);
+            let b = combined.search(&q, 10);
+            // Same candidate set (everything) and same two-stage pipeline ⇒
+            // identical results.
+            assert_eq!(
+                a.iter().map(|s| s.id).collect::<Vec<_>>(),
+                b.iter().map(|s| s.id).collect::<Vec<_>>()
+            );
+        }
+    }
+}

@@ -1,0 +1,49 @@
+//! # molfpga — FPGA-accelerator co-design for large-scale molecular similarity search
+//!
+//! Reproduction of *"Optimizing FPGA-based Accelerator Design for Large-Scale
+//! Molecular Similarity Search"* (Peng et al., 2021) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **Layer 1 (Pallas)** — the Tanimoto Factor Calculation (TFC) and BitCnt
+//!   compute hot-spots as Pallas kernels (`python/compile/kernels/`), lowered
+//!   once at build time to HLO text artifacts.
+//! * **Layer 2 (JAX)** — the tile-scoring + top-k compute graph per folding
+//!   level (`python/compile/model.py`), AOT-exported by
+//!   `python/compile/aot.py`.
+//! * **Layer 3 (this crate)** — the query-engine coordinator: request
+//!   routing, dynamic batching, BitBound pruning, two-stage folded search,
+//!   HNSW graph traversal, top-k merging, and the PJRT runtime that executes
+//!   the AOT artifacts. Python never runs on the request path.
+//!
+//! The paper evaluates on a Xilinx Alveo U280; this reproduction substitutes
+//! the physical FPGA with [`hwmodel`] (an analytical resource/timing model of
+//! the U280) and [`simulator`] (a cycle-level pipeline simulator of the query
+//! engines), per the substitution policy documented in `DESIGN.md`.
+//!
+//! ## Module map
+//!
+//! | module | role |
+//! |---|---|
+//! | [`fingerprint`] | bit-packed fingerprints, SMILES → Morgan FP, dataset generation (RDKit/Chembl substitute) |
+//! | [`topk`] | merge-sort top-k (paper module ③) and register-array priority queue (module ④) |
+//! | [`index`] | brute force, BitBound (Eq. 2), folding schemes 1 & 2 (Fig. 3), two-stage search |
+//! | [`hnsw`] | hierarchical navigable small world graph: build + Algorithms 1 & 2 |
+//! | [`hwmodel`] | analytical Alveo U280 resource/frequency/bandwidth model |
+//! | [`simulator`] | cycle-level query-engine pipeline simulator |
+//! | [`runtime`] | PJRT client: load `artifacts/*.hlo.txt`, compile, execute |
+//! | [`coordinator`] | serving layer: router, batcher, engine pool, metrics |
+//! | [`baselines`] | CPU brute-force / BitBound / HNSW and GPU model comparators |
+//! | [`exp`] | shared experiment harnesses behind the figure/table drivers |
+//! | [`util`] | PRNG, CLI parsing, stats, mini-bench, JSON writer, property-test helpers |
+
+pub mod baselines;
+pub mod coordinator;
+pub mod exp;
+pub mod fingerprint;
+pub mod hnsw;
+pub mod hwmodel;
+pub mod index;
+pub mod runtime;
+pub mod simulator;
+pub mod topk;
+pub mod util;

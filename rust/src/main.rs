@@ -1,0 +1,222 @@
+//! molfpga — CLI for the molecular-similarity-search accelerator stack.
+//!
+//! ```text
+//! molfpga info                         artifact + platform summary
+//! molfpga gen-data  --n 100000 --seed 42 --out data/db.bin
+//! molfpga query     --db data/db.bin --smiles "CC(=O)Oc1ccccc1C(=O)O" \
+//!                   --k 10 --mode exact
+//! molfpga serve     --db data/db.bin --port 7878 --workers 2 \
+//!                   [--pjrt] [--m 4] [--cutoff 0.8] [--hnsw-m 8] [--ef 64]
+//! molfpga bench-qps --db data/db.bin --queries 200 [--pjrt]
+//! ```
+
+use anyhow::{bail, Context, Result};
+use molfpga::coordinator::backend::{NativeExhaustive, NativeHnsw, PjrtExhaustive};
+use molfpga::coordinator::batcher::BatchPolicy;
+use molfpga::coordinator::metrics::Metrics;
+use molfpga::coordinator::server::Server;
+use molfpga::coordinator::{EnginePool, Query, QueryMode, Router};
+use molfpga::fingerprint::{morgan::MorganGenerator, ChemblModel, Database};
+use molfpga::runtime::ArtifactSet;
+use molfpga::util::cli::Args;
+use std::sync::Arc;
+
+fn main() {
+    let args = Args::from_env();
+    let result = match args.subcommand() {
+        Some("info") => cmd_info(),
+        Some("gen-data") => cmd_gen_data(&args),
+        Some("query") => cmd_query(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("bench-qps") => cmd_bench_qps(&args),
+        _ => {
+            eprintln!(
+                "usage: molfpga <info|gen-data|query|serve|bench-qps> [options]\n\
+                 see rust/src/main.rs header for the option list"
+            );
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn load_db(args: &Args) -> Result<Arc<Database>> {
+    if let Some(path) = args.get("db") {
+        let db = Database::load(std::path::Path::new(path))
+            .with_context(|| format!("loading database {path}"))?;
+        Ok(Arc::new(db))
+    } else {
+        let n = args.get_or("n-db", 50_000usize)?;
+        let seed = args.get_or("seed", 42u64)?;
+        eprintln!("[molfpga] no --db given; synthesizing {n} fingerprints (seed {seed})");
+        Ok(Arc::new(Database::synthesize(n, &ChemblModel::default(), seed)))
+    }
+}
+
+fn cmd_info() -> Result<()> {
+    let dir = ArtifactSet::default_dir();
+    println!(
+        "molfpga {} — three-layer Rust+JAX+Pallas molecular similarity search",
+        env!("CARGO_PKG_VERSION")
+    );
+    println!("artifact dir: {}", dir.display());
+    match ArtifactSet::scan(&dir) {
+        Ok(set) => {
+            for (kind, count) in set.summary() {
+                println!("  {kind}: {count}");
+            }
+            println!("  folding levels: {:?}", set.folding_levels());
+        }
+        Err(e) => println!("  (no artifacts: {e}; run `make artifacts`)"),
+    }
+    let rt = molfpga::runtime::PjRt::cpu()?;
+    println!("PJRT platform: {}", rt.platform());
+    Ok(())
+}
+
+fn cmd_gen_data(args: &Args) -> Result<()> {
+    let n = args.get_or("n", 100_000usize)?;
+    let seed = args.get_or("seed", 42u64)?;
+    let out = args.get("out").unwrap_or("data/db.bin");
+    let model = ChemblModel {
+        mu: args.get_or("mu", 62.0)?,
+        sigma: args.get_or("sigma", 19.0)?,
+        cluster_size: args.get_or("cluster-size", 16usize)?,
+        ..ChemblModel::default()
+    };
+    let db = Database::synthesize(n, &model, seed);
+    if let Some(dir) = std::path::Path::new(out).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    db.save(std::path::Path::new(out))?;
+    println!("wrote {n} fingerprints to {out}");
+    Ok(())
+}
+
+fn cmd_query(args: &Args) -> Result<()> {
+    use molfpga::coordinator::SearchBackend;
+    let db = load_db(args)?;
+    let k = args.get_or("k", 10usize)?;
+    let fp = if let Some(smiles) = args.get("smiles") {
+        MorganGenerator::default()
+            .fingerprint_smiles(smiles)
+            .map_err(|e| anyhow::anyhow!("{e}"))?
+    } else if let Some(row) = args.get("row") {
+        let row: usize = row.parse().context("--row")?;
+        db.fps.get(row).cloned().context("row out of range")?
+    } else {
+        bail!("need --smiles or --row");
+    };
+    let mode: QueryMode =
+        args.get("mode").unwrap_or("exact").parse().map_err(anyhow::Error::msg)?;
+    let hits = match mode {
+        QueryMode::Exhaustive | QueryMode::Auto => {
+            if args.flag("pjrt") {
+                let mut be = PjrtExhaustive::new(
+                    db.clone(),
+                    args.get_or("m", 1usize)?,
+                    args.get_or("cutoff", 0.0)?,
+                )?;
+                be.search(&fp, k)?
+            } else {
+                let mut be = NativeExhaustive::new(
+                    db.clone(),
+                    args.get_or("m", 1usize)?,
+                    args.get_or("cutoff", 0.0)?,
+                );
+                be.search(&fp, k)?
+            }
+        }
+        QueryMode::Approximate => {
+            let graph = NativeHnsw::build_graph(
+                &db,
+                args.get_or("hnsw-m", 8usize)?,
+                args.get_or("ef-construction", 64usize)?,
+                1,
+            );
+            let mut be = NativeHnsw::new(db.clone(), graph, args.get_or("ef", 64usize)?);
+            be.search(&fp, k)?
+        }
+    };
+    for (rank, s) in hits.iter().enumerate() {
+        println!("{:>3}. row {:>8}  tanimoto {:.4}", rank + 1, s.id, s.score);
+    }
+    Ok(())
+}
+
+fn build_router(args: &Args, db: Arc<Database>) -> Result<(Arc<Router>, Arc<Metrics>)> {
+    let metrics = Arc::new(Metrics::new());
+    let workers = args.get_or("workers", 2usize)?;
+    let queue = args.get_or("queue", 64usize)?;
+    let m = args.get_or("m", 4usize)?;
+    let cutoff = args.get_or("cutoff", 0.8)?;
+    let use_pjrt = args.flag("pjrt");
+    let dbc = db.clone();
+    let ex = Arc::new(EnginePool::new("exhaustive", workers, queue, metrics.clone(), move |_| {
+        if use_pjrt {
+            PjrtExhaustive::factory(dbc.clone(), m, cutoff)
+        } else {
+            NativeExhaustive::factory(dbc.clone(), m, cutoff)
+        }
+    }));
+    eprintln!("[molfpga] building HNSW graph…");
+    let graph = NativeHnsw::build_graph(
+        &db,
+        args.get_or("hnsw-m", 8usize)?,
+        args.get_or("ef-construction", 96usize)?,
+        7,
+    );
+    let ef = args.get_or("ef", 64usize)?;
+    let dbc2 = db.clone();
+    let ap = Arc::new(EnginePool::new("approximate", workers, queue, metrics.clone(), move |_| {
+        NativeHnsw::factory(dbc2.clone(), graph.clone(), ef)
+    }));
+    let policy = BatchPolicy {
+        max_batch: args.get_or("max-batch", 16usize)?,
+        max_wait: std::time::Duration::from_micros(args.get_or("max-wait-us", 2000u64)?),
+    };
+    Ok((Arc::new(Router::new(ex, ap, policy, metrics.clone())), metrics))
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let db = load_db(args)?;
+    let (router, metrics) = build_router(args, db)?;
+    let port = args.get_or("port", 7878u16)?;
+    let server = Server::new(router);
+    let m2 = metrics.clone();
+    std::thread::spawn(move || loop {
+        std::thread::sleep(std::time::Duration::from_secs(10));
+        eprintln!("[metrics] {}", m2.snapshot().report());
+    });
+    server.serve(&format!("127.0.0.1:{port}"), |a| eprintln!("[molfpga] bound {a}"))?;
+    Ok(())
+}
+
+fn cmd_bench_qps(args: &Args) -> Result<()> {
+    let db = load_db(args)?;
+    let nq = args.get_or("queries", 200usize)?;
+    let k = args.get_or("k", 10usize)?;
+    let (router, metrics) = build_router(args, db.clone())?;
+    let queries = db.sample_queries(nq, 99);
+    for mode in [QueryMode::Exhaustive, QueryMode::Approximate] {
+        let t0 = std::time::Instant::now();
+        let rxs: Vec<_> = queries
+            .iter()
+            .enumerate()
+            .map(|(i, q)| router.submit(Query::new(i as u64, q.clone(), k, mode)))
+            .collect();
+        let mut done = 0;
+        for rx in rxs {
+            if rx.recv_timeout(std::time::Duration::from_secs(120)).is_ok() {
+                done += 1;
+            }
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        println!("{mode:?}: {done}/{nq} queries in {dt:.2}s = {:.1} QPS", done as f64 / dt);
+    }
+    println!("{}", metrics.snapshot().report());
+    Ok(())
+}

@@ -1,0 +1,279 @@
+//! Artifact catalog: discover and describe `artifacts/*.hlo.txt`.
+//!
+//! Artifact names are the interchange contract with `python/compile/aot.py`
+//! — every shape the loader needs is encoded in the file name, so no JSON
+//! manifest parser is required on the rust side:
+//!
+//! ```text
+//! tanimoto_topk_m{m}_t{tile}_k{k_out}.hlo.txt
+//! tanimoto_scores_t{tile}_w{words}.hlo.txt
+//! rescore_topk_c{cand}_k{k_out}.hlo.txt
+//! bitcount_t{tile}_w{words}.hlo.txt
+//! fold_m{m}_t{tile}.hlo.txt
+//! ```
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// What an artifact computes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// Stage-1: folded tile scoring + fused top-k.
+    TanimotoTopk,
+    /// Scores only (ablation / HNSW batched TFC).
+    TanimotoScores,
+    /// Batched-query scores: Q queries per tile pass.
+    TanimotoBatch,
+    /// Stage-2 exact rescore + top-k.
+    RescoreTopk,
+    /// Per-row popcount (BitCnt).
+    Bitcount,
+    /// Sectional fold of a tile.
+    Fold,
+}
+
+/// Parsed description of one artifact file.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArtifactSpec {
+    pub kind: ArtifactKind,
+    pub path: PathBuf,
+    /// Folding level (1 for full-width artifacts).
+    pub m: usize,
+    /// Tile rows (or candidate rows for rescore).
+    pub tile: usize,
+    /// Fingerprint words per row *as the executable sees them*.
+    pub words: usize,
+    /// Top-k output size (0 when not applicable).
+    pub k_out: usize,
+    /// Query batch size (1 for single-query artifacts).
+    pub batch: usize,
+}
+
+impl ArtifactSpec {
+    /// Parse a file name (without directory). Returns `None` for files that
+    /// are not artifacts (manifest.txt, .stamp, …).
+    pub fn parse(path: &Path) -> Option<Self> {
+        let name = path.file_name()?.to_str()?;
+        let base = name.strip_suffix(".hlo.txt")?;
+        let fields: Vec<&str> = base.split('_').collect();
+        let num = |f: &str, prefix: char| -> Option<usize> {
+            f.strip_prefix(prefix).and_then(|s| s.parse().ok())
+        };
+        match fields.as_slice() {
+            ["tanimoto", "topk", m, t, k] => {
+                let m = num(m, 'm')?;
+                Some(Self {
+                    kind: ArtifactKind::TanimotoTopk,
+                    path: path.to_path_buf(),
+                    m,
+                    tile: num(t, 't')?,
+                    words: crate::fingerprint::FP_BITS / 32 / m,
+                    k_out: num(k, 'k')?,
+                    batch: 1,
+                })
+            }
+            ["tanimoto", "batch", b, t, w] => Some(Self {
+                kind: ArtifactKind::TanimotoBatch,
+                path: path.to_path_buf(),
+                m: crate::fingerprint::FP_BITS / 32 / num(w, 'w')?,
+                tile: num(t, 't')?,
+                words: num(w, 'w')?,
+                k_out: 0,
+                batch: num(b, 'b')?,
+            }),
+            ["tanimoto", "scores", t, w] => Some(Self {
+                kind: ArtifactKind::TanimotoScores,
+                path: path.to_path_buf(),
+                m: 1,
+                batch: 1,
+                tile: num(t, 't')?,
+                words: num(w, 'w')?,
+                k_out: 0,
+            }),
+            ["rescore", "topk", c, k] => Some(Self {
+                kind: ArtifactKind::RescoreTopk,
+                path: path.to_path_buf(),
+                m: 1,
+                batch: 1,
+                tile: num(c, 'c')?,
+                words: crate::fingerprint::FP_BITS / 32,
+                k_out: num(k, 'k')?,
+            }),
+            ["bitcount", t, w] => Some(Self {
+                kind: ArtifactKind::Bitcount,
+                path: path.to_path_buf(),
+                m: 1,
+                batch: 1,
+                tile: num(t, 't')?,
+                words: num(w, 'w')?,
+                k_out: 0,
+            }),
+            ["fold", m, t] => {
+                let m = num(m, 'm')?;
+                Some(Self {
+                    kind: ArtifactKind::Fold,
+                    path: path.to_path_buf(),
+                    m,
+                    tile: num(t, 't')?,
+                    words: crate::fingerprint::FP_BITS / 32,
+                    k_out: 0,
+                    batch: 1,
+                })
+            }
+            _ => None,
+        }
+    }
+}
+
+/// All artifacts found in a directory, keyed for the engine's lookups.
+#[derive(Debug, Default)]
+pub struct ArtifactSet {
+    pub specs: Vec<ArtifactSpec>,
+}
+
+impl ArtifactSet {
+    /// Scan a directory. Fails if it does not exist; an empty directory
+    /// yields an empty set (engines fall back to native scoring).
+    pub fn scan(dir: &Path) -> std::io::Result<Self> {
+        let mut specs = Vec::new();
+        for entry in std::fs::read_dir(dir)? {
+            let path = entry?.path();
+            if let Some(spec) = ArtifactSpec::parse(&path) {
+                specs.push(spec);
+            }
+        }
+        specs.sort_by(|a, b| a.path.cmp(&b.path));
+        Ok(Self { specs })
+    }
+
+    /// The default artifact directory (`$MOLFPGA_ARTIFACTS` or
+    /// `./artifacts`).
+    pub fn default_dir() -> PathBuf {
+        std::env::var("MOLFPGA_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| {
+            PathBuf::from("artifacts")
+        })
+    }
+
+    /// Stage-1 top-k artifact for folding level `m`.
+    pub fn tanimoto_topk(&self, m: usize) -> Option<&ArtifactSpec> {
+        self.specs
+            .iter()
+            .find(|s| s.kind == ArtifactKind::TanimotoTopk && s.m == m)
+    }
+
+    /// Scores-only artifact with the given tile size (exact match first,
+    /// else the smallest tile ≥ rows).
+    pub fn tanimoto_scores(&self, rows: usize) -> Option<&ArtifactSpec> {
+        let mut candidates: Vec<&ArtifactSpec> = self
+            .specs
+            .iter()
+            .filter(|s| s.kind == ArtifactKind::TanimotoScores && s.tile >= rows)
+            .collect();
+        candidates.sort_by_key(|s| s.tile);
+        candidates.first().copied()
+    }
+
+    /// Batched-query scores artifact for folding level m.
+    pub fn tanimoto_batch(&self, m: usize) -> Option<&ArtifactSpec> {
+        self.specs
+            .iter()
+            .find(|s| s.kind == ArtifactKind::TanimotoBatch && s.m == m)
+    }
+
+    pub fn rescore_topk(&self) -> Option<&ArtifactSpec> {
+        self.specs.iter().find(|s| s.kind == ArtifactKind::RescoreTopk)
+    }
+
+    pub fn bitcount(&self) -> Option<&ArtifactSpec> {
+        self.specs.iter().find(|s| s.kind == ArtifactKind::Bitcount)
+    }
+
+    pub fn fold(&self, m: usize) -> Option<&ArtifactSpec> {
+        self.specs.iter().find(|s| s.kind == ArtifactKind::Fold && s.m == m)
+    }
+
+    /// Folding levels with a stage-1 artifact, ascending.
+    pub fn folding_levels(&self) -> Vec<usize> {
+        let mut ms: Vec<usize> = self
+            .specs
+            .iter()
+            .filter(|s| s.kind == ArtifactKind::TanimotoTopk)
+            .map(|s| s.m)
+            .collect();
+        ms.sort_unstable();
+        ms.dedup();
+        ms
+    }
+
+    /// Group count by kind (diagnostics).
+    pub fn summary(&self) -> BTreeMap<&'static str, usize> {
+        let mut out = BTreeMap::new();
+        for s in &self.specs {
+            let k = match s.kind {
+                ArtifactKind::TanimotoTopk => "tanimoto_topk",
+                ArtifactKind::TanimotoScores => "tanimoto_scores",
+                ArtifactKind::TanimotoBatch => "tanimoto_batch",
+                ArtifactKind::RescoreTopk => "rescore_topk",
+                ArtifactKind::Bitcount => "bitcount",
+                ArtifactKind::Fold => "fold",
+            };
+            *out.entry(k).or_insert(0) += 1;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_all_artifact_name_forms() {
+        let p = |s: &str| ArtifactSpec::parse(Path::new(s));
+        let t = p("tanimoto_topk_m4_t8192_k240.hlo.txt").unwrap();
+        assert_eq!(t.kind, ArtifactKind::TanimotoTopk);
+        assert_eq!((t.m, t.tile, t.words, t.k_out), (4, 8192, 8, 240));
+
+        let s = p("tanimoto_scores_t128_w32.hlo.txt").unwrap();
+        assert_eq!(s.kind, ArtifactKind::TanimotoScores);
+        assert_eq!((s.tile, s.words), (128, 32));
+
+        let r = p("rescore_topk_c4096_k64.hlo.txt").unwrap();
+        assert_eq!(r.kind, ArtifactKind::RescoreTopk);
+        assert_eq!((r.tile, r.k_out), (4096, 64));
+
+        let b = p("bitcount_t8192_w32.hlo.txt").unwrap();
+        assert_eq!(b.kind, ArtifactKind::Bitcount);
+
+        let tb = p("tanimoto_batch_b8_t8192_w8.hlo.txt").unwrap();
+        assert_eq!(tb.kind, ArtifactKind::TanimotoBatch);
+        assert_eq!((tb.batch, tb.m, tb.words), (8, 4, 8));
+
+        let f = p("fold_m16_t8192.hlo.txt").unwrap();
+        assert_eq!(f.kind, ArtifactKind::Fold);
+        assert_eq!(f.m, 16);
+
+        assert!(p("manifest.txt").is_none());
+        assert!(p(".stamp").is_none());
+        assert!(p("unknown_thing.hlo.txt").is_none());
+    }
+
+    #[test]
+    fn scan_real_artifacts_if_present() {
+        let dir = ArtifactSet::default_dir();
+        if !dir.exists() {
+            return; // `make artifacts` not run in this checkout
+        }
+        let set = ArtifactSet::scan(&dir).unwrap();
+        assert!(set.tanimoto_topk(1).is_some(), "m=1 artifact expected");
+        assert_eq!(set.folding_levels(), vec![1, 2, 4, 8, 16, 32]);
+        assert!(set.rescore_topk().is_some());
+        assert!(set.bitcount().is_some());
+        assert!(set.fold(8).is_some());
+        // scores artifact selection picks the smallest adequate tile
+        let s = set.tanimoto_scores(100).unwrap();
+        assert_eq!(s.tile, 128);
+        let s2 = set.tanimoto_scores(129).unwrap();
+        assert_eq!(s2.tile, 8192);
+    }
+}

@@ -1,0 +1,112 @@
+//! PJRT client wrapper: one process-wide CPU client, HLO-text loading,
+//! compile-once executable cache.
+//!
+//! The interchange format is HLO *text* (see `python/compile/aot.py` and
+//! /opt/xla-example/README.md): `HloModuleProto::from_text_file` reassigns
+//! instruction ids, sidestepping the 64-bit-id protos jax ≥ 0.5 emits that
+//! xla_extension 0.5.1 rejects.
+
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+/// Wrapper owning the PJRT client and a path-keyed executable cache.
+pub struct PjRt {
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl PjRt {
+    /// Create the CPU client (the paper's FPGA is substituted by the
+    /// hardware model; computationally everything runs on the host CPU
+    /// through XLA).
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// Load + compile an HLO text file, memoized by path.
+    pub fn load(&self, path: &Path) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        let key = path.to_string_lossy().into_owned();
+        if let Some(exe) = self.cache.lock().unwrap().get(&key) {
+            return Ok(exe.clone());
+        }
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        let exe = std::sync::Arc::new(exe);
+        self.cache.lock().unwrap().insert(key, exe.clone());
+        Ok(exe)
+    }
+
+    /// Upload a u32 host slice as a device buffer.
+    pub fn upload_u32(&self, data: &[u32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .context("uploading u32 buffer")
+    }
+
+    /// Number of cached executables (diagnostics).
+    pub fn cached(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_ready() -> bool {
+        crate::runtime::ArtifactSet::default_dir().join("manifest.txt").exists()
+    }
+
+    #[test]
+    fn load_compiles_and_caches() {
+        if !artifacts_ready() {
+            return;
+        }
+        let rt = PjRt::cpu().unwrap();
+        let dir = crate::runtime::ArtifactSet::default_dir();
+        let path = dir.join("bitcount_t8192_w32.hlo.txt");
+        let _a = rt.load(&path).unwrap();
+        assert_eq!(rt.cached(), 1);
+        let _b = rt.load(&path).unwrap();
+        assert_eq!(rt.cached(), 1, "second load must hit the cache");
+    }
+
+    #[test]
+    fn bitcount_artifact_executes_correctly() {
+        if !artifacts_ready() {
+            return;
+        }
+        let rt = PjRt::cpu().unwrap();
+        let dir = crate::runtime::ArtifactSet::default_dir();
+        let exe = rt.load(&dir.join("bitcount_t8192_w32.hlo.txt")).unwrap();
+        let mut rows = vec![0u32; 8192 * 32];
+        rows[0] = 0xFFFF_FFFF; // row 0: 32 bits
+        rows[32] = 0x1; // row 1: 1 bit
+        rows[2 * 32 + 5] = 0b1011; // row 2: 3 bits
+        let lit = xla::Literal::vec1(&rows).reshape(&[8192, 32]).unwrap();
+        let out = exe.execute::<xla::Literal>(&[lit]).unwrap()[0][0]
+            .to_literal_sync()
+            .unwrap();
+        let counts = out.to_tuple1().unwrap().to_vec::<u32>().unwrap();
+        assert_eq!(counts[0], 32);
+        assert_eq!(counts[1], 1);
+        assert_eq!(counts[2], 3);
+        assert_eq!(counts[3], 0);
+    }
+}

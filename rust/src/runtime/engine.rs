@@ -1,0 +1,579 @@
+//! The PJRT-backed TFC query engine — the runtime face of the paper's
+//! FPGA computing engine (Fig. 4).
+//!
+//! Startup (once):
+//!   * the database is sorted by popcount (the BitBound order, Eq. 2),
+//!     folded at the engine's folding level, packed into fixed-size tiles,
+//!     and uploaded to device-resident buffers (the analogue of loading
+//!     the fingerprint database into HBM);
+//!   * the stage-1 artifact (`tanimoto_topk_m{m}`) is compiled once.
+//!
+//! Per query (hot path, rust-only):
+//!   1. query popcount ⇒ BitBound tile range (tiles fully outside the
+//!      Eq. 2 bounds are skipped; partially-overlapping tiles are scored
+//!      whole — extra rows can only *add* true similarities, never lose
+//!      one, so the Eq. 2 soundness guarantee is preserved);
+//!   2. per tile: upload the query (one 128-byte buffer), execute the
+//!      fused TFC+top-k executable against the resident tile buffers;
+//!   3. merge per-tile top-k into the global stage-1 candidate set
+//!      (module ③'s merge role);
+//!   4. stage-2: exact full-width rescore (native popcount by default —
+//!      candidates are ≤ k_r1 ≤ 3840 rows; the `rescore_topk` artifact is
+//!      kept for the ablation bench).
+
+use super::artifacts::ArtifactSet;
+use super::client::PjRt;
+use crate::fingerprint::{packed::FoldScheme, Database, Fingerprint, FP_BITS};
+use crate::index::folding::k_r1;
+use crate::topk::{Scored, TopKMerge};
+use anyhow::{anyhow, Context, Result};
+use std::sync::Arc;
+
+/// How stage 1 returns its per-tile candidates.
+///
+/// `Fused` keeps TFC + top-k inside one lowered HLO module — the paper's
+/// on-chip fusion (and the right choice on real accelerator hardware where
+/// the sort network is free silicon). `ScoresHostMerge` ships the raw tile
+/// scores back and runs the paper's module-(3) merge on the host.
+///
+/// Measured on this CPU-PJRT testbed (EXPERIMENTS.md section Perf), XLA's
+/// full 8192-element sort costs ~2x the whole scoring pass, so
+/// `ScoresHostMerge` is the default; the fused path is kept for the
+/// ablation bench (`bench_runtime`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage1Mode {
+    Fused,
+    ScoresHostMerge,
+}
+
+/// One device-resident database tile.
+struct DeviceTile {
+    db: xla::PjRtBuffer,
+    counts: xla::PjRtBuffer,
+    /// Popcount range (full-width counts) covered by this tile.
+    cnt_min: u32,
+    cnt_max: u32,
+    /// Rows actually occupied (last tile may be padded).
+    rows: usize,
+}
+
+/// The database uploaded to the device at one folding level, in popcount-
+/// sorted order.
+pub struct DeviceDb {
+    /// Sorted row order: device row -> database row.
+    order: Vec<u32>,
+    tiles: Vec<DeviceTile>,
+    tile_rows: usize,
+    m: usize,
+    words: usize,
+    n: usize,
+}
+
+impl DeviceDb {
+    /// Fold, sort, pack, and upload the database.
+    pub fn upload(rt: &PjRt, db: &Database, m: usize, tile_rows: usize) -> Result<Self> {
+        let words = FP_BITS / 32 / m;
+        let mut order: Vec<u32> = (0..db.len() as u32).collect();
+        order.sort_by_key(|&i| db.counts[i as usize]);
+
+        let mut tiles = Vec::new();
+        for chunk in order.chunks(tile_rows) {
+            let mut data = vec![0u32; tile_rows * words];
+            let mut counts = vec![0u32; tile_rows];
+            for (r, &row) in chunk.iter().enumerate() {
+                let folded = if m == 1 {
+                    db.fps[row as usize].clone()
+                } else {
+                    db.fps[row as usize].fold(m, FoldScheme::Sectional)
+                };
+                let w32 = folded.to_u32_words();
+                data[r * words..(r + 1) * words].copy_from_slice(&w32[..words]);
+                counts[r] = folded.count_ones();
+            }
+            let cnt_min = db.counts[chunk[0] as usize];
+            let cnt_max = db.counts[*chunk.last().unwrap() as usize];
+            tiles.push(DeviceTile {
+                db: rt.upload_u32(&data, &[tile_rows, words])?,
+                counts: rt.upload_u32(&counts, &[tile_rows, 1])?,
+                cnt_min,
+                cnt_max,
+                rows: chunk.len(),
+            });
+        }
+        Ok(Self { order, tiles, tile_rows, m, words, n: db.len() })
+    }
+
+    pub fn n_tiles(&self) -> usize {
+        self.tiles.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    /// Tiles whose popcount range intersects `[lo, hi]`.
+    fn tile_range(&self, lo: u32, hi: u32) -> Vec<usize> {
+        self.tiles
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| t.cnt_max >= lo && t.cnt_min <= hi)
+            .map(|(i, _)| i)
+            .collect()
+    }
+}
+
+/// PJRT-backed exhaustive query engine at one folding level.
+pub struct TfcEngine {
+    rt: Arc<PjRt>,
+    db: Arc<Database>,
+    device_db: DeviceDb,
+    stage1: Arc<xla::PjRtLoadedExecutable>,
+    /// Scores-only executable for the ScoresHostMerge path (same folded
+    /// width; present when the artifact set provides it).
+    stage1_scores: Option<Arc<xla::PjRtLoadedExecutable>>,
+    /// Batched-query executable (Q queries per tile pass) + its Q.
+    stage1_batch: Option<(Arc<xla::PjRtLoadedExecutable>, usize)>,
+    /// Stage-1 top-k output size baked into the fused artifact.
+    k1_artifact: usize,
+    /// Similarity cutoff Sc for BitBound tile pruning (0 = no pruning).
+    cutoff: f64,
+    mode: Stage1Mode,
+}
+
+/// Per-query engine telemetry.
+#[derive(Debug, Clone, Default)]
+pub struct EngineStats {
+    pub tiles_scored: usize,
+    pub tiles_skipped: usize,
+    pub rows_scored: usize,
+    pub rescored: usize,
+}
+
+impl TfcEngine {
+    /// Build an engine: fold+upload the DB, compile the stage-1 artifact.
+    pub fn new(
+        rt: Arc<PjRt>,
+        artifacts: &ArtifactSet,
+        db: Arc<Database>,
+        m: usize,
+        cutoff: f64,
+    ) -> Result<Self> {
+        let spec = artifacts
+            .tanimoto_topk(m)
+            .ok_or_else(|| anyhow!("no tanimoto_topk artifact for m={m}"))?;
+        let stage1 = rt.load(&spec.path).context("compiling stage-1 executable")?;
+        // Scores-only module at the engine's folded width (ScoresHostMerge
+        // stage-1 path — see Stage1Mode).
+        let stage1_scores = artifacts
+            .specs
+            .iter()
+            .find(|s| {
+                s.kind == super::artifacts::ArtifactKind::TanimotoScores
+                    && s.tile == spec.tile
+                    && s.words == spec.words
+            })
+            .and_then(|s| rt.load(&s.path).ok());
+        let stage1_batch = artifacts
+            .tanimoto_batch(m)
+            .filter(|s| s.tile == spec.tile)
+            .and_then(|s| rt.load(&s.path).ok().map(|e| (e, s.batch)));
+        let mode = if stage1_scores.is_some() {
+            Stage1Mode::ScoresHostMerge
+        } else {
+            Stage1Mode::Fused
+        };
+        let device_db = DeviceDb::upload(&rt, &db, m, spec.tile)?;
+        Ok(Self {
+            rt,
+            db,
+            device_db,
+            stage1,
+            stage1_scores,
+            stage1_batch,
+            k1_artifact: spec.k_out,
+            cutoff,
+            mode,
+        })
+    }
+
+    /// Force a stage-1 mode (ablation benches).
+    pub fn with_mode(mut self, mode: Stage1Mode) -> Self {
+        if mode == Stage1Mode::ScoresHostMerge && self.stage1_scores.is_none() {
+            return self; // fall back silently: no scores artifact at this m
+        }
+        self.mode = mode;
+        self
+    }
+
+    pub fn mode(&self) -> Stage1Mode {
+        self.mode
+    }
+
+    pub fn m(&self) -> usize {
+        self.device_db.m
+    }
+
+    pub fn cutoff(&self) -> f64 {
+        self.cutoff
+    }
+
+    pub fn database(&self) -> &Arc<Database> {
+        &self.db
+    }
+
+    /// Full 2-stage search. Returns (top-k best-first, stats).
+    pub fn search(&self, query: &Fingerprint, k: usize) -> Result<(Vec<Scored>, EngineStats)> {
+        let mut stats = EngineStats::default();
+        if self.device_db.is_empty() {
+            return Ok((Vec::new(), stats));
+        }
+        let qc_full = query.count_ones();
+        // BitBound bounds on full-width popcounts (Eq. 2).
+        let (lo, hi) = if self.cutoff > 0.0 {
+            (
+                (qc_full as f64 * self.cutoff).ceil() as u32,
+                (qc_full as f64 / self.cutoff).floor() as u32,
+            )
+        } else {
+            (0, u32::MAX)
+        };
+        let tiles = self.device_db.tile_range(lo, hi);
+        stats.tiles_skipped = self.device_db.n_tiles() - tiles.len();
+
+        // Query buffers at the engine's folding level.
+        let m = self.device_db.m;
+        let words = self.device_db.words;
+        let fq = if m == 1 { query.clone() } else { query.fold(m, FoldScheme::Sectional) };
+        let qwords = fq.to_u32_words();
+        let q_buf = self.rt.upload_u32(&qwords[..words], &[1, words])?;
+        let qc_buf = self.rt.upload_u32(&[fq.count_ones()], &[1, 1])?;
+
+        // Stage 1 per tile, merged into the global candidate set.
+        let k1_global = k_r1(k, m).min(self.device_db.len()).max(k);
+        let mut merged = TopKMerge::new(k1_global);
+        for ti in tiles {
+            let tile = &self.device_db.tiles[ti];
+            stats.tiles_scored += 1;
+            stats.rows_scored += tile.rows;
+            let base = ti * self.device_db.tile_rows;
+            match (self.mode, &self.stage1_scores) {
+                (Stage1Mode::ScoresHostMerge, Some(scores_exe)) => {
+                    // Split path: raw scores back, module-(3) merge on host.
+                    let result = scores_exe
+                        .execute_b(&[&q_buf, &tile.db, &qc_buf, &tile.counts])?[0][0]
+                        .to_literal_sync()?;
+                    let scores = result.to_tuple1()?.to_vec::<f32>()?;
+                    for (r, &v) in scores[..tile.rows].iter().enumerate() {
+                        let db_row = self.device_db.order[base + r];
+                        merged.push(Scored::new(v as f64, db_row as u64));
+                    }
+                }
+                _ => {
+                    // Fused path: on-device top-k.
+                    let result = self
+                        .stage1
+                        .execute_b(&[&q_buf, &tile.db, &qc_buf, &tile.counts])?[0][0]
+                        .to_literal_sync()?;
+                    let (vals, idx) = result.to_tuple2()?;
+                    let vals = vals.to_vec::<f32>()?;
+                    let idx = idx.to_vec::<i32>()?;
+                    for (v, i) in vals.iter().zip(&idx) {
+                        let device_row = base + *i as usize;
+                        if device_row >= base + tile.rows {
+                            continue; // padding row
+                        }
+                        let db_row = self.device_db.order[device_row];
+                        merged.push(Scored::new(*v as f64, db_row as u64));
+                    }
+                }
+            }
+        }
+
+        // Stage 2: exact rescore (native popcount — see module docs).
+        let candidates = merged.finish();
+        stats.rescored = candidates.len();
+        let mut out = TopKMerge::new(k);
+        for c in &candidates {
+            let row = c.id as usize;
+            let s = query.tanimoto_with_counts(
+                &self.db.fps[row],
+                qc_full,
+                self.db.counts[row],
+            );
+            out.push(Scored::new(s, c.id));
+        }
+        Ok((out.finish(), stats))
+    }
+
+    /// Stage-1 artifact's per-tile top-k size (diagnostics).
+    pub fn k1(&self) -> usize {
+        self.k1_artifact
+    }
+
+    /// Query-batch size of the batched artifact (None = unsupported).
+    pub fn batch_size(&self) -> Option<usize> {
+        self.stage1_batch.as_ref().map(|(_, b)| *b)
+    }
+
+    /// Batched 2-stage search: up to `batch_size()` queries share every
+    /// tile pass, amortizing dispatch overhead Q ways (GPUsimilarity's
+    /// batching insight; EXPERIMENTS.md section Perf). Tile pruning uses
+    /// the *union* of the queries' BitBound ranges — extra rows for one
+    /// query are harmless (they only add true similarities).
+    pub fn search_batch(
+        &self,
+        queries: &[Fingerprint],
+        k: usize,
+    ) -> Result<Vec<(Vec<Scored>, EngineStats)>> {
+        let Some((batch_exe, bq)) = &self.stage1_batch else {
+            // No batched artifact: fall back to per-query search.
+            return queries.iter().map(|q| self.search(q, k)).collect();
+        };
+        if self.device_db.is_empty() {
+            return Ok(queries.iter().map(|_| (Vec::new(), EngineStats::default())).collect());
+        }
+        let mut out = Vec::with_capacity(queries.len());
+        for chunk in queries.chunks(*bq) {
+            out.extend(self.search_batch_chunk(batch_exe, *bq, chunk, k)?);
+        }
+        Ok(out)
+    }
+
+    fn search_batch_chunk(
+        &self,
+        exe: &Arc<xla::PjRtLoadedExecutable>,
+        bq: usize,
+        chunk: &[Fingerprint],
+        k: usize,
+    ) -> Result<Vec<(Vec<Scored>, EngineStats)>> {
+        let m = self.device_db.m;
+        let words = self.device_db.words;
+        // Pack the (folded) query batch, padding with zero rows.
+        let mut qdata = vec![0u32; bq * words];
+        let mut qcounts = vec![0u32; bq];
+        let mut bounds = Vec::with_capacity(chunk.len());
+        for (r, q) in chunk.iter().enumerate() {
+            let fq = if m == 1 { q.clone() } else { q.fold(m, FoldScheme::Sectional) };
+            let w32 = fq.to_u32_words();
+            qdata[r * words..(r + 1) * words].copy_from_slice(&w32[..words]);
+            qcounts[r] = fq.count_ones();
+            let qc_full = q.count_ones();
+            bounds.push(if self.cutoff > 0.0 {
+                (
+                    (qc_full as f64 * self.cutoff).ceil() as u32,
+                    (qc_full as f64 / self.cutoff).floor() as u32,
+                )
+            } else {
+                (0, u32::MAX)
+            });
+        }
+        let (lo, hi) = bounds
+            .iter()
+            .fold((u32::MAX, 0u32), |(l, h), &(bl, bh)| (l.min(bl), h.max(bh)));
+        let q_buf = self.rt.upload_u32(&qdata, &[bq, words])?;
+        let qc_buf = self.rt.upload_u32(&qcounts, &[bq, 1])?;
+
+        let tiles = self.device_db.tile_range(lo, hi);
+        let mut stats = EngineStats::default();
+        stats.tiles_skipped = self.device_db.n_tiles() - tiles.len();
+        let k1_global = k_r1(k, m).min(self.device_db.len()).max(k);
+        let mut merged: Vec<TopKMerge> =
+            chunk.iter().map(|_| TopKMerge::new(k1_global)).collect();
+        for ti in tiles {
+            let tile = &self.device_db.tiles[ti];
+            stats.tiles_scored += 1;
+            stats.rows_scored += tile.rows;
+            let result = exe
+                .execute_b(&[&q_buf, &tile.db, &qc_buf, &tile.counts])?[0][0]
+                .to_literal_sync()?;
+            let scores = result.to_tuple1()?.to_vec::<f32>()?; // (bq * tile_rows)
+            let base = ti * self.device_db.tile_rows;
+            let t = self.device_db.tile_rows;
+            for (qi, tk) in merged.iter_mut().enumerate() {
+                let row_scores = &scores[qi * t..qi * t + tile.rows];
+                for (r, &v) in row_scores.iter().enumerate() {
+                    let db_row = self.device_db.order[base + r];
+                    tk.push(Scored::new(v as f64, db_row as u64));
+                }
+            }
+        }
+        // Stage 2 per query (native exact rescore).
+        let mut out = Vec::with_capacity(chunk.len());
+        for (qi, tk) in merged.into_iter().enumerate() {
+            let candidates = tk.finish();
+            let qc_full = chunk[qi].count_ones();
+            let mut final_tk = TopKMerge::new(k);
+            for c in &candidates {
+                let row = c.id as usize;
+                let sc = chunk[qi].tanimoto_with_counts(
+                    &self.db.fps[row],
+                    qc_full,
+                    self.db.counts[row],
+                );
+                final_tk.push(Scored::new(sc, c.id));
+            }
+            let mut st = stats.clone();
+            st.rescored = candidates.len();
+            out.push((final_tk.finish(), st));
+        }
+        Ok(out)
+    }
+}
+
+/// Batched TFC for HNSW: score a query against up to `tile` neighbor
+/// fingerprints through the scores-only artifact (the paper's single-TFC
+/// distance engine of Fig. 5, batched per hop).
+pub struct BatchTfc {
+    rt: Arc<PjRt>,
+    exe: Arc<xla::PjRtLoadedExecutable>,
+    tile: usize,
+    words: usize,
+}
+
+impl BatchTfc {
+    pub fn new(rt: Arc<PjRt>, artifacts: &ArtifactSet, batch: usize) -> Result<Self> {
+        let spec = artifacts
+            .tanimoto_scores(batch)
+            .ok_or_else(|| anyhow!("no tanimoto_scores artifact for batch {batch}"))?;
+        let exe = rt.load(&spec.path)?;
+        Ok(Self { rt, exe, tile: spec.tile, words: spec.words })
+    }
+
+    pub fn batch(&self) -> usize {
+        self.tile
+    }
+
+    /// Score `query` against `fps` (≤ batch) rows; returns scores aligned
+    /// with the input order.
+    pub fn scores(&self, query: &Fingerprint, fps: &[(&Fingerprint, u32)]) -> Result<Vec<f64>> {
+        assert!(fps.len() <= self.tile, "batch overflow: {} > {}", fps.len(), self.tile);
+        let words = self.words;
+        let mut data = vec![0u32; self.tile * words];
+        let mut counts = vec![0u32; self.tile];
+        for (r, (fp, c)) in fps.iter().enumerate() {
+            let w32 = fp.to_u32_words();
+            data[r * words..(r + 1) * words].copy_from_slice(&w32[..words]);
+            counts[r] = *c;
+        }
+        let qwords = query.to_u32_words();
+        let q = self.rt.upload_u32(&qwords[..words], &[1, words])?;
+        let qc = self.rt.upload_u32(&[query.count_ones()], &[1, 1])?;
+        let db = self.rt.upload_u32(&data, &[self.tile, words])?;
+        let dc = self.rt.upload_u32(&counts, &[self.tile, 1])?;
+        let out = self.exe.execute_b(&[&q, &db, &qc, &dc])?[0][0].to_literal_sync()?;
+        let scores = out.to_tuple1()?.to_vec::<f32>()?;
+        Ok(scores[..fps.len()].iter().map(|&s| s as f64).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fingerprint::ChemblModel;
+    use crate::index::{BruteForceIndex, SearchIndex};
+
+    fn artifacts_ready() -> bool {
+        ArtifactSet::default_dir().join("manifest.txt").exists()
+    }
+
+    fn setup(n: usize, m: usize, cutoff: f64) -> Option<(Arc<Database>, TfcEngine)> {
+        if !artifacts_ready() {
+            return None;
+        }
+        let rt = Arc::new(PjRt::cpu().unwrap());
+        let artifacts = ArtifactSet::scan(&ArtifactSet::default_dir()).unwrap();
+        let db = Arc::new(Database::synthesize(n, &ChemblModel::default(), 77));
+        let engine = TfcEngine::new(rt, &artifacts, db.clone(), m, cutoff).unwrap();
+        Some((db, engine))
+    }
+
+    #[test]
+    fn engine_m1_matches_brute_force() {
+        let Some((db, engine)) = setup(20_000, 1, 0.0) else { return };
+        let brute = BruteForceIndex::new(db.clone());
+        for q in db.sample_queries(3, 5) {
+            let (got, stats) = engine.search(&q, 10).unwrap();
+            let want = brute.search(&q, 10);
+            assert_eq!(
+                got.iter().map(|s| s.id).collect::<Vec<_>>(),
+                want.iter().map(|s| s.id).collect::<Vec<_>>(),
+                "PJRT engine must equal brute force at m=1, cutoff=0"
+            );
+            for (a, b) in got.iter().zip(&want) {
+                assert!((a.score - b.score).abs() < 1e-6);
+            }
+            assert_eq!(stats.tiles_scored, engine.device_db.n_tiles());
+        }
+    }
+
+    #[test]
+    fn engine_folded_matches_native_two_stage_recall() {
+        let Some((db, engine)) = setup(20_000, 4, 0.0) else { return };
+        let brute = BruteForceIndex::new(db.clone());
+        let mut recs = Vec::new();
+        for q in db.sample_queries(5, 9) {
+            let (got, _) = engine.search(&q, 20).unwrap();
+            let truth = brute.search(&q, 20);
+            recs.push(crate::index::recall_at_k(&got, &truth, 20));
+        }
+        let mean = recs.iter().sum::<f64>() / recs.len() as f64;
+        assert!(mean > 0.9, "m=4 PJRT 2-stage recall {mean:.3}");
+    }
+
+    #[test]
+    fn engine_cutoff_skips_tiles() {
+        let Some((db, engine)) = setup(30_000, 1, 0.8) else { return };
+        let q = db.sample_queries(1, 3)[0].clone();
+        let (_, stats) = engine.search(&q, 10).unwrap();
+        assert!(
+            stats.tiles_skipped > 0,
+            "Sc=0.8 should skip tiles: {stats:?} (n_tiles={})",
+            engine.device_db.n_tiles()
+        );
+        assert!(stats.tiles_scored > 0);
+    }
+
+    #[test]
+    fn search_batch_matches_single_query_search() {
+        let Some((db, engine)) = setup(20_000, 4, 0.8) else { return };
+        assert_eq!(engine.batch_size(), Some(8));
+        let queries = db.sample_queries(11, 21); // exercises a ragged chunk
+        let batched = engine.search_batch(&queries, 10).unwrap();
+        assert_eq!(batched.len(), 11);
+        for (q, (hits, _stats)) in queries.iter().zip(&batched) {
+            let (single, _) = engine.search(q, 10).unwrap();
+            assert_eq!(
+                hits.iter().map(|s| s.id).collect::<Vec<_>>(),
+                single.iter().map(|s| s.id).collect::<Vec<_>>(),
+                "batched and single-query results must agree"
+            );
+        }
+    }
+
+    #[test]
+    fn batch_tfc_matches_native_scores() {
+        if !artifacts_ready() {
+            return;
+        }
+        let rt = Arc::new(PjRt::cpu().unwrap());
+        let artifacts = ArtifactSet::scan(&ArtifactSet::default_dir()).unwrap();
+        let tfc = BatchTfc::new(rt, &artifacts, 128).unwrap();
+        let db = Database::synthesize(200, &ChemblModel::default(), 13);
+        let q = db.sample_queries(1, 1)[0].clone();
+        let fps: Vec<(&Fingerprint, u32)> =
+            (0..100).map(|i| (&db.fps[i], db.counts[i])).collect();
+        let got = tfc.scores(&q, &fps).unwrap();
+        for (i, s) in got.iter().enumerate() {
+            let want = q.tanimoto(&db.fps[i]);
+            assert!((s - want).abs() < 1e-6, "row {i}: {s} vs {want}");
+        }
+    }
+}

@@ -1,0 +1,23 @@
+//! PJRT runtime — Layer 3's bridge to the AOT-compiled Layer-2 graphs.
+//!
+//! `make artifacts` (Python, build time) lowers every L2 graph to
+//! `artifacts/*.hlo.txt`; this module loads the text, compiles each module
+//! once on the PJRT CPU client, keeps the database tiles device-resident,
+//! and exposes typed execution entry points to the engines. Python never
+//! runs on the request path — after startup, queries touch only this
+//! module and the in-process XLA executables.
+//!
+//! * [`artifacts`] — catalog of artifact files; names encode shapes
+//!   (`tanimoto_topk_m4_t8192_k240.hlo.txt` ⇒ folding level 4, 8192-row
+//!   tiles, top-240 output).
+//! * [`client`] — thin wrapper over `xla::PjRtClient` + HLO-text loading.
+//! * [`engine`] — the TFC query engine: tile scoring, rescoring, device-
+//!   resident tile cache, result rebasing.
+
+pub mod artifacts;
+pub mod client;
+pub mod engine;
+
+pub use artifacts::{ArtifactKind, ArtifactSet, ArtifactSpec};
+pub use client::PjRt;
+pub use engine::{DeviceDb, TfcEngine};

@@ -1,0 +1,206 @@
+//! Whole-query simulation: k kernels × HBM arbiter × staged pipelines.
+//!
+//! Drives one query through a multi-kernel engine cycle by cycle and
+//! reports cycles, stalls, and the implied QPS. Used to cross-validate
+//! the analytical [`crate::hwmodel::qps`] expressions (tests assert ≤ 5 %
+//! disagreement in the regimes the paper operates in) and to reproduce
+//! the §IV-A "on-the-fly vs sequential" comparison.
+
+use super::hbm::HbmModel;
+use super::pipeline::{QueryPipeline, StageLatency};
+use crate::util::prng::Pcg64;
+
+/// Simulation configuration for one query.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    /// Database rows scanned (after any BitBound pruning).
+    pub rows: usize,
+    /// Kernel replicas sharing the HBM budget.
+    pub kernels: usize,
+    /// Bytes per (possibly folded) row.
+    pub bytes_per_row: usize,
+    /// Top-k size.
+    pub k: usize,
+    /// Usable HBM bytes/s.
+    pub hbm_budget: f64,
+    /// Clock Hz.
+    pub clock_hz: f64,
+}
+
+impl SimConfig {
+    /// The paper's brute-force operating point on an n-row database.
+    pub fn brute_force(rows: usize) -> Self {
+        Self {
+            rows,
+            kernels: 7,
+            bytes_per_row: 128,
+            k: 20,
+            hbm_budget: 410e9,
+            clock_hz: 450e6,
+        }
+    }
+}
+
+/// Result of a simulated query.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    pub cycles: u64,
+    pub input_stall_cycles: u64,
+    /// Wall time for the query at the configured clock.
+    pub seconds: f64,
+    /// Implied steady-state QPS (1/seconds).
+    pub qps: f64,
+    /// Rows processed per cycle, aggregate (throughput efficiency).
+    pub rows_per_cycle: f64,
+}
+
+/// Simulate one query: `rows` are split round-robin across the kernels;
+/// every cycle the HBM arbiter grants some subset of kernels one row.
+pub fn simulate_query(cfg: &SimConfig) -> SimReport {
+    assert!(cfg.kernels >= 1);
+    let mut hbm = HbmModel::new(cfg.hbm_budget, cfg.clock_hz, cfg.bytes_per_row, cfg.kernels);
+    let shard = cfg.rows / cfg.kernels;
+    let mut remaining: Vec<usize> = (0..cfg.kernels)
+        .map(|i| shard + usize::from(i < cfg.rows % cfg.kernels))
+        .collect();
+    let mut pipes: Vec<QueryPipeline> = (0..cfg.kernels)
+        .map(|_| QueryPipeline::with_latency(cfg.k, StageLatency::for_k(cfg.k)))
+        .collect();
+    let mut g = Pcg64::new(42);
+    let mut cycles: u64 = 0;
+    let mut stalls: u64 = 0;
+    let mut next_id: u64 = 0;
+    // Stream phase.
+    while remaining.iter().any(|&r| r > 0) {
+        cycles += 1;
+        let grants = hbm.grant();
+        let mut granted = 0;
+        for (ki, pipe) in pipes.iter_mut().enumerate() {
+            if remaining[ki] > 0 && granted < grants {
+                remaining[ki] -= 1;
+                granted += 1;
+                pipe.cycle(Some((g.next_f64(), next_id)));
+                next_id += 1;
+            } else if remaining[ki] > 0 {
+                stalls += 1;
+                pipe.cycle(None);
+            }
+        }
+    }
+    // Drain phase: the deepest pipeline finishes last.
+    let drain_depth = StageLatency::for_k(cfg.k).depth() as u64;
+    let total = cycles + drain_depth;
+    let seconds = total as f64 / cfg.clock_hz;
+    SimReport {
+        cycles: total,
+        input_stall_cycles: stalls,
+        seconds,
+        qps: 1.0 / seconds,
+        rows_per_cycle: cfg.rows as f64 / total as f64,
+    }
+}
+
+/// The sequential (non-pipelined) alternative of [29]: communication then
+/// computation, no overlap — the §IV-A motivating comparison. Costs
+/// fetch-cycles + compute-cycles instead of max(...).
+pub fn simulate_sequential(cfg: &SimConfig) -> SimReport {
+    let hbm = HbmModel::new(cfg.hbm_budget, cfg.clock_hz, cfg.bytes_per_row, cfg.kernels);
+    let shard = (cfg.rows as f64 / cfg.kernels as f64).ceil();
+    let fetch_cycles = shard / hbm.per_kernel_rate().min(1.0);
+    let compute_cycles = shard; // II=1 compute after the data has landed
+    let total = (fetch_cycles + compute_cycles) as u64 + StageLatency::for_k(cfg.k).depth() as u64;
+    let seconds = total as f64 / cfg.clock_hz;
+    SimReport {
+        cycles: total,
+        input_stall_cycles: 0,
+        seconds,
+        qps: 1.0 / seconds,
+        rows_per_cycle: cfg.rows as f64 / total as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hwmodel::qps::{BruteForceDesign, FoldingDesign, PIPELINE_EFFICIENCY};
+
+    #[test]
+    fn sim_matches_analytical_brute_force() {
+        // The cycle sim and the closed form must agree within 5 % at the
+        // paper's operating point (modulo the 0.988 efficiency factor the
+        // closed form carries for cross-query bubbles the single-query sim
+        // does not model).
+        let n = 1_900_000;
+        let sim = simulate_query(&SimConfig::brute_force(n));
+        let analytic = BruteForceDesign::default().qps(n) / PIPELINE_EFFICIENCY;
+        let err = (sim.qps - analytic).abs() / analytic;
+        assert!(err < 0.05, "sim {:.0} vs analytic {analytic:.0} (err {err:.3})", sim.qps);
+    }
+
+    #[test]
+    fn sim_matches_analytical_folding() {
+        // m=8, Sc=0.8: 56 kernels, 16-byte rows, kept fraction 0.52.
+        let rows = (0.52 * 1_900_000.0) as usize;
+        let cfg = SimConfig {
+            rows,
+            kernels: 56,
+            bytes_per_row: 16,
+            k: 640,
+            hbm_budget: 410e9,
+            clock_hz: 450e6,
+        };
+        let sim = simulate_query(&cfg);
+        let analytic = FoldingDesign::new(8, 20, 0.52).qps(1_900_000) / PIPELINE_EFFICIENCY;
+        let err = (sim.qps - analytic).abs() / analytic;
+        assert!(err < 0.06, "sim {:.0} vs analytic {analytic:.0} (err {err:.3})", sim.qps);
+    }
+
+    #[test]
+    fn seven_kernels_no_stalls_eight_stall() {
+        let mut cfg = SimConfig::brute_force(700_000);
+        let r7 = simulate_query(&cfg);
+        assert_eq!(r7.input_stall_cycles, 0, "7 kernels fit the 410 GB/s budget");
+        cfg.kernels = 9;
+        let r9 = simulate_query(&cfg);
+        assert!(r9.input_stall_cycles > 0, "9 kernels must stall on bandwidth");
+        // And the stalls erase most of the gain: QPS improves sublinearly.
+        assert!(
+            r9.qps < r7.qps * 9.0 / 7.0 * 0.95,
+            "bandwidth wall: 9-kernel {:.0} vs 7-kernel {:.0}",
+            r9.qps,
+            r7.qps
+        );
+    }
+
+    #[test]
+    fn on_the_fly_beats_sequential_2x() {
+        // §IV-A: the pipelined design vs the sequential process of [29].
+        let cfg = SimConfig::brute_force(1_000_000);
+        let pipelined = simulate_query(&cfg);
+        let sequential = simulate_sequential(&cfg);
+        let speedup = pipelined.qps / sequential.qps;
+        assert!(
+            (1.8..2.2).contains(&speedup),
+            "on-the-fly speedup over sequential should be ≈2×, got {speedup:.2}"
+        );
+    }
+
+    #[test]
+    fn folding_shortens_query() {
+        let full = simulate_query(&SimConfig::brute_force(1_900_000));
+        let folded = simulate_query(&SimConfig {
+            rows: 1_900_000,
+            kernels: 56,
+            bytes_per_row: 16,
+            k: 640,
+            hbm_budget: 410e9,
+            clock_hz: 450e6,
+        });
+        assert!(
+            folded.qps > full.qps * 6.0,
+            "m=8 with 56 kernels ≈ 8× faster: {:.0} vs {:.0}",
+            folded.qps,
+            full.qps
+        );
+    }
+}

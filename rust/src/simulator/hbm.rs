@@ -1,0 +1,98 @@
+//! HBM bandwidth/arbitration model.
+//!
+//! The U280's HBM delivers up to 460 GB/s across 32 pseudo-channels; the
+//! paper budgets 410 GB/s for linear access. The model answers one
+//! question per cycle, per kernel: "does my next burst arrive this cycle?"
+//! Kernels consume fixed-size rows (bytes_per_row) at up to one row per
+//! cycle; when the aggregate demand exceeds the budget, the arbiter grants
+//! rows round-robin, creating exactly the stalls the real engines see past
+//! the bandwidth wall (Fig. 7's plateau).
+
+/// Shared-bandwidth arbiter for `kernels` identical streaming consumers.
+#[derive(Debug, Clone)]
+pub struct HbmModel {
+    /// Usable bytes per second.
+    pub budget_bytes_per_s: f64,
+    /// Kernel clock (Hz).
+    pub clock_hz: f64,
+    /// Bytes one kernel consumes per row.
+    pub bytes_per_row: usize,
+    /// Number of consumers.
+    pub kernels: usize,
+    /// Fractional rows-per-cycle credit accumulator (deterministic DDA).
+    credit: f64,
+}
+
+impl HbmModel {
+    pub fn new(budget_bytes_per_s: f64, clock_hz: f64, bytes_per_row: usize, kernels: usize) -> Self {
+        Self { budget_bytes_per_s, clock_hz, bytes_per_row, kernels, credit: 0.0 }
+    }
+
+    /// Rows the memory system can deliver per cycle, aggregate.
+    pub fn rows_per_cycle(&self) -> f64 {
+        self.budget_bytes_per_s / self.clock_hz / self.bytes_per_row as f64
+    }
+
+    /// Whether the aggregate demand (kernels × 1 row/cycle) is satisfiable.
+    pub fn bandwidth_bound(&self) -> bool {
+        (self.kernels as f64) > self.rows_per_cycle()
+    }
+
+    /// Step one cycle: returns how many of the `kernels` get a row this
+    /// cycle (the rest stall). Deterministic integer DDA on the credit.
+    pub fn grant(&mut self) -> usize {
+        self.credit += self.rows_per_cycle();
+        let grants = self.credit.floor().min(self.kernels as f64);
+        self.credit -= grants;
+        grants as usize
+    }
+
+    /// Effective per-kernel throughput in rows/cycle (analytical).
+    pub fn per_kernel_rate(&self) -> f64 {
+        (self.rows_per_cycle() / self.kernels as f64).min(1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_budget_seven_full_width_kernels() {
+        // 410 GB/s / (450 MHz × 128 B) = 7.11 rows/cycle aggregate.
+        let h = HbmModel::new(410e9, 450e6, 128, 7);
+        assert!((h.rows_per_cycle() - 7.11).abs() < 0.01);
+        assert!(!h.bandwidth_bound(), "7 kernels fit");
+        let h8 = HbmModel::new(410e9, 450e6, 128, 8);
+        assert!(h8.bandwidth_bound(), "8 kernels exceed the budget");
+    }
+
+    #[test]
+    fn grant_long_run_average_matches_budget() {
+        let mut h = HbmModel::new(410e9, 450e6, 128, 16); // oversubscribed
+        let cycles = 100_000;
+        let total: usize = (0..cycles).map(|_| h.grant()).sum();
+        let avg = total as f64 / cycles as f64;
+        assert!(
+            (avg - h.rows_per_cycle()).abs() < 0.01,
+            "long-run grants {avg:.3} vs budget {:.3}",
+            h.rows_per_cycle()
+        );
+    }
+
+    #[test]
+    fn undersubscribed_grants_everyone() {
+        let mut h = HbmModel::new(410e9, 450e6, 16, 4); // folded m=8, 4 kernels
+        for _ in 0..1000 {
+            assert_eq!(h.grant(), 4, "all kernels served every cycle");
+        }
+    }
+
+    #[test]
+    fn folding_raises_per_kernel_rate() {
+        let full = HbmModel::new(410e9, 450e6, 128, 56);
+        let folded = HbmModel::new(410e9, 450e6, 16, 56);
+        assert!(full.per_kernel_rate() < 0.2);
+        assert!((folded.per_kernel_rate() - 1.0).abs() < 1e-9, "m=8 sustains II=1 at 56 kernels");
+    }
+}

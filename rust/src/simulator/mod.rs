@@ -1,0 +1,28 @@
+//! Cycle-level simulator of the FPGA query engine (Fig. 4's computing
+//! engine) — the dynamic half of the hardware substitution.
+//!
+//! Where [`crate::hwmodel`] evaluates closed-form throughput expressions,
+//! this module *steps the pipeline cycle by cycle*: fingerprints stream
+//! from an HBM channel model through the Fetch → BitCnt → TFC → Top-K
+//! cascade, each stage with initiation interval 1 and a configurable
+//! latency. It exists to validate, dynamically, the claims the analytical
+//! model takes as inputs:
+//!
+//! * the cascade sustains II = 1 end-to-end (the "on-the-fly" claim),
+//! * total latency for an N-row stream is N + pipeline depth
+//!   (§IV-A: "latency of N + log2K"),
+//! * the sequential (non-pipelined) alternative of [29] costs ≈ 2× —
+//!   the motivating comparison in §IV-A,
+//! * k kernels sharing the HBM budget scale linearly until the bandwidth
+//!   wall (Fig. 7's kernel-count assumption).
+//!
+//! Modules: [`pipeline`] (the staged engine), [`hbm`] (bandwidth/latency
+//! model), [`engine`] (whole-query simulation + QPS cross-check).
+
+pub mod engine;
+pub mod hbm;
+pub mod pipeline;
+
+pub use engine::{simulate_query, SimConfig, SimReport};
+pub use hbm::HbmModel;
+pub use pipeline::{QueryPipeline, StageLatency};

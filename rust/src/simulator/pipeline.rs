@@ -1,0 +1,193 @@
+//! The staged query pipeline, stepped one clock at a time.
+//!
+//! Structure (paper Fig. 4, "Computing Engine"):
+//!
+//! ```text
+//!   HBM fetch ─▶ BitCnt ① ─▶ TFC ② ─▶ Top-K merge ③
+//!      (II=1)     (lat 2)    (lat 4)     (lat log2K, II=1)
+//! ```
+//!
+//! Every stage accepts one element per cycle (II = 1); latencies model the
+//! register stages inside each module. The pipeline is work-conserving:
+//! once the stream starts, an element leaves the cascade every cycle, so
+//! an N-element stream completes in N + depth cycles — the paper's
+//! `N + log2K` with the BitCnt/TFC register stages added.
+
+use crate::topk::{Scored, TopKMerge};
+
+/// Per-stage register latencies (cycles).
+#[derive(Debug, Clone, Copy)]
+pub struct StageLatency {
+    pub fetch: usize,
+    pub bitcnt: usize,
+    pub tfc: usize,
+    /// Comparator stages in the top-k merge (≈ log2 k + 1).
+    pub topk: usize,
+}
+
+impl StageLatency {
+    /// Default latencies for a k-sized merge (paper's pipeline depth).
+    pub fn for_k(k: usize) -> Self {
+        Self {
+            fetch: 2,
+            bitcnt: 2,
+            tfc: 4,
+            topk: (k.max(2) as f64).log2().ceil() as usize + 1,
+        }
+    }
+
+    pub fn depth(&self) -> usize {
+        self.fetch + self.bitcnt + self.tfc + self.topk
+    }
+}
+
+/// One simulated element in flight.
+#[derive(Debug, Clone, Copy)]
+struct InFlight {
+    score: f64,
+    id: u64,
+    /// Cycle at which it exits the cascade into the top-k result.
+    exit_cycle: u64,
+}
+
+/// Cycle-stepped model of one query engine processing one stream.
+#[derive(Debug)]
+pub struct QueryPipeline {
+    latency: StageLatency,
+    clock: u64,
+    inflight: std::collections::VecDeque<InFlight>,
+    topk: TopKMerge,
+    /// Elements accepted (stream length so far).
+    pub accepted: u64,
+    /// Cycles in which the input port was idle (stall detector).
+    pub input_idle_cycles: u64,
+    /// True while the engine still has elements in flight.
+    draining: bool,
+}
+
+impl QueryPipeline {
+    pub fn new(k: usize) -> Self {
+        Self::with_latency(k, StageLatency::for_k(k))
+    }
+
+    pub fn with_latency(k: usize, latency: StageLatency) -> Self {
+        Self {
+            latency,
+            clock: 0,
+            inflight: std::collections::VecDeque::new(),
+            topk: TopKMerge::new(k),
+            accepted: 0,
+            input_idle_cycles: 0,
+            draining: false,
+        }
+    }
+
+    pub fn clock(&self) -> u64 {
+        self.clock
+    }
+
+    /// One clock edge. `input`: the fingerprint score arriving this cycle
+    /// (the TFC score is a pure function of the fetched row, so the sim
+    /// carries the final score through the stages). `None` = input stall.
+    pub fn cycle(&mut self, input: Option<(f64, u64)>) {
+        self.clock += 1;
+        match input {
+            Some((score, id)) => {
+                assert!(!self.draining, "input after drain started");
+                self.accepted += 1;
+                self.inflight.push_back(InFlight {
+                    score,
+                    id,
+                    exit_cycle: self.clock + self.latency.depth() as u64,
+                });
+            }
+            None if !self.draining => self.input_idle_cycles += 1,
+            None => {}
+        }
+        // Retire everything whose exit cycle has arrived (at II=1 at most
+        // one element per cycle can exit; the VecDeque is ordered).
+        while let Some(f) = self.inflight.front() {
+            if f.exit_cycle <= self.clock {
+                let f = self.inflight.pop_front().unwrap();
+                self.topk.push(Scored::new(f.score, f.id));
+            } else {
+                break;
+            }
+        }
+    }
+
+    /// Signal end of stream and run until empty; returns (results, cycles).
+    pub fn drain(mut self) -> (Vec<Scored>, u64) {
+        self.draining = true;
+        while !self.inflight.is_empty() {
+            self.cycle(None);
+        }
+        (self.topk.finish(), self.clock)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topk::topk_reference;
+    use crate::util::prng::Pcg64;
+
+    #[test]
+    fn ii_one_full_rate_stream() {
+        // N elements at one per cycle: accepted == cycles during input.
+        let n = 10_000u64;
+        let mut g = Pcg64::new(1);
+        let mut p = QueryPipeline::new(20);
+        for i in 0..n {
+            p.cycle(Some((g.next_f64(), i)));
+        }
+        assert_eq!(p.accepted, n);
+        assert_eq!(p.clock(), n, "II=1: the input port accepted every cycle");
+        assert_eq!(p.input_idle_cycles, 0);
+    }
+
+    #[test]
+    fn latency_is_n_plus_depth() {
+        let n = 4096usize;
+        let k = 16;
+        let lat = StageLatency::for_k(k);
+        let mut g = Pcg64::new(2);
+        let mut p = QueryPipeline::with_latency(k, lat);
+        for i in 0..n {
+            p.cycle(Some((g.next_f64(), i as u64)));
+        }
+        let (_, cycles) = p.drain();
+        // Paper §IV-A: latency N + log2 K (plus the fixed fetch/TFC
+        // register stages our model adds explicitly).
+        assert_eq!(cycles, (n + lat.depth()) as u64);
+    }
+
+    #[test]
+    fn results_match_reference_topk() {
+        let mut g = Pcg64::new(3);
+        let items: Vec<(f64, u64)> = (0..2000).map(|i| (g.next_f64(), i as u64)).collect();
+        let mut p = QueryPipeline::new(24);
+        for &(s, i) in &items {
+            p.cycle(Some((s, i)));
+        }
+        let (got, _) = p.drain();
+        let all: Vec<_> = items.iter().map(|&(s, i)| crate::topk::Scored::new(s, i)).collect();
+        let want = topk_reference(&all, 24);
+        assert_eq!(
+            got.iter().map(|s| s.id).collect::<Vec<_>>(),
+            want.iter().map(|s| s.id).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn stalls_are_counted_not_fatal() {
+        let mut p = QueryPipeline::new(8);
+        p.cycle(Some((0.5, 0)));
+        p.cycle(None); // bandwidth stall
+        p.cycle(Some((0.7, 1)));
+        assert_eq!(p.input_idle_cycles, 1);
+        let (got, cycles) = p.drain();
+        assert_eq!(got.len(), 2);
+        assert!(cycles >= 3);
+    }
+}

@@ -1,0 +1,52 @@
+//! Top-K data structures — software models of the paper's two hardware
+//! sorting structures:
+//!
+//! * [`merge`] — the **top-k merge sort** (module ③, exhaustive engine):
+//!   a binary tree of FIFO+comparator stages; `log2K+1` comparators,
+//!   `log2K + 2K` FIFO capacity, initiation interval 1, latency
+//!   `N + log2K`. The software model is stream-driven so the cycle-level
+//!   simulator can validate the II/latency claims, plus a fast batch path
+//!   used by the actual query engines.
+//! * [`pq`] — the **register-array priority queue** (module ④, HNSW
+//!   engine): even/odd compare-and-swap network, II=1 enqueue/dequeue,
+//!   comparator count linear in capacity.
+
+pub mod merge;
+pub mod pq;
+
+pub use merge::TopKMerge;
+pub use pq::RegisterPq;
+
+/// A scored item flowing through the sorters: `(score, id)`.
+/// Ordering: higher score first; ties break by lower id (stable, matching
+/// the brute-force oracle).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Scored {
+    pub score: f64,
+    pub id: u64,
+}
+
+impl Scored {
+    pub fn new(score: f64, id: u64) -> Self {
+        Self { score, id }
+    }
+
+    /// `true` if `self` ranks ahead of `other` (higher score, tie → lower id).
+    #[inline]
+    pub fn beats(&self, other: &Scored) -> bool {
+        self.score > other.score || (self.score == other.score && self.id < other.id)
+    }
+}
+
+/// Reference top-k: full sort (the oracle all structures are tested against).
+pub fn topk_reference(items: &[Scored], k: usize) -> Vec<Scored> {
+    let mut v = items.to_vec();
+    v.sort_by(|a, b| {
+        b.score
+            .partial_cmp(&a.score)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.id.cmp(&b.id))
+    });
+    v.truncate(k);
+    v
+}

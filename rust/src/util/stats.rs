@@ -1,0 +1,225 @@
+//! Descriptive statistics, Gaussian fitting, and histogramming.
+//!
+//! Used by the BitBound analytical model (paper Eq. 3 fits the database
+//! bit-count distribution as a Gaussian), the benchmark harness (latency
+//! percentiles), and the experiment drivers.
+
+/// Summary statistics over a sample.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    /// Population standard deviation.
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+/// Compute summary statistics. Returns `None` for an empty slice.
+pub fn summarize(xs: &[f64]) -> Option<Summary> {
+    if xs.is_empty() {
+        return None;
+    }
+    let n = xs.len();
+    let mean = xs.iter().sum::<f64>() / n as f64;
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+    let min = xs.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    Some(Summary { n, mean, std: var.sqrt(), min, max })
+}
+
+/// Percentile by linear interpolation on the sorted sample. `p` in [0, 100].
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty(), "percentile of empty sample");
+    assert!((0.0..=100.0).contains(&p));
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = p / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// A fitted Gaussian N(mu, sigma^2) — paper Eq. 3.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Gaussian {
+    pub mu: f64,
+    pub sigma: f64,
+}
+
+impl Gaussian {
+    /// Maximum-likelihood fit (sample mean / population std).
+    pub fn fit(xs: &[f64]) -> Option<Self> {
+        let s = summarize(xs)?;
+        Some(Self { mu: s.mean, sigma: s.std })
+    }
+
+    /// Probability density function f_g(x) (paper Eq. 3).
+    pub fn pdf(&self, x: f64) -> f64 {
+        let z = (x - self.mu) / self.sigma;
+        (-0.5 * z * z).exp() / (self.sigma * (2.0 * std::f64::consts::PI).sqrt())
+    }
+
+    /// Cumulative distribution function via erf.
+    pub fn cdf(&self, x: f64) -> f64 {
+        0.5 * (1.0 + erf((x - self.mu) / (self.sigma * std::f64::consts::SQRT_2)))
+    }
+
+    /// Probability mass in `[lo, hi]` — the BitBound *kept* fraction of the
+    /// search space for popcount bounds (paper Fig. 2b/2c shaded region).
+    pub fn mass_between(&self, lo: f64, hi: f64) -> f64 {
+        (self.cdf(hi) - self.cdf(lo)).max(0.0)
+    }
+}
+
+/// Error function, Abramowitz & Stegun 7.1.26 (|err| ≤ 1.5e-7 — far below
+/// the statistical noise of anything we use it for).
+pub fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let y = 1.0
+        - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t - 0.284496736) * t
+            + 0.254829592)
+            * t
+            * (-x * x).exp();
+    sign * y
+}
+
+/// Fixed-width histogram over `[lo, hi)`; values outside are clamped into
+/// the edge bins (convenient for popcount distributions with hard bounds).
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub bins: Vec<u64>,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, nbins: usize) -> Self {
+        assert!(hi > lo && nbins > 0);
+        Self { lo, hi, bins: vec![0; nbins] }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        let w = (self.hi - self.lo) / self.bins.len() as f64;
+        let idx = ((x - self.lo) / w).floor();
+        let idx = idx.clamp(0.0, (self.bins.len() - 1) as f64) as usize;
+        self.bins[idx] += 1;
+    }
+
+    pub fn total(&self) -> u64 {
+        self.bins.iter().sum()
+    }
+
+    /// Bin centers (for plotting / tabulation).
+    pub fn centers(&self) -> Vec<f64> {
+        let w = (self.hi - self.lo) / self.bins.len() as f64;
+        (0..self.bins.len()).map(|i| self.lo + w * (i as f64 + 0.5)).collect()
+    }
+
+    /// Normalized density per bin (integrates to ~1).
+    pub fn density(&self) -> Vec<f64> {
+        let w = (self.hi - self.lo) / self.bins.len() as f64;
+        let n = self.total() as f64;
+        self.bins.iter().map(|&c| c as f64 / (n * w)).collect()
+    }
+}
+
+/// Linear least squares fit `y = a + b x`; returns (a, b, r^2).
+pub fn linear_fit(xs: &[f64], ys: &[f64]) -> (f64, f64, f64) {
+    assert_eq!(xs.len(), ys.len());
+    assert!(xs.len() >= 2);
+    let n = xs.len() as f64;
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let sxy: f64 = xs.iter().zip(ys).map(|(x, y)| (x - mx) * (y - my)).sum();
+    let sxx: f64 = xs.iter().map(|x| (x - mx) * (x - mx)).sum();
+    let syy: f64 = ys.iter().map(|y| (y - my) * (y - my)).sum();
+    let b = sxy / sxx;
+    let a = my - b * mx;
+    let r2 = if syy == 0.0 { 1.0 } else { (sxy * sxy) / (sxx * syy) };
+    (a, b, r2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg64;
+
+    #[test]
+    fn summary_basic() {
+        let s = summarize(&[1.0, 2.0, 3.0, 4.0]).unwrap();
+        assert_eq!(s.n, 4);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        assert!((s.std - (1.25f64).sqrt()).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+        assert!(summarize(&[]).is_none());
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+        assert!((percentile(&xs, 25.0) - 2.0).abs() < 1e-12);
+        assert!((percentile(&xs, 90.0) - 4.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn erf_reference_values() {
+        // Known values: erf(0)=0, erf(1)≈0.8427007929, erf(-1)=-erf(1).
+        assert!(erf(0.0).abs() < 1.5e-7); // A&S 7.1.26 max abs error
+        assert!((erf(1.0) - 0.8427007929).abs() < 1e-6);
+        assert!((erf(-1.0) + 0.8427007929).abs() < 1e-6);
+        assert!((erf(3.0) - 0.9999779095).abs() < 1e-6);
+    }
+
+    #[test]
+    fn gaussian_fit_recovers_parameters() {
+        let mut g = Pcg64::new(42);
+        let xs: Vec<f64> = (0..100_000).map(|_| 62.0 + 12.0 * g.next_gaussian()).collect();
+        let fit = Gaussian::fit(&xs).unwrap();
+        assert!((fit.mu - 62.0).abs() < 0.2, "mu={}", fit.mu);
+        assert!((fit.sigma - 12.0).abs() < 0.2, "sigma={}", fit.sigma);
+    }
+
+    #[test]
+    fn gaussian_mass() {
+        let gauss = Gaussian { mu: 0.0, sigma: 1.0 };
+        assert!((gauss.mass_between(-1.0, 1.0) - 0.6827).abs() < 1e-3);
+        assert!((gauss.mass_between(-2.0, 2.0) - 0.9545).abs() < 1e-3);
+        assert!(gauss.mass_between(5.0, 4.0).abs() < 1e-12, "inverted interval clamps to 0");
+    }
+
+    #[test]
+    fn histogram_counts_and_density() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        for i in 0..10 {
+            h.add(i as f64 + 0.5);
+        }
+        assert_eq!(h.bins, vec![1; 10]);
+        assert_eq!(h.total(), 10);
+        h.add(-5.0); // clamps low
+        h.add(99.0); // clamps high
+        assert_eq!(h.bins[0], 2);
+        assert_eq!(h.bins[9], 2);
+        let d = h.density();
+        let integral: f64 = d.iter().map(|x| x * 1.0).sum();
+        assert!((integral - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn linear_fit_exact_line() {
+        let xs = [0.0, 1.0, 2.0, 3.0];
+        let ys = [1.0, 3.0, 5.0, 7.0];
+        let (a, b, r2) = linear_fit(&xs, &ys);
+        assert!((a - 1.0).abs() < 1e-12);
+        assert!((b - 2.0).abs() < 1e-12);
+        assert!((r2 - 1.0).abs() < 1e-12);
+    }
+}

