@@ -31,6 +31,27 @@ fn main() {
         black_box(brute.search(&queries[0], k));
     });
 
+    // Micro-opt deltas (packed.rs hot path): unrolled vs scalar
+    // intersection popcount, and the count-bound early exit vs the plain
+    // top-k scan (identical results, measured side by side).
+    b.bench_elems(&format!("tfc_intersect_unrolled/n={n}"), n as f64, || {
+        let mut acc = 0u32;
+        for fp in &db.fps {
+            acc = acc.wrapping_add(queries[0].intersection_count(fp));
+        }
+        black_box(acc);
+    });
+    b.bench_elems(&format!("tfc_intersect_scalar/n={n}"), n as f64, || {
+        let mut acc = 0u32;
+        for fp in &db.fps {
+            acc = acc.wrapping_add(queries[0].intersection_count_scalar(fp));
+        }
+        black_box(acc);
+    });
+    b.bench_elems(&format!("brute_force_topk_countbound/n={n}/k={k}"), n as f64, || {
+        black_box(brute.search_with_bound(&queries[0], k));
+    });
+
     for m in [1usize, 4, 8, 16] {
         for cutoff in [0.0, 0.8] {
             let idx = BitBoundFoldingIndex::new(db.clone(), m, cutoff);

@@ -1,0 +1,96 @@
+//! Bench: the shard layer — per-query latency of the shard-parallel exact
+//! search across shard counts (1/2/4/8), side by side with the cycle
+//! simulator's multi-engine projection on the same aggregate work.
+//!
+//! Emits `BENCH_sharded.json` (one document, `util::minijson`) so the
+//! shard-scaling perf trajectory is tracked from this PR onward, plus the
+//! usual per-bench lines in `results/bench_sharded.jsonl`.
+
+use molfpga::coordinator::backend::NativeExhaustive;
+use molfpga::coordinator::metrics::Metrics;
+use molfpga::coordinator::{Query, QueryMode, ShardedEnginePool};
+use molfpga::fingerprint::{ChemblModel, Database};
+use molfpga::index::{BruteForceIndex, SearchIndex};
+use molfpga::shard::{PartitionPolicy, ShardedDatabase, ShardedSearchIndex};
+use molfpga::simulator::{simulate_multi_engine, SimConfig};
+use molfpga::util::bench::{black_box, Bencher};
+use molfpga::util::minijson::Json;
+use std::sync::Arc;
+
+fn main() {
+    let mut b = Bencher::new();
+    let n: usize = std::env::var("MOLFPGA_BENCH_N")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(50_000);
+    let k = 20;
+    eprintln!("[bench_sharded] db n={n} k={k}");
+    let db = Arc::new(Database::synthesize(n, &ChemblModel::default(), 42));
+    let queries = db.sample_queries(16, 7);
+
+    let shard_counts = [1usize, 2, 4, 8];
+    let mut points = Vec::new();
+    let mut single_qps = 0.0f64;
+    for &s in &shard_counts {
+        let sharded = Arc::new(ShardedDatabase::partition(
+            db.clone(),
+            s,
+            PartitionPolicy::PopcountStriped,
+        ));
+        let idx = ShardedSearchIndex::<BruteForceIndex>::build(sharded, &());
+        let mut qi = 0;
+        let r = b.bench_elems(&format!("sharded_exact_topk/s={s}/n={n}/k={k}"), n as f64, || {
+            black_box(idx.search(&queries[qi % queries.len()], k));
+            qi += 1;
+        });
+        let qps = 1.0 / r.mean.as_secs_f64();
+        if s == 1 {
+            single_qps = qps;
+        }
+        let sim = simulate_multi_engine(&SimConfig::folded_h3(n, k), s);
+        points.push(
+            Json::obj()
+                .set("shards", s)
+                .set("mean_ns", r.mean.as_nanos() as u64)
+                .set("qps", qps)
+                .set("speedup", if single_qps > 0.0 { qps / single_qps } else { 1.0 })
+                .set("sim_qps", sim.qps)
+                .set("sim_speedup", sim.speedup_vs_single),
+        );
+    }
+
+    // Dispatch-layer point: the shard pool end-to-end (channels + merge
+    // tree + response fan-in) at 4 shards.
+    {
+        let sharded = Arc::new(ShardedDatabase::partition(
+            db.clone(),
+            4,
+            PartitionPolicy::PopcountStriped,
+        ));
+        let metrics = Arc::new(Metrics::new());
+        let pool = ShardedEnginePool::new("bench", &sharded, 256, metrics, |_si, shard_db| {
+            NativeExhaustive::factory(shard_db, 1, 0.0)
+        });
+        let q = queries[0].clone();
+        b.bench_elems(&format!("sharded_pool_roundtrip/s=4/n={n}"), n as f64, || {
+            let rx = pool
+                .submit(Query::new(0, q.clone(), k, QueryMode::Exhaustive))
+                .expect("submit");
+            black_box(rx.recv().unwrap());
+        });
+        pool.shutdown();
+    }
+
+    let doc = Json::obj()
+        .set("bench", "sharded")
+        .set("n", n)
+        .set("k", k)
+        .set("policy", "popcount-striped")
+        .set("points", Json::Arr(points));
+    if let Err(e) = std::fs::write("BENCH_sharded.json", doc.to_string() + "\n") {
+        eprintln!("[bench_sharded] could not write BENCH_sharded.json: {e}");
+    } else {
+        println!("[bench_sharded] wrote BENCH_sharded.json");
+    }
+    let _ = b.write_jsonl(std::path::Path::new("results/bench_sharded.jsonl"));
+}

@@ -92,6 +92,32 @@ impl CpuBaseline {
         r
     }
 
+    /// Measure the shard-parallel exact search at a given shard count —
+    /// the CPU-side point of the shard scaling curve (exact by
+    /// construction, so recall is 1 like `measure_brute`).
+    pub fn measure_sharded_brute(
+        &self,
+        shards: usize,
+        policy: crate::shard::PartitionPolicy,
+        queries: &[Fingerprint],
+        k: usize,
+    ) -> Measured {
+        use crate::shard::{ShardedDatabase, ShardedSearchIndex};
+        let sharded = Arc::new(ShardedDatabase::partition(self.db.clone(), shards, policy));
+        let idx = ShardedSearchIndex::<BruteForceIndex>::build(sharded, &());
+        let t0 = Instant::now();
+        for q in queries {
+            std::hint::black_box(idx.search(q, k));
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        Measured {
+            name: format!("cpu sharded brute-force s={shards}"),
+            qps: queries.len() as f64 / dt,
+            recall: 1.0,
+            queries: queries.len(),
+        }
+    }
+
     /// Build an HNSW graph (timed separately from search).
     pub fn build_hnsw(&self, m: usize, ef_c: usize, seed: u64) -> HnswGraph {
         HnswBuilder::new(HnswParams::new(m, ef_c, seed)).build(&self.db)
@@ -137,6 +163,23 @@ impl CpuBaseline {
 mod tests {
     use super::*;
     use crate::fingerprint::ChemblModel;
+
+    #[test]
+    fn sharded_baseline_measures_exact_search() {
+        let db = Arc::new(Database::synthesize(3000, &ChemblModel::default(), 29));
+        let base = CpuBaseline::new(db.clone());
+        let queries = db.sample_queries(6, 31);
+        let m = base.measure_sharded_brute(
+            4,
+            crate::shard::PartitionPolicy::PopcountStriped,
+            &queries,
+            10,
+        );
+        assert_eq!(m.recall, 1.0);
+        assert_eq!(m.queries, 6);
+        assert!(m.qps > 0.0);
+        assert!(m.name.contains("s=4"));
+    }
 
     #[test]
     fn cpu_baseline_ordering_matches_paper() {

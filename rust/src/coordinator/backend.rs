@@ -6,6 +6,10 @@
 //!
 //! * [`NativeExhaustive`] — BitBound & folding on host popcount (the CPU
 //!   baseline path, also the latency-optimal path for small batches).
+//! * [`ShardedExhaustive`] — the same engine family over a
+//!   [`ShardedDatabase`]: per-shard indexes, shard-parallel scan, exact
+//!   cross-shard merge (the paper's multi-engine structure in one
+//!   backend).
 //! * [`PjrtExhaustive`] — the AOT-artifact engine (`runtime::TfcEngine`).
 //! * [`NativeHnsw`] — HNSW traversal with native TFC.
 //!
@@ -14,8 +18,9 @@
 
 use crate::fingerprint::{Database, Fingerprint};
 use crate::hnsw::{HnswBuilder, HnswGraph, HnswParams, Searcher};
-use crate::index::{BitBoundFoldingIndex, SearchIndex};
+use crate::index::{BitBoundFoldingIndex, SearchIndex, TwoStageConfig};
 use crate::runtime::{ArtifactSet, PjRt, TfcEngine};
+use crate::shard::{ShardedDatabase, ShardedSearchIndex};
 use crate::topk::Scored;
 use anyhow::Result;
 use std::sync::Arc;
@@ -56,6 +61,47 @@ impl NativeExhaustive {
 impl SearchBackend for NativeExhaustive {
     fn name(&self) -> &'static str {
         "native-exhaustive"
+    }
+
+    fn search(&mut self, fp: &Fingerprint, k: usize) -> Result<Vec<Scored>> {
+        Ok(self.index.search(fp, k))
+    }
+}
+
+/// Shard-parallel BitBound & folding backend.
+///
+/// The per-shard index set is built once and `Arc`-shared across pool
+/// workers (it is read-only at query time), so a multi-worker
+/// [`super::EnginePool`] gains query concurrency without rebuilding or
+/// cloning per-shard state — the fix for the replicate-the-whole-index
+/// pattern this refactor removes. Each query fans out across shards with
+/// scoped threads and reduces through the merge tree, returning global
+/// row ids.
+pub struct ShardedExhaustive {
+    index: Arc<ShardedSearchIndex<BitBoundFoldingIndex>>,
+}
+
+impl ShardedExhaustive {
+    /// Build per-shard indexes at `cfg` over an existing partition.
+    pub fn build(sharded: Arc<ShardedDatabase>, cfg: TwoStageConfig) -> Self {
+        Self { index: Arc::new(ShardedSearchIndex::build(sharded, &cfg)) }
+    }
+
+    /// The shared shard-parallel index (e.g. for work accounting via
+    /// `expected_candidates`).
+    pub fn index(&self) -> &Arc<ShardedSearchIndex<BitBoundFoldingIndex>> {
+        &self.index
+    }
+
+    /// Factory handing the *same* index set to every pool worker.
+    pub fn factory(index: Arc<ShardedSearchIndex<BitBoundFoldingIndex>>) -> BackendFactory {
+        Box::new(move || Ok(Box::new(Self { index }) as Box<dyn SearchBackend>))
+    }
+}
+
+impl SearchBackend for ShardedExhaustive {
+    fn name(&self) -> &'static str {
+        "sharded-exhaustive"
     }
 
     fn search(&mut self, fp: &Fingerprint, k: usize) -> Result<Vec<Scored>> {
@@ -155,5 +201,36 @@ mod tests {
         let hn_hits = hn.search(&q, 10).unwrap();
         let rec = crate::index::recall_at_k(&hn_hits, &truth, 10);
         assert!(rec >= 0.8, "hnsw backend recall {rec}");
+    }
+
+    #[test]
+    fn sharded_backend_exact_and_shares_index() {
+        use crate::shard::PartitionPolicy;
+        let db = Arc::new(Database::synthesize(2500, &ChemblModel::default(), 19));
+        let brute = BruteForceIndex::new(db.clone());
+        let sharded = Arc::new(ShardedDatabase::partition(
+            db.clone(),
+            4,
+            PartitionPolicy::PopcountStriped,
+        ));
+        // m=1, cutoff 0 ⇒ exact; results must be bit-identical to brute
+        // force, with global ids.
+        let cfg = TwoStageConfig { m: 1, cutoff: 0.0, ..TwoStageConfig::default() };
+        let backend = ShardedExhaustive::build(sharded, cfg);
+        let index = backend.index().clone();
+        // Two "workers" sharing the same index set via the factory.
+        let mut w1 = (ShardedExhaustive::factory(index.clone()))().unwrap();
+        let mut w2 = (ShardedExhaustive::factory(index.clone()))().unwrap();
+        for q in db.sample_queries(3, 23) {
+            let truth = brute.search(&q, 8);
+            for w in [&mut w1, &mut w2] {
+                let got = w.search(&q, 8).unwrap();
+                assert_eq!(got.len(), truth.len());
+                for (a, b) in got.iter().zip(&truth) {
+                    assert_eq!((a.id, a.score), (b.id, b.score));
+                }
+            }
+        }
+        assert_eq!(index.expected_candidates(&db.fps[0]), db.len());
     }
 }

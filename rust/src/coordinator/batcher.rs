@@ -5,7 +5,7 @@
 //! search). A batch closes when it reaches `max_batch` or when its oldest
 //! member has waited `max_wait` — the standard size-or-deadline policy.
 
-use super::pool::EnginePool;
+use super::pool::QueryPool;
 use super::request::{Query, QueryResult};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
@@ -30,14 +30,15 @@ enum Msg {
     Shutdown,
 }
 
-/// A batcher thread in front of an [`EnginePool`].
+/// A batcher thread in front of any [`QueryPool`] (replicated or
+/// shard-parallel).
 pub struct Batcher {
     tx: Sender<Msg>,
     handle: Option<std::thread::JoinHandle<()>>,
 }
 
 impl Batcher {
-    pub fn new(pool: Arc<EnginePool>, policy: BatchPolicy) -> Self {
+    pub fn new(pool: Arc<dyn QueryPool>, policy: BatchPolicy) -> Self {
         let (tx, rx) = channel::<Msg>();
         let handle = std::thread::Builder::new()
             .name("batcher".into())
@@ -46,7 +47,7 @@ impl Batcher {
         Self { tx, handle: Some(handle) }
     }
 
-    fn run(pool: Arc<EnginePool>, policy: BatchPolicy, rx: Receiver<Msg>) {
+    fn run(pool: Arc<dyn QueryPool>, policy: BatchPolicy, rx: Receiver<Msg>) {
         let mut pending: Vec<(Query, Sender<QueryResult>)> = Vec::new();
         let mut oldest: Option<Instant> = None;
         loop {
@@ -78,7 +79,7 @@ impl Batcher {
         }
     }
 
-    fn dispatch(pool: &EnginePool, pending: &mut Vec<(Query, Sender<QueryResult>)>) {
+    fn dispatch(pool: &dyn QueryPool, pending: &mut Vec<(Query, Sender<QueryResult>)>) {
         if pending.is_empty() {
             return;
         }

@@ -17,9 +17,13 @@
 //! ```
 //!
 //! * [`request`] — query/response types.
-//! * [`backend`] — the `SearchBackend` trait + native/PJRT/HNSW backends.
+//! * [`backend`] — the `SearchBackend` trait + native/PJRT/HNSW/sharded
+//!   backends.
 //! * [`batcher`] — size/deadline dynamic batching with backpressure.
-//! * [`pool`] — worker threads, per-thread engine construction, dispatch.
+//! * [`pool`] — the [`pool::QueryPool`] trait and its two shapes:
+//!   replicated workers ([`EnginePool`]) and one-worker-per-shard with
+//!   cross-shard merge ([`ShardedEnginePool`], the paper's multi-engine +
+//!   merge-tree structure — see docs/sharding.md).
 //! * [`router`] — mode-based routing (exhaustive / approximate / auto).
 //! * [`metrics`] — counters + latency percentiles.
 //! * [`server`] — TCP front end with a text line protocol.
@@ -33,6 +37,6 @@ pub mod router;
 pub mod server;
 
 pub use backend::{BackendFactory, SearchBackend};
-pub use pool::EnginePool;
+pub use pool::{EnginePool, QueryPool, ShardedEnginePool};
 pub use request::{Query, QueryMode, QueryResult};
 pub use router::Router;

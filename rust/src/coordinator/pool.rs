@@ -1,17 +1,53 @@
-//! Engine pool: N worker threads, each owning one backend engine.
+//! Engine pools: worker threads owning backend engines.
 //!
 //! PJRT handles are not Send, so workers *construct* their backend inside
-//! the thread from a Send [`BackendFactory`]. Jobs flow through a bounded
-//! queue (backpressure: `submit` fails fast when the queue is full — the
+//! the thread from a Send [`BackendFactory`]. Jobs flow through bounded
+//! queues (backpressure: `submit` fails fast when a queue is full — the
 //! server surfaces that as a retryable busy error instead of letting
 //! latency collapse, the standard serving discipline).
+//!
+//! Two pool shapes, both behind the [`QueryPool`] trait so the batcher and
+//! router are pool-agnostic:
+//!
+//! * [`EnginePool`] — N interchangeable workers, each owning a *complete*
+//!   engine over the whole database; a job goes to one worker. Scales
+//!   query *throughput* (more concurrent queries), not per-query latency.
+//! * [`ShardedEnginePool`] — one worker **per shard**, each owning an
+//!   engine over only its slice of a [`ShardedDatabase`]; every job is
+//!   broadcast to all shard workers and their partial top-k results are
+//!   reduced through the [`ShardMerge`] tree by the last worker to finish
+//!   (the paper's multi-engine + merge-tree structure, module ③). Divides
+//!   per-query work instead of replicating it.
 
 use super::backend::BackendFactory;
 use super::metrics::Metrics;
 use super::request::{Query, QueryResult};
+use crate::shard::ShardedDatabase;
+use crate::topk::{Scored, ShardMerge};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
+
+/// Anything the batcher/router can drive: submit a batch, observe load.
+///
+/// Implemented by [`EnginePool`] (replicated engines) and
+/// [`ShardedEnginePool`] (one engine per shard). `submit_batch` returns a
+/// receiver delivering one [`QueryResult`] per query, or the batch back on
+/// backpressure rejection.
+pub trait QueryPool: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Queries queued or executing.
+    fn inflight(&self) -> usize;
+
+    /// Submit a batch; fails fast with the batch when full.
+    fn submit_batch(&self, batch: Vec<Query>) -> Result<Receiver<QueryResult>, Vec<Query>>;
+
+    /// Single-query convenience.
+    fn submit(&self, query: Query) -> Result<Receiver<QueryResult>, Vec<Query>> {
+        self.submit_batch(vec![query])
+    }
+}
 
 /// One unit of work: a batch of queries + the response channel.
 struct Job {
@@ -154,6 +190,256 @@ impl EnginePool {
     }
 }
 
+impl QueryPool for EnginePool {
+    fn name(&self) -> &'static str {
+        EnginePool::name(self)
+    }
+
+    fn inflight(&self) -> usize {
+        EnginePool::inflight(self)
+    }
+
+    fn submit_batch(&self, batch: Vec<Query>) -> Result<Receiver<QueryResult>, Vec<Query>> {
+        EnginePool::submit_batch(self, batch)
+    }
+}
+
+/// One broadcast unit of work for the shard pool: the batch plus the
+/// cross-shard reduction state. Shared (`Arc`) across all shard workers.
+struct ShardJob {
+    batch: Vec<Query>,
+    state: Mutex<ShardJobState>,
+    respond: Sender<QueryResult>,
+}
+
+struct ShardJobState {
+    /// Shard workers that have not merged their partials yet.
+    pending: usize,
+    /// Set when submission failed partway; workers skip cancelled jobs.
+    cancelled: bool,
+    /// One merge tree per query in the batch.
+    merges: Vec<ShardMerge>,
+    /// Queries for which some shard backend errored. A partial top-k that
+    /// silently misses a shard's slice would violate the pool's exactness
+    /// contract, so failed queries get *no* response (matching
+    /// [`EnginePool`]: the caller observes the closed channel) and are
+    /// counted as errors, not completions.
+    failed: Vec<bool>,
+}
+
+/// Shard-parallel engine pool: worker `i` owns a backend built over shard
+/// `i` only. A submitted batch fans out to every shard worker; partial
+/// top-k lists (remapped to global ids) meet in the merge tree; the last
+/// worker to finish emits the responses. Per-query latency therefore
+/// tracks the *slowest shard* (≈ 1/s of the unsharded scan with a
+/// balanced partition) rather than the whole-database scan.
+pub struct ShardedEnginePool {
+    txs: Vec<SyncSender<Arc<ShardJob>>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    metrics: Arc<Metrics>,
+    inflight: Arc<AtomicUsize>,
+    name: &'static str,
+}
+
+impl ShardedEnginePool {
+    /// Spawn one worker per shard of `sharded`. `make_factory(shard_index,
+    /// shard_database)` produces the per-shard backend constructor (run on
+    /// the worker thread, same discipline as [`EnginePool`]). `queue_cap`
+    /// bounds pending jobs per shard queue.
+    pub fn new(
+        name: &'static str,
+        sharded: &Arc<ShardedDatabase>,
+        queue_cap: usize,
+        metrics: Arc<Metrics>,
+        mut make_factory: impl FnMut(usize, Arc<crate::fingerprint::Database>) -> BackendFactory,
+    ) -> Self {
+        let n_shards = sharded.n_shards();
+        assert!(n_shards >= 1);
+        let inflight = Arc::new(AtomicUsize::new(0));
+        let mut txs = Vec::with_capacity(n_shards);
+        let mut workers = Vec::with_capacity(n_shards);
+        for si in 0..n_shards {
+            let factory = make_factory(si, sharded.shard(si).clone());
+            let globals = sharded.global_ids(si).clone();
+            let (tx, rx) = sync_channel::<Arc<ShardJob>>(queue_cap);
+            txs.push(tx);
+            let metrics = metrics.clone();
+            let inflight = inflight.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("{name}-shard-{si}"))
+                    .spawn(move || {
+                        let mut backend = match factory() {
+                            Ok(b) => b,
+                            Err(e) => {
+                                eprintln!("[{name}-shard-{si}] backend init failed: {e:#}");
+                                return;
+                            }
+                        };
+                        while let Ok(job) = rx.recv() {
+                            if job.state.lock().unwrap().cancelled {
+                                continue;
+                            }
+                            // Compute all partials outside the lock.
+                            let mut partials: Vec<Option<Vec<Scored>>> =
+                                Vec::with_capacity(job.batch.len());
+                            for q in &job.batch {
+                                match backend.search(&q.fingerprint, q.k) {
+                                    Ok(local) => {
+                                        let global = local
+                                            .into_iter()
+                                            .map(|s| {
+                                                Scored::new(
+                                                    s.score,
+                                                    globals[s.id as usize] as u64,
+                                                )
+                                            })
+                                            .collect();
+                                        partials.push(Some(global));
+                                    }
+                                    Err(e) => {
+                                        eprintln!(
+                                            "[{name}-shard-{si}] query {} failed: {e:#}",
+                                            q.id
+                                        );
+                                        partials.push(None);
+                                    }
+                                }
+                            }
+                            // Merge under the job lock; the last shard to
+                            // arrive finalizes and responds.
+                            let done = {
+                                let mut st = job.state.lock().unwrap();
+                                if st.cancelled {
+                                    continue;
+                                }
+                                for (qi, partial) in partials.into_iter().enumerate() {
+                                    match partial {
+                                        Some(p) => st.merges[qi].push_partial(p),
+                                        None => {
+                                            // First failing shard records the
+                                            // error; the query is answered by
+                                            // silence, never by a partial
+                                            // top-k.
+                                            if !st.failed[qi] {
+                                                st.failed[qi] = true;
+                                                metrics.record_error();
+                                            }
+                                        }
+                                    }
+                                }
+                                st.pending -= 1;
+                                if st.pending == 0 {
+                                    Some((
+                                        std::mem::take(&mut st.merges),
+                                        std::mem::take(&mut st.failed),
+                                    ))
+                                } else {
+                                    None
+                                }
+                            };
+                            if let Some((merges, failed)) = done {
+                                for ((q, merge), fail) in
+                                    job.batch.iter().zip(merges).zip(failed)
+                                {
+                                    // Decrement before sending so a caller
+                                    // that observed the response also
+                                    // observes the query as retired.
+                                    inflight.fetch_sub(1, Ordering::Relaxed);
+                                    if fail {
+                                        continue; // error already recorded
+                                    }
+                                    let latency = q.submitted.elapsed();
+                                    metrics.record_complete(latency);
+                                    let _ = job.respond.send(QueryResult {
+                                        id: q.id,
+                                        hits: merge.finish(),
+                                        latency,
+                                        backend: backend.name(),
+                                    });
+                                }
+                            }
+                        }
+                    })
+                    .expect("spawn shard worker"),
+            );
+        }
+        Self { txs, workers, metrics, inflight, name }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.txs.len()
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    pub fn inflight(&self) -> usize {
+        self.inflight.load(Ordering::Relaxed)
+    }
+
+    /// Broadcast a batch to every shard worker. All-or-nothing: if any
+    /// shard queue is full the job is cancelled and the batch returned.
+    pub fn submit_batch(&self, batch: Vec<Query>) -> Result<Receiver<QueryResult>, Vec<Query>> {
+        let (rtx, rrx) = std::sync::mpsc::channel();
+        let n = batch.len();
+        for _ in 0..n {
+            self.metrics.record_submit();
+        }
+        self.inflight.fetch_add(n, Ordering::Relaxed);
+        let merges = batch.iter().map(|q| ShardMerge::new(q.k.max(1))).collect();
+        let job = Arc::new(ShardJob {
+            state: Mutex::new(ShardJobState {
+                pending: self.txs.len(),
+                cancelled: false,
+                merges,
+                failed: vec![false; n],
+            }),
+            batch,
+            respond: rtx,
+        });
+        for tx in &self.txs {
+            if tx.try_send(job.clone()).is_err() {
+                job.state.lock().unwrap().cancelled = true;
+                self.inflight.fetch_sub(n, Ordering::Relaxed);
+                for _ in 0..n {
+                    self.metrics.record_reject();
+                }
+                return Err(job.batch.clone());
+            }
+        }
+        Ok(rrx)
+    }
+
+    /// Single-query convenience.
+    pub fn submit(&self, query: Query) -> Result<Receiver<QueryResult>, Vec<Query>> {
+        self.submit_batch(vec![query])
+    }
+
+    /// Close the queues and join the shard workers.
+    pub fn shutdown(self) {
+        drop(self.txs);
+        for w in self.workers {
+            let _ = w.join();
+        }
+    }
+}
+
+impl QueryPool for ShardedEnginePool {
+    fn name(&self) -> &'static str {
+        ShardedEnginePool::name(self)
+    }
+
+    fn inflight(&self) -> usize {
+        ShardedEnginePool::inflight(self)
+    }
+
+    fn submit_batch(&self, batch: Vec<Query>) -> Result<Receiver<QueryResult>, Vec<Query>> {
+        ShardedEnginePool::submit_batch(self, batch)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::super::backend::NativeExhaustive;
@@ -238,6 +524,106 @@ mod tests {
             .collect();
         got.sort_unstable();
         assert_eq!(got, vec![0, 1, 2, 3, 4, 5]);
+        pool.shutdown();
+    }
+
+    fn mk_shard_pool(
+        n: usize,
+        shards: usize,
+        cap: usize,
+    ) -> (Arc<Database>, ShardedEnginePool, Arc<Metrics>) {
+        use crate::shard::{PartitionPolicy, ShardedDatabase};
+        let db = Arc::new(Database::synthesize(n, &ChemblModel::default(), 13));
+        let sharded = Arc::new(ShardedDatabase::partition(
+            db.clone(),
+            shards,
+            PartitionPolicy::PopcountStriped,
+        ));
+        let metrics = Arc::new(Metrics::new());
+        let pool = ShardedEnginePool::new("stest", &sharded, cap, metrics.clone(), |_si, shard_db| {
+            NativeExhaustive::factory(shard_db, 1, 0.0)
+        });
+        (db, pool, metrics)
+    }
+
+    #[test]
+    fn sharded_pool_matches_brute_force_oracle() {
+        let (db, pool, metrics) = mk_shard_pool(3000, 4, 16);
+        let brute = crate::index::BruteForceIndex::new(db.clone());
+        let queries = db.sample_queries(8, 3);
+        let mut rxs = Vec::new();
+        for (i, q) in queries.iter().enumerate() {
+            rxs.push((
+                q.clone(),
+                pool.submit(Query::new(i as u64, q.clone(), 7, QueryMode::Exhaustive)).unwrap(),
+            ));
+        }
+        for (q, rx) in rxs {
+            use crate::index::SearchIndex;
+            let r = rx.recv_timeout(std::time::Duration::from_secs(30)).unwrap();
+            let truth = brute.search(&q, 7);
+            assert_eq!(r.hits.len(), truth.len());
+            for (a, b) in r.hits.iter().zip(&truth) {
+                assert_eq!((a.id, a.score), (b.id, b.score), "shard pool must be exact");
+            }
+        }
+        assert_eq!(metrics.snapshot().completed, 8);
+        assert_eq!(pool.inflight(), 0);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn sharded_pool_batch_and_mixed_k() {
+        let (db, pool, _metrics) = mk_shard_pool(1500, 3, 16);
+        let queries = db.sample_queries(5, 9);
+        let batch: Vec<Query> = queries
+            .iter()
+            .enumerate()
+            .map(|(i, q)| Query::new(i as u64, q.clone(), 2 + i, QueryMode::Exhaustive))
+            .collect();
+        let rx = pool.submit_batch(batch).unwrap();
+        let mut sizes: Vec<(u64, usize)> = (0..5)
+            .map(|_| {
+                let r = rx.recv_timeout(std::time::Duration::from_secs(30)).unwrap();
+                (r.id, r.hits.len())
+            })
+            .collect();
+        sizes.sort_unstable();
+        assert_eq!(sizes, vec![(0, 2), (1, 3), (2, 4), (3, 5), (4, 6)]);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn sharded_pool_backpressure_rejects_cleanly() {
+        let (db, pool, metrics) = mk_shard_pool(2000, 2, 1);
+        let q = db.sample_queries(1, 4)[0].clone();
+        let mut accepted = 0usize;
+        let mut rejected = 0usize;
+        let mut rxs = Vec::new();
+        for i in 0..300u64 {
+            match pool.submit(Query::new(i, q.clone(), 5, QueryMode::Exhaustive)) {
+                Ok(rx) => {
+                    accepted += 1;
+                    rxs.push(rx);
+                }
+                Err(back) => {
+                    assert_eq!(back.len(), 1, "rejected batch returned intact");
+                    rejected += 1;
+                }
+            }
+        }
+        assert!(rejected > 0, "burst must trip shard-queue backpressure");
+        let mut completed = 0usize;
+        for rx in rxs {
+            if rx.recv_timeout(std::time::Duration::from_secs(30)).is_ok() {
+                completed += 1;
+            }
+        }
+        assert_eq!(completed, accepted, "every accepted query must answer");
+        let s = metrics.snapshot();
+        assert_eq!(s.rejected as usize, rejected);
+        assert_eq!(s.completed as usize, accepted);
+        assert_eq!(pool.inflight(), 0);
         pool.shutdown();
     }
 }

@@ -7,7 +7,7 @@
 
 use super::batcher::{BatchPolicy, Batcher};
 use super::metrics::Metrics;
-use super::pool::EnginePool;
+use super::pool::QueryPool;
 use super::request::{Query, QueryMode, QueryResult};
 use std::sync::mpsc::Receiver;
 use std::sync::Arc;
@@ -25,9 +25,11 @@ pub struct Router {
 }
 
 impl Router {
+    /// Build over any pool shapes — replicated [`super::EnginePool`]s,
+    /// shard-parallel [`super::ShardedEnginePool`]s, or a mix.
     pub fn new(
-        exhaustive_pool: Arc<EnginePool>,
-        approximate_pool: Arc<EnginePool>,
+        exhaustive_pool: Arc<dyn QueryPool>,
+        approximate_pool: Arc<dyn QueryPool>,
         policy: BatchPolicy,
         metrics: Arc<Metrics>,
     ) -> Self {
@@ -79,6 +81,7 @@ impl Router {
 #[cfg(test)]
 mod tests {
     use super::super::backend::{NativeExhaustive, NativeHnsw};
+    use super::super::pool::EnginePool;
     use super::*;
     use crate::fingerprint::{ChemblModel, Database};
     use std::time::Duration;

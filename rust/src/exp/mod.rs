@@ -10,8 +10,11 @@ use crate::baselines::cpu::CpuBaseline;
 use crate::fingerprint::{packed::FoldScheme, Database, Fingerprint};
 use crate::hwmodel::qps::{FoldingDesign, HnswDesign, CHEMBL_N};
 use crate::index::{
-    folding::FoldedDatabase, recall_at_k, BitBoundFoldingIndex, BitBoundIndex, SearchIndex,
+    folding::FoldedDatabase, recall_at_k, BitBoundFoldingIndex, BitBoundIndex, BruteForceIndex,
+    SearchIndex,
 };
+use crate::shard::{PartitionPolicy, ShardedDatabase, ShardedSearchIndex};
+use crate::simulator::{shard_scaling_sweep, SimConfig};
 use crate::topk::Scored;
 use std::sync::Arc;
 
@@ -222,6 +225,79 @@ pub fn ground_truth(db: &Arc<Database>, queries: &[Fingerprint], k: usize) -> Ve
     CpuBaseline::new(db.clone()).ground_truth(queries, k)
 }
 
+/// One shard-scaling observation: software-measured sharded exhaustive
+/// QPS next to the cycle simulator's multi-engine projection at the same
+/// aggregate work (the Fig. 10-style scaling curve, both axes).
+#[derive(Debug, Clone)]
+pub struct ShardScalingPoint {
+    pub shards: usize,
+    /// Wall-clock QPS of the shard-parallel exact search on this host.
+    pub measured_qps: f64,
+    /// Measured speedup vs the 1-shard row of the same sweep.
+    pub measured_speedup: f64,
+    /// Simulated FPGA multi-engine QPS (m=8 folded rows, paper budget).
+    pub sim_qps: f64,
+    /// Simulated speedup vs a single engine.
+    pub sim_speedup: f64,
+    /// Mean per-query scored candidates, aggregated across shards — the
+    /// work figure the hardware model charges.
+    pub mean_candidates: f64,
+}
+
+/// Sweep shard counts: measure the software shard-parallel exact search
+/// and project the FPGA multi-engine deployment on the same work.
+pub fn shard_scaling(
+    db: &Arc<Database>,
+    queries: &[Fingerprint],
+    k: usize,
+    shard_counts: &[usize],
+    policy: PartitionPolicy,
+) -> Vec<ShardScalingPoint> {
+    // The aggregate work is partition-invariant for the exhaustive scan
+    // (shards sum back to the whole database), so the simulator sweep runs
+    // once on the unsharded work figure — the H3 folded operating point.
+    let oracle = BruteForceIndex::new(db.clone());
+    let mean_candidates = if queries.is_empty() {
+        0.0
+    } else {
+        queries.iter().map(|q| oracle.expected_candidates(q) as f64).sum::<f64>()
+            / queries.len() as f64
+    };
+    let sim_cfg = SimConfig::folded_h3(mean_candidates.round() as usize, k);
+    let sims = shard_scaling_sweep(&sim_cfg, shard_counts);
+
+    let mut out: Vec<ShardScalingPoint> = Vec::with_capacity(shard_counts.len());
+    let mut base_measured = None;
+    for (&s, sim) in shard_counts.iter().zip(&sims) {
+        let sharded = Arc::new(ShardedDatabase::partition(db.clone(), s, policy));
+        let idx = ShardedSearchIndex::<BruteForceIndex>::build(sharded, &());
+        let t0 = std::time::Instant::now();
+        for q in queries {
+            std::hint::black_box(idx.search(q, k));
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        let measured_qps = if dt > 0.0 { queries.len() as f64 / dt } else { 0.0 };
+        let base = *base_measured.get_or_insert(measured_qps);
+        // Recorded per point so a regression in aggregation (shards
+        // over- or under-covering the database) is visible in the data.
+        let agg_candidates = if queries.is_empty() {
+            0.0
+        } else {
+            queries.iter().map(|q| idx.expected_candidates(q) as f64).sum::<f64>()
+                / queries.len() as f64
+        };
+        out.push(ShardScalingPoint {
+            shards: s,
+            measured_qps,
+            measured_speedup: if base > 0.0 { measured_qps / base } else { 1.0 },
+            sim_qps: sim.qps,
+            sim_speedup: sim.speedup_vs_single,
+            mean_candidates: agg_candidates,
+        });
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -267,6 +343,29 @@ mod tests {
         assert!(hi.recall >= lo.recall - 0.02, "larger ef ⇒ recall no worse");
         assert!(hi.distance_evals > lo.distance_evals);
         assert!(lo.fpga_qps > hi.fpga_qps, "smaller ef ⇒ faster");
+    }
+
+    #[test]
+    fn shard_scaling_shape() {
+        let db = small_db();
+        let queries = db.sample_queries(4, 13);
+        let pts = shard_scaling(&db, &queries, 10, &[1, 4], PartitionPolicy::PopcountStriped);
+        assert_eq!(pts.len(), 2);
+        // Work is conserved: aggregated candidates equal n for brute force
+        // at every shard count.
+        for p in &pts {
+            assert_eq!(p.mean_candidates, db.len() as f64, "s={}", p.shards);
+        }
+        // The simulated multi-engine deployment scales near-linearly in
+        // this compute-bound regime (sublinearity here is the fixed
+        // drain/merge latency, significant at this small n).
+        assert!(
+            (2.8..=4.05).contains(&pts[1].sim_speedup),
+            "sim speedup {}",
+            pts[1].sim_speedup
+        );
+        assert!((pts[0].sim_speedup - 1.0).abs() < 1e-9);
+        assert!(pts.iter().all(|p| p.measured_qps > 0.0));
     }
 
     #[test]

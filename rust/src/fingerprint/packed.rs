@@ -109,9 +109,40 @@ impl Fingerprint {
         self.words.iter().map(|w| w.count_ones()).sum()
     }
 
-    /// Popcount of the intersection |A∩B|.
+    /// Popcount of the intersection |A∩B| — the TFC inner loop.
+    ///
+    /// 4-word-unrolled with independent accumulators: the full-length
+    /// 16 × u64 case runs in exactly four iterations, and the split
+    /// accumulators break the dependency chain so the four `popcnt`s per
+    /// iteration issue in parallel (the software analogue of the TFC
+    /// module's parallel popcount tree). Folded widths that are not a
+    /// multiple of four words fall through to the scalar tail.
     #[inline]
     pub fn intersection_count(&self, other: &Self) -> u32 {
+        debug_assert_eq!(self.bits, other.bits);
+        let mut ca = self.words.chunks_exact(4);
+        let mut cb = other.words.chunks_exact(4);
+        let mut acc = [0u32; 4];
+        for (x, y) in (&mut ca).zip(&mut cb) {
+            acc[0] += (x[0] & y[0]).count_ones();
+            acc[1] += (x[1] & y[1]).count_ones();
+            acc[2] += (x[2] & y[2]).count_ones();
+            acc[3] += (x[3] & y[3]).count_ones();
+        }
+        let tail: u32 = ca
+            .remainder()
+            .iter()
+            .zip(cb.remainder())
+            .map(|(a, b)| (a & b).count_ones())
+            .sum();
+        acc[0] + acc[1] + acc[2] + acc[3] + tail
+    }
+
+    /// Reference scalar intersection popcount — kept for the
+    /// `bench_exhaustive` unrolling delta and the equivalence property
+    /// test; not used on any hot path.
+    #[inline]
+    pub fn intersection_count_scalar(&self, other: &Self) -> u32 {
         debug_assert_eq!(self.bits, other.bits);
         self.words.iter().zip(&other.words).map(|(a, b)| (a & b).count_ones()).sum()
     }
@@ -207,6 +238,32 @@ impl Fingerprint {
         }
         Self { bits: out_bits, words }
     }
+}
+
+/// Upper bound on Tanimoto from the two popcounts alone: |A∩B| ≤
+/// min(CntA, CntB), and at that intersection the union is max(CntA, CntB),
+/// so `S(A,B) ≤ min/max` — the same count-only reasoning as BitBound
+/// (Eq. 2), applied per row instead of per range.
+#[inline]
+pub fn count_upper_bound(cnt_a: u32, cnt_b: u32) -> f64 {
+    let (mn, mx) = if cnt_a < cnt_b { (cnt_a, cnt_b) } else { (cnt_b, cnt_a) };
+    if mx == 0 {
+        0.0
+    } else {
+        mn as f64 / mx as f64
+    }
+}
+
+/// Early-exit test for the exhaustive scan: can a row with popcount
+/// `cnt_b` still beat the current top-k floor? Conservative by a 1e-9
+/// margin so float rounding can only keep a row, never drop one — with
+/// the margin, a `false` answer proves the row's true Tanimoto is
+/// strictly below `floor_score`, so skipping it leaves the top-k
+/// bit-identical (property-tested in `tests/properties.rs`).
+#[inline]
+pub fn counts_may_beat(cnt_a: u32, cnt_b: u32, floor_score: f64) -> bool {
+    let (mn, mx) = if cnt_a < cnt_b { (cnt_a, cnt_b) } else { (cnt_b, cnt_a) };
+    mn as f64 >= (floor_score - 1e-9) * mx as f64
 }
 
 /// Quantize a Tanimoto score in [0,1] to 12-bit fixed point (paper module ②
@@ -401,6 +458,49 @@ mod tests {
             let inter: u32 = a32.iter().zip(&b32).map(|(x, y)| (x & y).count_ones()).sum();
             assert_eq!(inter, a.intersection_count(&b));
         });
+    }
+
+    #[test]
+    fn unrolled_intersection_matches_scalar() {
+        check("intersect_unrolled_eq_scalar", 60, |g| {
+            let d = 0.02 + g.next_f64() * 0.3;
+            // Full width (16 words, pure unrolled path) and folded widths
+            // including a non-multiple-of-4 word count (tail path).
+            let a = random_fp(g, FP_BITS, d);
+            let b = random_fp(g, FP_BITS, d);
+            assert_eq!(a.intersection_count(&b), a.intersection_count_scalar(&b));
+            for m in [2usize, 8, 16] {
+                let fa = a.fold(m, FoldScheme::Sectional);
+                let fb = b.fold(m, FoldScheme::Sectional);
+                assert_eq!(fa.intersection_count(&fb), fa.intersection_count_scalar(&fb));
+            }
+            let ta = random_fp(g, 192, d); // 3 words: remainder-only path
+            let tb = random_fp(g, 192, d);
+            assert_eq!(ta.intersection_count(&tb), ta.intersection_count_scalar(&tb));
+        });
+    }
+
+    #[test]
+    fn count_bound_is_sound() {
+        // The count-only bound must never be below the true Tanimoto
+        // (otherwise the early exit could drop a true top-k row).
+        check("count_upper_bound_sound", 60, |g| {
+            let (da, db) = (0.02 + 0.15 * g.next_f64(), 0.02 + 0.15 * g.next_f64());
+            let a = random_fp(g, FP_BITS, da);
+            let b = random_fp(g, FP_BITS, db);
+            let t = a.tanimoto(&b);
+            let bound = count_upper_bound(a.count_ones(), b.count_ones());
+            assert!(bound >= t - 1e-12, "bound {bound} below true {t}");
+            // counts_may_beat is consistent with the bound at any floor.
+            for floor in [0.0, t, bound, 0.5, 0.99] {
+                if counts_may_beat(a.count_ones(), b.count_ones(), floor) {
+                    continue; // keeping a row is always safe
+                }
+                assert!(t < floor, "skipped a row with score {t} >= floor {floor}");
+            }
+        });
+        assert_eq!(count_upper_bound(0, 0), 0.0);
+        assert!(counts_may_beat(0, 0, 0.0), "empty rows are kept, never misjudged");
     }
 
     #[test]

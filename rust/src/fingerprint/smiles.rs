@@ -111,13 +111,20 @@ impl Molecule {
 }
 
 /// Parse error with position context.
-#[derive(Debug, thiserror::Error)]
-#[error("SMILES parse error at byte {pos} in {smiles:?}: {msg}")]
+#[derive(Debug)]
 pub struct SmilesError {
     pub smiles: String,
     pub pos: usize,
     pub msg: String,
 }
+
+impl std::fmt::Display for SmilesError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "SMILES parse error at byte {} in {:?}: {}", self.pos, self.smiles, self.msg)
+    }
+}
+
+impl std::error::Error for SmilesError {}
 
 struct Parser<'a> {
     src: &'a [u8],

@@ -139,6 +139,15 @@ impl BitBoundIndex {
     }
 }
 
+impl crate::shard::ShardableIndex for BitBoundIndex {
+    /// Per-shard build parameter: the similarity cutoff Sc.
+    type Config = f64;
+
+    fn build_shard(db: Arc<Database>, cutoff: &f64) -> Self {
+        Self::new(db, *cutoff)
+    }
+}
+
 impl SearchIndex for BitBoundIndex {
     fn search(&self, query: &Fingerprint, k: usize) -> Vec<Scored> {
         let qc = query.count_ones();

@@ -110,6 +110,15 @@ impl FoldedDatabase {
     }
 }
 
+impl crate::shard::ShardableIndex for FoldedDatabase {
+    /// Per-shard build parameters: (folding level m, scheme).
+    type Config = (usize, FoldScheme);
+
+    fn build_shard(db: Arc<Database>, cfg: &(usize, FoldScheme)) -> Self {
+        Self::build(db, cfg.0, cfg.1)
+    }
+}
+
 impl SearchIndex for FoldedDatabase {
     /// Full 2-stage search with the paper's `k_r1` sizing.
     fn search(&self, query: &Fingerprint, k: usize) -> Vec<Scored> {

@@ -25,7 +25,7 @@ pub mod two_stage;
 pub use bitbound::BitBoundIndex;
 pub use brute::BruteForceIndex;
 pub use folding::FoldedDatabase;
-pub use two_stage::BitBoundFoldingIndex;
+pub use two_stage::{BitBoundFoldingIndex, TwoStageConfig};
 
 use crate::fingerprint::Fingerprint;
 use crate::topk::Scored;

@@ -22,6 +22,26 @@ use crate::fingerprint::{packed::FoldScheme, Database, Fingerprint};
 use crate::topk::{Scored, TopKMerge};
 use std::sync::Arc;
 
+/// Build parameters of the combined index — one bundle so per-shard
+/// construction ([`crate::shard::ShardableIndex`]) and the coordinator's
+/// backend factories configure identical engines.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TwoStageConfig {
+    /// Folding level m.
+    pub m: usize,
+    /// BitBound similarity cutoff Sc (0 disables pruning).
+    pub cutoff: f64,
+    /// Folding scheme (paper Fig. 3; sectional is the FPGA design's).
+    pub scheme: FoldScheme,
+}
+
+impl Default for TwoStageConfig {
+    /// The paper's H3 operating point: m = 4, Sc = 0.8, sectional.
+    fn default() -> Self {
+        Self { m: 4, cutoff: 0.8, scheme: FoldScheme::Sectional }
+    }
+}
+
 /// Combined BitBound + folding 2-stage exhaustive index.
 #[derive(Clone)]
 pub struct BitBoundFoldingIndex {
@@ -66,6 +86,14 @@ impl BitBoundFoldingIndex {
         let stage1 = range.len();
         let stage2 = k_r1(k, self.m()).min(stage1);
         (stage1, stage2)
+    }
+}
+
+impl crate::shard::ShardableIndex for BitBoundFoldingIndex {
+    type Config = TwoStageConfig;
+
+    fn build_shard(db: Arc<Database>, cfg: &TwoStageConfig) -> Self {
+        Self::with_scheme(db, cfg.m, cfg.cutoff, cfg.scheme)
     }
 }
 

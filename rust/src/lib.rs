@@ -25,8 +25,9 @@
 //! | module | role |
 //! |---|---|
 //! | [`fingerprint`] | bit-packed fingerprints, SMILES → Morgan FP, dataset generation (RDKit/Chembl substitute) |
-//! | [`topk`] | merge-sort top-k (paper module ③) and register-array priority queue (module ④) |
+//! | [`topk`] | merge-sort top-k (paper module ③), register-array priority queue (module ④), cross-shard merge tree |
 //! | [`index`] | brute force, BitBound (Eq. 2), folding schemes 1 & 2 (Fig. 3), two-stage search |
+//! | [`shard`] | database partitioning (round-robin / popcount-striped), per-shard index builds, shard-parallel exact search (docs/sharding.md) |
 //! | [`hnsw`] | hierarchical navigable small world graph: build + Algorithms 1 & 2 |
 //! | [`hwmodel`] | analytical Alveo U280 resource/frequency/bandwidth model |
 //! | [`simulator`] | cycle-level query-engine pipeline simulator |
@@ -44,6 +45,7 @@ pub mod hnsw;
 pub mod hwmodel;
 pub mod index;
 pub mod runtime;
+pub mod shard;
 pub mod simulator;
 pub mod topk;
 pub mod util;

@@ -6,18 +6,25 @@
 //! molfpga query     --db data/db.bin --smiles "CC(=O)Oc1ccccc1C(=O)O" \
 //!                   --k 10 --mode exact
 //! molfpga serve     --db data/db.bin --port 7878 --workers 2 \
-//!                   [--pjrt] [--m 4] [--cutoff 0.8] [--hnsw-m 8] [--ef 64]
-//! molfpga bench-qps --db data/db.bin --queries 200 [--pjrt]
+//!                   [--pjrt] [--m 4] [--cutoff 0.8] [--hnsw-m 8] [--ef 64] \
+//!                   [--shards 4] [--partition popcount|roundrobin|contiguous]
+//! molfpga bench-qps --db data/db.bin --queries 200 [--pjrt] [--shards 4]
 //! ```
+//!
+//! `--shards N` (N > 1) serves exhaustive queries from a shard-parallel
+//! pool: the database is partitioned, each worker owns one shard's engine,
+//! and partial top-k results merge through the cross-shard merge tree
+//! (exact results, ~N× lower per-query scan latency; see docs/sharding.md).
 
 use anyhow::{bail, Context, Result};
 use molfpga::coordinator::backend::{NativeExhaustive, NativeHnsw, PjrtExhaustive};
 use molfpga::coordinator::batcher::BatchPolicy;
 use molfpga::coordinator::metrics::Metrics;
 use molfpga::coordinator::server::Server;
-use molfpga::coordinator::{EnginePool, Query, QueryMode, Router};
+use molfpga::coordinator::{EnginePool, Query, QueryMode, QueryPool, Router, ShardedEnginePool};
 use molfpga::fingerprint::{morgan::MorganGenerator, ChemblModel, Database};
 use molfpga::runtime::ArtifactSet;
+use molfpga::shard::{PartitionPolicy, ShardedDatabase};
 use molfpga::util::cli::Args;
 use std::sync::Arc;
 
@@ -153,15 +160,39 @@ fn build_router(args: &Args, db: Arc<Database>) -> Result<(Arc<Router>, Arc<Metr
     let queue = args.get_or("queue", 64usize)?;
     let m = args.get_or("m", 4usize)?;
     let cutoff = args.get_or("cutoff", 0.8)?;
+    let shards = args.get_or("shards", 1usize)?;
     let use_pjrt = args.flag("pjrt");
     let dbc = db.clone();
-    let ex = Arc::new(EnginePool::new("exhaustive", workers, queue, metrics.clone(), move |_| {
+    let ex: Arc<dyn QueryPool> = if shards > 1 {
+        let policy: PartitionPolicy =
+            args.get("partition").unwrap_or("popcount").parse().map_err(anyhow::Error::msg)?;
         if use_pjrt {
-            PjrtExhaustive::factory(dbc.clone(), m, cutoff)
-        } else {
-            NativeExhaustive::factory(dbc.clone(), m, cutoff)
+            eprintln!("[molfpga] --pjrt is not shard-aware yet; using native shard engines");
         }
-    }));
+        if args.get("workers").is_some() {
+            eprintln!(
+                "[molfpga] --workers is ignored with --shards {shards}: \
+                 the sharded pool runs one worker per shard"
+            );
+        }
+        eprintln!("[molfpga] partitioning into {shards} shards ({policy:?})…");
+        let sharded = Arc::new(ShardedDatabase::partition(db.clone(), shards, policy));
+        Arc::new(ShardedEnginePool::new(
+            "exhaustive",
+            &sharded,
+            queue,
+            metrics.clone(),
+            move |_si, shard_db| NativeExhaustive::factory(shard_db, m, cutoff),
+        ))
+    } else {
+        Arc::new(EnginePool::new("exhaustive", workers, queue, metrics.clone(), move |_| {
+            if use_pjrt {
+                PjrtExhaustive::factory(dbc.clone(), m, cutoff)
+            } else {
+                NativeExhaustive::factory(dbc.clone(), m, cutoff)
+            }
+        }))
+    };
     eprintln!("[molfpga] building HNSW graph…");
     let graph = NativeHnsw::build_graph(
         &db,

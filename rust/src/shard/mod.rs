@@ -1,0 +1,538 @@
+//! Shard layer: partition a fingerprint database into independent slices
+//! and search them in parallel with an exact cross-shard merge.
+//!
+//! This is the software realization of the paper's multi-engine scaling
+//! structure: the FPGA instantiates k kernel replicas, each streaming a
+//! *slice* of the database from its own HBM (pseudo-)channel, and reduces
+//! their partial top-k streams in a merge tree (module ③, Fig. 4). Here a
+//! **shard** is that slice, made a first-class object so every layer above
+//! — indexes, coordinator, simulator, benches — can scale by shard count
+//! instead of replicating whole-database work per worker:
+//!
+//! * [`ShardedDatabase`] — the partition itself, with a stable
+//!   global-id ↔ (shard, local-id) mapping and a choice of
+//!   [`PartitionPolicy`].
+//! * [`ShardableIndex`] — "this index can be built per shard from a
+//!   shard-local [`Database`]"; implemented by all four exhaustive
+//!   indexes.
+//! * [`ShardedSearchIndex`] — one index per shard + shard-parallel search
+//!   (scoped threads) + [`ShardMerge`] combination. Implements
+//!   [`SearchIndex`], returning **global** row ids and, critically,
+//!   *bit-identical* results to the unsharded brute-force oracle (the
+//!   per-shard local order preserves global-id order, so tie-breaking is
+//!   unchanged — property-tested in `tests/properties.rs`).
+//!
+//! `expected_candidates` aggregates across shards, so the
+//! [`crate::hwmodel`]/[`crate::simulator`] QPS estimates stay meaningful
+//! for sharded deployments (the per-query work is the *sum* of per-shard
+//! scans, while latency follows the *max* — exactly the distinction
+//! [`crate::simulator::engine::simulate_multi_engine`] models).
+
+use crate::fingerprint::Database;
+use crate::index::SearchIndex;
+use crate::topk::{Scored, ShardMerge};
+use std::sync::Arc;
+
+/// How database rows are assigned to shards.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PartitionPolicy {
+    /// Equal contiguous global-id ranges — the natural "HBM channel
+    /// slice" layout, but pathological when the database arrives sorted
+    /// (e.g. by popcount): shards then cover disjoint popcount bands and
+    /// BitBound pruning load-imbalances badly.
+    Contiguous,
+    /// Row `i` goes to shard `i mod s`. Statistically balanced for
+    /// shuffled inputs; no popcount awareness.
+    RoundRobin,
+    /// BitBound-friendly: rows are ranked by popcount and dealt
+    /// round-robin in that order, so every shard receives the same
+    /// popcount *distribution*. Each shard's Eq. 2 candidate range then
+    /// covers the same fraction of its rows, keeping per-shard work
+    /// balanced for any query — the property that makes shard-parallel
+    /// BitBound scale (per-shard latency ≈ global latency / s).
+    PopcountStriped,
+}
+
+impl std::str::FromStr for PartitionPolicy {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "contiguous" | "range" => Ok(Self::Contiguous),
+            "roundrobin" | "round-robin" | "rr" => Ok(Self::RoundRobin),
+            "popcount" | "popcount-striped" | "striped" => Ok(Self::PopcountStriped),
+            other => Err(format!("unknown partition policy {other:?}")),
+        }
+    }
+}
+
+/// A database partitioned into `s` shards with a stable id mapping.
+///
+/// Invariant: within every shard, rows appear in ascending **global** id
+/// order. Per-shard searches therefore break score ties exactly as a
+/// global scan would (lower global id first), which is what makes sharded
+/// search results bit-identical to the unsharded oracle.
+#[derive(Clone)]
+pub struct ShardedDatabase {
+    full: Arc<Database>,
+    shards: Vec<Arc<Database>>,
+    /// Per shard: local row -> global row.
+    globals: Vec<Arc<Vec<u32>>>,
+    /// Global row -> (shard, local row).
+    locate: Vec<(u32, u32)>,
+    policy: PartitionPolicy,
+}
+
+impl ShardedDatabase {
+    /// Partition `db` into `n_shards` slices under `policy`.
+    ///
+    /// `n_shards` may exceed the row count; surplus shards are empty (the
+    /// searching layers handle empty shards, so any shard count 1..=s is
+    /// valid — relied on by the shard-count property tests).
+    pub fn partition(db: Arc<Database>, n_shards: usize, policy: PartitionPolicy) -> Self {
+        assert!(n_shards >= 1, "need at least one shard");
+        let n = db.len();
+        if n_shards == 1 {
+            // Degenerate partition: share the original storage.
+            let globals = Arc::new((0..n as u32).collect::<Vec<u32>>());
+            return Self {
+                full: db.clone(),
+                shards: vec![db],
+                globals: vec![globals],
+                locate: (0..n as u32).map(|i| (0, i)).collect(),
+                policy,
+            };
+        }
+
+        // 1. Shard assignment per global row.
+        let assign: Vec<u32> = match policy {
+            PartitionPolicy::Contiguous => {
+                // Equal ranges; the first `n % s` shards get one extra row.
+                let base = n / n_shards;
+                let extra = n % n_shards;
+                let mut out = Vec::with_capacity(n);
+                for s in 0..n_shards {
+                    let len = base + usize::from(s < extra);
+                    out.extend(std::iter::repeat(s as u32).take(len));
+                }
+                out
+            }
+            PartitionPolicy::RoundRobin => {
+                (0..n).map(|i| (i % n_shards) as u32).collect()
+            }
+            PartitionPolicy::PopcountStriped => {
+                let mut order: Vec<u32> = (0..n as u32).collect();
+                order.sort_by_key(|&i| (db.counts[i as usize], i));
+                let mut out = vec![0u32; n];
+                for (rank, &row) in order.iter().enumerate() {
+                    out[row as usize] = (rank % n_shards) as u32;
+                }
+                out
+            }
+        };
+
+        // 2. Materialize shards in ascending global-id order (the
+        //    tie-breaking invariant).
+        let mut per_shard_rows: Vec<Vec<u32>> = vec![Vec::new(); n_shards];
+        for (row, &s) in assign.iter().enumerate() {
+            per_shard_rows[s as usize].push(row as u32);
+        }
+        let mut locate = vec![(0u32, 0u32); n];
+        let mut shards = Vec::with_capacity(n_shards);
+        let mut globals = Vec::with_capacity(n_shards);
+        for (si, rows) in per_shard_rows.into_iter().enumerate() {
+            for (local, &row) in rows.iter().enumerate() {
+                locate[row as usize] = (si as u32, local as u32);
+            }
+            let fps = rows.iter().map(|&r| db.fps[r as usize].clone()).collect();
+            shards.push(Arc::new(Database::new(fps)));
+            globals.push(Arc::new(rows));
+        }
+        Self { full: db, shards, globals, locate, policy }
+    }
+
+    /// The unpartitioned database.
+    pub fn full(&self) -> &Arc<Database> {
+        &self.full
+    }
+
+    pub fn policy(&self) -> PartitionPolicy {
+        self.policy
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Total rows across shards (== the full database).
+    pub fn len(&self) -> usize {
+        self.full.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.full.is_empty()
+    }
+
+    /// One shard's database.
+    pub fn shard(&self, i: usize) -> &Arc<Database> {
+        &self.shards[i]
+    }
+
+    pub fn shards(&self) -> &[Arc<Database>] {
+        &self.shards
+    }
+
+    /// Shard `i`'s local→global id map (shared, for worker threads).
+    pub fn global_ids(&self, i: usize) -> &Arc<Vec<u32>> {
+        &self.globals[i]
+    }
+
+    /// Map a (shard, local) pair back to the global row id.
+    #[inline]
+    pub fn to_global(&self, shard: usize, local: u32) -> u32 {
+        self.globals[shard][local as usize]
+    }
+
+    /// Map a global row id to its (shard, local) location.
+    #[inline]
+    pub fn locate(&self, global: u32) -> (u32, u32) {
+        self.locate[global as usize]
+    }
+
+    /// Remap a shard-local result list to global ids (order preserved).
+    pub fn remap(&self, shard: usize, hits: Vec<Scored>) -> Vec<Scored> {
+        let map = &self.globals[shard];
+        hits.into_iter()
+            .map(|s| Scored::new(s.score, map[s.id as usize] as u64))
+            .collect()
+    }
+
+    /// Largest relative deviation of any shard's mean popcount from the
+    /// global mean — the balance diagnostic for BitBound work division
+    /// (PopcountStriped drives this toward 0 even on popcount-sorted
+    /// inputs).
+    pub fn popcount_imbalance(&self) -> f64 {
+        if self.full.is_empty() {
+            return 0.0;
+        }
+        let global_mean = self.full.counts.iter().map(|&c| c as f64).sum::<f64>()
+            / self.full.len() as f64;
+        if global_mean == 0.0 {
+            return 0.0;
+        }
+        self.shards
+            .iter()
+            .filter(|s| !s.is_empty())
+            .map(|s| {
+                let m = s.counts.iter().map(|&c| c as f64).sum::<f64>() / s.len() as f64;
+                (m - global_mean).abs() / global_mean
+            })
+            .fold(0.0, f64::max)
+    }
+}
+
+/// An exhaustive index that can be built over one shard's database.
+///
+/// `Config` carries the per-shard build parameters (folding level,
+/// cutoff, …) so a [`ShardedSearchIndex`] can construct identical indexes
+/// over every shard.
+pub trait ShardableIndex: SearchIndex + Send + Sync + Sized {
+    type Config: Clone + Send + Sync;
+
+    fn build_shard(db: Arc<Database>, cfg: &Self::Config) -> Self;
+}
+
+/// Below this many rows in the largest shard, per-query thread fan-out
+/// costs more than it saves (spawn+join is ~tens of µs; a small shard
+/// scan is less), so [`ShardedSearchIndex::search`] runs serially. Callers
+/// can still force either mode with [`ShardedSearchIndex::with_parallel`]
+/// — results are identical by construction.
+pub const PARALLEL_MIN_SHARD_ROWS: usize = 4096;
+
+/// Per-shard indexes + shard-parallel search + exact merge.
+pub struct ShardedSearchIndex<I> {
+    sharded: Arc<ShardedDatabase>,
+    per_shard: Vec<I>,
+    /// None = auto (fan out only when the largest shard clears
+    /// [`PARALLEL_MIN_SHARD_ROWS`]); Some(p) = forced by the caller.
+    parallel: Option<bool>,
+    /// Cached: largest shard's row count (fan-out profitability check).
+    max_shard_rows: usize,
+}
+
+impl<I: ShardableIndex> ShardedSearchIndex<I> {
+    /// Build one index per shard (builds run in parallel — index
+    /// construction is the expensive part at scale).
+    pub fn build(sharded: Arc<ShardedDatabase>, cfg: &I::Config) -> Self {
+        let per_shard: Vec<I> = std::thread::scope(|scope| {
+            let handles: Vec<_> = sharded
+                .shards()
+                .iter()
+                .map(|db| {
+                    let db = db.clone();
+                    scope.spawn(move || I::build_shard(db, cfg))
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("shard index build")).collect()
+        });
+        let max_shard_rows = sharded.shards().iter().map(|d| d.len()).max().unwrap_or(0);
+        Self { sharded, per_shard, parallel: None, max_shard_rows }
+    }
+
+    /// Force per-query thread fan-out on or off, overriding the automatic
+    /// size threshold (serial mode is useful inside already-parallel
+    /// callers, e.g. one-worker-per-shard pools; forced-parallel is used
+    /// by tests and benches to pin the code path).
+    pub fn with_parallel(mut self, parallel: bool) -> Self {
+        self.parallel = Some(parallel);
+        self
+    }
+
+    pub fn sharded(&self) -> &Arc<ShardedDatabase> {
+        &self.sharded
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.per_shard.len()
+    }
+
+    pub fn shard_index(&self, i: usize) -> &I {
+        &self.per_shard[i]
+    }
+}
+
+impl<I: SearchIndex + Send + Sync> SearchIndex for ShardedSearchIndex<I> {
+    /// Exact global top-k: per-shard top-k (parallel when enabled),
+    /// remapped to global ids, reduced by the merge tree.
+    fn search(&self, query: &crate::fingerprint::Fingerprint, k: usize) -> Vec<Scored> {
+        let mut merge = ShardMerge::new(k.max(1));
+        let fan_out = self.per_shard.len() > 1
+            && self
+                .parallel
+                .unwrap_or(self.max_shard_rows >= PARALLEL_MIN_SHARD_ROWS);
+        if fan_out {
+            let partials: Vec<Vec<Scored>> = std::thread::scope(|scope| {
+                let handles: Vec<_> = self
+                    .per_shard
+                    .iter()
+                    .enumerate()
+                    .map(|(si, idx)| {
+                        scope.spawn(move || self.sharded.remap(si, idx.search(query, k)))
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().expect("shard search")).collect()
+            });
+            for p in partials {
+                merge.push_partial(p);
+            }
+        } else {
+            for (si, idx) in self.per_shard.iter().enumerate() {
+                merge.push_partial(self.sharded.remap(si, idx.search(query, k)));
+            }
+        }
+        merge.finish()
+    }
+
+    fn name(&self) -> &'static str {
+        "sharded"
+    }
+
+    /// Aggregate work across shards — the quantity the hardware model
+    /// charges (total rows streamed from HBM, regardless of which engine
+    /// streams them).
+    fn expected_candidates(&self, query: &crate::fingerprint::Fingerprint) -> usize {
+        self.per_shard.iter().map(|i| i.expected_candidates(query)).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fingerprint::ChemblModel;
+    use crate::index::brute::BruteForceIndex;
+    use crate::index::{BitBoundFoldingIndex, BitBoundIndex, SearchIndex};
+
+    fn db(n: usize, seed: u64) -> Arc<Database> {
+        Arc::new(Database::synthesize(n, &ChemblModel::default(), seed))
+    }
+
+    #[test]
+    fn mapping_roundtrip_all_policies() {
+        let database = db(257, 5);
+        for policy in [
+            PartitionPolicy::Contiguous,
+            PartitionPolicy::RoundRobin,
+            PartitionPolicy::PopcountStriped,
+        ] {
+            for s in [1usize, 2, 3, 8, 300] {
+                let sharded = ShardedDatabase::partition(database.clone(), s, policy);
+                assert_eq!(sharded.n_shards(), s);
+                assert_eq!(sharded.len(), 257);
+                let total: usize = sharded.shards().iter().map(|d| d.len()).sum();
+                assert_eq!(total, 257, "{policy:?} s={s} must cover every row once");
+                for g in 0..257u32 {
+                    let (si, local) = sharded.locate(g);
+                    assert_eq!(sharded.to_global(si as usize, local), g);
+                    assert_eq!(
+                        sharded.shard(si as usize).fps[local as usize],
+                        database.fps[g as usize],
+                        "{policy:?} s={s}: shard row must be the same fingerprint"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn local_order_ascends_in_global_id() {
+        // The tie-breaking invariant: every shard's local order is sorted
+        // by global id.
+        let database = db(500, 9);
+        for policy in [
+            PartitionPolicy::Contiguous,
+            PartitionPolicy::RoundRobin,
+            PartitionPolicy::PopcountStriped,
+        ] {
+            let sharded = ShardedDatabase::partition(database.clone(), 4, policy);
+            for si in 0..4 {
+                let ids = sharded.global_ids(si);
+                assert!(
+                    ids.windows(2).all(|w| w[0] < w[1]),
+                    "{policy:?}: shard {si} local order must ascend in global id"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn popcount_striping_balances_sorted_input() {
+        // Adversarial input: database already sorted by popcount (the
+        // layout BitBound prefers on disk). Contiguous partitioning gives
+        // each shard a disjoint popcount band; striping keeps every shard
+        // representative.
+        let base = db(4000, 11);
+        let mut order: Vec<usize> = (0..base.len()).collect();
+        order.sort_by_key(|&i| base.counts[i]);
+        let sorted = Arc::new(Database::new(
+            order.iter().map(|&i| base.fps[i].clone()).collect(),
+        ));
+        let striped =
+            ShardedDatabase::partition(sorted.clone(), 8, PartitionPolicy::PopcountStriped);
+        let contiguous =
+            ShardedDatabase::partition(sorted.clone(), 8, PartitionPolicy::Contiguous);
+        assert!(
+            striped.popcount_imbalance() < 0.02,
+            "striped imbalance {}",
+            striped.popcount_imbalance()
+        );
+        assert!(
+            contiguous.popcount_imbalance() > striped.popcount_imbalance() * 5.0,
+            "contiguous {} vs striped {}",
+            contiguous.popcount_imbalance(),
+            striped.popcount_imbalance()
+        );
+    }
+
+    #[test]
+    fn sharded_brute_matches_oracle_exactly() {
+        let database = db(3000, 21);
+        let oracle = BruteForceIndex::new(database.clone());
+        for s in [1usize, 2, 5, 8] {
+            let sharded = Arc::new(ShardedDatabase::partition(
+                database.clone(),
+                s,
+                PartitionPolicy::PopcountStriped,
+            ));
+            let idx = ShardedSearchIndex::<BruteForceIndex>::build(sharded, &());
+            for q in database.sample_queries(4, 33) {
+                let got = idx.search(&q, 15);
+                let want = oracle.search(&q, 15);
+                assert_eq!(got.len(), want.len());
+                for (a, b) in got.iter().zip(&want) {
+                    assert_eq!((a.id, a.score), (b.id, b.score), "s={s}");
+                }
+            }
+            assert_eq!(idx.expected_candidates(&database.fps[0]), database.len());
+        }
+    }
+
+    #[test]
+    fn serial_and_parallel_agree() {
+        // Force both code paths (the auto threshold would pick serial at
+        // this size) and require identical results.
+        let database = db(1200, 3);
+        let sharded = Arc::new(ShardedDatabase::partition(
+            database.clone(),
+            4,
+            PartitionPolicy::RoundRobin,
+        ));
+        let par =
+            ShardedSearchIndex::<BruteForceIndex>::build(sharded.clone(), &()).with_parallel(true);
+        let ser = ShardedSearchIndex::<BruteForceIndex>::build(sharded, &()).with_parallel(false);
+        let q = database.sample_queries(1, 8)[0].clone();
+        assert_eq!(par.search(&q, 10), ser.search(&q, 10));
+    }
+
+    #[test]
+    fn sharded_bitbound_work_aggregates() {
+        // expected_candidates must be the sum of per-shard Eq. 2 ranges —
+        // and with striping, close to the unsharded range.
+        let database = db(8000, 17);
+        let global = BitBoundIndex::new(database.clone(), 0.8);
+        let sharded = Arc::new(ShardedDatabase::partition(
+            database.clone(),
+            8,
+            PartitionPolicy::PopcountStriped,
+        ));
+        let idx = ShardedSearchIndex::<BitBoundIndex>::build(sharded, &0.8);
+        let q = database.sample_queries(1, 2)[0].clone();
+        let sum = idx.expected_candidates(&q);
+        let whole = global.expected_candidates(&q);
+        assert!(
+            (sum as f64 - whole as f64).abs() <= whole as f64 * 0.02 + 16.0,
+            "aggregated candidates {sum} vs unsharded {whole}"
+        );
+    }
+
+    #[test]
+    fn empty_shards_and_tiny_databases() {
+        let database = db(3, 1);
+        let sharded = Arc::new(ShardedDatabase::partition(
+            database.clone(),
+            8,
+            PartitionPolicy::RoundRobin,
+        ));
+        let idx = ShardedSearchIndex::<BruteForceIndex>::build(sharded, &());
+        let got = idx.search(&database.fps[1], 5);
+        assert_eq!(got.len(), 3);
+        assert_eq!(got[0].id, 1, "self-query finds itself across shards");
+        assert!((got[0].score - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sharded_two_stage_high_recall() {
+        use crate::index::two_stage::TwoStageConfig;
+        let database = db(6000, 41);
+        let oracle = BruteForceIndex::new(database.clone());
+        let sharded = Arc::new(ShardedDatabase::partition(
+            database.clone(),
+            4,
+            PartitionPolicy::PopcountStriped,
+        ));
+        let cfg = TwoStageConfig { m: 4, cutoff: 0.8, ..TwoStageConfig::default() };
+        let idx = ShardedSearchIndex::<BitBoundFoldingIndex>::build(sharded, &cfg);
+        let queries = database.sample_queries(12, 55);
+        let mut recs = Vec::new();
+        for q in &queries {
+            let truth: Vec<Scored> =
+                oracle.search(q, 10).into_iter().filter(|s| s.score >= 0.8).collect();
+            if truth.is_empty() {
+                continue;
+            }
+            let got = idx.search(q, 10);
+            recs.push(crate::index::recall_at_k(&got, &truth, truth.len()));
+        }
+        assert!(!recs.is_empty());
+        let mean = recs.iter().sum::<f64>() / recs.len() as f64;
+        assert!(mean > 0.9, "sharded two-stage recall above cutoff {mean:.3}");
+    }
+}

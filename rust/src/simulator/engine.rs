@@ -5,9 +5,21 @@
 //! the analytical [`crate::hwmodel::qps`] expressions (tests assert ≤ 5 %
 //! disagreement in the regimes the paper operates in) and to reproduce
 //! the §IV-A "on-the-fly vs sequential" comparison.
+//!
+//! The **multi-engine mode** ([`simulate_multi_engine`] /
+//! [`shard_scaling_sweep`]) models the sharded deployment the
+//! [`crate::shard`] layer implements in software: `e` engines, each
+//! owning an equal slice of the rows *and* of the HBM budget (its own
+//! pseudo-channel group), finishing with the cross-shard merge tree
+//! (module ③ as a tree, [`crate::topk::ShardMerge`]'s latency model).
+//! Query latency follows the slowest engine + the tree drain; the sweep
+//! over shard counts yields the paper-style scaling curve: near-linear
+//! until total compute demand hits the fixed aggregate bandwidth wall,
+//! then a plateau.
 
 use super::hbm::HbmModel;
 use super::pipeline::{QueryPipeline, StageLatency};
+use crate::topk::ShardMerge;
 use crate::util::prng::Pcg64;
 
 /// Simulation configuration for one query.
@@ -38,6 +50,14 @@ impl SimConfig {
             hbm_budget: 410e9,
             clock_hz: 450e6,
         }
+    }
+
+    /// The H3 folded operating point (m = 8 ⇒ 16-byte rows) on `rows`
+    /// scanned rows — the layout the shard-scaling experiments and
+    /// `bench_sharded` project onto engines (one definition so the exp
+    /// harness and the bench cannot drift apart).
+    pub fn folded_h3(rows: usize, k: usize) -> Self {
+        Self { rows, kernels: 7, bytes_per_row: 16, k, hbm_budget: 410e9, clock_hz: 450e6 }
     }
 }
 
@@ -119,6 +139,85 @@ pub fn simulate_sequential(cfg: &SimConfig) -> SimReport {
     }
 }
 
+/// Result of a multi-engine (sharded) query simulation.
+#[derive(Debug, Clone)]
+pub struct MultiEngineReport {
+    /// Engine (shard) count.
+    pub engines: usize,
+    /// Slowest engine's scan, cycles.
+    pub engine_cycles: u64,
+    /// Cross-shard merge-tree drain, cycles.
+    pub merge_cycles: u64,
+    /// Total query latency, cycles.
+    pub cycles: u64,
+    /// Input-stall cycles on the slowest engine (bandwidth wall signal).
+    pub input_stall_cycles: u64,
+    pub seconds: f64,
+    /// Implied steady-state QPS.
+    pub qps: f64,
+    /// Speedup over the same configuration on a single engine.
+    pub speedup_vs_single: f64,
+}
+
+/// Simulate one query on `engines` shard engines.
+///
+/// `cfg` describes the *whole* query: `cfg.rows` is the total (possibly
+/// BitBound-pruned) scan — use the sharded index's aggregated
+/// `expected_candidates` here — and `cfg.hbm_budget` the aggregate
+/// bandwidth. Each engine receives `rows/engines` rows, `budget/engines`
+/// bandwidth (its own channel group), and its own `cfg.kernels` kernel
+/// replicas; the per-engine scan is cycle-stepped by [`simulate_query`]
+/// and the partial top-k lists drain through the pipelined merge tree.
+pub fn simulate_multi_engine(cfg: &SimConfig, engines: usize) -> MultiEngineReport {
+    let single_seconds =
+        if engines == 1 { None } else { Some(simulate_query(cfg).seconds) };
+    multi_engine_report(cfg, engines, single_seconds)
+}
+
+/// Shared body: `single_seconds` is the precomputed one-engine baseline
+/// (None ⇒ this call *is* the baseline), so sweeps pay for the full-scan
+/// cycle simulation once instead of once per point.
+fn multi_engine_report(
+    cfg: &SimConfig,
+    engines: usize,
+    single_seconds: Option<f64>,
+) -> MultiEngineReport {
+    assert!(engines >= 1);
+    // The slowest engine is the one with the remainder row, if any.
+    let worst_rows = cfg.rows / engines + usize::from(cfg.rows % engines != 0);
+    let sub = SimConfig {
+        rows: worst_rows,
+        hbm_budget: cfg.hbm_budget / engines as f64,
+        ..cfg.clone()
+    };
+    let per = simulate_query(&sub);
+    let merge_cycles = ShardMerge::latency_cycles(engines, cfg.k) as u64;
+    let cycles = per.cycles + merge_cycles;
+    let seconds = cycles as f64 / cfg.clock_hz;
+    MultiEngineReport {
+        engines,
+        engine_cycles: per.cycles,
+        merge_cycles,
+        cycles,
+        input_stall_cycles: per.input_stall_cycles,
+        seconds,
+        qps: 1.0 / seconds,
+        speedup_vs_single: single_seconds.unwrap_or(seconds) / seconds,
+    }
+}
+
+/// The Fig. 10-style scaling curve: aggregate throughput vs shard count.
+/// The single-engine baseline is simulated once and shared by every point.
+pub fn shard_scaling_sweep(cfg: &SimConfig, shard_counts: &[usize]) -> Vec<MultiEngineReport> {
+    let baseline = simulate_query(cfg).seconds;
+    shard_counts
+        .iter()
+        .map(|&e| {
+            multi_engine_report(cfg, e, if e == 1 { None } else { Some(baseline) })
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -183,6 +282,62 @@ mod tests {
             (1.8..2.2).contains(&speedup),
             "on-the-fly speedup over sequential should be ≈2×, got {speedup:.2}"
         );
+    }
+
+    /// Folded rows (m=8): per-engine compute is the bottleneck, so shard
+    /// engines scale near-linearly until their aggregate demand hits the
+    /// fixed HBM budget, then plateau — the multi-engine scaling story.
+    #[test]
+    fn multi_engine_scaling_curve_folded() {
+        let cfg = SimConfig {
+            rows: 1_000_000,
+            kernels: 7,
+            bytes_per_row: 16, // m = 8
+            k: 20,
+            hbm_budget: 410e9,
+            clock_hz: 450e6,
+        };
+        let sweep = shard_scaling_sweep(&cfg, &[1, 2, 4, 8, 16]);
+        let by_e = |e: usize| sweep.iter().find(|r| r.engines == e).unwrap();
+        assert!((by_e(1).speedup_vs_single - 1.0).abs() < 1e-9);
+        let r4 = by_e(4);
+        assert!(
+            (3.8..=4.05).contains(&r4.speedup_vs_single),
+            "4 engines ≈ 4×: {:.2}",
+            r4.speedup_vs_single
+        );
+        assert_eq!(r4.input_stall_cycles, 0, "4 engines fit their channel budget");
+        // QPS grows monotonically up to the wall…
+        for w in sweep.windows(2).take(3) {
+            assert!(w[1].qps > w[0].qps, "{} → {} engines must speed up", w[0].engines, w[1].engines);
+        }
+        // …then plateaus: 16 engines oversubscribe the fixed budget.
+        let (r8, r16) = (by_e(8), by_e(16));
+        assert!(r16.input_stall_cycles > 0, "16 engines must hit the bandwidth wall");
+        assert!(
+            r16.qps < r8.qps * 1.1,
+            "plateau: 16-engine {:.0} vs 8-engine {:.0}",
+            r16.qps,
+            r8.qps
+        );
+        assert!(r16.speedup_vs_single < 10.0, "wall caps speedup: {:.1}", r16.speedup_vs_single);
+        // Merge-tree drain is charged: ⌈log2 8⌉ + k.
+        assert_eq!(r8.merge_cycles, 23);
+    }
+
+    /// Full-width rows: the single engine already saturates the HBM
+    /// budget, so sharding alone (without folding) buys ~nothing — the
+    /// motivation for combining folding with the multi-engine layout.
+    #[test]
+    fn multi_engine_full_width_is_bandwidth_capped() {
+        let cfg = SimConfig::brute_force(1_000_000);
+        let r4 = simulate_multi_engine(&cfg, 4);
+        assert!(
+            r4.speedup_vs_single < 1.2,
+            "full-width sharding must not beat the bandwidth wall: {:.2}",
+            r4.speedup_vs_single
+        );
+        assert!(r4.input_stall_cycles > 0);
     }
 
     #[test]

@@ -23,6 +23,9 @@ pub mod engine;
 pub mod hbm;
 pub mod pipeline;
 
-pub use engine::{simulate_query, SimConfig, SimReport};
+pub use engine::{
+    shard_scaling_sweep, simulate_multi_engine, simulate_query, MultiEngineReport, SimConfig,
+    SimReport,
+};
 pub use hbm::HbmModel;
 pub use pipeline::{QueryPipeline, StageLatency};

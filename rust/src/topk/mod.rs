@@ -10,12 +10,17 @@
 //! * [`pq`] — the **register-array priority queue** (module ④, HNSW
 //!   engine): even/odd compare-and-swap network, II=1 enqueue/dequeue,
 //!   comparator count linear in capacity.
+//! * [`shard_merge`] — the **cross-shard merge tree** (module ③ composed
+//!   as a binary tree): combines per-shard/per-kernel partial top-k lists
+//!   into the exact global top-k.
 
 pub mod merge;
 pub mod pq;
+pub mod shard_merge;
 
 pub use merge::TopKMerge;
 pub use pq::RegisterPq;
+pub use shard_merge::ShardMerge;
 
 /// A scored item flowing through the sorters: `(score, id)`.
 /// Ordering: higher score first; ties break by lower id (stable, matching

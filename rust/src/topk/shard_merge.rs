@@ -1,0 +1,215 @@
+//! Cross-shard top-k merge tree — the software model of how the paper's
+//! exhaustive engine combines the partial top-k streams of its kernel
+//! replicas (module ③ used as a *tree*, Fig. 4).
+//!
+//! Each kernel (software: each shard) scans its own slice of the database
+//! behind one HBM channel and produces an exact, sorted top-k of that
+//! slice. A binary tree of two-way mergers then reduces the `s` partial
+//! lists to the global top-k:
+//!
+//! * `s − 1` two-way mergers (`⌈log2 s⌉` tree levels),
+//! * every merger is a streaming compare-and-forward unit (II = 1), so the
+//!   pipelined tree drains `k` results in `k + ⌈log2 s⌉` cycles,
+//! * exactness: any global top-k element is, by restriction, within the
+//!   top-k of its own shard, so merging the per-shard top-k lists loses
+//!   nothing (the invariant the sharded indexes and the coordinator's
+//!   shard pool rely on — property-tested in `tests/properties.rs`).
+//!
+//! Tie-breaking matches [`Scored::beats`] (higher score, then lower id),
+//! so a sharded search whose partials carry *global* ids reproduces the
+//! unsharded brute-force ordering bit for bit.
+
+use super::Scored;
+
+/// Collects per-shard sorted top-k lists and merges them exactly.
+#[derive(Debug, Clone)]
+pub struct ShardMerge {
+    k: usize,
+    partials: Vec<Vec<Scored>>,
+}
+
+impl ShardMerge {
+    pub fn new(k: usize) -> Self {
+        assert!(k > 0);
+        Self { k, partials: Vec::new() }
+    }
+
+    #[inline]
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Number of partial lists collected so far.
+    pub fn partials(&self) -> usize {
+        self.partials.len()
+    }
+
+    /// Add one shard's result (must be sorted best-first, as every
+    /// [`super::TopKMerge`]/index produces). Entries beyond k are ignored
+    /// by the final merge.
+    pub fn push_partial(&mut self, partial: Vec<Scored>) {
+        debug_assert!(
+            partial.windows(2).all(|w| !w[1].beats(&w[0])),
+            "shard partial must be sorted best-first"
+        );
+        self.partials.push(partial);
+    }
+
+    /// Exact streaming merge of two sorted lists, keeping the best `k` —
+    /// one hardware merger node.
+    pub fn merge_two(a: &[Scored], b: &[Scored], k: usize) -> Vec<Scored> {
+        let mut out = Vec::with_capacity(k.min(a.len() + b.len()));
+        let (mut i, mut j) = (0usize, 0usize);
+        while out.len() < k {
+            let take_a = match (a.get(i), b.get(j)) {
+                (Some(x), Some(y)) => x.beats(y),
+                (Some(_), None) => true,
+                (None, Some(_)) => false,
+                (None, None) => break,
+            };
+            if take_a {
+                out.push(a[i]);
+                i += 1;
+            } else {
+                out.push(b[j]);
+                j += 1;
+            }
+        }
+        out
+    }
+
+    /// Run the merge tree; returns the exact global top-k, best-first.
+    pub fn finish(self) -> Vec<Scored> {
+        let mut lists = self.partials;
+        if lists.is_empty() {
+            return Vec::new();
+        }
+        // Binary reduction, pairing adjacent lists level by level (the
+        // hardware tree's wiring).
+        while lists.len() > 1 {
+            let mut next = Vec::with_capacity(lists.len().div_ceil(2));
+            let mut it = lists.into_iter();
+            while let Some(a) = it.next() {
+                match it.next() {
+                    Some(b) => next.push(Self::merge_two(&a, &b, self.k)),
+                    None => next.push(a),
+                }
+            }
+            lists = next;
+        }
+        let mut out = lists.pop().unwrap_or_default();
+        out.truncate(self.k);
+        out
+    }
+
+    /// Two-way merger nodes a hardware tree over `shards` leaves needs.
+    pub fn mergers(shards: usize) -> usize {
+        shards.saturating_sub(1)
+    }
+
+    /// Tree depth in levels (`⌈log2 shards⌉`).
+    pub fn depth(shards: usize) -> usize {
+        if shards <= 1 {
+            0
+        } else {
+            (usize::BITS - (shards - 1).leading_zeros()) as usize
+        }
+    }
+
+    /// Cycles for the pipelined tree to emit k results once the leaf
+    /// streams are ready: one result per cycle after a depth-deep fill.
+    pub fn latency_cycles(shards: usize, k: usize) -> usize {
+        if shards <= 1 {
+            0
+        } else {
+            Self::depth(shards) + k
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{topk_reference, Scored, TopKMerge};
+    use super::*;
+    use crate::util::proptest::check;
+    use crate::util::prng::Pcg64;
+
+    /// Split a random stream across `s` "shards", top-k each, tree-merge,
+    /// and compare with the global reference top-k.
+    #[test]
+    fn tree_merge_equals_global_topk() {
+        check("shard_merge_vs_ref", 60, |g| {
+            let n = 1 + g.below_usize(3000);
+            let k = 1 + g.below_usize(48);
+            let s = 1 + g.below_usize(9);
+            let items: Vec<Scored> = (0..n).map(|i| Scored::new(g.next_f64(), i as u64)).collect();
+            let mut merge = ShardMerge::new(k);
+            for si in 0..s {
+                let mut tk = TopKMerge::new(k);
+                for item in items.iter().skip(si).step_by(s) {
+                    tk.push(*item);
+                }
+                merge.push_partial(tk.finish());
+            }
+            let got = merge.finish();
+            let want = topk_reference(&items, k);
+            assert_eq!(got.len(), want.len(), "n={n} k={k} s={s}");
+            for (a, b) in got.iter().zip(&want) {
+                assert_eq!((a.id, a.score), (b.id, b.score), "n={n} k={k} s={s}");
+            }
+        });
+    }
+
+    #[test]
+    fn duplicate_scores_tie_break_on_global_id() {
+        // Two shards, identical scores everywhere: the merged ids must be
+        // the k smallest ids (the brute-force ordering).
+        let mut merge = ShardMerge::new(4);
+        merge.push_partial(vec![Scored::new(0.5, 1), Scored::new(0.5, 3), Scored::new(0.5, 5)]);
+        merge.push_partial(vec![Scored::new(0.5, 0), Scored::new(0.5, 2), Scored::new(0.5, 4)]);
+        let got: Vec<u64> = merge.finish().iter().map(|s| s.id).collect();
+        assert_eq!(got, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn empty_and_single_partials() {
+        assert!(ShardMerge::new(5).finish().is_empty());
+        let mut one = ShardMerge::new(5);
+        one.push_partial(vec![Scored::new(0.9, 7)]);
+        assert_eq!(one.finish(), vec![Scored::new(0.9, 7)]);
+        let mut with_empty = ShardMerge::new(2);
+        with_empty.push_partial(Vec::new());
+        with_empty.push_partial(vec![Scored::new(0.3, 2), Scored::new(0.1, 9)]);
+        with_empty.push_partial(Vec::new());
+        let got = with_empty.finish();
+        assert_eq!(got.iter().map(|s| s.id).collect::<Vec<_>>(), vec![2, 9]);
+    }
+
+    #[test]
+    fn merge_two_is_exact_and_bounded() {
+        let mut g = Pcg64::new(9);
+        let mut a: Vec<Scored> = (0..40).map(|i| Scored::new(g.next_f64(), i)).collect();
+        let mut b: Vec<Scored> = (0..40).map(|i| Scored::new(g.next_f64(), 100 + i)).collect();
+        a.sort_by(|x, y| if x.beats(y) { std::cmp::Ordering::Less } else { std::cmp::Ordering::Greater });
+        b.sort_by(|x, y| if x.beats(y) { std::cmp::Ordering::Less } else { std::cmp::Ordering::Greater });
+        let got = ShardMerge::merge_two(&a, &b, 10);
+        let mut all = a.clone();
+        all.extend_from_slice(&b);
+        let want = topk_reference(&all, 10);
+        assert_eq!(got, want);
+        assert!(ShardMerge::merge_two(&a, &b, 1000).len() == 80);
+    }
+
+    #[test]
+    fn hardware_tree_formulas() {
+        // s−1 mergers, ⌈log2 s⌉ levels, k + depth drain cycles.
+        assert_eq!(ShardMerge::mergers(1), 0);
+        assert_eq!(ShardMerge::mergers(8), 7);
+        assert_eq!(ShardMerge::depth(1), 0);
+        assert_eq!(ShardMerge::depth(2), 1);
+        assert_eq!(ShardMerge::depth(5), 3);
+        assert_eq!(ShardMerge::depth(8), 3);
+        assert_eq!(ShardMerge::latency_cycles(1, 20), 0);
+        assert_eq!(ShardMerge::latency_cycles(8, 20), 23);
+    }
+}

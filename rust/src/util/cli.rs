@@ -15,13 +15,20 @@ pub struct Args {
 }
 
 /// Error raised when a value fails to parse.
-#[derive(Debug, thiserror::Error)]
-#[error("invalid value for --{key}: {value:?} ({reason})")]
+#[derive(Debug)]
 pub struct ArgError {
     pub key: String,
     pub value: String,
     pub reason: String,
 }
+
+impl std::fmt::Display for ArgError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "invalid value for --{}: {:?} ({})", self.key, self.value, self.reason)
+    }
+}
+
+impl std::error::Error for ArgError {}
 
 impl Args {
     /// Parse from an explicit iterator (testable); `std::env::args().skip(1)`

@@ -19,6 +19,34 @@
 
 use crate::util::prng::Pcg64;
 
+/// Shared case generators for property tests (used by module tests and
+/// the `tests/properties.rs` cross-layer suite).
+pub mod gen {
+    use crate::fingerprint::{ChemblModel, Database, Fingerprint};
+    use crate::util::prng::Pcg64;
+    use std::sync::Arc;
+
+    /// Random fingerprint with ≈`density` of its `bits` set (`bits` must
+    /// be a positive multiple of 64).
+    pub fn sparse_fp(g: &mut Pcg64, bits: usize, density: f64) -> Fingerprint {
+        let mut fp = Fingerprint::zero(bits);
+        for i in 0..bits {
+            if g.next_f64() < density {
+                fp.set(i);
+            }
+        }
+        fp
+    }
+
+    /// Chembl-like database with a size drawn uniformly from `[lo, hi]`
+    /// and a case-local seed (replayable through the `check` driver).
+    pub fn database(g: &mut Pcg64, lo: usize, hi: usize) -> Arc<Database> {
+        assert!(lo >= 1 && lo <= hi);
+        let n = lo + g.below_usize(hi - lo + 1);
+        Arc::new(Database::synthesize(n, &ChemblModel::default(), g.next_u64()))
+    }
+}
+
 /// Default base seed; override with env `MOLFPGA_PROP_SEED` to replay.
 fn base_seed() -> u64 {
     std::env::var("MOLFPGA_PROP_SEED")

@@ -103,6 +103,76 @@ fn coordinator_survives_mixed_load() {
     router.shutdown();
 }
 
+/// The shard-aware pool serves queries through the full coordinator stack
+/// (router → batcher → shard workers → merge tree) with *exact* results:
+/// every Exhaustive response must be bit-identical to the brute-force
+/// oracle, while HNSW traffic interleaves on the other pool.
+#[test]
+fn coordinator_serves_through_sharded_pool_end_to_end() {
+    use molfpga::coordinator::batcher::BatchPolicy;
+    use molfpga::coordinator::metrics::Metrics;
+    use molfpga::coordinator::{EnginePool, Query, QueryMode, Router, ShardedEnginePool};
+    use molfpga::shard::{PartitionPolicy, ShardedDatabase};
+    let db = Arc::new(Database::synthesize(4_000, &ChemblModel::default(), 71));
+    let metrics = Arc::new(Metrics::new());
+    let sharded = Arc::new(ShardedDatabase::partition(
+        db.clone(),
+        4,
+        PartitionPolicy::PopcountStriped,
+    ));
+    // m=1, cutoff 0 ⇒ each shard engine is exact over its slice.
+    let ex = Arc::new(ShardedEnginePool::new(
+        "it-shard",
+        &sharded,
+        32,
+        metrics.clone(),
+        |_si, shard_db| NativeExhaustive::factory(shard_db, 1, 0.0),
+    ));
+    let graph = NativeHnsw::build_graph(&db, 6, 48, 3);
+    let dbc = db.clone();
+    let ap = Arc::new(EnginePool::new("it-shard-ap", 1, 32, metrics.clone(), move |_| {
+        NativeHnsw::factory(dbc.clone(), graph.clone(), 48)
+    }));
+    let router = Router::new(
+        ex,
+        ap,
+        BatchPolicy { max_batch: 8, max_wait: std::time::Duration::from_millis(1) },
+        metrics.clone(),
+    );
+    let brute = BruteForceIndex::new(db.clone());
+    let queries = db.sample_queries(30, 77);
+    let mut rxs = Vec::new();
+    for (i, q) in queries.iter().enumerate() {
+        let mode = if i % 3 == 2 { QueryMode::Approximate } else { QueryMode::Exhaustive };
+        rxs.push((i, mode, router.submit(Query::new(i as u64, q.clone(), 5, mode))));
+    }
+    let mut exact_served = 0;
+    for (i, mode, rx) in rxs {
+        let r = rx.recv_timeout(std::time::Duration::from_secs(60)).expect("response");
+        let truth = brute.search(&queries[i], 5);
+        match mode {
+            QueryMode::Exhaustive => {
+                assert_eq!(r.hits.len(), truth.len());
+                for (a, b) in r.hits.iter().zip(&truth) {
+                    assert_eq!(
+                        (a.id, a.score),
+                        (b.id, b.score),
+                        "sharded pool must return exact global top-k (query {i})"
+                    );
+                }
+                exact_served += 1;
+            }
+            _ => {
+                let rec = recall_at_k(&r.hits, &truth, 5);
+                assert!(rec >= 0.4, "hnsw interleaved recall {rec}");
+            }
+        }
+    }
+    assert_eq!(exact_served, 20);
+    assert_eq!(metrics.snapshot().completed, 30);
+    router.shutdown();
+}
+
 /// Hardware model consistency across the whole sweep surface: every Fig. 7
 /// point must respect the bandwidth wall and the monotonicities the paper
 /// reports.

@@ -1,0 +1,222 @@
+//! Minimal offline subset of the `anyhow` crate (see `../README.md`).
+//!
+//! Implements the surface this repository uses:
+//!
+//! * [`Error`] — an opaque error carrying a message and a context chain.
+//! * [`Result`] — `std::result::Result` with `Error` as the default error.
+//! * [`anyhow!`] / [`bail!`] — ad-hoc error construction.
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option`, prepending context exactly like upstream anyhow.
+//!
+//! Formatting matches upstream conventions: `{}` prints the outermost
+//! message, `{:#}` prints the whole chain separated by `": "`, and `{:?}`
+//! prints the message followed by a `Caused by:` list.
+
+use std::fmt;
+
+/// Opaque dynamic error: a cause chain of rendered messages, outermost
+/// context first.
+pub struct Error {
+    /// `chain[0]` is the outermost message; later entries are causes.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Self { chain: vec![message.to_string()] }
+    }
+
+    /// Prepend a context message (what `.context(..)` does).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The cause chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+
+    /// Root cause (innermost message).
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}`: the full chain on one line.
+            f.write_str(&self.chain.join(": "))
+        } else {
+            f.write_str(self.chain.first().map(|s| s.as_str()).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.first().map(|s| s.as_str()).unwrap_or(""))?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Any standard error converts via `?` (upstream-compatible: `Error` itself
+/// does not implement `std::error::Error`, so the impls do not overlap).
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Self { chain }
+    }
+}
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string or displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+}
+
+/// Early-return with an ad-hoc error.
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Context extension for `Result` and `Option`.
+pub trait Context<T, E> {
+    /// Wrap the error with a context message.
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error>;
+
+    /// Wrap the error with a lazily evaluated context message.
+    fn with_context<C: fmt::Display + Send + Sync + 'static, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T, Error>;
+}
+
+impl<T, E: std::error::Error + Send + Sync + 'static> Context<T, E> for std::result::Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| Error::from(e).context(context))
+    }
+
+    fn with_context<C: fmt::Display + Send + Sync + 'static, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T, Error> {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+impl<T> Context<T, Error> for std::result::Result<T, Error> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.context(context))
+    }
+
+    fn with_context<C: fmt::Display + Send + Sync + 'static, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T, Error> {
+        self.map_err(|e| e.context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display + Send + Sync + 'static, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert_eq!(format!("{e}"), "missing file");
+    }
+
+    #[test]
+    fn context_chains_and_formats() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("loading database").unwrap_err();
+        assert_eq!(format!("{e}"), "loading database");
+        assert_eq!(format!("{e:#}"), "loading database: missing file");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by:"), "{dbg}");
+        assert_eq!(e.root_cause(), "missing file");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("row out of range").unwrap_err();
+        assert_eq!(format!("{e}"), "row out of range");
+        assert_eq!(Some(7u32).context("unused").unwrap(), 7);
+    }
+
+    #[test]
+    fn macros() {
+        let e = anyhow!("bad m={}", 3);
+        assert_eq!(format!("{e}"), "bad m=3");
+        fn f() -> Result<()> {
+            bail!("nope");
+        }
+        assert_eq!(format!("{}", f().unwrap_err()), "nope");
+        let from_display = anyhow!(io_err());
+        assert_eq!(format!("{from_display}"), "missing file");
+    }
+
+    #[test]
+    fn with_context_lazy() {
+        let ok: std::result::Result<u32, std::io::Error> = Ok(5);
+        // The closure must not run on the Ok path.
+        let v = ok
+            .with_context(|| -> String { panic!("must not evaluate") })
+            .unwrap();
+        assert_eq!(v, 5);
+        let err: std::result::Result<u32, std::io::Error> = Err(io_err());
+        let e = err.with_context(|| format!("query {}", 9)).unwrap_err();
+        assert_eq!(format!("{e:#}"), "query 9: missing file");
+    }
+}
