@@ -1,0 +1,122 @@
+//! Bench: shard-parallel HNSW — the recall-vs-QPS-vs-shard-count surface
+//! of the approximate engine (per-shard sub-graphs, union merge), side by
+//! side with the multi-traversal-engine cycle projection on the same
+//! measured work.
+//!
+//! Emits `BENCH_hnsw_sharded.json` (one document, `util::minijson`) so the
+//! sharded-HNSW trajectory is tracked from this PR onward, plus the usual
+//! per-bench lines in `results/bench_hnsw_sharded.jsonl`. Acceptance bar
+//! carried by the sweep: recall ≥ 0.85 at ef=64 for every shard count.
+
+use molfpga::coordinator::backend::NativeHnsw;
+use molfpga::coordinator::metrics::Metrics;
+use molfpga::coordinator::{Query, QueryMode, ShardedEnginePool};
+use molfpga::exp::hnsw_shard_scaling;
+use molfpga::fingerprint::{ChemblModel, Database};
+use molfpga::hnsw::{HnswParams, ShardedHnsw};
+use molfpga::shard::{PartitionPolicy, ShardedDatabase};
+use molfpga::util::bench::{black_box, Bencher};
+use molfpga::util::minijson::Json;
+use std::sync::Arc;
+
+fn main() {
+    let mut b = Bencher::new();
+    let n: usize = std::env::var("MOLFPGA_BENCH_N")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(20_000);
+    let (k, ef) = (10usize, 64usize);
+    let params = HnswParams::new(8, 96, 7);
+    eprintln!("[bench_hnsw_sharded] db n={n} k={k} ef={ef}");
+    let db = Arc::new(Database::synthesize(n, &ChemblModel::default(), 42));
+    let queries = db.sample_queries(24, 7);
+
+    // The sweep: recall, wall-clock QPS, aggregate traversal work, and the
+    // traversal simulator's projection at every shard count.
+    let shard_counts = [1usize, 2, 4, 8];
+    let sweep = hnsw_shard_scaling(
+        &db,
+        &queries,
+        k,
+        ef,
+        &params,
+        &shard_counts,
+        PartitionPolicy::PopcountStriped,
+    );
+    let mut points = Vec::new();
+    for p in &sweep {
+        println!(
+            "hnsw_sharded/s={}/n={n}: recall {:.3}, {:.0} QPS ({:.2}x), \
+             sim {:.0} QPS ({:.2}x), {:.0} evals/query",
+            p.shards,
+            p.recall,
+            p.measured_qps,
+            p.measured_speedup,
+            p.sim_qps,
+            p.sim_speedup,
+            p.mean_distance_evals
+        );
+        points.push(
+            Json::obj()
+                .set("shards", p.shards)
+                .set("recall", p.recall)
+                .set("qps", p.measured_qps)
+                .set("speedup", p.measured_speedup)
+                .set("sim_qps", p.sim_qps)
+                .set("sim_speedup", p.sim_speedup)
+                .set("mean_distance_evals", p.mean_distance_evals)
+                .set("mean_hops", p.mean_hops),
+        );
+    }
+
+    // One s=4 build shared by the two latency points below.
+    {
+        let sharded = Arc::new(ShardedDatabase::partition(
+            db.clone(),
+            4,
+            PartitionPolicy::PopcountStriped,
+        ));
+        let idx = ShardedHnsw::build(sharded.clone(), params.clone());
+
+        // Per-query latency of the shard-parallel index (the Bencher's
+        // calibrated loop, comparable with bench_hnsw lines).
+        let mut qi = 0;
+        b.bench(&format!("sharded_hnsw_knn/s=4/ef={ef}/n={n}"), || {
+            black_box(idx.knn(&queries[qi % queries.len()], k, ef));
+            qi += 1;
+        });
+
+        // Dispatch-layer point: the shard pool end-to-end (per-shard
+        // NativeHnsw engines + channels + merge tree + response fan-in) —
+        // the `serve --mode hnsw --shards 4` serving path.
+        let graphs: Vec<_> = idx.graphs().to_vec();
+        let metrics = Arc::new(Metrics::new());
+        let pool =
+            ShardedEnginePool::new("bench", &sharded, 256, metrics, move |si, shard_db| {
+                NativeHnsw::factory(shard_db, graphs[si].clone(), ef)
+            });
+        let q = queries[0].clone();
+        b.bench(&format!("sharded_hnsw_pool_roundtrip/s=4/n={n}"), || {
+            let rx = pool
+                .submit(Query::new(0, q.clone(), k, QueryMode::Approximate))
+                .expect("submit");
+            black_box(rx.recv().unwrap());
+        });
+        pool.shutdown();
+    }
+
+    let doc = Json::obj()
+        .set("bench", "hnsw_sharded")
+        .set("n", n)
+        .set("k", k)
+        .set("ef", ef)
+        .set("hnsw_m", 8usize)
+        .set("policy", "popcount-striped")
+        .set("points", Json::Arr(points));
+    if let Err(e) = std::fs::write("BENCH_hnsw_sharded.json", doc.to_string() + "\n") {
+        eprintln!("[bench_hnsw_sharded] could not write BENCH_hnsw_sharded.json: {e}");
+    } else {
+        println!("[bench_hnsw_sharded] wrote BENCH_hnsw_sharded.json");
+    }
+    let _ = b.write_jsonl(std::path::Path::new("results/bench_hnsw_sharded.jsonl"));
+}

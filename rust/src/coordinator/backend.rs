@@ -11,13 +11,17 @@
 //!   cross-shard merge (the paper's multi-engine structure in one
 //!   backend).
 //! * [`PjrtExhaustive`] — the AOT-artifact engine (`runtime::TfcEngine`).
-//! * [`NativeHnsw`] — HNSW traversal with native TFC.
+//! * [`NativeHnsw`] — HNSW traversal with native TFC (also the per-shard
+//!   engine a `ShardedEnginePool` drives in `--mode hnsw` serving).
+//! * [`ShardedHnswBackend`] — shard-parallel HNSW: per-shard sub-graphs
+//!   traversed in parallel, partials reduced through the cross-shard
+//!   merge tree (docs/hnsw_sharding.md).
 //!
 //! All backends answer through the same `SearchBackend` trait so the
 //! router/batcher/pool stack is engine-agnostic.
 
 use crate::fingerprint::{Database, Fingerprint};
-use crate::hnsw::{HnswBuilder, HnswGraph, HnswParams, Searcher};
+use crate::hnsw::{HnswBuilder, HnswGraph, HnswParams, Searcher, ShardedHnsw};
 use crate::index::{BitBoundFoldingIndex, SearchIndex, TwoStageConfig};
 use crate::runtime::{ArtifactSet, PjRt, TfcEngine};
 use crate::shard::{ShardedDatabase, ShardedSearchIndex};
@@ -26,6 +30,11 @@ use anyhow::Result;
 use std::sync::Arc;
 
 /// A query-serving engine living on one worker thread.
+///
+/// Contract: a degenerate `k = 0` query is answered with an empty result,
+/// never a panic — a panicking backend kills its pool worker, and the
+/// serving layer must survive malformed requests (the coordinator also
+/// rejects them at the request boundary; this is defense in depth).
 pub trait SearchBackend {
     fn name(&self) -> &'static str;
     /// Serve one query.
@@ -64,6 +73,9 @@ impl SearchBackend for NativeExhaustive {
     }
 
     fn search(&mut self, fp: &Fingerprint, k: usize) -> Result<Vec<Scored>> {
+        if k == 0 {
+            return Ok(Vec::new()); // TopKMerge::new(0) would assert
+        }
         Ok(self.index.search(fp, k))
     }
 }
@@ -105,6 +117,9 @@ impl SearchBackend for ShardedExhaustive {
     }
 
     fn search(&mut self, fp: &Fingerprint, k: usize) -> Result<Vec<Scored>> {
+        if k == 0 {
+            return Ok(Vec::new());
+        }
         Ok(self.index.search(fp, k))
     }
 }
@@ -132,11 +147,17 @@ impl SearchBackend for PjrtExhaustive {
     }
 
     fn search(&mut self, fp: &Fingerprint, k: usize) -> Result<Vec<Scored>> {
+        if k == 0 {
+            return Ok(Vec::new());
+        }
         let (hits, _stats) = self.engine.search(fp, k)?;
         Ok(hits)
     }
 
     fn search_batch(&mut self, fps: &[&Fingerprint], k: usize) -> Result<Vec<Vec<Scored>>> {
+        if k == 0 {
+            return Ok(vec![Vec::new(); fps.len()]);
+        }
         let owned: Vec<Fingerprint> = fps.iter().map(|f| (*f).clone()).collect();
         Ok(self.engine.search_batch(&owned, k)?.into_iter().map(|(h, _)| h).collect())
     }
@@ -172,8 +193,58 @@ impl SearchBackend for NativeHnsw {
     }
 
     fn search(&mut self, fp: &Fingerprint, k: usize) -> Result<Vec<Scored>> {
+        // k = 0 flows through: Searcher::knn answers degenerate requests
+        // with an empty result instead of asserting.
         let mut searcher = Searcher::new(&self.graph, &self.db);
         let (hits, _stats) = searcher.knn(fp, k, self.ef.max(k));
+        Ok(hits)
+    }
+}
+
+/// Shard-parallel HNSW backend: per-shard sub-graphs traversed in
+/// parallel, partials reduced through the cross-shard merge tree
+/// ([`crate::hnsw::ShardedHnsw`]).
+///
+/// Like [`ShardedExhaustive`], the per-shard graph set is built once and
+/// `Arc`-shared across pool workers (read-only at query time; only the
+/// per-query `Searcher` scratch is transient). Two deployment shapes use
+/// it:
+///
+/// * behind an [`super::EnginePool`] — every worker fans one query out
+///   across all shards inside the backend (this type), or
+/// * decomposed onto a [`super::pool::ShardedEnginePool`] — one
+///   [`NativeHnsw`] per shard via [`NativeHnsw::factory`] with
+///   [`ShardedHnsw::graph`]'s sub-graph, the pool owning remap + merge
+///   (what `molfpga serve --mode hnsw --shards N` runs).
+pub struct ShardedHnswBackend {
+    index: Arc<ShardedHnsw>,
+    ef: usize,
+}
+
+impl ShardedHnswBackend {
+    /// Partition-and-build over `sharded` at the given HNSW parameters.
+    pub fn build(sharded: Arc<ShardedDatabase>, params: HnswParams, ef: usize) -> Self {
+        Self { index: Arc::new(ShardedHnsw::build(sharded, params)), ef }
+    }
+
+    /// The shared shard-parallel graph set.
+    pub fn index(&self) -> &Arc<ShardedHnsw> {
+        &self.index
+    }
+
+    /// Factory handing the *same* graph set to every pool worker.
+    pub fn factory(index: Arc<ShardedHnsw>, ef: usize) -> BackendFactory {
+        Box::new(move || Ok(Box::new(Self { index, ef }) as Box<dyn SearchBackend>))
+    }
+}
+
+impl SearchBackend for ShardedHnswBackend {
+    fn name(&self) -> &'static str {
+        "sharded-hnsw"
+    }
+
+    fn search(&mut self, fp: &Fingerprint, k: usize) -> Result<Vec<Scored>> {
+        let (hits, _stats) = self.index.knn(fp, k, self.ef.max(k));
         Ok(hits)
     }
 }
@@ -232,5 +303,66 @@ mod tests {
             }
         }
         assert_eq!(index.expected_candidates(&db.fps[0]), db.len());
+    }
+
+    #[test]
+    fn sharded_hnsw_backend_recall_and_global_ids() {
+        use crate::shard::PartitionPolicy;
+        let db = Arc::new(Database::synthesize(2000, &ChemblModel::default(), 29));
+        let brute = BruteForceIndex::new(db.clone());
+        let sharded = Arc::new(ShardedDatabase::partition(
+            db.clone(),
+            4,
+            PartitionPolicy::RoundRobin,
+        ));
+        let backend = ShardedHnswBackend::build(sharded, HnswParams::new(8, 48, 5), 64);
+        let index = backend.index().clone();
+        // Two workers sharing the same graph set via the factory.
+        let mut w1 = (ShardedHnswBackend::factory(index.clone(), 64))().unwrap();
+        let mut w2 = (ShardedHnswBackend::factory(index, 64))().unwrap();
+        for q in db.sample_queries(4, 31) {
+            let truth = brute.search(&q, 10);
+            let a = w1.search(&q, 10).unwrap();
+            let b = w2.search(&q, 10).unwrap();
+            assert_eq!(
+                a.iter().map(|s| s.id).collect::<Vec<_>>(),
+                b.iter().map(|s| s.id).collect::<Vec<_>>(),
+                "workers share one deterministic graph set"
+            );
+            let rec = crate::index::recall_at_k(&a, &truth, 10);
+            assert!(rec >= 0.8, "sharded hnsw backend recall {rec}");
+            for s in &a {
+                assert!((s.id as usize) < db.len(), "ids must be global rows");
+            }
+        }
+    }
+
+    #[test]
+    fn all_backends_answer_k0_with_empty_not_panic() {
+        use crate::shard::PartitionPolicy;
+        let db = Arc::new(Database::synthesize(400, &ChemblModel::default(), 3));
+        let q = db.fps[0].clone();
+        let graph = NativeHnsw::build_graph(&db, 6, 32, 1);
+        let sharded = Arc::new(ShardedDatabase::partition(
+            db.clone(),
+            2,
+            PartitionPolicy::RoundRobin,
+        ));
+        let cfg = TwoStageConfig { m: 1, cutoff: 0.0, ..TwoStageConfig::default() };
+        let mut backends: Vec<Box<dyn SearchBackend>> = vec![
+            Box::new(NativeExhaustive::new(db.clone(), 1, 0.0)),
+            Box::new(ShardedExhaustive::build(sharded.clone(), cfg)),
+            Box::new(NativeHnsw::new(db.clone(), graph, 0)),
+            Box::new(ShardedHnswBackend::build(sharded, HnswParams::new(4, 16, 1), 0)),
+        ];
+        for be in &mut backends {
+            let hits = be.search(&q, 0).expect("k=0 must not error");
+            assert!(hits.is_empty(), "{}: k=0 answers empty", be.name());
+            let batch = be.search_batch(&[&q, &q], 0).expect("batched k=0");
+            assert!(batch.iter().all(Vec::is_empty), "{}", be.name());
+            // The backend must still serve real queries afterwards.
+            let ok = be.search(&q, 3).unwrap();
+            assert!(!ok.is_empty(), "{}: still alive after k=0", be.name());
+        }
     }
 }

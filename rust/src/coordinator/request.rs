@@ -27,6 +27,10 @@ impl std::str::FromStr for QueryMode {
     }
 }
 
+/// Largest `k` the serving layer accepts. Backstop against requests that
+/// would size per-query sort state absurdly; real screens ask for tens.
+pub const MAX_K: usize = 10_000;
+
 /// One similarity-search request.
 #[derive(Debug, Clone)]
 pub struct Query {
@@ -44,6 +48,24 @@ impl Query {
     pub fn new(id: u64, fingerprint: Fingerprint, k: usize, mode: QueryMode) -> Self {
         Self { id, fingerprint, k, mode, recall_target: 0.9, submitted: Instant::now() }
     }
+
+    /// Request-boundary validation: a malformed query must be rejected
+    /// with an error *here*, before it reaches a pool — `k = 0` used to
+    /// flow into `RegisterPq::new(0)` / `TopKMerge::new(0)` asserts inside
+    /// a worker thread, killing the worker instead of failing the request.
+    /// (Backends additionally tolerate `k = 0` as defense in depth.)
+    pub fn validate(&self) -> Result<(), String> {
+        if self.k == 0 {
+            return Err("k must be at least 1".into());
+        }
+        if self.k > MAX_K {
+            return Err(format!("k {} exceeds the maximum {MAX_K}", self.k));
+        }
+        if !self.recall_target.is_finite() || !(0.0..=1.0).contains(&self.recall_target) {
+            return Err(format!("recall target {} outside [0, 1]", self.recall_target));
+        }
+        Ok(())
+    }
 }
 
 /// Search response.
@@ -60,6 +82,17 @@ pub struct QueryResult {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn validation_rejects_degenerate_requests() {
+        let fp = Fingerprint::zero_full();
+        assert!(Query::new(1, fp.clone(), 0, QueryMode::Exhaustive).validate().is_err());
+        assert!(Query::new(2, fp.clone(), MAX_K + 1, QueryMode::Auto).validate().is_err());
+        let mut bad_target = Query::new(3, fp.clone(), 5, QueryMode::Auto);
+        bad_target.recall_target = 1.5;
+        assert!(bad_target.validate().is_err());
+        assert!(Query::new(4, fp, 1, QueryMode::Approximate).validate().is_ok());
+    }
 
     #[test]
     fn mode_parsing() {

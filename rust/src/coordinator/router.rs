@@ -58,12 +58,32 @@ impl Router {
         }
     }
 
-    /// Submit a query; the result arrives on the receiver (closed channel
-    /// = busy/rejected).
-    pub fn submit(&self, q: Query) -> Receiver<QueryResult> {
-        match self.route_of(&q) {
+    /// Validate at the request boundary, then submit. A malformed query
+    /// (k = 0, k > [`super::request::MAX_K`], recall target outside
+    /// [0, 1]) is rejected with an error message here instead of reaching
+    /// a pool worker — the server turns the message into an `ERR`
+    /// response. The result arrives on the receiver (closed channel =
+    /// busy/rejected).
+    pub fn try_submit(&self, q: Query) -> Result<Receiver<QueryResult>, String> {
+        q.validate()?;
+        Ok(match self.route_of(&q) {
             QueryMode::Exhaustive => self.exhaustive.submit(q),
             QueryMode::Approximate | QueryMode::Auto => self.approximate.submit(q),
+        })
+    }
+
+    /// Submit a query; the result arrives on the receiver (closed channel
+    /// = busy/rejected *or* failed validation — use [`Router::try_submit`]
+    /// to distinguish).
+    pub fn submit(&self, q: Query) -> Receiver<QueryResult> {
+        match self.try_submit(q) {
+            Ok(rx) => rx,
+            Err(_) => {
+                // Validation failure: hand back a closed channel so callers
+                // of the infallible API observe a clean rejection.
+                let (_tx, rx) = std::sync::mpsc::channel();
+                rx
+            }
         }
     }
 
@@ -116,6 +136,25 @@ mod tests {
             .recv_timeout(Duration::from_secs(30))
             .unwrap();
         assert_eq!(r2.backend, "native-hnsw");
+        router.shutdown();
+    }
+
+    #[test]
+    fn malformed_queries_rejected_at_the_boundary() {
+        let (db, router) = mk_router();
+        let fp = db.sample_queries(1, 3)[0].clone();
+        let err = router.try_submit(Query::new(1, fp.clone(), 0, QueryMode::Exhaustive));
+        assert!(err.is_err(), "k=0 must be rejected before any pool sees it");
+        // The infallible API reports the same rejection as a closed channel.
+        let rx = router.submit(Query::new(2, fp.clone(), 0, QueryMode::Approximate));
+        assert!(rx.recv_timeout(Duration::from_secs(5)).is_err());
+        // …and the pools are untouched: a well-formed query still answers.
+        let ok = router
+            .try_submit(Query::new(3, fp, 5, QueryMode::Exhaustive))
+            .expect("valid query accepted")
+            .recv_timeout(Duration::from_secs(30))
+            .unwrap();
+        assert_eq!(ok.hits.len(), 5);
         router.shutdown();
     }
 

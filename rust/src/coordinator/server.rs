@@ -153,8 +153,8 @@ fn dispatch_line(line: &str, router: &Router, qid: &mut u64) -> Option<String> {
         Some("QUIT") => None,
         Some("SEARCH") => {
             let k: usize = match parts.next().and_then(|s| s.parse().ok()) {
-                Some(k) if k > 0 => k,
-                _ => return Some("ERR bad k".into()),
+                Some(k) => k,
+                None => return Some("ERR bad k".into()),
             };
             let mode: QueryMode = match parts.next().map(str::parse) {
                 Some(Ok(m)) => m,
@@ -166,7 +166,12 @@ fn dispatch_line(line: &str, router: &Router, qid: &mut u64) -> Option<String> {
                 None => return Some("ERR missing fingerprint".into()),
             };
             *qid += 1;
-            let rx = router.submit(Query::new(*qid, fp, k, mode));
+            // Request-boundary validation: a degenerate k (0, or beyond
+            // MAX_K) is an ERR response, never a dead pool worker.
+            let rx = match router.try_submit(Query::new(*qid, fp, k, mode)) {
+                Ok(rx) => rx,
+                Err(e) => return Some(format!("ERR {e}")),
+            };
             match rx.recv_timeout(std::time::Duration::from_secs(60)) {
                 Ok(result) => {
                     let body: Vec<String> = result
@@ -299,6 +304,13 @@ mod tests {
 
         // Protocol errors are reported, not fatal.
         assert!(client.request("SEARCH x y z").unwrap().starts_with("ERR"));
+        // Degenerate k=0 gets an error response — and the workers survive
+        // to serve the next query.
+        let hex = fingerprint_to_hex(&db.fps[target]);
+        assert!(client.request(&format!("SEARCH 0 exact {hex}")).unwrap().starts_with("ERR"));
+        assert!(client.request(&format!("SEARCH 0 hnsw {hex}")).unwrap().starts_with("ERR"));
+        let hits3 = client.search(&db.fps[target], 5, "exact").unwrap();
+        assert_eq!(hits3[0].0, target as u64, "pool still serving after k=0 requests");
         assert!(client.request("STATS").unwrap().starts_with("OK"));
 
         assert_eq!(client.request("QUIT").ok(), Some(String::new()));

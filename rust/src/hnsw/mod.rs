@@ -16,6 +16,9 @@
 //!   candidate set C and result set M held in
 //!   [`crate::topk::RegisterPq`]s — the register-array priority queues of
 //!   module ④).
+//! * [`sharded`] — per-shard sub-graphs over a [`crate::shard`] partition,
+//!   traversed shard-parallel and reduced through the cross-shard merge
+//!   tree: the multi-traversal-engine deployment (docs/hnsw_sharding.md).
 //!
 //! Distance convention: the graph stores *similarities* (Tanimoto, higher =
 //! closer); `distance(a,b) = 1 − S(a,b)` where the algorithms' comparisons
@@ -27,11 +30,13 @@ pub mod build;
 pub mod graph;
 pub mod parallel;
 pub mod search;
+pub mod sharded;
 
 pub use build::HnswBuilder;
 pub use parallel::ParallelBuild;
 pub use graph::HnswGraph;
 pub use search::{SearchStats, Searcher};
+pub use sharded::ShardedHnsw;
 
 /// HNSW construction/search hyperparameters (paper notation).
 #[derive(Debug, Clone)]

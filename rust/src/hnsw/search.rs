@@ -109,7 +109,10 @@ impl<'a> Searcher<'a> {
     }
 
     /// Algorithm 2: ef-bounded best-first search on `layer` (normally the
-    /// base layer). Returns up to `ef` results, best-first.
+    /// base layer). Returns up to `ef` results, best-first. `ef = 0` is a
+    /// degenerate request and returns no results (the hardware would not
+    /// instantiate zero-capacity register arrays; [`RegisterPq::new`]
+    /// asserts the same).
     pub fn search_layer_base(
         &mut self,
         q: &Fingerprint,
@@ -119,10 +122,17 @@ impl<'a> Searcher<'a> {
         layer: usize,
         stats: &mut SearchStats,
     ) -> Vec<Scored> {
+        if ef == 0 {
+            return Vec::new();
+        }
         self.begin_query();
         // C: candidates (pop closest); M: results (evict furthest). Both
-        // are the register-array PQs of module ④, sized ef.
-        let mut c = RegisterPq::new(ef.max(eps.len()));
+        // are the register-array PQs of module ④, sized exactly ef (paper:
+        // "both of the priority queues are sized as ef") — so the
+        // `RegisterPq::comparators(ef)` resource estimate is what this
+        // search actually exercises. With more than ef entry points the
+        // queues retain the best ef seeds.
+        let mut c = RegisterPq::new(ef);
         let mut m = RegisterPq::new(ef);
         for &ep in eps {
             if !self.mark_visited(ep) {
@@ -130,9 +140,14 @@ impl<'a> Searcher<'a> {
             }
             let s = self.similarity(q, qc, ep, stats);
             let sc = Scored::new(s, ep as u64);
-            let _ = c.push(sc);
-            let _ = m.push(sc);
-            stats.pq_ops += 2;
+            // Only accepted enqueues are hardware queue operations; a
+            // rejected push never enters the register array.
+            if c.push(sc).is_ok() {
+                stats.pq_ops += 1;
+            }
+            if m.push(sc).is_ok() {
+                stats.pq_ops += 1;
+            }
         }
         while let Some(top) = c.pop_best() {
             stats.pq_ops += 1;
@@ -160,9 +175,15 @@ impl<'a> Searcher<'a> {
                     sc.beats(&f)
                 };
                 if keep {
-                    let _ = c.push(sc);
-                    let _ = m.push(sc); // RegisterPq evicts the furthest itself
-                    stats.pq_ops += 2;
+                    // RegisterPq evicts the furthest itself; count only the
+                    // enqueues the queues accept (C may reject an entry M
+                    // keeps once their contents diverge).
+                    if c.push(sc).is_ok() {
+                        stats.pq_ops += 1;
+                    }
+                    if m.push(sc).is_ok() {
+                        stats.pq_ops += 1;
+                    }
                 }
             }
         }
@@ -172,8 +193,15 @@ impl<'a> Searcher<'a> {
     /// Full KNN search (paper Fig. 5 dataflow): descend Algorithm 1 through
     /// the upper layers, run Algorithm 2 on the base layer with `ef`, then
     /// final top-k of the ef returned results.
+    ///
+    /// Degenerate requests are answered, not asserted: `k = 0` (and with it
+    /// `k = 0, ef = 0`, which would otherwise reach `RegisterPq::new(0)`
+    /// and kill the calling worker thread) returns an empty result set.
     pub fn knn(&mut self, q: &Fingerprint, k: usize, ef: usize) -> (Vec<Scored>, SearchStats) {
         let mut stats = SearchStats::default();
+        if k == 0 {
+            return (Vec::new(), stats);
+        }
         let Some((mut ep, top_layer)) = self.graph.entry_point() else {
             return (Vec::new(), stats);
         };
@@ -280,6 +308,100 @@ mod tests {
         let mut s = Searcher::new(&graph, &db);
         let (res, _) = s.knn(&db.fps[0].clone(), 5, 16);
         assert!(res.is_empty());
+    }
+
+    #[test]
+    fn degenerate_requests_return_empty_not_panic() {
+        // k=0 (alone and together with ef=0) used to reach
+        // RegisterPq::new(0), whose `assert!(cap > 0)` killed the worker
+        // thread serving the query. They must answer with an empty result.
+        let (db, graph) = small_world();
+        let mut searcher = Searcher::new(&graph, &db);
+        let q = db.fps[5].clone();
+        let qc = q.count_ones();
+        for (k, ef) in [(0usize, 0usize), (0, 32), (0, 1)] {
+            let (res, stats) = searcher.knn(&q, k, ef);
+            assert!(res.is_empty(), "k={k} ef={ef} must return nothing");
+            assert_eq!(stats.pq_ops, 0, "no queue was built for k={k} ef={ef}");
+        }
+        // ef=0 with k>0 is clamped up by knn (ef.max(k)); the raw layer
+        // search treats ef=0 as "no capacity" and returns nothing.
+        let mut stats = SearchStats::default();
+        let res = searcher.search_layer_base(&q, qc, &[0], 0, 0, &mut stats);
+        assert!(res.is_empty());
+        assert_eq!(stats.distance_evals, 0);
+        // And a plain k>0, ef=0 query still answers k results.
+        let (res, _) = searcher.knn(&q, 3, 0);
+        assert_eq!(res.len(), 3);
+    }
+
+    /// `pq_ops` must count exactly the queue operations the register
+    /// arrays accept: one per successful enqueue (C and M separately), one
+    /// per dequeue. A shadow run of Algorithm 2 over the same graph with
+    /// explicit accept-counting must reproduce the stat bit for bit —
+    /// rejected pushes (full queue, entry not beating the tail) are not
+    /// hardware operations and must not be charged.
+    #[test]
+    fn pq_ops_counts_only_accepted_queue_ops() {
+        let (db, graph) = small_world();
+        let mut searcher = Searcher::new(&graph, &db);
+        let q = db.sample_queries(1, 41)[0].clone();
+        let qc = q.count_ones();
+        // Descend to the base-layer entry point the same way knn does.
+        let (ep, top_layer) = graph.entry_point().unwrap();
+        let mut ep = ep;
+        let mut descend_stats = SearchStats::default();
+        for layer in (1..=top_layer).rev() {
+            let (best, _) = searcher.search_layer_top(&q, qc, ep, layer, &mut descend_stats);
+            ep = best;
+        }
+        for ef in [1usize, 4, 16, 64] {
+            let mut stats = SearchStats::default();
+            let got = searcher.search_layer_base(&q, qc, &[ep], ef, 0, &mut stats);
+
+            // Shadow Algorithm 2 with explicit operation accounting.
+            let mut c = RegisterPq::new(ef);
+            let mut m = RegisterPq::new(ef);
+            let mut visited = std::collections::HashSet::new();
+            let mut ops = 0usize;
+            let mut evals = 0usize;
+            let sim = |node: u32, evals: &mut usize| {
+                *evals += 1;
+                q.tanimoto_with_counts(&db.fps[node as usize], qc, db.counts[node as usize])
+            };
+            visited.insert(ep);
+            let seed = Scored::new(sim(ep, &mut evals), ep as u64);
+            ops += usize::from(c.push(seed).is_ok());
+            ops += usize::from(m.push(seed).is_ok());
+            while let Some(top) = c.pop_best() {
+                ops += 1;
+                if m.is_full() && m.peek_worst().unwrap().beats(&top) {
+                    break;
+                }
+                let neighbors: Vec<u32> = graph.layer(0).neighbors(top.id as u32).collect();
+                for e in neighbors {
+                    if !visited.insert(e) {
+                        continue;
+                    }
+                    let sc = Scored::new(sim(e, &mut evals), e as u64);
+                    let keep = !m.is_full() || sc.beats(&m.peek_worst().unwrap());
+                    if keep {
+                        ops += usize::from(c.push(sc).is_ok());
+                        ops += usize::from(m.push(sc).is_ok());
+                    }
+                }
+            }
+            assert_eq!(stats.pq_ops, ops, "ef={ef}: pq_ops must equal accepted ops");
+            assert_eq!(stats.distance_evals, evals, "ef={ef}: same traversal");
+            assert_eq!(
+                got,
+                m.into_sorted(),
+                "ef={ef}: shadow must visit the identical result set"
+            );
+            // The stat can never exceed what unconditional +2-per-candidate
+            // counting would have charged.
+            assert!(stats.pq_ops <= 3 * stats.distance_evals, "ef={ef}");
+        }
     }
 
     #[test]

@@ -1,0 +1,267 @@
+//! Shard-parallel HNSW — the approximate-search counterpart of the
+//! exhaustive shard stack (`crate::shard`, docs/hnsw_sharding.md).
+//!
+//! One HNSW sub-graph is built per [`ShardedDatabase`] slice (builds run in
+//! parallel; each shard's graph indexes *local* row ids). A query fans out
+//! across the shards: every shard runs the full Algorithm 1 + Algorithm 2
+//! traversal at the requested `ef` on its own sub-graph, its top-k partial
+//! is remapped to global ids through the shard layer's stable
+//! global↔local mapping, and the partials reduce through
+//! [`crate::topk::ShardMerge`]. The answer is therefore the **exact top-k
+//! of the union of per-shard approximate results**:
+//!
+//! * the merge itself loses nothing (any candidate surfaced by some shard
+//!   and globally top-k among surfaced candidates survives — the module ③
+//!   tree's exactness contract), and
+//! * recall can only be traded at the per-shard traversal, which searches
+//!   an n/s-node graph with the same `ef` — *more* aggregate exploration
+//!   (s × ef candidates) than one global graph, so recall at fixed `ef`
+//!   stays within a small ε of the unsharded graph (property-tested;
+//!   per-shard graph quality can still cost a little) and in practice
+//!   typically matches or exceeds it, while per-shard latency shrinks
+//!   with the logarithmically smaller graphs.
+//!
+//! This mirrors how the paper's multi-engine layout would host graph
+//! traversal: each traversal engine owns an HBM channel group holding one
+//! graph slice; partial result streams meet in the merge tree
+//! (`simulator::simulate_multi_traversal` prices that deployment).
+
+use super::{HnswBuilder, HnswGraph, HnswParams, Searcher, SearchStats};
+use crate::fingerprint::Fingerprint;
+use crate::shard::{ShardedDatabase, PARALLEL_MIN_SHARD_ROWS};
+use crate::topk::{Scored, ShardMerge};
+use std::sync::Arc;
+
+/// Per-shard HNSW graphs over a sharded database, searched shard-parallel
+/// with an exact cross-shard merge of the approximate partials.
+pub struct ShardedHnsw {
+    sharded: Arc<ShardedDatabase>,
+    graphs: Vec<Arc<HnswGraph>>,
+    params: HnswParams,
+    /// None = auto (fan out only when the largest shard clears
+    /// [`PARALLEL_MIN_SHARD_ROWS`]); Some(p) = forced by the caller.
+    parallel: Option<bool>,
+    max_shard_rows: usize,
+}
+
+impl ShardedHnsw {
+    /// Build one sub-graph per shard (builds run in parallel — graph
+    /// construction is by far the expensive part). Each shard draws its
+    /// layer-assignment stream from a seed derived from `params.seed` and
+    /// the shard index, so builds are deterministic per (partition, seed).
+    pub fn build(sharded: Arc<ShardedDatabase>, params: HnswParams) -> Self {
+        let graphs: Vec<Arc<HnswGraph>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = sharded
+                .shards()
+                .iter()
+                .enumerate()
+                .map(|(si, db)| {
+                    let db = db.clone();
+                    let mut p = params.clone();
+                    p.seed = shard_seed(params.seed, si);
+                    scope.spawn(move || Arc::new(HnswBuilder::new(p).build(&db)))
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("shard graph build")).collect()
+        });
+        let max_shard_rows = sharded.shards().iter().map(|d| d.len()).max().unwrap_or(0);
+        Self { sharded, graphs, params, parallel: None, max_shard_rows }
+    }
+
+    /// Force per-query thread fan-out on or off, overriding the automatic
+    /// size threshold (serial mode is what a one-worker-per-shard pool
+    /// wants; forced-parallel pins the code path for tests and benches).
+    pub fn with_parallel(mut self, parallel: bool) -> Self {
+        self.parallel = Some(parallel);
+        self
+    }
+
+    pub fn sharded(&self) -> &Arc<ShardedDatabase> {
+        &self.sharded
+    }
+
+    pub fn params(&self) -> &HnswParams {
+        &self.params
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.graphs.len()
+    }
+
+    /// Shard `i`'s sub-graph (node ids are shard-local rows) — the handle
+    /// a per-shard pool worker shares.
+    pub fn graph(&self, i: usize) -> &Arc<HnswGraph> {
+        &self.graphs[i]
+    }
+
+    pub fn graphs(&self) -> &[Arc<HnswGraph>] {
+        &self.graphs
+    }
+
+    /// Search one shard only; returns the partial top-k in **global** ids
+    /// plus that shard's traversal stats (what a shard worker computes
+    /// before the merge tree).
+    ///
+    /// Like [`crate::coordinator::backend::NativeHnsw`], this builds a
+    /// fresh [`Searcher`] (and its O(shard rows) visited scratch) per
+    /// call — `Searcher` borrows graph and database, so cross-query
+    /// scratch reuse from a shared `&self` needs `Searcher` to own its
+    /// handles, a refactor tracked in ROADMAP.md. Long-lived callers that
+    /// search one shard repeatedly should hold their own `Searcher` over
+    /// [`ShardedHnsw::graph`] to amortize via its epoch mechanism.
+    pub fn knn_shard(
+        &self,
+        si: usize,
+        q: &Fingerprint,
+        k: usize,
+        ef: usize,
+    ) -> (Vec<Scored>, SearchStats) {
+        let mut searcher = Searcher::new(&self.graphs[si], self.sharded.shard(si));
+        let (local, stats) = searcher.knn(q, k, ef);
+        (self.sharded.remap(si, local), stats)
+    }
+
+    /// Shard-parallel k-NN: every shard traverses at `ef`, partials merge
+    /// exactly. Returned stats are **aggregate work** across shards (the
+    /// quantity the hardware model charges); per-query latency follows the
+    /// slowest shard, which the simulator's multi-traversal mode prices.
+    ///
+    /// `k = 0` is answered with an empty result, matching
+    /// [`Searcher::knn`]'s degenerate-request contract.
+    pub fn knn(&self, q: &Fingerprint, k: usize, ef: usize) -> (Vec<Scored>, SearchStats) {
+        let mut total = SearchStats::default();
+        if k == 0 {
+            return (Vec::new(), total);
+        }
+        let mut merge = ShardMerge::new(k);
+        let fan_out = self.graphs.len() > 1
+            && self.parallel.unwrap_or(self.max_shard_rows >= PARALLEL_MIN_SHARD_ROWS);
+        let partials: Vec<(Vec<Scored>, SearchStats)> = if fan_out {
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = (0..self.graphs.len())
+                    .map(|si| scope.spawn(move || self.knn_shard(si, q, k, ef)))
+                    .collect();
+                handles.into_iter().map(|h| h.join().expect("shard search")).collect()
+            })
+        } else {
+            (0..self.graphs.len()).map(|si| self.knn_shard(si, q, k, ef)).collect()
+        };
+        for (partial, stats) in partials {
+            merge.push_partial(partial);
+            total.distance_evals += stats.distance_evals;
+            total.hops += stats.hops;
+            total.upper_steps += stats.upper_steps;
+            total.pq_ops += stats.pq_ops;
+        }
+        (merge.finish(), total)
+    }
+}
+
+/// Per-shard layer-assignment seed: decorrelate shard streams while
+/// keeping the whole build a pure function of (seed, partition).
+fn shard_seed(seed: u64, si: usize) -> u64 {
+    seed ^ (si as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(si as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fingerprint::{ChemblModel, Database};
+    use crate::index::{recall_at_k, BruteForceIndex, SearchIndex};
+    use crate::shard::PartitionPolicy;
+
+    fn db(n: usize, seed: u64) -> Arc<Database> {
+        Arc::new(Database::synthesize(n, &ChemblModel::default(), seed))
+    }
+
+    fn sharded_hnsw(database: &Arc<Database>, s: usize, policy: PartitionPolicy) -> ShardedHnsw {
+        let sharded = Arc::new(ShardedDatabase::partition(database.clone(), s, policy));
+        ShardedHnsw::build(sharded, HnswParams::new(8, 48, 7))
+    }
+
+    #[test]
+    fn self_query_finds_self_across_shards() {
+        let database = db(900, 3);
+        let idx = sharded_hnsw(&database, 4, PartitionPolicy::PopcountStriped);
+        for i in [0usize, 113, 500, 899] {
+            let (hits, _) = idx.knn(&database.fps[i], 1, 32);
+            assert_eq!(hits[0].id, i as u64, "self-query must return the global id");
+            assert!((hits[0].score - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn recall_tracks_unsharded_graph() {
+        let database = db(1200, 11);
+        let brute = BruteForceIndex::new(database.clone());
+        let queries = database.sample_queries(20, 5);
+        let k = 10;
+        let single = sharded_hnsw(&database, 1, PartitionPolicy::RoundRobin);
+        for s in [2usize, 4, 7] {
+            let idx = sharded_hnsw(&database, s, PartitionPolicy::RoundRobin);
+            let (mut r_single, mut r_sharded) = (0.0, 0.0);
+            for q in &queries {
+                let truth = brute.search(q, k);
+                let (got1, _) = single.knn(q, k, 64);
+                let (gots, _) = idx.knn(q, k, 64);
+                r_single += recall_at_k(&got1, &truth, k);
+                r_sharded += recall_at_k(&gots, &truth, k);
+            }
+            r_single /= queries.len() as f64;
+            r_sharded /= queries.len() as f64;
+            assert!(
+                r_sharded >= r_single - 0.05,
+                "s={s}: sharded recall {r_sharded:.3} must track unsharded {r_single:.3}"
+            );
+            assert!(r_sharded > 0.85, "s={s}: absolute recall {r_sharded:.3}");
+        }
+    }
+
+    #[test]
+    fn serial_and_parallel_fanout_agree() {
+        let database = db(800, 9);
+        let sharded = Arc::new(ShardedDatabase::partition(
+            database.clone(),
+            3,
+            PartitionPolicy::Contiguous,
+        ));
+        let par = ShardedHnsw::build(sharded.clone(), HnswParams::new(6, 32, 2))
+            .with_parallel(true);
+        let ser = ShardedHnsw::build(sharded, HnswParams::new(6, 32, 2)).with_parallel(false);
+        for q in database.sample_queries(4, 17) {
+            let (a, sa) = par.knn(&q, 8, 48);
+            let (b, sb) = ser.knn(&q, 8, 48);
+            assert_eq!(a, b, "fan-out mode must not change results");
+            assert_eq!(sa, sb, "aggregate stats are mode-invariant");
+        }
+    }
+
+    #[test]
+    fn aggregate_stats_sum_per_shard_work() {
+        let database = db(600, 21);
+        let idx = sharded_hnsw(&database, 3, PartitionPolicy::RoundRobin);
+        let q = database.sample_queries(1, 8)[0].clone();
+        let (_, total) = idx.knn(&q, 5, 40);
+        let mut evals = 0;
+        for si in 0..idx.n_shards() {
+            let (_, s) = idx.knn_shard(si, &q, 5, 40);
+            evals += s.distance_evals;
+        }
+        assert_eq!(total.distance_evals, evals, "work must aggregate across shards");
+        assert!(total.distance_evals < database.len(), "far fewer than brute force");
+    }
+
+    #[test]
+    fn degenerate_and_tiny_partitions() {
+        // More shards than rows: surplus shards hold empty graphs and must
+        // contribute silence, not failures; k=0 answers empty.
+        let database = db(5, 1);
+        let idx = sharded_hnsw(&database, 8, PartitionPolicy::RoundRobin);
+        let (hits, _) = idx.knn(&database.fps[2], 10, 16);
+        assert_eq!(hits.len(), 5, "all five rows surface");
+        assert_eq!(hits[0].id, 2);
+        let (empty, stats) = idx.knn(&database.fps[2], 0, 16);
+        assert!(empty.is_empty());
+        assert_eq!(stats.distance_evals, 0);
+    }
+}

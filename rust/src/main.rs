@@ -7,22 +7,30 @@
 //!                   --k 10 --mode exact
 //! molfpga serve     --db data/db.bin --port 7878 --workers 2 \
 //!                   [--pjrt] [--m 4] [--cutoff 0.8] [--hnsw-m 8] [--ef 64] \
-//!                   [--shards 4] [--partition popcount|roundrobin|contiguous]
+//!                   [--shards 4] [--partition popcount|roundrobin|contiguous] \
+//!                   [--mode exact|hnsw|both]
 //! molfpga bench-qps --db data/db.bin --queries 200 [--pjrt] [--shards 4]
 //! ```
 //!
-//! `--shards N` (N > 1) serves exhaustive queries from a shard-parallel
-//! pool: the database is partitioned, each worker owns one shard's engine,
-//! and partial top-k results merge through the cross-shard merge tree
-//! (exact results, ~N× lower per-query scan latency; see docs/sharding.md).
+//! `--shards N` (N > 1) serves queries from shard-parallel pools: the
+//! database is partitioned, each worker owns one shard's engine, and
+//! partial top-k results merge through the cross-shard merge tree. For the
+//! exhaustive family that is exact with ~N× lower per-query scan latency
+//! (docs/sharding.md); for the HNSW family each shard owns a per-shard
+//! sub-graph and the answer is the exact top-k of the union of per-shard
+//! approximate results (docs/hnsw_sharding.md). `--mode` selects which
+//! families are shard-parallel (default `both`).
 
 use anyhow::{bail, Context, Result};
-use molfpga::coordinator::backend::{NativeExhaustive, NativeHnsw, PjrtExhaustive};
+use molfpga::coordinator::backend::{
+    NativeExhaustive, NativeHnsw, PjrtExhaustive, ShardedHnswBackend,
+};
 use molfpga::coordinator::batcher::BatchPolicy;
 use molfpga::coordinator::metrics::Metrics;
 use molfpga::coordinator::server::Server;
 use molfpga::coordinator::{EnginePool, Query, QueryMode, QueryPool, Router, ShardedEnginePool};
 use molfpga::fingerprint::{morgan::MorganGenerator, ChemblModel, Database};
+use molfpga::hnsw::{HnswParams, ShardedHnsw};
 use molfpga::runtime::ArtifactSet;
 use molfpga::shard::{PartitionPolicy, ShardedDatabase};
 use molfpga::util::cli::Args;
@@ -138,14 +146,25 @@ fn cmd_query(args: &Args) -> Result<()> {
             }
         }
         QueryMode::Approximate => {
-            let graph = NativeHnsw::build_graph(
-                &db,
-                args.get_or("hnsw-m", 8usize)?,
-                args.get_or("ef-construction", 64usize)?,
-                1,
-            );
-            let mut be = NativeHnsw::new(db.clone(), graph, args.get_or("ef", 64usize)?);
-            be.search(&fp, k)?
+            let hnsw_m = args.get_or("hnsw-m", 8usize)?;
+            let ef_c = args.get_or("ef-construction", 64usize)?;
+            let ef = args.get_or("ef", 64usize)?;
+            let shards = args.get_or("shards", 1usize)?;
+            if shards > 1 {
+                let policy: PartitionPolicy = args
+                    .get("partition")
+                    .unwrap_or("popcount")
+                    .parse()
+                    .map_err(anyhow::Error::msg)?;
+                let sharded = Arc::new(ShardedDatabase::partition(db.clone(), shards, policy));
+                let mut be =
+                    ShardedHnswBackend::build(sharded, HnswParams::new(hnsw_m, ef_c, 1), ef);
+                be.search(&fp, k)?
+            } else {
+                let graph = NativeHnsw::build_graph(&db, hnsw_m, ef_c, 1);
+                let mut be = NativeHnsw::new(db.clone(), graph, ef);
+                be.search(&fp, k)?
+            }
         }
     };
     for (rank, s) in hits.iter().enumerate() {
@@ -162,49 +181,86 @@ fn build_router(args: &Args, db: Arc<Database>) -> Result<(Arc<Router>, Arc<Metr
     let cutoff = args.get_or("cutoff", 0.8)?;
     let shards = args.get_or("shards", 1usize)?;
     let use_pjrt = args.flag("pjrt");
-    let dbc = db.clone();
-    let ex: Arc<dyn QueryPool> = if shards > 1 {
+    let hnsw_m = args.get_or("hnsw-m", 8usize)?;
+    let ef_c = args.get_or("ef-construction", 96usize)?;
+    let ef = args.get_or("ef", 64usize)?;
+
+    // Which engine families are shard-parallel when --shards > 1:
+    // `exact` shards only the exhaustive pool, `hnsw` only the
+    // approximate pool, `both` (default) shards both.
+    let (shard_exact, shard_hnsw) = match args
+        .get("mode")
+        .unwrap_or("both")
+        .to_ascii_lowercase()
+        .as_str()
+    {
+        "both" | "all" => (true, true),
+        "exact" | "exhaustive" | "bitbound" => (true, false),
+        "hnsw" | "approx" | "approximate" => (false, true),
+        other => bail!("unknown --mode {other:?} (expected exact|hnsw|both)"),
+    };
+
+    let sharded: Option<Arc<ShardedDatabase>> = if shards > 1 {
         let policy: PartitionPolicy =
             args.get("partition").unwrap_or("popcount").parse().map_err(anyhow::Error::msg)?;
-        if use_pjrt {
-            eprintln!("[molfpga] --pjrt is not shard-aware yet; using native shard engines");
-        }
         if args.get("workers").is_some() {
             eprintln!(
-                "[molfpga] --workers is ignored with --shards {shards}: \
-                 the sharded pool runs one worker per shard"
+                "[molfpga] --workers is ignored for shard-parallel pools with \
+                 --shards {shards}: they run one worker per shard"
             );
         }
         eprintln!("[molfpga] partitioning into {shards} shards ({policy:?})…");
-        let sharded = Arc::new(ShardedDatabase::partition(db.clone(), shards, policy));
-        Arc::new(ShardedEnginePool::new(
-            "exhaustive",
-            &sharded,
-            queue,
-            metrics.clone(),
-            move |_si, shard_db| NativeExhaustive::factory(shard_db, m, cutoff),
-        ))
+        Some(Arc::new(ShardedDatabase::partition(db.clone(), shards, policy)))
     } else {
-        Arc::new(EnginePool::new("exhaustive", workers, queue, metrics.clone(), move |_| {
+        None
+    };
+
+    let dbc = db.clone();
+    let ex: Arc<dyn QueryPool> = match &sharded {
+        Some(sharded) if shard_exact => {
+            if use_pjrt {
+                eprintln!("[molfpga] --pjrt is not shard-aware yet; using native shard engines");
+            }
+            Arc::new(ShardedEnginePool::new(
+                "exhaustive",
+                sharded,
+                queue,
+                metrics.clone(),
+                move |_si, shard_db| NativeExhaustive::factory(shard_db, m, cutoff),
+            ))
+        }
+        _ => Arc::new(EnginePool::new("exhaustive", workers, queue, metrics.clone(), move |_| {
             if use_pjrt {
                 PjrtExhaustive::factory(dbc.clone(), m, cutoff)
             } else {
                 NativeExhaustive::factory(dbc.clone(), m, cutoff)
             }
-        }))
+        })),
     };
-    eprintln!("[molfpga] building HNSW graph…");
-    let graph = NativeHnsw::build_graph(
-        &db,
-        args.get_or("hnsw-m", 8usize)?,
-        args.get_or("ef-construction", 96usize)?,
-        7,
-    );
-    let ef = args.get_or("ef", 64usize)?;
-    let dbc2 = db.clone();
-    let ap = Arc::new(EnginePool::new("approximate", workers, queue, metrics.clone(), move |_| {
-        NativeHnsw::factory(dbc2.clone(), graph.clone(), ef)
-    }));
+
+    let ap: Arc<dyn QueryPool> = match &sharded {
+        Some(sharded) if shard_hnsw => {
+            eprintln!("[molfpga] building {shards} per-shard HNSW graphs…");
+            let shnsw = ShardedHnsw::build(sharded.clone(), HnswParams::new(hnsw_m, ef_c, 7));
+            let graphs: Vec<_> = shnsw.graphs().to_vec();
+            Arc::new(ShardedEnginePool::new(
+                "approximate",
+                sharded,
+                queue,
+                metrics.clone(),
+                move |si, shard_db| NativeHnsw::factory(shard_db, graphs[si].clone(), ef),
+            ))
+        }
+        _ => {
+            eprintln!("[molfpga] building HNSW graph…");
+            let graph = NativeHnsw::build_graph(&db, hnsw_m, ef_c, 7);
+            let dbc2 = db.clone();
+            Arc::new(EnginePool::new("approximate", workers, queue, metrics.clone(), move |_| {
+                NativeHnsw::factory(dbc2.clone(), graph.clone(), ef)
+            }))
+        }
+    };
+
     let policy = BatchPolicy {
         max_batch: args.get_or("max-batch", 16usize)?,
         max_wait: std::time::Duration::from_micros(args.get_or("max-wait-us", 2000u64)?),

@@ -218,6 +218,133 @@ pub fn shard_scaling_sweep(cfg: &SimConfig, shard_counts: &[usize]) -> Vec<Multi
         .collect()
 }
 
+/// Configuration for the **multi-traversal-engine** (sharded HNSW) mode:
+/// `e` graph-traversal engines, each owning one shard's sub-graph behind
+/// its own HBM channel group, every query broadcast to all engines and
+/// their ef-bounded partial streams reduced through the merge tree — the
+/// hardware picture `hnsw::ShardedHnsw` realizes in software.
+#[derive(Debug, Clone)]
+pub struct TraversalSimConfig {
+    /// Per-query distance (TFC) evaluations measured on the *unsharded*
+    /// graph (e.g. from [`crate::hnsw::SearchStats`]).
+    pub distance_evals: f64,
+    /// Per-query adjacency fetches (hops) on the unsharded graph.
+    pub hops: f64,
+    /// Rows in the graph the stats were measured on.
+    pub nodes: usize,
+    /// Top-k size (sets the merge-tree drain length).
+    pub k: usize,
+    /// Clock Hz.
+    pub clock_hz: f64,
+}
+
+impl TraversalSimConfig {
+    /// The paper's H4 operating point (M=10, ef=60 at recall 0.92 on
+    /// Chembl): ~600 distance evaluations and ~45 hops per query.
+    pub fn paper_operating_point(k: usize) -> Self {
+        Self {
+            distance_evals: 600.0,
+            hops: 45.0,
+            nodes: crate::hwmodel::qps::CHEMBL_N,
+            k,
+            clock_hz: 450e6,
+        }
+    }
+}
+
+/// Result of a multi-traversal-engine query simulation.
+#[derive(Debug, Clone)]
+pub struct TraversalEngineReport {
+    /// Traversal-engine (graph-shard) count.
+    pub engines: usize,
+    /// Per-engine distance evaluations (its sub-graph is smaller, so the
+    /// ef-bounded search shrinks **logarithmically**, not by 1/e — the
+    /// fundamental difference from the exhaustive engines'
+    /// [`simulate_multi_engine`]).
+    pub per_engine_distance_evals: f64,
+    /// Aggregate distance evals across engines: the union-search *work
+    /// amplification* sharded traversal pays for its recall.
+    pub total_distance_evals: f64,
+    /// Slowest engine's traversal, cycles.
+    pub engine_cycles: u64,
+    /// Cross-shard merge-tree drain, cycles.
+    pub merge_cycles: u64,
+    /// Total query latency, cycles.
+    pub cycles: u64,
+    pub seconds: f64,
+    /// Implied broadcast-mode QPS (one query in flight across all
+    /// engines; replicated-query deployments multiply this by the engine
+    /// count, the H4 configuration).
+    pub qps: f64,
+    pub speedup_vs_single: f64,
+}
+
+/// How per-query traversal work shrinks when one global graph of `nodes`
+/// rows is split across `engines` sub-graphs: HNSW work grows with ln(n),
+/// so each engine does ~ln(n/e)/ln(n) of the single-graph work — the same
+/// log model [`crate::exp::hnsw_scale_factor`] uses for up-scaling.
+fn traversal_shrink(nodes: usize, engines: usize) -> f64 {
+    if engines <= 1 || nodes < 4 {
+        return 1.0;
+    }
+    let per = (nodes as f64 / engines as f64).max(2.0);
+    (per.ln() / (nodes as f64).ln()).clamp(0.0, 1.0)
+}
+
+/// Simulate one query on `engines` traversal engines: each engine runs
+/// the full ef-bounded search on its 1/e-size sub-graph (TFC at II=1 per
+/// distance eval + the data-dependent hop latency, mirroring
+/// [`crate::hwmodel::qps::HnswDesign::cycles_per_query`]); the slowest
+/// engine's partial then drains through the pipelined merge tree exactly
+/// as in [`simulate_multi_engine`].
+pub fn simulate_multi_traversal(cfg: &TraversalSimConfig, engines: usize) -> TraversalEngineReport {
+    assert!(engines >= 1);
+    // Rounded like the per-point cycle counts so e=1 reports speedup 1.0.
+    let single = traversal_cycles(cfg, 1).round();
+    traversal_report(cfg, engines, single)
+}
+
+fn traversal_cycles(cfg: &TraversalSimConfig, engines: usize) -> f64 {
+    use crate::hwmodel::qps::HOP_LATENCY_CYCLES;
+    let shrink = traversal_shrink(cfg.nodes, engines);
+    // Result drain mirrors HnswDesign::cycles_per_query's fixed tail.
+    cfg.distance_evals * shrink + cfg.hops * shrink * HOP_LATENCY_CYCLES + 200.0
+}
+
+fn traversal_report(
+    cfg: &TraversalSimConfig,
+    engines: usize,
+    single_cycles: f64,
+) -> TraversalEngineReport {
+    let shrink = traversal_shrink(cfg.nodes, engines);
+    let engine_cycles = traversal_cycles(cfg, engines);
+    let merge_cycles = ShardMerge::latency_cycles(engines, cfg.k) as u64;
+    let cycles = engine_cycles.round() as u64 + merge_cycles;
+    let seconds = cycles as f64 / cfg.clock_hz;
+    TraversalEngineReport {
+        engines,
+        per_engine_distance_evals: cfg.distance_evals * shrink,
+        total_distance_evals: cfg.distance_evals * shrink * engines as f64,
+        engine_cycles: engine_cycles.round() as u64,
+        merge_cycles,
+        cycles,
+        seconds,
+        qps: 1.0 / seconds,
+        speedup_vs_single: single_cycles / cycles as f64,
+    }
+}
+
+/// Engine-count sweep for the sharded-HNSW scaling curve
+/// (`exp::hnsw_shard_scaling` pairs it with software measurements;
+/// `bench_hnsw_sharded` records both in `BENCH_hnsw_sharded.json`).
+pub fn traversal_scaling_sweep(
+    cfg: &TraversalSimConfig,
+    engine_counts: &[usize],
+) -> Vec<TraversalEngineReport> {
+    let single = traversal_cycles(cfg, 1).round();
+    engine_counts.iter().map(|&e| traversal_report(cfg, e, single)).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -338,6 +465,55 @@ mod tests {
             r4.speedup_vs_single
         );
         assert!(r4.input_stall_cycles > 0);
+    }
+
+    /// Sharded graph traversal is a *capacity and recall* play, not a
+    /// latency play: per-engine work shrinks only logarithmically with
+    /// engine count, aggregate work grows ~linearly (the union-search
+    /// amplification), and latency improves monotonically but modestly —
+    /// unlike the exhaustive engines' near-linear 1/e scan division.
+    #[test]
+    fn multi_traversal_scaling_is_log_bounded() {
+        let cfg = TraversalSimConfig::paper_operating_point(10);
+        let sweep = traversal_scaling_sweep(&cfg, &[1, 2, 4, 8, 16]);
+        let by_e = |e: usize| sweep.iter().find(|r| r.engines == e).unwrap();
+        assert!((by_e(1).speedup_vs_single - 1.0).abs() < 1e-9);
+        // Latency improves monotonically with engines (smaller sub-graphs)…
+        for w in sweep.windows(2) {
+            assert!(
+                w[1].cycles < w[0].cycles,
+                "{} → {} engines must shorten the query",
+                w[0].engines,
+                w[1].engines
+            );
+        }
+        // …but only log-fast: 16 engines stay well under 2× while the same
+        // split of an exhaustive scan approaches 16×.
+        assert!(
+            by_e(16).speedup_vs_single < 2.0,
+            "log-bounded: {:.2}",
+            by_e(16).speedup_vs_single
+        );
+        // Work amplification: the union search costs more total TFC evals
+        // at every added engine.
+        for w in sweep.windows(2) {
+            assert!(w[1].total_distance_evals > w[0].total_distance_evals);
+        }
+        // Merge-tree drain is charged: ⌈log2 8⌉ + k.
+        assert_eq!(by_e(8).merge_cycles, 13);
+        assert_eq!(by_e(1).merge_cycles, 0);
+    }
+
+    #[test]
+    fn multi_traversal_single_engine_matches_hnsw_design_cycles() {
+        // One engine must price a query exactly like the analytical
+        // HnswDesign formula (same evals, hops, drain).
+        use crate::hwmodel::qps::HnswDesign;
+        let cfg = TraversalSimConfig::paper_operating_point(10);
+        let r = simulate_multi_traversal(&cfg, 1);
+        let analytic = HnswDesign::new(10, 60, cfg.distance_evals, cfg.hops).cycles_per_query();
+        assert_eq!(r.cycles, analytic.round() as u64);
+        assert_eq!(r.total_distance_evals, cfg.distance_evals);
     }
 
     #[test]

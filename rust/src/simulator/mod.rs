@@ -24,8 +24,9 @@ pub mod hbm;
 pub mod pipeline;
 
 pub use engine::{
-    shard_scaling_sweep, simulate_multi_engine, simulate_query, MultiEngineReport, SimConfig,
-    SimReport,
+    shard_scaling_sweep, simulate_multi_engine, simulate_multi_traversal, simulate_query,
+    traversal_scaling_sweep, MultiEngineReport, SimConfig, SimReport, TraversalEngineReport,
+    TraversalSimConfig,
 };
 pub use hbm::HbmModel;
 pub use pipeline::{QueryPipeline, StageLatency};

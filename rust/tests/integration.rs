@@ -173,6 +173,88 @@ fn coordinator_serves_through_sharded_pool_end_to_end() {
     router.shutdown();
 }
 
+/// The shard-parallel HNSW serving path end-to-end, the shape
+/// `molfpga serve --mode hnsw --shards 4` runs: router → batcher →
+/// one-worker-per-shard pool of per-shard [`NativeHnsw`] engines →
+/// cross-shard merge tree. Approximate responses must carry valid global
+/// ids at high recall, a malformed k=0 request must be rejected at the
+/// boundary without killing any pool worker, and the pool must keep
+/// serving afterwards.
+#[test]
+fn sharded_hnsw_pool_end_to_end() {
+    use molfpga::coordinator::batcher::BatchPolicy;
+    use molfpga::coordinator::metrics::Metrics;
+    use molfpga::coordinator::{Query, QueryMode, Router, ShardedEnginePool};
+    use molfpga::hnsw::{HnswParams, ShardedHnsw};
+    use molfpga::shard::{PartitionPolicy, ShardedDatabase};
+    let db = Arc::new(Database::synthesize(3_000, &ChemblModel::default(), 55));
+    let metrics = Arc::new(Metrics::new());
+    let sharded = Arc::new(ShardedDatabase::partition(
+        db.clone(),
+        4,
+        PartitionPolicy::PopcountStriped,
+    ));
+    // Per-shard sub-graphs, one traversal engine per shard (ef=64).
+    let shnsw = ShardedHnsw::build(sharded.clone(), HnswParams::new(8, 64, 7));
+    let graphs: Vec<_> = shnsw.graphs().to_vec();
+    let ap = Arc::new(ShardedEnginePool::new(
+        "it-shnsw",
+        &sharded,
+        32,
+        metrics.clone(),
+        move |si, shard_db| NativeHnsw::factory(shard_db, graphs[si].clone(), 64),
+    ));
+    let dbc = db.clone();
+    let ex = Arc::new(molfpga::coordinator::EnginePool::new(
+        "it-shnsw-ex",
+        1,
+        32,
+        metrics.clone(),
+        move |_| NativeExhaustive::factory(dbc.clone(), 1, 0.0),
+    ));
+    let router = Router::new(
+        ex,
+        ap,
+        BatchPolicy { max_batch: 8, max_wait: std::time::Duration::from_millis(1) },
+        metrics.clone(),
+    );
+
+    // A malformed k=0 request is rejected at the request boundary…
+    let q0 = db.sample_queries(1, 5)[0].clone();
+    assert!(
+        router.try_submit(Query::new(999, q0, 0, QueryMode::Approximate)).is_err(),
+        "k=0 must be an error response, not a job"
+    );
+
+    // …and the shard workers then serve real approximate traffic.
+    let brute = BruteForceIndex::new(db.clone());
+    let queries = db.sample_queries(25, 91);
+    let mut rxs = Vec::new();
+    for (i, q) in queries.iter().enumerate() {
+        let rx = router
+            .try_submit(Query::new(i as u64, q.clone(), 10, QueryMode::Approximate))
+            .expect("valid query accepted");
+        rxs.push((i, rx));
+    }
+    let mut total_recall = 0.0;
+    for (i, rx) in &rxs {
+        let r = rx.recv_timeout(std::time::Duration::from_secs(60)).expect("response");
+        let truth = brute.search(&queries[*i], 10);
+        for hit in &r.hits {
+            assert!(
+                (hit.id as usize) < db.len(),
+                "query {i}: id {} must be a global row",
+                hit.id
+            );
+        }
+        total_recall += recall_at_k(&r.hits, &truth, 10);
+    }
+    let mean = total_recall / rxs.len() as f64;
+    assert!(mean >= 0.85, "sharded hnsw end-to-end recall {mean:.3}");
+    assert_eq!(metrics.snapshot().completed, 25, "every valid query answered");
+    router.shutdown();
+}
+
 /// Hardware model consistency across the whole sweep surface: every Fig. 7
 /// point must respect the bandwidth wall and the monotonicities the paper
 /// reports.

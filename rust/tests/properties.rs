@@ -3,7 +3,8 @@
 //! contract of the shard layer.
 
 use molfpga::fingerprint::{packed::FoldScheme, Fingerprint, FP_BITS};
-use molfpga::index::{BruteForceIndex, SearchIndex};
+use molfpga::hnsw::{HnswBuilder, HnswParams, Searcher, ShardedHnsw};
+use molfpga::index::{recall_at_k, BruteForceIndex, SearchIndex};
 use molfpga::shard::{PartitionPolicy, ShardedDatabase, ShardedSearchIndex};
 use molfpga::util::proptest::{check, gen};
 
@@ -103,6 +104,105 @@ fn sharded_search_bit_identical_to_oracle() {
         }
         // Work aggregation is conserved for the exhaustive scan.
         assert_eq!(idx.expected_candidates(&queries[0]), db.len());
+    });
+}
+
+/// Sharded HNSW recall tracks the unsharded graph's recall on the same
+/// database and seeds, for any shard count and partition policy: the
+/// cross-shard union search explores at least as widely (s × ef
+/// candidates), so the merged approximate top-k may only lose a small ε
+/// to per-shard graph quality. This is the acceptance contract of the
+/// approximate shard layer — partitioning must not cost recall.
+#[test]
+fn sharded_hnsw_recall_within_epsilon_of_unsharded() {
+    check("sharded_hnsw_recall", 6, |g| {
+        let db = gen::database(g, 500, 1000);
+        let oracle = BruteForceIndex::new(db.clone());
+        let shards = 2 + g.below_usize(5); // 2..=6
+        let policy = [
+            PartitionPolicy::Contiguous,
+            PartitionPolicy::RoundRobin,
+            PartitionPolicy::PopcountStriped,
+        ][g.below_usize(3)];
+        let seed = g.next_u64();
+        let params = HnswParams::new(8, 48, seed);
+        let k = 1 + g.below_usize(12);
+        let ef = 64;
+
+        let single = HnswBuilder::new(params.clone()).build(&db);
+        let sharded = ShardedHnsw::build(
+            std::sync::Arc::new(ShardedDatabase::partition(db.clone(), shards, policy)),
+            params,
+        );
+        let queries = db.sample_queries(8, g.next_u64());
+        let (mut r_single, mut r_sharded) = (0.0, 0.0);
+        let mut searcher = Searcher::new(&single, &db);
+        for q in &queries {
+            let truth = oracle.search(q, k);
+            let (got1, _) = searcher.knn(q, k, ef);
+            let (gots, _) = sharded.knn(q, k, ef);
+            r_single += recall_at_k(&got1, &truth, k);
+            r_sharded += recall_at_k(&gots, &truth, k);
+        }
+        let nq = queries.len() as f64;
+        let (r_single, r_sharded) = (r_single / nq, r_sharded / nq);
+        assert!(
+            r_sharded >= r_single - 0.15,
+            "s={shards} {policy:?} k={k}: sharded recall {r_sharded:.3} \
+             fell more than ε below unsharded {r_single:.3}"
+        );
+    });
+}
+
+/// The cross-shard merge of approximate partials is deterministic and
+/// id-stable: repeated searches (and serial vs parallel fan-out) return
+/// identical results, every returned id is a valid global row whose score
+/// is the true Tanimoto of that row, and the global↔local mapping
+/// round-trips for every hit.
+#[test]
+fn sharded_hnsw_merge_deterministic_and_id_stable() {
+    check("sharded_hnsw_merge_stable", 6, |g| {
+        let db = gen::database(g, 300, 800);
+        let shards = 1 + g.below_usize(6);
+        let policy = [
+            PartitionPolicy::Contiguous,
+            PartitionPolicy::RoundRobin,
+            PartitionPolicy::PopcountStriped,
+        ][g.below_usize(3)];
+        let partition =
+            std::sync::Arc::new(ShardedDatabase::partition(db.clone(), shards, policy));
+        let params = HnswParams::new(6, 32, g.next_u64());
+        let par = ShardedHnsw::build(partition.clone(), params.clone()).with_parallel(true);
+        let ser = ShardedHnsw::build(partition.clone(), params).with_parallel(false);
+        let k = 1 + g.below_usize(15);
+        for q in db.sample_queries(3, g.next_u64()) {
+            let (a, _) = par.knn(&q, k, 48);
+            let (b, _) = par.knn(&q, k, 48);
+            let (c, _) = ser.knn(&q, k, 48);
+            assert_eq!(a, b, "s={shards} {policy:?} k={k}: repeat determinism");
+            assert_eq!(a, c, "s={shards} {policy:?} k={k}: fan-out mode invariance");
+            // Results are sorted best-first with the global tie-break.
+            for w in a.windows(2) {
+                assert!(w[0].beats(&w[1]), "s={shards} {policy:?}: merged order");
+            }
+            for hit in &a {
+                let gid = hit.id as u32;
+                assert!((gid as usize) < db.len(), "global id in range");
+                let (si, local) = partition.locate(gid);
+                assert_eq!(
+                    partition.to_global(si as usize, local),
+                    gid,
+                    "s={shards} {policy:?}: mapping must round-trip"
+                );
+                let want = q.tanimoto(&db.fps[gid as usize]);
+                assert!(
+                    (hit.score - want).abs() < 1e-12,
+                    "s={shards} {policy:?}: score {} must be the true \
+                     similarity {want} of global row {gid}",
+                    hit.score
+                );
+            }
+        }
     });
 }
 
