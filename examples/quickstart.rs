@@ -60,7 +60,8 @@ fn main() -> anyhow::Result<()> {
     let t0 = std::time::Instant::now();
     let graph = molfpga::coordinator::backend::NativeHnsw::build_graph(&db, 8, 64, 1);
     let built = t0.elapsed();
-    let mut searcher = molfpga::hnsw::Searcher::new(&graph, &db);
+    let mut scratch = molfpga::hnsw::SearchScratch::with_rows(db.len());
+    let mut searcher = molfpga::hnsw::Searcher::new(&graph, &db, &mut scratch);
     let t0 = std::time::Instant::now();
     let (approx, stats) = searcher.knn(&query, 10, 64);
     println!(

@@ -1,10 +1,13 @@
 //! Bench: HNSW build + search (paper Figs. 8/9 CPU-side, H4 denominator).
 //!
-//! Reports build time, per-query search latency across ef, and per-query
-//! work stats (distance evals — the quantity the U280 model prices).
+//! Reports build time, per-query search latency across ef — in both the
+//! serving shape (one worker-lifetime `SearchScratch`, reused per query)
+//! and the pre-refactor shape (a fresh scratch, and with it an O(rows)
+//! visited allocation, per query) — plus per-query work stats (distance
+//! evals — the quantity the U280 model prices).
 
 use molfpga::fingerprint::{ChemblModel, Database};
-use molfpga::hnsw::{HnswBuilder, HnswParams, Searcher};
+use molfpga::hnsw::{HnswBuilder, HnswParams, SearchScratch, Searcher};
 use molfpga::util::bench::{black_box, Bencher};
 use std::sync::Arc;
 
@@ -28,18 +31,41 @@ fn main() {
     );
 
     for ef in [16usize, 64, 200] {
-        let mut searcher = Searcher::new(&graph, &db);
+        // Serving shape: scratch allocated once, amortized across queries.
+        let mut scratch = SearchScratch::with_rows(db.len());
         let mut qi = 0;
         let mut evals = 0usize;
         let mut runs = 0usize;
-        b.bench(&format!("hnsw_search/ef={ef}/n={n}"), || {
-            let (hits, stats) = searcher.knn(&queries[qi % queries.len()], 10, ef);
-            black_box(hits);
-            evals += stats.distance_evals;
-            runs += 1;
-            qi += 1;
-        });
+        let reused_ns = b
+            .bench(&format!("hnsw_search/ef={ef}/n={n}"), || {
+                let mut searcher = Searcher::new(&graph, &db, &mut scratch);
+                let (hits, stats) = searcher.knn(&queries[qi % queries.len()], 10, ef);
+                black_box(hits);
+                evals += stats.distance_evals;
+                runs += 1;
+                qi += 1;
+            })
+            .mean
+            .as_nanos() as f64;
         println!("  mean distance evals at ef={ef}: {:.0}", evals as f64 / runs as f64);
+
+        // Pre-refactor shape: a fresh O(rows) visited vector per query.
+        let mut qi = 0;
+        let rebuild_ns = b
+            .bench(&format!("hnsw_search_rebuild/ef={ef}/n={n}"), || {
+                let mut scratch = SearchScratch::with_rows(db.len());
+                let mut searcher = Searcher::new(&graph, &db, &mut scratch);
+                let (hits, _stats) = searcher.knn(&queries[qi % queries.len()], 10, ef);
+                black_box(hits);
+                qi += 1;
+            })
+            .mean
+            .as_nanos() as f64;
+        println!(
+            "  scratch reuse delta at ef={ef}: {:+.2} us/query ({:.1}% of rebuild)",
+            (rebuild_ns - reused_ns) / 1e3,
+            100.0 * (rebuild_ns - reused_ns) / rebuild_ns.max(1.0)
+        );
     }
 
     let _ = b.write_jsonl(std::path::Path::new("results/bench_hnsw.jsonl"));

@@ -13,7 +13,7 @@ use molfpga::coordinator::metrics::Metrics;
 use molfpga::coordinator::{Query, QueryMode, ShardedEnginePool};
 use molfpga::exp::hnsw_shard_scaling;
 use molfpga::fingerprint::{ChemblModel, Database};
-use molfpga::hnsw::{HnswParams, ShardedHnsw};
+use molfpga::hnsw::{HnswParams, SearchScratch, ShardedHnsw};
 use molfpga::shard::{PartitionPolicy, ShardedDatabase};
 use molfpga::util::bench::{black_box, Bencher};
 use molfpga::util::minijson::Json;
@@ -69,8 +69,8 @@ fn main() {
         );
     }
 
-    // One s=4 build shared by the two latency points below.
-    {
+    // One s=4 build shared by the latency points below.
+    let (scratch_reused_us, scratch_rebuild_us) = {
         let sharded = Arc::new(ShardedDatabase::partition(
             db.clone(),
             4,
@@ -86,10 +86,49 @@ fn main() {
             qi += 1;
         });
 
+        // Scratch-reuse delta, serial fan-out pinned so the comparison
+        // isolates per-query state handling from threading:
+        // `knn` draws worker-lifetime scratches from the index's checkout
+        // pool; the rebuild variant reconstructs the pre-refactor shape —
+        // a fresh O(shard rows) scratch per shard per query — through
+        // `knn_shard_with` + the same merge tree. Same build as above,
+        // only the fan-out flag flips.
+        let ser = idx.with_parallel(false);
+        let mut qi = 0;
+        let reused_ns = b
+            .bench(&format!("sharded_hnsw_knn_serial_reused/s=4/ef={ef}/n={n}"), || {
+                black_box(ser.knn(&queries[qi % queries.len()], k, ef));
+                qi += 1;
+            })
+            .mean
+            .as_nanos() as f64;
+        let mut qi = 0;
+        let rebuild_ns = b
+            .bench(&format!("sharded_hnsw_knn_serial_rebuild/s=4/ef={ef}/n={n}"), || {
+                use molfpga::topk::ShardMerge;
+                let q = &queries[qi % queries.len()];
+                let mut merge = ShardMerge::new(k);
+                for si in 0..ser.n_shards() {
+                    let mut scratch =
+                        SearchScratch::with_rows(sharded.shard(si).len());
+                    let (partial, _) = ser.knn_shard_with(si, q, k, ef, &mut scratch);
+                    merge.push_partial(partial);
+                }
+                black_box(merge.finish());
+                qi += 1;
+            })
+            .mean
+            .as_nanos() as f64;
+        println!(
+            "  scratch reuse delta (s=4, serial): {:+.2} us/query ({:.1}% of rebuild)",
+            (rebuild_ns - reused_ns) / 1e3,
+            100.0 * (rebuild_ns - reused_ns) / rebuild_ns.max(1.0)
+        );
+
         // Dispatch-layer point: the shard pool end-to-end (per-shard
         // NativeHnsw engines + channels + merge tree + response fan-in) —
         // the `serve --mode hnsw --shards 4` serving path.
-        let graphs: Vec<_> = idx.graphs().to_vec();
+        let graphs: Vec<_> = ser.graphs().to_vec();
         let metrics = Arc::new(Metrics::new());
         let pool =
             ShardedEnginePool::new("bench", &sharded, 256, metrics, move |si, shard_db| {
@@ -103,7 +142,8 @@ fn main() {
             black_box(rx.recv().unwrap());
         });
         pool.shutdown();
-    }
+        (reused_ns / 1e3, rebuild_ns / 1e3)
+    };
 
     let doc = Json::obj()
         .set("bench", "hnsw_sharded")
@@ -112,6 +152,12 @@ fn main() {
         .set("ef", ef)
         .set("hnsw_m", 8usize)
         .set("policy", "popcount-striped")
+        // Per-query cost of reusing worker-lifetime scratches vs
+        // rebuilding the O(rows) traversal state per query (s=4, serial
+        // fan-out) — the quantity the zero-rebuild refactor removes.
+        .set("scratch_reused_us", scratch_reused_us)
+        .set("scratch_rebuild_us", scratch_rebuild_us)
+        .set("scratch_delta_us", scratch_rebuild_us - scratch_reused_us)
         .set("points", Json::Arr(points));
     if let Err(e) = std::fs::write("BENCH_hnsw_sharded.json", doc.to_string() + "\n") {
         eprintln!("[bench_hnsw_sharded] could not write BENCH_hnsw_sharded.json: {e}");

@@ -133,7 +133,8 @@ impl CpuBaseline {
         truth: &[Vec<Scored>],
         k: usize,
     ) -> (Measured, f64, f64) {
-        let mut searcher = Searcher::new(graph, &self.db);
+        let mut scratch = crate::hnsw::SearchScratch::with_rows(self.db.len());
+        let mut searcher = Searcher::new(graph, &self.db, &mut scratch);
         let t0 = Instant::now();
         let mut recall_sum = 0.0;
         let mut evals = 0usize;

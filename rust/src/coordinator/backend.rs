@@ -21,7 +21,7 @@
 //! router/batcher/pool stack is engine-agnostic.
 
 use crate::fingerprint::{Database, Fingerprint};
-use crate::hnsw::{HnswBuilder, HnswGraph, HnswParams, Searcher, ShardedHnsw};
+use crate::hnsw::{HnswBuilder, HnswGraph, HnswParams, SearchScratch, Searcher, ShardedHnsw};
 use crate::index::{BitBoundFoldingIndex, SearchIndex, TwoStageConfig};
 use crate::runtime::{ArtifactSet, PjRt, TfcEngine};
 use crate::shard::{ShardedDatabase, ShardedSearchIndex};
@@ -164,17 +164,23 @@ impl SearchBackend for PjrtExhaustive {
 }
 
 /// HNSW backend. The graph is built once (Arc-shared across workers — the
-/// graph and database are Send+Sync; only the per-worker Searcher scratch
-/// is thread-local).
+/// graph and database are Send+Sync); each worker's backend owns one
+/// [`SearchScratch`] for its whole lifetime, so serving a query allocates
+/// no visited vector — the traversal state stays resident between queries
+/// exactly like the paper's hardware engine, amortized via the epoch
+/// mechanism.
 pub struct NativeHnsw {
     db: Arc<Database>,
     graph: Arc<HnswGraph>,
     ef: usize,
+    /// Worker-lifetime traversal scratch (allocated once, reused per query).
+    scratch: SearchScratch,
 }
 
 impl NativeHnsw {
     pub fn new(db: Arc<Database>, graph: Arc<HnswGraph>, ef: usize) -> Self {
-        Self { db, graph, ef }
+        let scratch = SearchScratch::with_rows(db.len());
+        Self { db, graph, ef, scratch }
     }
 
     /// Build a graph for sharing across workers.
@@ -195,7 +201,7 @@ impl SearchBackend for NativeHnsw {
     fn search(&mut self, fp: &Fingerprint, k: usize) -> Result<Vec<Scored>> {
         // k = 0 flows through: Searcher::knn answers degenerate requests
         // with an empty result instead of asserting.
-        let mut searcher = Searcher::new(&self.graph, &self.db);
+        let mut searcher = Searcher::new(&self.graph, &self.db, &mut self.scratch);
         let (hits, _stats) = searcher.knn(fp, k, self.ef.max(k));
         Ok(hits)
     }
@@ -206,9 +212,9 @@ impl SearchBackend for NativeHnsw {
 /// ([`crate::hnsw::ShardedHnsw`]).
 ///
 /// Like [`ShardedExhaustive`], the per-shard graph set is built once and
-/// `Arc`-shared across pool workers (read-only at query time; only the
-/// per-query `Searcher` scratch is transient). Two deployment shapes use
-/// it:
+/// `Arc`-shared across pool workers (read-only at query time; mutable
+/// traversal state comes from the `ShardedHnsw` scratch checkout pool, so
+/// queries allocate no visited vectors). Two deployment shapes use it:
 ///
 /// * behind an [`super::EnginePool`] — every worker fans one query out
 ///   across all shards inside the backend (this type), or

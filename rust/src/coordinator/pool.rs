@@ -6,6 +6,13 @@
 //! server surfaces that as a retryable busy error instead of letting
 //! latency collapse, the standard serving discipline).
 //!
+//! Because each worker owns its backend for the pool's lifetime,
+//! per-query mutable state amortizes for free: an HNSW worker's
+//! [`crate::hnsw::SearchScratch`] (visited marks + queue storage) is
+//! allocated once at construction and reused for every query the worker
+//! ever serves — the software analogue of the paper's engines keeping
+//! traversal state resident between queries.
+//!
 //! Two pool shapes, both behind the [`QueryPool`] trait so the batcher and
 //! router are pool-agnostic:
 //!

@@ -399,6 +399,9 @@ pub fn hnsw_shard_scaling(
         nodes: db.len(),
         k,
         clock_hz: 450e6,
+        // Resident traversal state between queries (the hardware design;
+        // the software serving path matches it via scratch reuse).
+        query_setup_cycles: 0.0,
     };
     let sims = traversal_scaling_sweep(&sim_cfg, shard_counts);
 

@@ -11,7 +11,7 @@
 //!    pruning any overfull neighbor back to its cap with the same heuristic.
 
 use super::graph::HnswGraph;
-use super::search::{SearchStats, Searcher};
+use super::search::{SearchScratch, SearchStats, Searcher};
 use super::HnswParams;
 use crate::fingerprint::Database;
 use crate::topk::Scored;
@@ -95,19 +95,37 @@ impl HnswBuilder {
 
     /// Build the graph over the whole database (sequential insertion; the
     /// paper's parallel construction variant is a batching of this loop —
-    /// see `coordinator` for the multi-engine analogue).
+    /// see `coordinator` for the multi-engine analogue). One
+    /// [`SearchScratch`] is reused across every insertion, so the build
+    /// performs no per-insert O(rows) visited allocation.
     pub fn build(&self, db: &Database) -> HnswGraph {
         let mut graph = HnswGraph::new(self.params.clone(), db.len());
         let mut g = Pcg64::with_stream(self.params.seed, 0x44E5);
+        let mut scratch = SearchScratch::with_rows(db.len());
         for node in 0..db.len() as u32 {
             let level = self.draw_level(&mut g);
-            self.insert(&mut graph, db, node, level);
+            self.insert_with_scratch(&mut graph, db, node, level, &mut scratch);
         }
         graph
     }
 
-    /// Insert one node (graph must already contain rows 0..node).
+    /// Insert one node (graph must already contain rows 0..node),
+    /// allocating a throwaway scratch. Callers inserting in a loop should
+    /// use [`HnswBuilder::insert_with_scratch`] to amortize.
     pub fn insert(&self, graph: &mut HnswGraph, db: &Database, node: u32, level: usize) {
+        self.insert_with_scratch(graph, db, node, level, &mut SearchScratch::new());
+    }
+
+    /// Insert one node, reusing the caller's scratch for the candidate
+    /// searches (the builder-loop amortization path).
+    pub fn insert_with_scratch(
+        &self,
+        graph: &mut HnswGraph,
+        db: &Database,
+        node: u32,
+        level: usize,
+        scratch: &mut SearchScratch,
+    ) {
         let entry = graph.entry_point();
         graph.add_node(node, level);
         let Some((mut ep, top_layer)) = entry else {
@@ -120,7 +138,7 @@ impl HnswBuilder {
         // Phase 1: greedy descent through layers above `level`.
         {
             let searcher_graph: &HnswGraph = graph;
-            let mut searcher = Searcher::new(searcher_graph, db);
+            let mut searcher = Searcher::new(searcher_graph, db, scratch);
             for l in ((level + 1)..=top_layer).rev() {
                 let (best, _) = searcher.search_layer_top(&q, qc, ep, l, &mut stats);
                 ep = best;
@@ -132,7 +150,7 @@ impl HnswBuilder {
         for l in (0..=level.min(top_layer)).rev() {
             let candidates = {
                 let searcher_graph: &HnswGraph = graph;
-                let mut searcher = Searcher::new(searcher_graph, db);
+                let mut searcher = Searcher::new(searcher_graph, db, scratch);
                 searcher.search_layer_base(
                     &q,
                     qc,
@@ -182,7 +200,8 @@ impl HnswBuilder {
     /// slightly stale) graph snapshot — the parallel builder's phase 2.
     /// Level-0 nodes reuse the precomputed base-layer candidates; rarer
     /// multi-layer nodes (P = 1/M per layer) fall back to a fresh
-    /// sequential insert so upper-layer links stay exact.
+    /// sequential insert (reusing `scratch`) so upper-layer links stay
+    /// exact.
     pub fn insert_with_candidates(
         &self,
         graph: &mut HnswGraph,
@@ -191,9 +210,10 @@ impl HnswBuilder {
         level: usize,
         _ep: u32,
         candidates: Vec<Scored>,
+        scratch: &mut SearchScratch,
     ) {
         if level > 0 || candidates.is_empty() {
-            self.insert(graph, db, node, level);
+            self.insert_with_scratch(graph, db, node, level, scratch);
             return;
         }
         graph.add_node(node, 0);

@@ -15,7 +15,10 @@
 //!   `SEARCH-LAYER-BASE` (Algorithm 2, `ef`-bounded best-first with the
 //!   candidate set C and result set M held in
 //!   [`crate::topk::RegisterPq`]s — the register-array priority queues of
-//!   module ④).
+//!   module ④). All mutable per-query state lives in a reusable
+//!   [`SearchScratch`] (epoch-tagged visited marks + queue storage) that
+//!   workers allocate once and amortize across queries, mirroring how the
+//!   hardware keeps traversal state resident between queries.
 //! * [`sharded`] — per-shard sub-graphs over a [`crate::shard`] partition,
 //!   traversed shard-parallel and reduced through the cross-shard merge
 //!   tree: the multi-traversal-engine deployment (docs/hnsw_sharding.md).
@@ -35,7 +38,7 @@ pub mod sharded;
 pub use build::HnswBuilder;
 pub use parallel::ParallelBuild;
 pub use graph::HnswGraph;
-pub use search::{SearchStats, Searcher};
+pub use search::{SearchScratch, SearchStats, Searcher};
 pub use sharded::ShardedHnsw;
 
 /// HNSW construction/search hyperparameters (paper notation).

@@ -18,7 +18,7 @@
 
 use super::build::HnswBuilder;
 use super::graph::HnswGraph;
-use super::search::{SearchStats, Searcher};
+use super::search::{SearchScratch, SearchStats, Searcher};
 use super::HnswParams;
 use crate::fingerprint::Database;
 use crate::topk::Scored;
@@ -40,18 +40,30 @@ impl ParallelBuild {
         Self { params, threads: threads.max(1), batch: 64 }
     }
 
-    /// Build the graph over the whole database.
+    /// Build the graph over the whole database. Scratch discipline: one
+    /// [`SearchScratch`] per candidate-search worker slot, reused across
+    /// every batch, plus one for the sequential commit thread — no
+    /// per-insert (or per-batch) O(rows) visited allocation.
     pub fn build(&self, db: &Database) -> HnswGraph {
         let builder = HnswBuilder::new(self.params.clone());
         let mut graph = HnswGraph::new(self.params.clone(), db.len());
         let mut g = Pcg64::with_stream(self.params.seed, 0x44E5);
         let levels: Vec<usize> = (0..db.len()).map(|_| builder.draw_level_pub(&mut g)).collect();
+        let mut commit_scratch = SearchScratch::with_rows(db.len());
+        let mut worker_scratches: Vec<SearchScratch> =
+            (0..self.threads).map(|_| SearchScratch::with_rows(db.len())).collect();
 
         // Seed the graph sequentially until it is big enough that batch
         // staleness is negligible.
         let seed_n = (self.batch * 4).min(db.len());
         for node in 0..seed_n as u32 {
-            builder.insert(&mut graph, db, node, levels[node as usize]);
+            builder.insert_with_scratch(
+                &mut graph,
+                db,
+                node,
+                levels[node as usize],
+                &mut commit_scratch,
+            );
         }
 
         let mut next = seed_n;
@@ -59,7 +71,7 @@ impl ParallelBuild {
             let end = (next + self.batch).min(db.len());
             let batch: Vec<u32> = (next as u32..end as u32).collect();
             // Phase 1: parallel candidate searches against the frozen graph.
-            let candidates = self.parallel_candidates(&graph, db, &batch);
+            let candidates = self.parallel_candidates(&graph, db, &batch, &mut worker_scratches);
             // Phase 2: sequential commit with precomputed entry candidates.
             for (node, (ep, cands)) in batch.iter().zip(candidates) {
                 builder.insert_with_candidates(
@@ -69,6 +81,7 @@ impl ParallelBuild {
                     levels[*node as usize],
                     ep,
                     cands,
+                    &mut commit_scratch,
                 );
             }
             next = end;
@@ -77,20 +90,24 @@ impl ParallelBuild {
     }
 
     /// For each pending node: (entry point after upper-layer descent,
-    /// base-layer candidate list) computed against the frozen graph.
+    /// base-layer candidate list) computed against the frozen graph. Each
+    /// spawned worker borrows one entry of `scratches` for the batch, so
+    /// thread-local traversal state persists across batches.
     fn parallel_candidates(
         &self,
         graph: &HnswGraph,
         db: &Database,
         batch: &[u32],
+        scratches: &mut [SearchScratch],
     ) -> Vec<(u32, Vec<Scored>)> {
         let chunk = batch.len().div_ceil(self.threads);
         std::thread::scope(|scope| {
             let handles: Vec<_> = batch
                 .chunks(chunk.max(1))
-                .map(|nodes| {
+                .zip(scratches.iter_mut())
+                .map(|(nodes, scratch)| {
                     scope.spawn(move || {
-                        let mut searcher = Searcher::new(graph, db);
+                        let mut searcher = Searcher::new(graph, db, scratch);
                         nodes
                             .iter()
                             .map(|&node| {
@@ -143,7 +160,8 @@ mod tests {
         let brute = BruteForceIndex::new(db.clone());
         let queries = db.sample_queries(25, 9);
         let recall_of = |graph: &HnswGraph| -> f64 {
-            let mut s = Searcher::new(graph, &db);
+            let mut scratch = SearchScratch::with_rows(db.len());
+            let mut s = Searcher::new(graph, &db, &mut scratch);
             queries
                 .iter()
                 .map(|q| {

@@ -11,6 +11,32 @@
 //! are sized as ef"). Termination: when the closest candidate is further
 //! than the furthest retained result.
 //!
+//! ## The scratch-reuse contract
+//!
+//! The paper's hardware keeps its traversal state (register-array priority
+//! queues, visited marks) resident between queries; the software analogue
+//! is [`SearchScratch`] — all of the *mutable* per-query state (the
+//! epoch-tagged visited vector plus the reusable C/M queue storage) split
+//! out of [`Searcher`] so it can be allocated **once per worker** and
+//! amortized across queries:
+//!
+//! * **Ownership** — whoever serves queries long-term owns the scratch:
+//!   each pool worker's backend holds one for its lifetime
+//!   (`coordinator::backend::NativeHnsw`), `hnsw::ShardedHnsw` keeps an
+//!   internal checkout pool for its fan-out threads, and the graph
+//!   builders reuse one per insertion thread. A [`Searcher`] is then a
+//!   free-to-construct view: two borrowed handles + `&mut SearchScratch`.
+//! * **Epoch guarantee** — a visited mark is live only while
+//!   `visited[i] == epoch`. Each query bumps the epoch, so stale marks
+//!   from any earlier query — even one against a *different* graph or
+//!   database — are dead without clearing. On wrap (`u32::MAX` →
+//!   overflow) the vector is zero-filled once and the epoch restarts at 1,
+//!   so a mark can never alias across the wrap.
+//! * **Growth rule** — the visited vector grows monotonically to the
+//!   largest database the scratch has served (`begin_query` resizes, never
+//!   shrinks); appended slots are zeroed and zero never equals a live
+//!   epoch (epochs are ≥ 1), so growth cannot fabricate a visited mark.
+//!
 //! [`SearchStats`] counts hops and distance (TFC) evaluations; the FPGA
 //! model charges `distance_evals` TFC cycles + queue ops to produce the
 //! Fig. 8 QPS surface.
@@ -32,47 +58,107 @@ pub struct SearchStats {
     pub pq_ops: usize,
 }
 
-/// Searcher borrowing the graph and the fingerprint database.
-pub struct Searcher<'a> {
-    pub graph: &'a HnswGraph,
-    pub db: &'a Database,
-    /// Scratch visited-set (epoch-tagged to avoid clearing per query).
+/// Reusable traversal state: the epoch-tagged visited vector plus the C/M
+/// register-queue storage. Allocate once per worker, reuse for every query
+/// (see the module docs for the ownership/epoch/growth contract). A scratch
+/// may serve graphs and databases of different sizes back to back — the
+/// epoch tags keep queries isolated without clearing.
+#[derive(Debug, Clone)]
+pub struct SearchScratch {
+    /// Visited marks: `visited[i] == epoch` ⇔ node i seen this query.
     visited: Vec<u32>,
+    /// Current query's epoch (0 only before the first query).
     epoch: u32,
+    /// Candidate queue C storage (retargeted to each query's ef).
+    c: RegisterPq,
+    /// Result queue M storage (retargeted to each query's ef).
+    m: RegisterPq,
 }
 
-impl<'a> Searcher<'a> {
-    pub fn new(graph: &'a HnswGraph, db: &'a Database) -> Self {
-        Self { graph, db, visited: vec![0; db.len()], epoch: 0 }
+impl SearchScratch {
+    /// Empty scratch; the visited vector grows on first use.
+    pub fn new() -> Self {
+        Self::with_rows(0)
     }
 
-    #[inline]
-    fn similarity(&self, q: &Fingerprint, qc: u32, node: u32, stats: &mut SearchStats) -> f64 {
-        stats.distance_evals += 1;
-        let n = node as usize;
-        q.tanimoto_with_counts(&self.db.fps[n], qc, self.db.counts[n])
+    /// Scratch pre-sized for a database of `rows` rows (what a serving
+    /// worker allocates once at construction).
+    pub fn with_rows(rows: usize) -> Self {
+        Self { visited: vec![0; rows], epoch: 0, c: RegisterPq::new(1), m: RegisterPq::new(1) }
     }
 
-    fn begin_query(&mut self) {
+    /// Scratch whose epoch counter starts at `epoch` — a test hook for
+    /// driving the wraparound path (`epoch` near `u32::MAX` wraps within a
+    /// few queries). Visited marks start zeroed, exactly as after a wrap.
+    pub fn with_epoch(rows: usize, epoch: u32) -> Self {
+        let mut s = Self::with_rows(rows);
+        s.epoch = epoch;
+        s
+    }
+
+    /// The current epoch (diagnostics and wraparound tests).
+    pub fn epoch(&self) -> u32 {
+        self.epoch
+    }
+
+    /// Open a new query against a `rows`-row database: bump the epoch
+    /// (zero-filling once on wrap) and grow the visited vector if this
+    /// database is the largest served so far.
+    fn begin_query(&mut self, rows: usize) {
         self.epoch = self.epoch.wrapping_add(1);
         if self.epoch == 0 {
             self.visited.fill(0);
             self.epoch = 1;
         }
-        if self.visited.len() < self.db.len() {
-            self.visited.resize(self.db.len(), 0);
+        if self.visited.len() < rows {
+            self.visited.resize(rows, 0);
         }
     }
+}
 
-    #[inline]
-    fn mark_visited(&mut self, node: u32) -> bool {
-        let v = &mut self.visited[node as usize];
-        if *v == self.epoch {
-            false
-        } else {
-            *v = self.epoch;
-            true
-        }
+impl Default for SearchScratch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[inline]
+fn similarity(
+    db: &Database,
+    q: &Fingerprint,
+    qc: u32,
+    node: u32,
+    stats: &mut SearchStats,
+) -> f64 {
+    stats.distance_evals += 1;
+    let n = node as usize;
+    q.tanimoto_with_counts(&db.fps[n], qc, db.counts[n])
+}
+
+#[inline]
+fn mark_visited(visited: &mut [u32], epoch: u32, node: u32) -> bool {
+    let v = &mut visited[node as usize];
+    if *v == epoch {
+        false
+    } else {
+        *v = epoch;
+        true
+    }
+}
+
+/// A traversal view over a graph + database with externally owned scratch.
+/// Construction is free — two shared borrows and a `&mut` — so serving
+/// layers build one per query over their worker-lifetime [`SearchScratch`]
+/// without any per-query allocation.
+pub struct Searcher<'a> {
+    pub graph: &'a HnswGraph,
+    pub db: &'a Database,
+    scratch: &'a mut SearchScratch,
+}
+
+impl<'a> Searcher<'a> {
+    pub fn new(graph: &'a HnswGraph, db: &'a Database, scratch: &'a mut SearchScratch) -> Self {
+        Self { graph, db, scratch }
     }
 
     /// Algorithm 1: greedy descent on layer `l` from entry `ep`; returns
@@ -85,16 +171,17 @@ impl<'a> Searcher<'a> {
         layer: usize,
         stats: &mut SearchStats,
     ) -> (u32, f64) {
+        let graph = self.graph;
+        let db = self.db;
         let mut cur = ep;
-        let mut cur_sim = self.similarity(q, qc, cur, stats);
+        let mut cur_sim = similarity(db, q, qc, cur, stats);
         loop {
             stats.upper_steps += 1;
             stats.hops += 1;
             let mut best = cur;
             let mut best_sim = cur_sim;
-            let neighbors: Vec<u32> = self.graph.layer(layer).neighbors(cur).collect();
-            for e in neighbors {
-                let s = self.similarity(q, qc, e, stats);
+            for e in graph.layer(layer).neighbors(cur) {
+                let s = similarity(db, q, qc, e, stats);
                 if s > best_sim {
                     best = e;
                     best_sim = s;
@@ -125,20 +212,25 @@ impl<'a> Searcher<'a> {
         if ef == 0 {
             return Vec::new();
         }
-        self.begin_query();
+        let graph = self.graph;
+        let db = self.db;
+        self.scratch.begin_query(db.len());
         // C: candidates (pop closest); M: results (evict furthest). Both
         // are the register-array PQs of module ④, sized exactly ef (paper:
         // "both of the priority queues are sized as ef") — so the
         // `RegisterPq::comparators(ef)` resource estimate is what this
         // search actually exercises. With more than ef entry points the
-        // queues retain the best ef seeds.
-        let mut c = RegisterPq::new(ef);
-        let mut m = RegisterPq::new(ef);
+        // queues retain the best ef seeds. The queue *storage* lives in
+        // the scratch and is retargeted per query, not reallocated.
+        let SearchScratch { visited, epoch, c, m } = &mut *self.scratch;
+        let epoch = *epoch;
+        c.reset(ef);
+        m.reset(ef);
         for &ep in eps {
-            if !self.mark_visited(ep) {
+            if !mark_visited(visited, epoch, ep) {
                 continue;
             }
-            let s = self.similarity(q, qc, ep, stats);
+            let s = similarity(db, q, qc, ep, stats);
             let sc = Scored::new(s, ep as u64);
             // Only accepted enqueues are hardware queue operations; a
             // rejected push never enters the register array.
@@ -160,15 +252,13 @@ impl<'a> Searcher<'a> {
                 }
             }
             stats.hops += 1;
-            let neighbors: Vec<u32> =
-                self.graph.layer(layer).neighbors(top.id as u32).collect();
-            for e in neighbors {
-                if !self.mark_visited(e) {
+            for e in graph.layer(layer).neighbors(top.id as u32) {
+                if !mark_visited(visited, epoch, e) {
                     continue;
                 }
                 // Paper line 15–16: only evaluate/keep if M not full or e
                 // beats the furthest result.
-                let s = self.similarity(q, qc, e, stats);
+                let s = similarity(db, q, qc, e, stats);
                 let sc = Scored::new(s, e as u64);
                 let keep = !m.is_full() || {
                     let f = m.peek_worst().unwrap();
@@ -187,7 +277,7 @@ impl<'a> Searcher<'a> {
                 }
             }
         }
-        m.into_sorted()
+        m.as_sorted().to_vec()
     }
 
     /// Full KNN search (paper Fig. 5 dataflow): descend Algorithm 1 through
@@ -234,7 +324,8 @@ mod tests {
     #[test]
     fn knn_self_query_finds_self() {
         let (db, graph) = small_world();
-        let mut searcher = Searcher::new(&graph, &db);
+        let mut scratch = SearchScratch::with_rows(db.len());
+        let mut searcher = Searcher::new(&graph, &db, &mut scratch);
         for i in [0u32, 17, 399, 799] {
             let (res, _stats) = searcher.knn(&db.fps[i as usize].clone(), 1, 32);
             assert_eq!(res[0].id, i as u64, "self-query must return self");
@@ -246,7 +337,8 @@ mod tests {
     fn recall_reasonable_vs_brute() {
         let (db, graph) = small_world();
         let brute = BruteForceIndex::new(db.clone());
-        let mut searcher = Searcher::new(&graph, &db);
+        let mut scratch = SearchScratch::with_rows(db.len());
+        let mut searcher = Searcher::new(&graph, &db, &mut scratch);
         let queries = db.sample_queries(30, 5);
         let k = 10;
         let mean: f64 = queries
@@ -265,7 +357,8 @@ mod tests {
     fn recall_increases_with_ef() {
         let (db, graph) = small_world();
         let brute = BruteForceIndex::new(db.clone());
-        let mut searcher = Searcher::new(&graph, &db);
+        let mut scratch = SearchScratch::with_rows(db.len());
+        let mut searcher = Searcher::new(&graph, &db, &mut scratch);
         let queries = db.sample_queries(25, 9);
         let k = 10;
         let mean_at = |searcher: &mut Searcher, ef: usize| -> f64 {
@@ -288,7 +381,8 @@ mod tests {
     #[test]
     fn stats_grow_with_ef() {
         let (db, graph) = small_world();
-        let mut searcher = Searcher::new(&graph, &db);
+        let mut scratch = SearchScratch::with_rows(db.len());
+        let mut searcher = Searcher::new(&graph, &db, &mut scratch);
         let q = db.sample_queries(1, 3)[0].clone();
         let (_, s_small) = searcher.knn(&q, 10, 10);
         let (_, s_large) = searcher.knn(&q, 10, 150);
@@ -305,7 +399,8 @@ mod tests {
     fn empty_graph() {
         let db = Database::synthesize(10, &ChemblModel::default(), 1);
         let graph = HnswGraph::new(HnswParams::new(4, 8, 0), 0);
-        let mut s = Searcher::new(&graph, &db);
+        let mut scratch = SearchScratch::new();
+        let mut s = Searcher::new(&graph, &db, &mut scratch);
         let (res, _) = s.knn(&db.fps[0].clone(), 5, 16);
         assert!(res.is_empty());
     }
@@ -316,7 +411,8 @@ mod tests {
         // RegisterPq::new(0), whose `assert!(cap > 0)` killed the worker
         // thread serving the query. They must answer with an empty result.
         let (db, graph) = small_world();
-        let mut searcher = Searcher::new(&graph, &db);
+        let mut scratch = SearchScratch::with_rows(db.len());
+        let mut searcher = Searcher::new(&graph, &db, &mut scratch);
         let q = db.fps[5].clone();
         let qc = q.count_ones();
         for (k, ef) in [(0usize, 0usize), (0, 32), (0, 1)] {
@@ -335,6 +431,59 @@ mod tests {
         assert_eq!(res.len(), 3);
     }
 
+    /// One scratch reused across queries must answer exactly like a fresh
+    /// scratch per query — the contract that lets pool workers amortize.
+    #[test]
+    fn reused_scratch_matches_fresh_scratch_per_query() {
+        let (db, graph) = small_world();
+        let mut reused = SearchScratch::with_rows(db.len());
+        for (qi, q) in db.sample_queries(12, 13).iter().enumerate() {
+            let k = 1 + qi % 10;
+            let ef = [1usize, 8, 32, 64][qi % 4];
+            let (got, gs) = Searcher::new(&graph, &db, &mut reused).knn(q, k, ef);
+            let mut fresh = SearchScratch::with_rows(db.len());
+            let (want, ws) = Searcher::new(&graph, &db, &mut fresh).knn(q, k, ef);
+            assert_eq!(got, want, "query {qi}: scratch reuse changed results");
+            assert_eq!(gs, ws, "query {qi}: scratch reuse changed the work profile");
+        }
+    }
+
+    /// The epoch wrap path: a scratch seeded at `u32::MAX` wraps on the
+    /// first query (zero-fill + restart at 1) and keeps answering
+    /// identically to a fresh scratch.
+    #[test]
+    fn epoch_wrap_zero_fills_and_restarts() {
+        let (db, graph) = small_world();
+        let mut scratch = SearchScratch::with_epoch(db.len(), u32::MAX);
+        let q = db.sample_queries(1, 21)[0].clone();
+        let (got, _) = Searcher::new(&graph, &db, &mut scratch).knn(&q, 10, 48);
+        assert_eq!(scratch.epoch(), 1, "wrap must restart the epoch at 1");
+        let mut fresh = SearchScratch::new();
+        let (want, _) = Searcher::new(&graph, &db, &mut fresh).knn(&q, 10, 48);
+        assert_eq!(got, want);
+    }
+
+    /// One scratch shared across different graphs/databases (the
+    /// `ShardedHnsw` checkout-pool pattern): the visited vector grows to
+    /// the larger database and never leaks marks between them.
+    #[test]
+    fn scratch_shared_across_graphs_and_grows() {
+        let small = Arc::new(Database::synthesize(200, &ChemblModel::default(), 3));
+        let big = Arc::new(Database::synthesize(700, &ChemblModel::default(), 4));
+        let g_small = HnswBuilder::new(HnswParams::new(6, 32, 1)).build(&small);
+        let g_big = HnswBuilder::new(HnswParams::new(6, 32, 2)).build(&big);
+        let mut shared = SearchScratch::with_rows(small.len());
+        for round in 0..4u64 {
+            for (db, graph) in [(&small, &g_small), (&big, &g_big)] {
+                let q = db.sample_queries(1, 11 + round)[0].clone();
+                let (got, _) = Searcher::new(graph, db, &mut shared).knn(&q, 5, 32);
+                let mut fresh = SearchScratch::new();
+                let (want, _) = Searcher::new(graph, db, &mut fresh).knn(&q, 5, 32);
+                assert_eq!(got, want, "round {round}: cross-graph scratch reuse leaked state");
+            }
+        }
+    }
+
     /// `pq_ops` must count exactly the queue operations the register
     /// arrays accept: one per successful enqueue (C and M separately), one
     /// per dequeue. A shadow run of Algorithm 2 over the same graph with
@@ -344,7 +493,8 @@ mod tests {
     #[test]
     fn pq_ops_counts_only_accepted_queue_ops() {
         let (db, graph) = small_world();
-        let mut searcher = Searcher::new(&graph, &db);
+        let mut scratch = SearchScratch::with_rows(db.len());
+        let mut searcher = Searcher::new(&graph, &db, &mut scratch);
         let q = db.sample_queries(1, 41)[0].clone();
         let qc = q.count_ones();
         // Descend to the base-layer entry point the same way knn does.
@@ -407,7 +557,8 @@ mod tests {
     #[test]
     fn algorithm1_descends_to_local_optimum() {
         let (db, graph) = small_world();
-        let mut searcher = Searcher::new(&graph, &db);
+        let mut scratch = SearchScratch::with_rows(db.len());
+        let mut searcher = Searcher::new(&graph, &db, &mut scratch);
         let q = db.fps[42].clone();
         let qc = q.count_ones();
         if graph.n_layers() < 2 {

@@ -26,11 +26,11 @@
 //! graph slice; partial result streams meet in the merge tree
 //! (`simulator::simulate_multi_traversal` prices that deployment).
 
-use super::{HnswBuilder, HnswGraph, HnswParams, Searcher, SearchStats};
+use super::{HnswBuilder, HnswGraph, HnswParams, SearchScratch, Searcher, SearchStats};
 use crate::fingerprint::Fingerprint;
 use crate::shard::{ShardedDatabase, PARALLEL_MIN_SHARD_ROWS};
 use crate::topk::{Scored, ShardMerge};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 /// Per-shard HNSW graphs over a sharded database, searched shard-parallel
 /// with an exact cross-shard merge of the approximate partials.
@@ -42,6 +42,13 @@ pub struct ShardedHnsw {
     /// [`PARALLEL_MIN_SHARD_ROWS`]); Some(p) = forced by the caller.
     parallel: Option<bool>,
     max_shard_rows: usize,
+    /// Checkout pool of [`SearchScratch`]es shared by all query paths:
+    /// every traversal borrows one (allocating only while the pool is
+    /// drier than the current concurrency) and returns it afterwards, so
+    /// a long-lived `ShardedHnsw` performs no per-query O(rows) visited
+    /// allocation. Epoch tagging makes a scratch safely reusable across
+    /// shards of different sizes.
+    scratch_pool: Mutex<Vec<SearchScratch>>,
 }
 
 impl ShardedHnsw {
@@ -65,7 +72,43 @@ impl ShardedHnsw {
             handles.into_iter().map(|h| h.join().expect("shard graph build")).collect()
         });
         let max_shard_rows = sharded.shards().iter().map(|d| d.len()).max().unwrap_or(0);
-        Self { sharded, graphs, params, parallel: None, max_shard_rows }
+        Self {
+            sharded,
+            graphs,
+            params,
+            parallel: None,
+            max_shard_rows,
+            scratch_pool: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Borrow a scratch from the pool (allocating one pre-sized to the
+    /// largest shard on a dry pool). Pair with [`Self::checkin_scratch`].
+    fn checkout_scratch(&self) -> SearchScratch {
+        self.scratch_pool
+            .lock()
+            .unwrap()
+            .pop()
+            .unwrap_or_else(|| SearchScratch::with_rows(self.max_shard_rows))
+    }
+
+    fn checkin_scratch(&self, scratch: SearchScratch) {
+        self.scratch_pool.lock().unwrap().push(scratch);
+    }
+
+    /// Borrow `n` scratches under one lock acquisition — the per-query
+    /// fan-out path, keeping the pool a fixed two-lock-ops-per-query cost
+    /// no matter the shard count or how many pool workers share this
+    /// index. Pair with [`Self::checkin_scratches`].
+    fn checkout_scratches(&self, n: usize) -> Vec<SearchScratch> {
+        let mut pool = self.scratch_pool.lock().unwrap();
+        (0..n)
+            .map(|_| pool.pop().unwrap_or_else(|| SearchScratch::with_rows(self.max_shard_rows)))
+            .collect()
+    }
+
+    fn checkin_scratches(&self, scratches: Vec<SearchScratch>) {
+        self.scratch_pool.lock().unwrap().extend(scratches);
     }
 
     /// Force per-query thread fan-out on or off, overriding the automatic
@@ -100,15 +143,12 @@ impl ShardedHnsw {
 
     /// Search one shard only; returns the partial top-k in **global** ids
     /// plus that shard's traversal stats (what a shard worker computes
-    /// before the merge tree).
-    ///
-    /// Like [`crate::coordinator::backend::NativeHnsw`], this builds a
-    /// fresh [`Searcher`] (and its O(shard rows) visited scratch) per
-    /// call — `Searcher` borrows graph and database, so cross-query
-    /// scratch reuse from a shared `&self` needs `Searcher` to own its
-    /// handles, a refactor tracked in ROADMAP.md. Long-lived callers that
-    /// search one shard repeatedly should hold their own `Searcher` over
-    /// [`ShardedHnsw::graph`] to amortize via its epoch mechanism.
+    /// before the merge tree). The traversal borrows a scratch from the
+    /// internal checkout pool, so repeated calls on a long-lived
+    /// `ShardedHnsw` amortize via the epoch mechanism — no per-query
+    /// visited allocation. Callers owning their own worker-lifetime
+    /// scratch (one engine pinned to one shard) use
+    /// [`ShardedHnsw::knn_shard_with`] instead.
     pub fn knn_shard(
         &self,
         si: usize,
@@ -116,7 +156,23 @@ impl ShardedHnsw {
         k: usize,
         ef: usize,
     ) -> (Vec<Scored>, SearchStats) {
-        let mut searcher = Searcher::new(&self.graphs[si], self.sharded.shard(si));
+        let mut scratch = self.checkout_scratch();
+        let out = self.knn_shard_with(si, q, k, ef, &mut scratch);
+        self.checkin_scratch(scratch);
+        out
+    }
+
+    /// [`ShardedHnsw::knn_shard`] with an externally owned scratch — the
+    /// shape a per-shard pool worker uses to amortize across queries.
+    pub fn knn_shard_with(
+        &self,
+        si: usize,
+        q: &Fingerprint,
+        k: usize,
+        ef: usize,
+        scratch: &mut SearchScratch,
+    ) -> (Vec<Scored>, SearchStats) {
+        let mut searcher = Searcher::new(&self.graphs[si], self.sharded.shard(si), scratch);
         let (local, stats) = searcher.knn(q, k, ef);
         (self.sharded.remap(si, local), stats)
     }
@@ -137,14 +193,32 @@ impl ShardedHnsw {
         let fan_out = self.graphs.len() > 1
             && self.parallel.unwrap_or(self.max_shard_rows >= PARALLEL_MIN_SHARD_ROWS);
         let partials: Vec<(Vec<Scored>, SearchStats)> = if fan_out {
-            std::thread::scope(|scope| {
-                let handles: Vec<_> = (0..self.graphs.len())
-                    .map(|si| scope.spawn(move || self.knn_shard(si, q, k, ef)))
+            // One batched checkout for the whole fan-out (two lock ops per
+            // query); each thread borrows one scratch from the batch.
+            // Steady-state the pool holds one scratch per concurrent
+            // thread and queries allocate nothing.
+            let mut scratches = self.checkout_scratches(self.graphs.len());
+            let out = std::thread::scope(|scope| {
+                let handles: Vec<_> = scratches
+                    .iter_mut()
+                    .enumerate()
+                    .map(|(si, scratch)| {
+                        scope.spawn(move || self.knn_shard_with(si, q, k, ef, scratch))
+                    })
                     .collect();
                 handles.into_iter().map(|h| h.join().expect("shard search")).collect()
-            })
+            });
+            self.checkin_scratches(scratches);
+            out
         } else {
-            (0..self.graphs.len()).map(|si| self.knn_shard(si, q, k, ef)).collect()
+            // Serial sweep: one scratch serves every shard back to back
+            // (the epoch tags isolate the per-shard traversals).
+            let mut scratch = self.checkout_scratch();
+            let out = (0..self.graphs.len())
+                .map(|si| self.knn_shard_with(si, q, k, ef, &mut scratch))
+                .collect();
+            self.checkin_scratch(scratch);
+            out
         };
         for (partial, stats) in partials {
             merge.push_partial(partial);

@@ -236,6 +236,15 @@ pub struct TraversalSimConfig {
     pub k: usize,
     /// Clock Hz.
     pub clock_hz: f64,
+    /// Per-query state-setup cycles charged to each engine before the
+    /// traversal starts. The hardware keeps its traversal state (register
+    /// arrays, visited marks) resident between queries, so this is 0 for
+    /// the paper's engine — the figure the software serving path matches
+    /// by reusing worker-lifetime `hnsw::SearchScratch`es. A host that
+    /// instead rebuilt its O(rows) visited state per query would set this
+    /// to the cycle-equivalent of that allocation, which is how the model
+    /// prices the pre-refactor serving shape.
+    pub query_setup_cycles: f64,
 }
 
 impl TraversalSimConfig {
@@ -248,6 +257,7 @@ impl TraversalSimConfig {
             nodes: crate::hwmodel::qps::CHEMBL_N,
             k,
             clock_hz: 450e6,
+            query_setup_cycles: 0.0,
         }
     }
 }
@@ -307,8 +317,12 @@ pub fn simulate_multi_traversal(cfg: &TraversalSimConfig, engines: usize) -> Tra
 fn traversal_cycles(cfg: &TraversalSimConfig, engines: usize) -> f64 {
     use crate::hwmodel::qps::HOP_LATENCY_CYCLES;
     let shrink = traversal_shrink(cfg.nodes, engines);
-    // Result drain mirrors HnswDesign::cycles_per_query's fixed tail.
-    cfg.distance_evals * shrink + cfg.hops * shrink * HOP_LATENCY_CYCLES + 200.0
+    // Result drain mirrors HnswDesign::cycles_per_query's fixed tail; the
+    // setup term is 0 for resident-state engines (see TraversalSimConfig).
+    cfg.query_setup_cycles
+        + cfg.distance_evals * shrink
+        + cfg.hops * shrink * HOP_LATENCY_CYCLES
+        + 200.0
 }
 
 fn traversal_report(
@@ -514,6 +528,27 @@ mod tests {
         let analytic = HnswDesign::new(10, 60, cfg.distance_evals, cfg.hops).cycles_per_query();
         assert_eq!(r.cycles, analytic.round() as u64);
         assert_eq!(r.total_distance_evals, cfg.distance_evals);
+    }
+
+    /// The per-query setup hook: resident-state engines (setup = 0, the
+    /// paper's design and the scratch-reusing software path) pay nothing;
+    /// a rebuild-per-query host is charged exactly its setup cycles on
+    /// every engine, eroding QPS.
+    #[test]
+    fn query_setup_cycles_priced_once_per_query() {
+        let resident = TraversalSimConfig::paper_operating_point(10);
+        let rebuild =
+            TraversalSimConfig { query_setup_cycles: 1_000.0, ..resident.clone() };
+        for engines in [1usize, 4] {
+            let a = simulate_multi_traversal(&resident, engines);
+            let b = simulate_multi_traversal(&rebuild, engines);
+            assert_eq!(
+                b.engine_cycles - a.engine_cycles,
+                1_000,
+                "e={engines}: setup charged once per engine-query"
+            );
+            assert!(b.qps < a.qps, "e={engines}: setup cost must erode QPS");
+        }
     }
 
     #[test]

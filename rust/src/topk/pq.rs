@@ -45,6 +45,16 @@ impl RegisterPq {
         cap.saturating_sub(1)
     }
 
+    /// Clear and retarget capacity, keeping the backing allocation — the
+    /// scratch-reuse path (`hnsw::SearchScratch` retargets its C/M queues
+    /// to each query's ef without reallocating).
+    pub fn reset(&mut self, cap: usize) {
+        assert!(cap > 0);
+        self.cap = cap;
+        self.items.clear();
+        self.items.reserve(cap);
+    }
+
     /// LUT cost model hook (see `hwmodel::modules`): entries are 12-bit
     /// score + id bits.
     pub fn capacity(&self) -> usize {

@@ -3,7 +3,7 @@
 //! contract of the shard layer.
 
 use molfpga::fingerprint::{packed::FoldScheme, Fingerprint, FP_BITS};
-use molfpga::hnsw::{HnswBuilder, HnswParams, Searcher, ShardedHnsw};
+use molfpga::hnsw::{HnswBuilder, HnswParams, SearchScratch, SearchStats, Searcher, ShardedHnsw};
 use molfpga::index::{recall_at_k, BruteForceIndex, SearchIndex};
 use molfpga::shard::{PartitionPolicy, ShardedDatabase, ShardedSearchIndex};
 use molfpga::util::proptest::{check, gen};
@@ -136,7 +136,8 @@ fn sharded_hnsw_recall_within_epsilon_of_unsharded() {
         );
         let queries = db.sample_queries(8, g.next_u64());
         let (mut r_single, mut r_sharded) = (0.0, 0.0);
-        let mut searcher = Searcher::new(&single, &db);
+        let mut scratch = SearchScratch::with_rows(db.len());
+        let mut searcher = Searcher::new(&single, &db, &mut scratch);
         for q in &queries {
             let truth = oracle.search(q, k);
             let (got1, _) = searcher.knn(q, k, ef);
@@ -203,6 +204,91 @@ fn sharded_hnsw_merge_deterministic_and_id_stable() {
                 );
             }
         }
+    });
+}
+
+/// Epoch wraparound correctness: a [`SearchScratch`] whose epoch counter
+/// sits just below `u32::MAX` must keep answering queries identically as
+/// its epoch wraps (the `wrapping_add` → zero-fill → restart-at-1 path in
+/// `hnsw/search.rs`). Two independent shadows check every query across
+/// the wrap:
+///
+/// 1. a fresh scratch per query (trivially correct — epoch 1 over zeroed
+///    marks) must produce bit-identical results *and* work stats, and
+/// 2. a `HashSet`-based shadow of Algorithm 2 (explicit visited-set
+///    semantics, no epochs at all) must visit the identical result set on
+///    the base layer.
+#[test]
+fn searcher_epoch_wraparound_matches_fresh_scratch() {
+    use molfpga::topk::{RegisterPq, Scored};
+    check("epoch_wraparound", 4, |g| {
+        let db = gen::database(g, 250, 500);
+        let graph = HnswBuilder::new(HnswParams::new(6, 32, g.next_u64())).build(&db);
+        // Seed the epoch a few queries below the wrap so the test crosses
+        // it mid-stream with live pre-wrap marks in the visited vector.
+        let start = u32::MAX - 3;
+        let mut scratch = SearchScratch::with_epoch(db.len(), start);
+        let queries = db.sample_queries(10, g.next_u64());
+        let ef = 32;
+        let mut wrapped = false;
+        for (qi, q) in queries.iter().enumerate() {
+            let k = 1 + g.below_usize(10);
+            let (got, stats) = Searcher::new(&graph, &db, &mut scratch).knn(q, k, ef);
+            if scratch.epoch() < start {
+                wrapped = true;
+            }
+
+            // Shadow 1: a fresh scratch answers the same query.
+            let mut fresh = SearchScratch::new();
+            let (want, wstats) = Searcher::new(&graph, &db, &mut fresh).knn(q, k, ef);
+            assert_eq!(got, want, "query {qi}: wrap changed results");
+            assert_eq!(stats, wstats, "query {qi}: wrap changed the work profile");
+
+            // Shadow 2: HashSet visited-set semantics on the base layer.
+            let qc = q.count_ones();
+            let Some((mut ep, top)) = graph.entry_point() else { continue };
+            let mut dstats = SearchStats::default();
+            let mut dscratch = SearchScratch::new();
+            let mut dsearcher = Searcher::new(&graph, &db, &mut dscratch);
+            for l in (1..=top).rev() {
+                let (best, _) = dsearcher.search_layer_top(q, qc, ep, l, &mut dstats);
+                ep = best;
+            }
+            let eff = ef.max(k);
+            let mut c = RegisterPq::new(eff);
+            let mut m = RegisterPq::new(eff);
+            let mut visited = std::collections::HashSet::new();
+            let sim = |node: u32| {
+                q.tanimoto_with_counts(&db.fps[node as usize], qc, db.counts[node as usize])
+            };
+            visited.insert(ep);
+            let seed = Scored::new(sim(ep), ep as u64);
+            let _ = c.push(seed);
+            let _ = m.push(seed);
+            while let Some(top) = c.pop_best() {
+                if m.is_full() && m.peek_worst().unwrap().beats(&top) {
+                    break;
+                }
+                for e in graph.layer(0).neighbors(top.id as u32).collect::<Vec<_>>() {
+                    if !visited.insert(e) {
+                        continue;
+                    }
+                    let sc = Scored::new(sim(e), e as u64);
+                    if !m.is_full() || sc.beats(&m.peek_worst().unwrap()) {
+                        let _ = c.push(sc);
+                        let _ = m.push(sc);
+                    }
+                }
+            }
+            let mut shadow = m.into_sorted();
+            shadow.truncate(k);
+            assert_eq!(
+                got, shadow,
+                "query {qi}: epoch-tagged visited set diverged from HashSet semantics"
+            );
+        }
+        assert!(wrapped, "the query stream must actually cross the u32 epoch wrap");
+        assert!(scratch.epoch() >= 1 && scratch.epoch() < start, "epoch restarted at 1");
     });
 }
 
