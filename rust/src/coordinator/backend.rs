@@ -41,8 +41,11 @@ pub trait SearchBackend {
     fn search(&mut self, fp: &Fingerprint, k: usize) -> Result<Vec<Scored>>;
 
     /// Serve a batch (default: loop). Backends with a batched compute
-    /// path (the PJRT engine's Q-queries-per-tile-pass artifact) override
-    /// this to amortize dispatch.
+    /// path override this to amortize per-query work: the exhaustive
+    /// backends stream the database **once per batch** (scan sharing,
+    /// `index::SearchIndex::search_batch`; docs/batching.md), the PJRT
+    /// engine dispatches its Q-queries-per-tile-pass artifact. Contract:
+    /// `result[i]` equals `self.search(fps[i], k)` exactly.
     fn search_batch(&mut self, fps: &[&Fingerprint], k: usize) -> Result<Vec<Vec<Scored>>> {
         fps.iter().map(|fp| self.search(fp, k)).collect()
     }
@@ -77,6 +80,16 @@ impl SearchBackend for NativeExhaustive {
             return Ok(Vec::new()); // TopKMerge::new(0) would assert
         }
         Ok(self.index.search(fp, k))
+    }
+
+    /// Scan sharing: the whole batch rides one walk of the (folded,
+    /// popcount-pruned) database — `index::SearchIndex::search_batch`'s
+    /// shared stage-1 scan with per-query stage-2 rescue.
+    fn search_batch(&mut self, fps: &[&Fingerprint], k: usize) -> Result<Vec<Vec<Scored>>> {
+        if k == 0 {
+            return Ok(vec![Vec::new(); fps.len()]);
+        }
+        Ok(self.index.search_batch(fps, k))
     }
 }
 
@@ -121,6 +134,16 @@ impl SearchBackend for ShardedExhaustive {
             return Ok(Vec::new());
         }
         Ok(self.index.search(fp, k))
+    }
+
+    /// Scan sharing across shards: every shard streams its slice once per
+    /// batch, and the per-query partials reduce through the cross-shard
+    /// merge tree ([`crate::shard::ShardedSearchIndex`]'s `search_batch`).
+    fn search_batch(&mut self, fps: &[&Fingerprint], k: usize) -> Result<Vec<Vec<Scored>>> {
+        if k == 0 {
+            return Ok(vec![Vec::new(); fps.len()]);
+        }
+        Ok(self.index.search_batch(fps, k))
     }
 }
 
@@ -339,6 +362,35 @@ mod tests {
             assert!(rec >= 0.8, "sharded hnsw backend recall {rec}");
             for s in &a {
                 assert!((s.id as usize) < db.len(), "ids must be global rows");
+            }
+        }
+    }
+
+    #[test]
+    fn exhaustive_backends_batch_equals_sequential() {
+        use crate::shard::PartitionPolicy;
+        let db = Arc::new(Database::synthesize(2200, &ChemblModel::default(), 47));
+        let sharded = Arc::new(ShardedDatabase::partition(
+            db.clone(),
+            3,
+            PartitionPolicy::PopcountStriped,
+        ));
+        let cfg = TwoStageConfig { m: 4, cutoff: 0.8, ..TwoStageConfig::default() };
+        let mut backends: Vec<Box<dyn SearchBackend>> = vec![
+            Box::new(NativeExhaustive::new(db.clone(), 4, 0.8)),
+            Box::new(ShardedExhaustive::build(sharded, cfg)),
+        ];
+        let queries = db.sample_queries(9, 13);
+        let batch: Vec<&Fingerprint> = queries.iter().collect();
+        for be in &mut backends {
+            let got = be.search_batch(&batch, 8).unwrap();
+            assert_eq!(got.len(), batch.len());
+            for (qi, q) in batch.iter().enumerate() {
+                let want = be.search(q, 8).unwrap();
+                assert_eq!(got[qi].len(), want.len(), "{} query {qi}", be.name());
+                for (a, b) in got[qi].iter().zip(&want) {
+                    assert_eq!((a.id, a.score), (b.id, b.score), "{} query {qi}", be.name());
+                }
             }
         }
     }

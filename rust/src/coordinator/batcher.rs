@@ -2,8 +2,12 @@
 //!
 //! PJRT dispatch and worker handoff carry a fixed per-job cost; grouping
 //! queries amortizes it (the vLLM-router discipline adapted to similarity
-//! search). A batch closes when it reaches `max_batch` or when its oldest
-//! member has waited `max_wait` — the standard size-or-deadline policy.
+//! search). A batch closes when it reaches `max_batch`, when its oldest
+//! member has waited `max_wait` (the standard size-or-deadline policy),
+//! or when [`Batcher::flush`] is called. A closed batch is handed to the
+//! pool **whole** — one job, one worker, one shared database scan for the
+//! batch (the backend's scan-sharing `search_batch`; docs/batching.md) —
+//! never split back into singletons.
 
 use super::pool::QueryPool;
 use super::request::{Query, QueryResult};
@@ -57,6 +61,11 @@ impl Batcher {
                 None => Duration::from_millis(50),
             };
             let msg = rx.recv_timeout(timeout);
+            // An explicit Flush force-dispatches whatever is pending,
+            // regardless of the deadline (regression: Msg::Flush used to
+            // fall into the no-op arm, so a fresh batch sat until
+            // `max_wait` elapsed and `flush()` did nothing).
+            let mut force = false;
             match msg {
                 Ok(Msg::Enqueue(q, resp)) => {
                     if pending.is_empty() {
@@ -64,7 +73,8 @@ impl Batcher {
                     }
                     pending.push((q, resp));
                 }
-                Ok(Msg::Flush) | Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
+                Ok(Msg::Flush) => force = true,
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
                 Ok(Msg::Shutdown) | Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
                     Self::dispatch(&pool, &mut pending);
                     return;
@@ -72,7 +82,9 @@ impl Batcher {
             }
             let deadline_hit =
                 oldest.map(|t| t.elapsed() >= policy.max_wait).unwrap_or(false);
-            if pending.len() >= policy.max_batch || (deadline_hit && !pending.is_empty()) {
+            if !pending.is_empty()
+                && (force || deadline_hit || pending.len() >= policy.max_batch)
+            {
                 Self::dispatch(&pool, &mut pending);
                 oldest = None;
             }
@@ -143,6 +155,7 @@ impl Drop for Batcher {
 mod tests {
     use super::super::backend::NativeExhaustive;
     use super::super::metrics::Metrics;
+    use super::super::pool::EnginePool;
     use super::super::request::QueryMode;
     use super::*;
     use crate::fingerprint::{ChemblModel, Database};
@@ -170,6 +183,32 @@ mod tests {
             assert_eq!(r.hits.len(), 3);
         }
         assert_eq!(metrics.snapshot().completed, 5);
+        batcher.shutdown();
+    }
+
+    #[test]
+    fn flush_forces_immediate_dispatch() {
+        // Regression: Msg::Flush used to be a no-op, so a fresh batch sat
+        // until the deadline. With a 30-second max_wait, the only way
+        // these results arrive inside the 10-second receive window is the
+        // explicit flush.
+        let (db, batcher, metrics) =
+            setup(BatchPolicy { max_batch: 100, max_wait: Duration::from_secs(30) });
+        let q = db.sample_queries(1, 3)[0].clone();
+        let t0 = Instant::now();
+        let rxs: Vec<_> = (0..3u64)
+            .map(|i| batcher.submit(Query::new(i, q.clone(), 2, QueryMode::Exhaustive)))
+            .collect();
+        batcher.flush();
+        for rx in rxs {
+            let r = rx.recv_timeout(Duration::from_secs(10)).expect("flushed result");
+            assert_eq!(r.hits.len(), 2);
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "flush must dispatch now, not at the deadline"
+        );
+        assert_eq!(metrics.snapshot().completed, 3);
         batcher.shutdown();
     }
 

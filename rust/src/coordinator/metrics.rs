@@ -4,9 +4,32 @@
 //! completion is far off the hot path). Snapshot-on-read so reporters
 //! never block the serving path for long.
 
+use crate::util::prng::SplitMix64;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
+
+/// Reservoir-sampled latency state (Vitter's Algorithm R): once full,
+/// completion `t` replaces a uniformly random slot with probability
+/// `RESERVOIR / t`, so *every* completion of the run is retained with
+/// equal probability and the percentiles describe the whole run, not the
+/// recent past. (The previous deterministic odd-multiplier overwrite
+/// cycled a fixed slot sequence, systematically over-representing recent
+/// completions in long runs.)
+#[derive(Debug)]
+struct Reservoir {
+    /// Retained latency samples (seconds).
+    samples: Vec<f64>,
+    /// Completions observed so far (Algorithm R's stream position).
+    seen: u64,
+    rng: SplitMix64,
+}
+
+impl Default for Reservoir {
+    fn default() -> Self {
+        Self { samples: Vec::new(), seen: 0, rng: SplitMix64::new(0x6d65_7472_6963_73) }
+    }
+}
 
 /// Shared metrics sink.
 #[derive(Debug, Default)]
@@ -15,8 +38,8 @@ pub struct Metrics {
     pub completed: AtomicU64,
     pub rejected: AtomicU64,
     pub errors: AtomicU64,
-    /// Completed-query latencies (seconds). Bounded reservoir.
-    latencies: Mutex<Vec<f64>>,
+    /// Completed-query latencies. Bounded reservoir (Algorithm R).
+    latencies: Mutex<Reservoir>,
 }
 
 /// Reservoir cap — enough for stable p99 at any realistic test length.
@@ -41,20 +64,25 @@ impl Metrics {
 
     pub fn record_complete(&self, latency: Duration) {
         self.completed.fetch_add(1, Ordering::Relaxed);
-        let mut l = self.latencies.lock().unwrap();
-        if l.len() < RESERVOIR {
-            l.push(latency.as_secs_f64());
+        let mut r = self.latencies.lock().unwrap();
+        r.seen += 1;
+        if r.samples.len() < RESERVOIR {
+            r.samples.push(latency.as_secs_f64());
         } else {
-            // Overwrite pseudo-randomly (index from the count) so long runs
-            // stay representative.
-            let i = (self.completed.load(Ordering::Relaxed) as usize * 2654435761) % RESERVOIR;
-            l[i] = latency.as_secs_f64();
+            // Algorithm R: keep this completion with probability R/seen by
+            // drawing a slot uniformly from [0, seen). (The modulo bias at
+            // u64 width is ~seen/2^64 — immaterial.)
+            let seen = r.seen;
+            let j = r.rng.next_u64() % seen;
+            if (j as usize) < RESERVOIR {
+                r.samples[j as usize] = latency.as_secs_f64();
+            }
         }
     }
 
     /// Snapshot of the current state.
     pub fn snapshot(&self) -> MetricsSnapshot {
-        let mut lat = self.latencies.lock().unwrap().clone();
+        let mut lat = self.latencies.lock().unwrap().samples.clone();
         lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let pct = |p: f64| -> f64 {
             if lat.is_empty() {
@@ -132,6 +160,45 @@ mod tests {
         for _ in 0..(RESERVOIR + 1000) {
             m.record_complete(Duration::from_micros(10));
         }
-        assert!(m.latencies.lock().unwrap().len() <= RESERVOIR);
+        assert!(m.latencies.lock().unwrap().samples.len() <= RESERVOIR);
+    }
+
+    #[test]
+    fn reservoir_stays_representative_over_long_runs() {
+        // Algorithm R keeps every completion with equal probability, so on
+        // a 4×RESERVOIR stream whose latency encodes its index, the
+        // retained mean index must sit near the stream midpoint and every
+        // quarter of the stream must stay represented. (The old
+        // deterministic odd-multiplier overwrite cycled fixed slots and
+        // skewed retention toward recent completions.)
+        let m = Metrics::new();
+        let n = 4 * RESERVOIR;
+        for i in 0..n {
+            m.record_complete(Duration::from_nanos(i as u64));
+        }
+        let samples = m.latencies.lock().unwrap().samples.clone();
+        assert_eq!(samples.len(), RESERVOIR);
+        let mean_idx = samples.iter().map(|&s| s * 1e9).sum::<f64>() / samples.len() as f64;
+        let expect = (n as f64 - 1.0) / 2.0;
+        assert!(
+            (mean_idx - expect).abs() < expect * 0.05,
+            "retained mean index {mean_idx:.0} far from stream midpoint {expect:.0}"
+        );
+        let quarter = (n / 4) as f64;
+        for qi in 0..4 {
+            let lo = qi as f64 * quarter;
+            let in_quarter = samples
+                .iter()
+                .filter(|&&s| {
+                    let idx = s * 1e9;
+                    idx >= lo && idx < lo + quarter
+                })
+                .count();
+            // Expected 25% each; demand at least 15%.
+            assert!(
+                in_quarter * 100 >= RESERVOIR * 15,
+                "stream quarter {qi} under-represented: {in_quarter}/{RESERVOIR}"
+            );
+        }
     }
 }

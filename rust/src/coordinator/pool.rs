@@ -62,6 +62,18 @@ struct Job {
     respond: Sender<QueryResult>,
 }
 
+/// Group a batch's query indexes by k (ascending), so each group can ride
+/// one scan-sharing `search_batch` call. Shared by both pool shapes — the
+/// replicated and shard-parallel workers must batch identically.
+fn group_by_k(batch: &[Query]) -> std::collections::BTreeMap<usize, Vec<usize>> {
+    let mut by_k: std::collections::BTreeMap<usize, Vec<usize>> =
+        std::collections::BTreeMap::new();
+    for (qi, q) in batch.iter().enumerate() {
+        by_k.entry(q.k).or_default().push(qi);
+    }
+    by_k
+}
+
 /// Fixed pool of engine workers sharing a bounded job queue.
 pub struct EnginePool {
     tx: SyncSender<Job>,
@@ -109,19 +121,17 @@ impl EnginePool {
                                 guard.recv()
                             };
                             let Ok(job) = job else { break };
-                            // Group the batch by k so backends with a
-                            // batched compute path can amortize dispatch.
-                            let mut by_k: std::collections::BTreeMap<usize, Vec<&Query>> =
-                                std::collections::BTreeMap::new();
-                            for q in &job.batch {
-                                by_k.entry(q.k).or_default().push(q);
-                            }
-                            for (k, qs) in by_k {
-                                let fps: Vec<&crate::fingerprint::Fingerprint> =
-                                    qs.iter().map(|q| &q.fingerprint).collect();
+                            // Each k-group rides one scan-sharing
+                            // `search_batch` call.
+                            for (k, qis) in group_by_k(&job.batch) {
+                                let fps: Vec<&crate::fingerprint::Fingerprint> = qis
+                                    .iter()
+                                    .map(|&qi| &job.batch[qi].fingerprint)
+                                    .collect();
                                 match backend.search_batch(&fps, k) {
                                     Ok(all_hits) => {
-                                        for (q, hits) in qs.iter().zip(all_hits) {
+                                        for (&qi, hits) in qis.iter().zip(all_hits) {
+                                            let q = &job.batch[qi];
                                             let latency = q.submitted.elapsed();
                                             metrics.record_complete(latency);
                                             let _ = job.respond.send(QueryResult {
@@ -134,11 +144,11 @@ impl EnginePool {
                                         }
                                     }
                                     Err(e) => {
-                                        for q in &qs {
+                                        for &qi in &qis {
                                             metrics.record_error();
                                             eprintln!(
                                                 "[{name}-worker-{wi}] query {} failed: {e:#}",
-                                                q.id
+                                                job.batch[qi].id
                                             );
                                             inflight.fetch_sub(1, Ordering::Relaxed);
                                         }
@@ -235,11 +245,14 @@ struct ShardJobState {
 }
 
 /// Shard-parallel engine pool: worker `i` owns a backend built over shard
-/// `i` only. A submitted batch fans out to every shard worker; partial
-/// top-k lists (remapped to global ids) meet in the merge tree; the last
-/// worker to finish emits the responses. Per-query latency therefore
-/// tracks the *slowest shard* (≈ 1/s of the unsharded scan with a
-/// balanced partition) rather than the whole-database scan.
+/// `i` only. A submitted batch fans out to every shard worker **whole**:
+/// the worker groups it by k and serves each group with one scan of its
+/// shard slice (the backend's scan-sharing `search_batch`), so a B-query
+/// batch costs one shard pass, not B. Partial top-k lists (remapped to
+/// global ids) meet in one merge tree per query; the last worker to
+/// finish emits the responses. Per-query latency therefore tracks the
+/// *slowest shard* (≈ 1/s of the unsharded scan with a balanced
+/// partition) rather than the whole-database scan.
 pub struct ShardedEnginePool {
     txs: Vec<SyncSender<Arc<ShardJob>>>,
     workers: Vec<std::thread::JoinHandle<()>>,
@@ -287,29 +300,42 @@ impl ShardedEnginePool {
                             if job.state.lock().unwrap().cancelled {
                                 continue;
                             }
-                            // Compute all partials outside the lock.
+                            // Compute all partials outside the lock. The
+                            // batch is grouped by k and each group rides
+                            // one scan of this worker's shard slice (the
+                            // backend's scan-sharing `search_batch`), so a
+                            // B-query batch streams the shard once, not B
+                            // times.
                             let mut partials: Vec<Option<Vec<Scored>>> =
-                                Vec::with_capacity(job.batch.len());
-                            for q in &job.batch {
-                                match backend.search(&q.fingerprint, q.k) {
-                                    Ok(local) => {
-                                        let global = local
-                                            .into_iter()
-                                            .map(|s| {
-                                                Scored::new(
-                                                    s.score,
-                                                    globals[s.id as usize] as u64,
-                                                )
-                                            })
-                                            .collect();
-                                        partials.push(Some(global));
+                                vec![None; job.batch.len()];
+                            for (k, qis) in group_by_k(&job.batch) {
+                                let fps: Vec<&crate::fingerprint::Fingerprint> =
+                                    qis.iter().map(|&qi| &job.batch[qi].fingerprint).collect();
+                                match backend.search_batch(&fps, k) {
+                                    Ok(all_hits) => {
+                                        for (&qi, local) in qis.iter().zip(all_hits) {
+                                            let global: Vec<Scored> = local
+                                                .into_iter()
+                                                .map(|s| {
+                                                    Scored::new(
+                                                        s.score,
+                                                        globals[s.id as usize] as u64,
+                                                    )
+                                                })
+                                                .collect();
+                                            partials[qi] = Some(global);
+                                        }
                                     }
                                     Err(e) => {
-                                        eprintln!(
-                                            "[{name}-shard-{si}] query {} failed: {e:#}",
-                                            q.id
-                                        );
-                                        partials.push(None);
+                                        // The whole k-group shares the
+                                        // failed scan; each query stays
+                                        // None and is answered by silence.
+                                        for &qi in &qis {
+                                            eprintln!(
+                                                "[{name}-shard-{si}] query {} failed: {e:#}",
+                                                job.batch[qi].id
+                                            );
+                                        }
                                     }
                                 }
                             }

@@ -20,8 +20,23 @@ use super::router::Router;
 use crate::fingerprint::{Fingerprint, FP_BITS};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
+
+/// Per-connection query-id block size. Each connection draws ids from its
+/// own block so concurrent connections never share an id; ids wrap
+/// *within* the block after [`QID_BLOCK`] requests instead of silently
+/// running into the next connection's block (safe: the line protocol
+/// serves one request at a time per connection, so a reused id is never
+/// simultaneously in flight).
+const QID_BLOCK: u64 = 1_000_000;
+
+/// Query id for the `served`-th request of a connection rooted at
+/// `id_base` — always in `(id_base, id_base + QID_BLOCK]`.
+#[inline]
+fn conn_qid(id_base: u64, served: u64) -> u64 {
+    id_base + 1 + (served % QID_BLOCK)
+}
 
 /// Parse a 256-hex-char fingerprint (most-significant nibble first).
 pub fn fingerprint_from_hex(hex: &str) -> Result<Fingerprint, String> {
@@ -61,15 +76,30 @@ pub struct Server {
     router: Arc<Router>,
     next_id: AtomicU64,
     stop: Arc<AtomicBool>,
+    /// Connection handlers currently tracked by the accept loop (finished
+    /// handles are reaped there, so this follows the *live* count).
+    live_conns: AtomicUsize,
 }
 
 impl Server {
     pub fn new(router: Arc<Router>) -> Self {
-        Self { router, next_id: AtomicU64::new(1), stop: Arc::new(AtomicBool::new(false)) }
+        Self {
+            router,
+            next_id: AtomicU64::new(1),
+            stop: Arc::new(AtomicBool::new(false)),
+            live_conns: AtomicUsize::new(0),
+        }
     }
 
     pub fn stop_handle(&self) -> Arc<AtomicBool> {
         self.stop.clone()
+    }
+
+    /// Connection-handler threads currently tracked. Dead handles are
+    /// reaped in the accept loop (regression: they used to accumulate
+    /// until shutdown — unbounded memory growth under churny traffic).
+    pub fn tracked_connections(&self) -> usize {
+        self.live_conns.load(Ordering::Relaxed)
     }
 
     /// Serve on `addr` (e.g. "127.0.0.1:7878"). Blocks; returns the bound
@@ -87,14 +117,20 @@ impl Server {
         while !self.stop.load(Ordering::Relaxed) {
             match listener.accept() {
                 Ok((stream, _peer)) => {
+                    // Reap finished handlers before tracking a new one, so
+                    // churny traffic can't grow `conns` without bound.
+                    conns.retain(|h| !h.is_finished());
                     let router = self.router.clone();
-                    let next_id = self.next_id.fetch_add(1_000_000, Ordering::Relaxed);
+                    let id_base = self.next_id.fetch_add(QID_BLOCK, Ordering::Relaxed);
                     let stop = self.stop.clone();
                     conns.push(std::thread::spawn(move || {
-                        let _ = handle_conn(stream, router, next_id, stop);
+                        let _ = handle_conn(stream, router, id_base, stop);
                     }));
+                    self.live_conns.store(conns.len(), Ordering::Relaxed);
                 }
                 Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    conns.retain(|h| !h.is_finished());
+                    self.live_conns.store(conns.len(), Ordering::Relaxed);
                     std::thread::sleep(std::time::Duration::from_millis(5));
                 }
                 Err(e) => return Err(e),
@@ -117,7 +153,7 @@ fn handle_conn(
     let mut writer = stream.try_clone()?;
     let mut reader = BufReader::new(stream);
     let mut line = String::new();
-    let mut qid = id_base;
+    let mut served: u64 = 0;
     loop {
         if stop.load(Ordering::Relaxed) {
             return Ok(());
@@ -134,7 +170,7 @@ fn handle_conn(
             }
             Err(e) => return Err(e),
         }
-        let reply = dispatch_line(line.trim(), &router, &mut qid);
+        let reply = dispatch_line(line.trim(), &router, id_base, &mut served);
         match reply {
             Some(text) => {
                 writer.write_all(text.as_bytes())?;
@@ -145,7 +181,7 @@ fn handle_conn(
     }
 }
 
-fn dispatch_line(line: &str, router: &Router, qid: &mut u64) -> Option<String> {
+fn dispatch_line(line: &str, router: &Router, id_base: u64, served: &mut u64) -> Option<String> {
     let mut parts = line.split_whitespace();
     match parts.next() {
         Some("PING") => Some("PONG".into()),
@@ -165,10 +201,11 @@ fn dispatch_line(line: &str, router: &Router, qid: &mut u64) -> Option<String> {
                 Some(Err(e)) => return Some(format!("ERR {e}")),
                 None => return Some("ERR missing fingerprint".into()),
             };
-            *qid += 1;
+            let qid = conn_qid(id_base, *served);
+            *served += 1;
             // Request-boundary validation: a degenerate k (0, or beyond
             // MAX_K) is an ERR response, never a dead pool worker.
-            let rx = match router.try_submit(Query::new(*qid, fp, k, mode)) {
+            let rx = match router.try_submit(Query::new(qid, fp, k, mode)) {
                 Ok(rx) => rx,
                 Err(e) => return Some(format!("ERR {e}")),
             };
@@ -242,6 +279,85 @@ mod tests {
     use super::*;
     use crate::fingerprint::{ChemblModel, Database};
     use std::time::Duration;
+
+    #[test]
+    fn qid_blocks_wrap_without_cross_connection_collision() {
+        // Regression: one connection serving more than QID_BLOCK requests
+        // used to walk straight into the next connection's id block.
+        let a_base = 1u64;
+        let b_base = a_base + QID_BLOCK;
+        let mut a_ids = std::collections::HashSet::new();
+        for served in [0u64, 1, QID_BLOCK - 1, QID_BLOCK, 2 * QID_BLOCK + 7] {
+            let id = conn_qid(a_base, served);
+            assert!(
+                id > a_base && id <= a_base + QID_BLOCK,
+                "id {id} escaped connection A's block"
+            );
+            a_ids.insert(id);
+        }
+        // Past QID_BLOCK requests the id wraps within A's own block…
+        assert_eq!(conn_qid(a_base, 0), conn_qid(a_base, QID_BLOCK));
+        // …and never touches B's block.
+        for served in [0u64, 5, QID_BLOCK, 3 * QID_BLOCK + 1] {
+            assert!(
+                !a_ids.contains(&conn_qid(b_base, served)),
+                "connection blocks must stay disjoint"
+            );
+        }
+    }
+
+    #[test]
+    fn server_reaps_finished_connections() {
+        let db = Arc::new(Database::synthesize(400, &ChemblModel::default(), 17));
+        let metrics = Arc::new(Metrics::new());
+        let dbc = db.clone();
+        let ex = Arc::new(EnginePool::new("reap-ex", 1, 8, metrics.clone(), move |_| {
+            NativeExhaustive::factory(dbc.clone(), 1, 0.0)
+        }));
+        let graph = NativeHnsw::build_graph(&db, 6, 32, 3);
+        let dbc2 = db.clone();
+        let ap = Arc::new(EnginePool::new("reap-ap", 1, 8, metrics.clone(), move |_| {
+            NativeHnsw::factory(dbc2.clone(), graph.clone(), 32)
+        }));
+        let router = Arc::new(Router::new(
+            ex,
+            ap,
+            BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+            metrics,
+        ));
+        let server = Arc::new(Server::new(router));
+        let stop = server.stop_handle();
+        let (addr_tx, addr_rx) = std::sync::mpsc::channel();
+        let srv = server.clone();
+        let handle = std::thread::spawn(move || {
+            srv.serve("127.0.0.1:0", move |a| {
+                let _ = addr_tx.send(a);
+            })
+            .unwrap();
+        });
+        let addr = addr_rx.recv_timeout(Duration::from_secs(10)).unwrap();
+
+        // Churn: 6 short-lived connections, each fully closed before the
+        // next opens.
+        for _ in 0..6 {
+            let mut c = Client::connect(addr).unwrap();
+            assert_eq!(c.request("PING").unwrap(), "PONG");
+            assert_eq!(c.request("QUIT").ok(), Some(String::new()));
+        }
+        // The accept loop reaps on its idle ticks; the tracked count must
+        // drain to zero instead of staying at 6 until shutdown.
+        let t0 = std::time::Instant::now();
+        while server.tracked_connections() > 0 {
+            assert!(
+                t0.elapsed() < Duration::from_secs(20),
+                "finished connections never reaped: {} still tracked",
+                server.tracked_connections()
+            );
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        stop.store(true, Ordering::Relaxed);
+        let _ = handle.join();
+    }
 
     #[test]
     fn hex_roundtrip() {

@@ -165,6 +165,35 @@ impl SearchIndex for BitBoundIndex {
         tk.finish()
     }
 
+    /// Scan sharing over the **union** of the per-query Eq. 2 candidate
+    /// ranges: one walk of the popcount-sorted order, a per-position
+    /// active-query list maintained from range start/end events
+    /// ([`super::union_sweep`]), each fetched row scored against exactly
+    /// the queries whose range contains it. Every query still sees its own
+    /// candidate rows in ascending sorted-position order, so results are
+    /// bit-identical to the sequential path.
+    fn search_batch(&self, queries: &[&Fingerprint], k: usize) -> Vec<Vec<Scored>> {
+        if queries.is_empty() {
+            return Vec::new();
+        }
+        let qcs: Vec<u32> = queries.iter().map(|q| q.count_ones()).collect();
+        let ranges: Vec<std::ops::Range<usize>> =
+            qcs.iter().map(|&qc| self.candidate_range(qc)).collect();
+        let mut banks: Vec<TopKMerge> = (0..queries.len()).map(|_| TopKMerge::new(k)).collect();
+        super::union_sweep(&ranges, |pos, active| {
+            let row = self.order[pos] as usize;
+            let fp = &self.db.fps[row];
+            let c = self.db.counts[row];
+            for &qi in active {
+                banks[qi].push(Scored::new(
+                    queries[qi].tanimoto_with_counts(fp, qcs[qi], c),
+                    row as u64,
+                ));
+            }
+        });
+        banks.into_iter().map(TopKMerge::finish).collect()
+    }
+
     fn name(&self) -> &'static str {
         "bitbound"
     }

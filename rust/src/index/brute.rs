@@ -80,6 +80,18 @@ impl SearchIndex for BruteForceIndex {
         tk.finish()
     }
 
+    /// Scan sharing: stream the database **once** for the whole batch,
+    /// scoring every query against each row into per-query top-k banks —
+    /// each row's fetch is amortized across B queries while per-query push
+    /// order (ascending row id) is unchanged, so results are bit-identical
+    /// to the sequential path.
+    fn search_batch(&self, queries: &[&Fingerprint], k: usize) -> Vec<Vec<Scored>> {
+        if queries.is_empty() {
+            return Vec::new();
+        }
+        super::shared_full_scan(&self.db.fps, &self.db.counts, queries, k)
+    }
+
     fn name(&self) -> &'static str {
         "brute-force"
     }

@@ -137,6 +137,34 @@ impl SearchIndex for FoldedDatabase {
         self.stage2(query, &cands, k)
     }
 
+    /// Scan sharing for the plain 2-stage search: one pass over the folded
+    /// database scores all B queries (stage 1), then each query rescores
+    /// its own `k_r1` survivors at full length (stage 2). Bit-identical to
+    /// the sequential path — same push order per query, same per-query k1.
+    fn search_batch(&self, queries: &[&Fingerprint], k: usize) -> Vec<Vec<Scored>> {
+        if queries.is_empty() {
+            return Vec::new();
+        }
+        if self.m <= 1 {
+            // No compression: single shared exact pass.
+            return super::shared_full_scan(&self.full.fps, &self.full.counts, queries, k);
+        }
+        let fqs: Vec<Fingerprint> = queries.iter().map(|q| self.fold_query(q)).collect();
+        let fqcs: Vec<u32> = fqs.iter().map(|f| f.count_ones()).collect();
+        let k1 = k_r1(k, self.m).min(self.full.len());
+        let mut banks: Vec<TopKMerge> = (0..queries.len()).map(|_| TopKMerge::new(k1)).collect();
+        for (i, (fp, &c)) in self.folded.iter().zip(&self.folded_counts).enumerate() {
+            for (qi, fq) in fqs.iter().enumerate() {
+                banks[qi].push(Scored::new(fq.tanimoto_with_counts(fp, fqcs[qi], c), i as u64));
+            }
+        }
+        banks
+            .into_iter()
+            .zip(queries)
+            .map(|(tk, q)| self.stage2(q, &tk.finish(), k))
+            .collect()
+    }
+
     fn name(&self) -> &'static str {
         "folding-2stage"
     }

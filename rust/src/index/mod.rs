@@ -28,13 +28,31 @@ pub use folding::FoldedDatabase;
 pub use two_stage::{BitBoundFoldingIndex, TwoStageConfig};
 
 use crate::fingerprint::Fingerprint;
-use crate::topk::Scored;
+use crate::topk::{Scored, TopKMerge};
 
 /// A K-nearest-neighbor similarity index over a fingerprint database.
 pub trait SearchIndex {
     /// Top-k most Tanimoto-similar database entries, best-first.
     /// `Scored::id` is the database row index.
     fn search(&self, query: &Fingerprint, k: usize) -> Vec<Scored>;
+
+    /// Top-k for a whole batch of queries, sharing the database stream:
+    /// real implementations walk the (folded/popcount-sorted) database
+    /// **once per batch**, scoring every active query against each row
+    /// into per-query [`crate::topk::TopKMerge`] banks — the paper's one-scan-per-query-
+    /// wave discipline (§IV-A) that amortizes memory bandwidth across
+    /// compute.
+    ///
+    /// Contract: `result[i]` is **bit-identical** to
+    /// `self.search(queries[i], k)` — same ids, same scores, same
+    /// tie-breaking — for any batch size (including `B = 1`, duplicates,
+    /// and the empty batch). Property-tested in `tests/properties.rs`.
+    ///
+    /// The default loops over queries (one pass each); the exhaustive
+    /// indexes override it with true scan sharing.
+    fn search_batch(&self, queries: &[&Fingerprint], k: usize) -> Vec<Vec<Scored>> {
+        queries.iter().map(|q| self.search(q, k)).collect()
+    }
 
     /// Human-readable name for reports.
     fn name(&self) -> &'static str;
@@ -43,6 +61,88 @@ pub trait SearchIndex {
     /// metric the hardware model turns into cycles (1 per fingerprint at
     /// II=1). Brute force: n.
     fn expected_candidates(&self, query: &Fingerprint) -> usize;
+}
+
+/// One shared full-width pass: stream `fps`/`counts` once, scoring every
+/// query against each row into per-query top-k banks in ascending row-id
+/// order — exactly the sequential scan order, so per-query results are
+/// bit-identical to one-query-at-a-time search. The scan-sharing core
+/// behind [`BruteForceIndex`]'s and the unfolded (`m <= 1`)
+/// [`FoldedDatabase`] batched paths.
+pub(crate) fn shared_full_scan(
+    fps: &[Fingerprint],
+    counts: &[u32],
+    queries: &[&Fingerprint],
+    k: usize,
+) -> Vec<Vec<Scored>> {
+    let qcs: Vec<u32> = queries.iter().map(|q| q.count_ones()).collect();
+    let mut banks: Vec<TopKMerge> = (0..queries.len()).map(|_| TopKMerge::new(k)).collect();
+    for (i, (fp, &c)) in fps.iter().zip(counts).enumerate() {
+        for (qi, q) in queries.iter().enumerate() {
+            banks[qi].push(Scored::new(q.tanimoto_with_counts(fp, qcs[qi], c), i as u64));
+        }
+    }
+    banks.into_iter().map(TopKMerge::finish).collect()
+}
+
+/// Walk the union of per-query candidate ranges (half-open, over the
+/// popcount-sorted position space) in one ascending pass, calling
+/// `visit(pos, active)` once per covered position; `active` holds the
+/// indexes of the queries whose range contains `pos`. Positions covered by
+/// no query are skipped in O(1) (jump to the next range start).
+///
+/// Each query's positions are visited in ascending order — exactly the
+/// order its own sequential scan would use — so pushing scores into
+/// per-query top-k banks reproduces the per-query results bit for bit:
+/// this is the scan-sharing invariant behind the batched BitBound walks
+/// ([`BitBoundIndex`]/[`BitBoundFoldingIndex`]'s `search_batch`).
+pub fn union_sweep(ranges: &[std::ops::Range<usize>], mut visit: impl FnMut(usize, &[usize])) {
+    let mut starts: Vec<(usize, usize)> = ranges
+        .iter()
+        .enumerate()
+        .filter(|(_, r)| r.start < r.end)
+        .map(|(qi, r)| (r.start, qi))
+        .collect();
+    if starts.is_empty() {
+        return;
+    }
+    starts.sort_unstable();
+    let mut ends: Vec<(usize, usize)> = ranges
+        .iter()
+        .enumerate()
+        .filter(|(_, r)| r.start < r.end)
+        .map(|(qi, r)| (r.end, qi))
+        .collect();
+    ends.sort_unstable();
+    let (mut si, mut ei) = (0usize, 0usize);
+    let mut active: Vec<usize> = Vec::new();
+    let mut pos = starts[0].0;
+    let hi = ends.last().unwrap().0;
+    while pos < hi {
+        // Activate ranges that start at or before `pos`, then retire
+        // ranges that ended (activation first, so a range jumped over
+        // entirely is added and removed without ever being visited).
+        while si < starts.len() && starts[si].0 <= pos {
+            active.push(starts[si].1);
+            si += 1;
+        }
+        while ei < ends.len() && ends[ei].0 <= pos {
+            let qi = ends[ei].1;
+            if let Some(ai) = active.iter().position(|&a| a == qi) {
+                active.swap_remove(ai);
+            }
+            ei += 1;
+        }
+        if active.is_empty() {
+            match starts.get(si) {
+                Some(&(next, _)) => pos = next,
+                None => return,
+            }
+            continue;
+        }
+        visit(pos, &active);
+        pos += 1;
+    }
 }
 
 /// Top-k recall of `got` against ground truth `truth` (paper's accuracy
@@ -69,6 +169,65 @@ pub fn mean_recall(results: &[(Vec<Scored>, Vec<Scored>)], k: usize) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn union_sweep_covers_exactly_the_union_in_order() {
+        let ranges = vec![2..5usize, 0..0, 4..9, 12..14, 13..13];
+        let mut seen: Vec<(usize, Vec<usize>)> = Vec::new();
+        union_sweep(&ranges, |pos, active| {
+            let mut a = active.to_vec();
+            a.sort_unstable();
+            seen.push((pos, a));
+        });
+        let positions: Vec<usize> = seen.iter().map(|&(p, _)| p).collect();
+        assert_eq!(positions, vec![2, 3, 4, 5, 6, 7, 8, 12, 13]);
+        for (pos, active) in &seen {
+            let want: Vec<usize> = ranges
+                .iter()
+                .enumerate()
+                .filter(|(_, r)| r.contains(pos))
+                .map(|(qi, _)| qi)
+                .collect();
+            assert_eq!(active, &want, "pos {pos}");
+        }
+        // All-empty input never calls visit.
+        union_sweep(&[0..0, 5..5], |_, _| panic!("no positions to visit"));
+        union_sweep(&[], |_, _| panic!("no ranges at all"));
+    }
+
+    #[test]
+    fn union_sweep_matches_naive_membership() {
+        use crate::util::proptest::check;
+        check("union_sweep_vs_naive", 40, |g| {
+            let nq = 1 + g.below_usize(9);
+            let ranges: Vec<std::ops::Range<usize>> = (0..nq)
+                .map(|_| {
+                    let a = g.below_usize(64);
+                    let b = g.below_usize(64);
+                    a.min(b)..a.max(b)
+                })
+                .collect();
+            let mut visits: std::collections::BTreeMap<usize, Vec<usize>> =
+                std::collections::BTreeMap::new();
+            union_sweep(&ranges, |pos, active| {
+                let mut a = active.to_vec();
+                a.sort_unstable();
+                assert!(visits.insert(pos, a).is_none(), "pos {pos} visited twice");
+            });
+            for pos in 0..64 {
+                let want: Vec<usize> = ranges
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, r)| r.contains(&pos))
+                    .map(|(qi, _)| qi)
+                    .collect();
+                match visits.get(&pos) {
+                    Some(a) => assert_eq!(a, &want, "pos {pos}"),
+                    None => assert!(want.is_empty(), "pos {pos} missed, active {want:?}"),
+                }
+            }
+        });
+    }
 
     #[test]
     fn recall_math() {

@@ -134,6 +134,56 @@ impl SearchIndex for BitBoundFoldingIndex {
         self.folded.stage2(query, &tk1.finish(), k)
     }
 
+    /// Scan sharing for the combined engine: **one** walk of the union of
+    /// the per-query Eq. 2 candidate ranges over the *folded* rows
+    /// (stage 1, per-query active masks and `k_r1`-sized banks via
+    /// [`super::union_sweep`]), then a **per-query** stage-2 rescue: each
+    /// query rescores only its own stage-1 survivors at full length. The
+    /// shared pass streams each folded candidate row once per batch
+    /// instead of once per query — the engine's dominant memory traffic —
+    /// while both stages replay the sequential path's push order, so
+    /// results are bit-identical to [`SearchIndex::search`].
+    fn search_batch(&self, queries: &[&Fingerprint], k: usize) -> Vec<Vec<Scored>> {
+        if queries.is_empty() {
+            return Vec::new();
+        }
+        if self.m() <= 1 {
+            // Pure BitBound: same order array (identical stable sort over
+            // the same counts), same full-width scores — delegate to the
+            // inner index's shared union walk.
+            return self.bitbound.search_batch(queries, k);
+        }
+        let qcs: Vec<u32> = queries.iter().map(|q| q.count_ones()).collect();
+        let ranges: Vec<std::ops::Range<usize>> =
+            qcs.iter().map(|&qc| self.bitbound.candidate_range(qc)).collect();
+
+        // Stage 1 (shared): one folded scan of the union of candidate
+        // ranges. Per-query k1 mirrors the sequential path exactly.
+        let fqs: Vec<Fingerprint> = queries.iter().map(|q| self.folded.fold_query(q)).collect();
+        let fqcs: Vec<u32> = fqs.iter().map(|f| f.count_ones()).collect();
+        let mut banks: Vec<TopKMerge> = ranges
+            .iter()
+            .map(|r| TopKMerge::new(k_r1(k, self.m()).min(r.len().max(k)).max(1)))
+            .collect();
+        let folded_fps = self.folded.folded_fps();
+        let folded_counts = self.folded.folded_counts();
+        super::union_sweep(&ranges, |pos, active| {
+            let row = self.order[pos] as usize;
+            for &qi in active {
+                banks[qi].push(Scored::new(
+                    fqs[qi].tanimoto_with_counts(&folded_fps[row], fqcs[qi], folded_counts[row]),
+                    row as u64,
+                ));
+            }
+        });
+        // Stage 2 (per query): exact rescore of each query's own rescue set.
+        banks
+            .into_iter()
+            .zip(queries)
+            .map(|(tk, q)| self.folded.stage2(q, &tk.finish(), k))
+            .collect()
+    }
+
     fn name(&self) -> &'static str {
         "bitbound+folding"
     }
@@ -203,6 +253,31 @@ mod tests {
         let w_high = BitBoundFoldingIndex::new(database.clone(), 4, 0.8).work(&q, 20);
         assert!(w_high.0 < w_low.0, "higher cutoff prunes more: {w_high:?} vs {w_low:?}");
         assert_eq!(w_high.1.min(640), w_high.1, "stage2 bounded by k_r1");
+    }
+
+    #[test]
+    fn batched_scan_bit_identical_at_operating_point() {
+        // The shared stage-1 walk + per-query stage-2 rescue must replay
+        // the sequential results exactly at the paper's H3 point (m=4,
+        // Sc=0.8), for m=1 (pure-BitBound branch), and with duplicates in
+        // the batch.
+        let database = db(3000, 31);
+        for (m, cutoff) in [(4usize, 0.8), (1, 0.8), (4, 0.0)] {
+            let idx = BitBoundFoldingIndex::new(database.clone(), m, cutoff);
+            let queries = database.sample_queries(7, 23);
+            let mut batch: Vec<&crate::fingerprint::Fingerprint> = queries.iter().collect();
+            batch.push(&queries[0]); // duplicate query
+            let got = idx.search_batch(&batch, 10);
+            assert_eq!(got.len(), batch.len());
+            for (qi, q) in batch.iter().enumerate() {
+                let want = idx.search(q, 10);
+                assert_eq!(got[qi].len(), want.len(), "m={m} Sc={cutoff} query {qi}");
+                for (a, b) in got[qi].iter().zip(&want) {
+                    assert_eq!((a.id, a.score), (b.id, b.score), "m={m} Sc={cutoff} query {qi}");
+                }
+            }
+            assert!(idx.search_batch(&[], 10).is_empty(), "empty batch");
+        }
     }
 
     #[test]

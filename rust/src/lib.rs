@@ -26,13 +26,13 @@
 //! |---|---|
 //! | [`fingerprint`] | bit-packed fingerprints, SMILES → Morgan FP, dataset generation (RDKit/Chembl substitute) |
 //! | [`topk`] | merge-sort top-k (paper module ③), register-array priority queue (module ④), cross-shard merge tree |
-//! | [`index`] | brute force, BitBound (Eq. 2), folding schemes 1 & 2 (Fig. 3), two-stage search |
+//! | [`index`] | brute force, BitBound (Eq. 2), folding schemes 1 & 2 (Fig. 3), two-stage search, multi-query scan sharing (`search_batch` union-of-ranges walk, docs/batching.md) |
 //! | [`shard`] | database partitioning (round-robin / popcount-striped), per-shard index builds, shard-parallel exact search (docs/sharding.md) |
 //! | [`hnsw`] | hierarchical navigable small world graph: build + Algorithms 1 & 2, plus shard-parallel sub-graphs with exact cross-shard merge (`ShardedHnsw`, `serve --mode hnsw --shards N`, `bench_hnsw_sharded`; docs/hnsw_sharding.md) |
 //! | [`hwmodel`] | analytical Alveo U280 resource/frequency/bandwidth model |
 //! | [`simulator`] | cycle-level query-engine pipeline simulator |
 //! | [`runtime`] | PJRT client: load `artifacts/*.hlo.txt`, compile, execute |
-//! | [`coordinator`] | serving layer: router, batcher, engine pool, metrics |
+//! | [`coordinator`] | serving layer: router, scan-sharing batcher (`serve --max-batch`, docs/batching.md), engine pool, metrics |
 //! | [`baselines`] | CPU brute-force / BitBound / HNSW and GPU model comparators |
 //! | [`exp`] | shared experiment harnesses behind the figure/table drivers |
 //! | [`util`] | PRNG, CLI parsing, stats, mini-bench, JSON writer, property-test helpers |

@@ -8,8 +8,10 @@
 //! molfpga serve     --db data/db.bin --port 7878 --workers 2 \
 //!                   [--pjrt] [--m 4] [--cutoff 0.8] [--hnsw-m 8] [--ef 64] \
 //!                   [--shards 4] [--partition popcount|roundrobin|contiguous] \
-//!                   [--mode exact|hnsw|both]
-//! molfpga bench-qps --db data/db.bin --queries 200 [--pjrt] [--shards 4]
+//!                   [--mode exact|hnsw|both] \
+//!                   [--max-batch 16] [--max-wait-us 2000]
+//! molfpga bench-qps --db data/db.bin --queries 200 [--pjrt] [--shards 4] \
+//!                   [--max-batch 16]
 //! ```
 //!
 //! `--shards N` (N > 1) serves queries from shard-parallel pools: the
@@ -20,6 +22,13 @@
 //! sub-graph and the answer is the exact top-k of the union of per-shard
 //! approximate results (docs/hnsw_sharding.md). `--mode` selects which
 //! families are shard-parallel (default `both`).
+//!
+//! `--max-batch B` sets the dynamic batcher's batch ceiling, and batches
+//! are real scan-sharing units end to end: a closed batch rides **one**
+//! walk of the (folded, popcount-pruned) database per engine — per-shard
+//! when sharded — instead of one walk per query, trading bounded latency
+//! (`--max-wait-us`) for QPS (docs/batching.md; `bench_batched` records
+//! the B-vs-QPS frontier in `BENCH_batched.json`).
 
 use anyhow::{bail, Context, Result};
 use molfpga::coordinator::backend::{

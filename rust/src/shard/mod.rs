@@ -332,6 +332,63 @@ impl<I: SearchIndex + Send + Sync> SearchIndex for ShardedSearchIndex<I> {
         merge.finish()
     }
 
+    /// Batched search with scan sharing pushed down to every shard: each
+    /// shard index streams its slice **once per batch** (its own
+    /// [`SearchIndex::search_batch`]), partial lists are remapped to
+    /// global ids, and one merge tree per query reduces the partials —
+    /// bit-identical to looping [`SearchIndex::search`] over the batch
+    /// (property-tested in tests/properties.rs).
+    fn search_batch(
+        &self,
+        queries: &[&crate::fingerprint::Fingerprint],
+        k: usize,
+    ) -> Vec<Vec<Scored>> {
+        if queries.is_empty() {
+            return Vec::new();
+        }
+        let fan_out = self.per_shard.len() > 1
+            && self
+                .parallel
+                .unwrap_or(self.max_shard_rows >= PARALLEL_MIN_SHARD_ROWS);
+        let per_shard: Vec<Vec<Vec<Scored>>> = if fan_out {
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = self
+                    .per_shard
+                    .iter()
+                    .enumerate()
+                    .map(|(si, idx)| {
+                        scope.spawn(move || {
+                            idx.search_batch(queries, k)
+                                .into_iter()
+                                .map(|hits| self.sharded.remap(si, hits))
+                                .collect::<Vec<_>>()
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().expect("shard batch search")).collect()
+            })
+        } else {
+            self.per_shard
+                .iter()
+                .enumerate()
+                .map(|(si, idx)| {
+                    idx.search_batch(queries, k)
+                        .into_iter()
+                        .map(|hits| self.sharded.remap(si, hits))
+                        .collect()
+                })
+                .collect()
+        };
+        let mut merges: Vec<ShardMerge> =
+            (0..queries.len()).map(|_| ShardMerge::new(k.max(1))).collect();
+        for shard_lists in per_shard {
+            for (qi, hits) in shard_lists.into_iter().enumerate() {
+                merges[qi].push_partial(hits);
+            }
+        }
+        merges.into_iter().map(ShardMerge::finish).collect()
+    }
+
     fn name(&self) -> &'static str {
         "sharded"
     }

@@ -218,6 +218,115 @@ pub fn shard_scaling_sweep(cfg: &SimConfig, shard_counts: &[usize]) -> Vec<Multi
         .collect()
 }
 
+/// Result of a batched-scan (scan-sharing) query simulation.
+#[derive(Debug, Clone)]
+pub struct BatchedSimReport {
+    /// Queries sharing the database stream.
+    pub batch: usize,
+    /// Total cycles for the shared pass (this is also the per-query
+    /// latency: every query in the batch completes when the pass does).
+    pub cycles: u64,
+    /// Cycles an idle kernel waited on HBM (bandwidth-wall signal).
+    pub input_stall_cycles: u64,
+    pub seconds: f64,
+    /// Steady-state throughput: B queries per shared pass.
+    pub qps: f64,
+    /// QPS relative to the B = 1 pass of the same configuration.
+    pub qps_speedup_vs_single: f64,
+}
+
+/// Simulate one **batch** of `batch` queries sharing a single database
+/// pass — the scan-sharing dataflow `index::SearchIndex::search_batch`
+/// implements in software (§IV-A's one-scan-per-query-wave discipline):
+///
+/// * every row fetched from HBM is scored against **all** B queries
+///   before the kernel needs its next row, so the per-kernel compute
+///   initiation interval scales to B cycles per row (TFC still II = 1 per
+///   (row, query) pair),
+/// * the kernel's bandwidth demand therefore drops to 1/B rows per cycle
+///   — B queries ride one stream instead of B streams.
+///
+/// Consequence: a configuration whose kernels oversubscribe the HBM
+/// budget at B = 1 (the bandwidth-bound regime folding attacks) converts
+/// stall cycles into useful TFC work as B grows, until the pass turns
+/// compute-bound at `B ≈ kernels / rows_per_cycle`; a configuration that
+/// already fits its budget gains ~nothing. Latency trade: the batch
+/// completes together, so per-query latency grows toward B × the
+/// unbatched pass in the compute-bound regime — QPS and latency pull in
+/// opposite directions, which is why serving exposes `--max-batch` as a
+/// policy knob rather than hard-coding it.
+pub fn simulate_batched(cfg: &SimConfig, batch: usize) -> BatchedSimReport {
+    let single_seconds =
+        if batch == 1 { None } else { Some(batched_pass(cfg, 1).2) };
+    batched_report(cfg, batch, single_seconds)
+}
+
+/// One shared pass, cycle-stepped: returns (cycles, stalls, seconds).
+fn batched_pass(cfg: &SimConfig, batch: usize) -> (u64, u64, f64) {
+    assert!(cfg.kernels >= 1 && batch >= 1);
+    let mut hbm = HbmModel::new(cfg.hbm_budget, cfg.clock_hz, cfg.bytes_per_row, cfg.kernels);
+    let shard = cfg.rows / cfg.kernels;
+    let mut remaining: Vec<usize> = (0..cfg.kernels)
+        .map(|i| shard + usize::from(i < cfg.rows % cfg.kernels))
+        .collect();
+    // Compute cycles left on the row each kernel currently holds (a row
+    // costs B cycles of TFC: one per query in the batch).
+    let mut busy: Vec<usize> = vec![0; cfg.kernels];
+    let mut cycles: u64 = 0;
+    let mut stalls: u64 = 0;
+    while remaining.iter().any(|&r| r > 0) || busy.iter().any(|&b| b > 0) {
+        cycles += 1;
+        let grants = hbm.grant();
+        let mut granted = 0;
+        for ki in 0..cfg.kernels {
+            if busy[ki] > 0 {
+                busy[ki] -= 1; // scoring the held row against the batch
+            } else if remaining[ki] > 0 {
+                if granted < grants {
+                    remaining[ki] -= 1;
+                    granted += 1;
+                    busy[ki] = batch - 1; // this cycle scores query 0
+                } else {
+                    stalls += 1;
+                }
+            }
+        }
+    }
+    // Per-query top-k banks drain in parallel (module ③ replicated per
+    // query), so the tail is one pipeline depth.
+    let total = cycles + StageLatency::for_k(cfg.k).depth() as u64;
+    (total, stalls, total as f64 / cfg.clock_hz)
+}
+
+fn batched_report(
+    cfg: &SimConfig,
+    batch: usize,
+    single_seconds: Option<f64>,
+) -> BatchedSimReport {
+    let (cycles, stalls, seconds) = batched_pass(cfg, batch);
+    let qps = batch as f64 / seconds;
+    let single_qps = 1.0 / single_seconds.unwrap_or(seconds);
+    BatchedSimReport {
+        batch,
+        cycles,
+        input_stall_cycles: stalls,
+        seconds,
+        qps,
+        qps_speedup_vs_single: qps / single_qps,
+    }
+}
+
+/// QPS-vs-batch-size sweep (`bench_batched` records it next to wall-clock
+/// software numbers in `BENCH_batched.json`). The B = 1 baseline is
+/// simulated once and shared by every point.
+pub fn batch_scaling_sweep(cfg: &SimConfig, batches: &[usize]) -> Vec<BatchedSimReport> {
+    let baseline = batched_pass(cfg, 1).2;
+    batches
+        .iter()
+        .map(|&b| batched_report(cfg, b, if b == 1 { None } else { Some(baseline) }))
+        .collect()
+}
+
 /// Configuration for the **multi-traversal-engine** (sharded HNSW) mode:
 /// `e` graph-traversal engines, each owning one shard's sub-graph behind
 /// its own HBM channel group, every query broadcast to all engines and
@@ -549,6 +658,76 @@ mod tests {
             );
             assert!(b.qps < a.qps, "e={engines}: setup cost must erode QPS");
         }
+    }
+
+    /// Scan sharing converts bandwidth stalls into useful TFC work: at 56
+    /// full-width kernels (8× oversubscribed at B = 1), QPS grows with
+    /// batch size until the pass turns compute-bound, then plateaus.
+    #[test]
+    fn batched_scan_relieves_bandwidth_wall() {
+        let cfg = SimConfig {
+            rows: 500_000,
+            kernels: 56,
+            bytes_per_row: 128,
+            k: 20,
+            hbm_budget: 410e9,
+            clock_hz: 450e6,
+        };
+        let sweep = batch_scaling_sweep(&cfg, &[1, 4, 8, 16, 32]);
+        let by_b = |b: usize| sweep.iter().find(|r| r.batch == b).unwrap();
+        assert!((by_b(1).qps_speedup_vs_single - 1.0).abs() < 1e-9);
+        assert!(by_b(1).input_stall_cycles > 0, "B=1 at 56 kernels must stall on HBM");
+        // QPS grows monotonically with B…
+        for w in sweep.windows(2) {
+            assert!(
+                w[1].qps >= w[0].qps * 0.999,
+                "B {} → {} must not lose QPS",
+                w[0].batch,
+                w[1].batch
+            );
+        }
+        // …clears the acceptance bar at B = 16 (steady-state demand
+        // 56/16 = 3.5 rows/cycle fits the 7.11 budget: the scan is
+        // compute-bound and ~8× more kernels do useful work than at
+        // B = 1; the only stalls left are the first-row ramp)…
+        let r16 = by_b(16);
+        assert!(
+            r16.input_stall_cycles * 100 < by_b(1).input_stall_cycles,
+            "B=16 stalls {} should be ≫100× below B=1's {}",
+            r16.input_stall_cycles,
+            by_b(1).input_stall_cycles
+        );
+        assert!(
+            r16.qps_speedup_vs_single >= 2.0,
+            "B=16 batched QPS speedup {:.2} below 2×",
+            r16.qps_speedup_vs_single
+        );
+        // …and plateaus once compute-bound: B = 32 buys almost nothing
+        // over B = 16 while doubling per-query latency.
+        let r32 = by_b(32);
+        assert!(
+            r32.qps <= r16.qps * 1.1,
+            "compute-bound plateau: B=32 {:.0} vs B=16 {:.0}",
+            r32.qps,
+            r16.qps
+        );
+        assert!(r32.cycles > r16.cycles, "batch latency grows with B");
+    }
+
+    /// A configuration that already fits its HBM budget (the paper's
+    /// 7-kernel full-width point) gains ~nothing from batching — the knob
+    /// matters exactly when kernels oversubscribe bandwidth.
+    #[test]
+    fn batched_scan_balanced_config_gains_little() {
+        let cfg = SimConfig::brute_force(500_000);
+        let r1 = simulate_batched(&cfg, 1);
+        assert_eq!(r1.input_stall_cycles, 0);
+        let r16 = simulate_batched(&cfg, 16);
+        assert!(
+            r16.qps_speedup_vs_single < 1.1,
+            "no stalls to reclaim: speedup {:.2}",
+            r16.qps_speedup_vs_single
+        );
     }
 
     #[test]

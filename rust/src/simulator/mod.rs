@@ -14,7 +14,11 @@
 //! * the sequential (non-pipelined) alternative of [29] costs ≈ 2× —
 //!   the motivating comparison in §IV-A,
 //! * k kernels sharing the HBM budget scale linearly until the bandwidth
-//!   wall (Fig. 7's kernel-count assumption).
+//!   wall (Fig. 7's kernel-count assumption),
+//! * B queries sharing one database stream ([`simulate_batched`]) convert
+//!   bandwidth stalls into TFC work: per-kernel compute II scales to B
+//!   while bandwidth demand drops by B — the scan-sharing model behind
+//!   `search_batch` and `BENCH_batched.json` (docs/batching.md).
 //!
 //! Modules: [`pipeline`] (the staged engine), [`hbm`] (bandwidth/latency
 //! model), [`engine`] (whole-query simulation + QPS cross-check).
@@ -24,9 +28,9 @@ pub mod hbm;
 pub mod pipeline;
 
 pub use engine::{
-    shard_scaling_sweep, simulate_multi_engine, simulate_multi_traversal, simulate_query,
-    traversal_scaling_sweep, MultiEngineReport, SimConfig, SimReport, TraversalEngineReport,
-    TraversalSimConfig,
+    batch_scaling_sweep, shard_scaling_sweep, simulate_batched, simulate_multi_engine,
+    simulate_multi_traversal, simulate_query, traversal_scaling_sweep, BatchedSimReport,
+    MultiEngineReport, SimConfig, SimReport, TraversalEngineReport, TraversalSimConfig,
 };
 pub use hbm::HbmModel;
 pub use pipeline::{QueryPipeline, StageLatency};

@@ -255,6 +255,83 @@ fn sharded_hnsw_pool_end_to_end() {
     router.shutdown();
 }
 
+/// True batched serving end to end: with a deadline far beyond the test
+/// window and an explicit flush, a mixed-k wave of queries rides the
+/// batcher as **one** batch into the shard pool — each shard worker
+/// groups it by k and scans its slice once per group (the scan-sharing
+/// `search_batch` path) — and every response is bit-identical to the
+/// brute-force oracle. Doubles as the flush regression: with
+/// `max_wait = 30 s`, responses can only arrive inside the 15-second
+/// receive window because `flush()` now force-dispatches (it used to be
+/// a no-op).
+#[test]
+fn batched_pool_end_to_end_bit_identical_and_flush() {
+    use molfpga::coordinator::batcher::BatchPolicy;
+    use molfpga::coordinator::metrics::Metrics;
+    use molfpga::coordinator::{EnginePool, Query, QueryMode, Router, ShardedEnginePool};
+    use molfpga::shard::{PartitionPolicy, ShardedDatabase};
+    let db = Arc::new(Database::synthesize(3_500, &ChemblModel::default(), 83));
+    let metrics = Arc::new(Metrics::new());
+    let sharded = Arc::new(ShardedDatabase::partition(
+        db.clone(),
+        3,
+        PartitionPolicy::PopcountStriped,
+    ));
+    // m=1, cutoff 0 ⇒ each shard engine is exact over its slice.
+    let ex = Arc::new(ShardedEnginePool::new(
+        "bt-ex",
+        &sharded,
+        32,
+        metrics.clone(),
+        |_si, shard_db| NativeExhaustive::factory(shard_db, 1, 0.0),
+    ));
+    let graph = NativeHnsw::build_graph(&db, 6, 32, 3);
+    let dbc = db.clone();
+    let ap = Arc::new(EnginePool::new("bt-ap", 1, 32, metrics.clone(), move |_| {
+        NativeHnsw::factory(dbc.clone(), graph.clone(), 32)
+    }));
+    let router = Router::new(
+        ex,
+        ap,
+        BatchPolicy { max_batch: 64, max_wait: std::time::Duration::from_secs(30) },
+        metrics.clone(),
+    );
+    let brute = BruteForceIndex::new(db.clone());
+    let queries = db.sample_queries(24, 19);
+    let t0 = std::time::Instant::now();
+    let mut rxs = Vec::new();
+    for (i, q) in queries.iter().enumerate() {
+        // Mixed k: the worker groups the batch by k — one shared scan per
+        // k-group, per shard.
+        let k = 3 + (i % 4);
+        let rx = router
+            .try_submit(Query::new(i as u64, q.clone(), k, QueryMode::Exhaustive))
+            .expect("valid query accepted");
+        rxs.push((i, k, rx));
+    }
+    router.flush();
+    for (i, k, rx) in rxs {
+        let r = rx
+            .recv_timeout(std::time::Duration::from_secs(15))
+            .expect("flushed response");
+        let truth = brute.search(&queries[i], k);
+        assert_eq!(r.hits.len(), truth.len(), "query {i}");
+        for (a, b) in r.hits.iter().zip(&truth) {
+            assert_eq!(
+                (a.id, a.score),
+                (b.id, b.score),
+                "batched serving must stay exact (query {i}, k={k})"
+            );
+        }
+    }
+    assert!(
+        t0.elapsed() < std::time::Duration::from_secs(15),
+        "flush must beat the 30-second deadline"
+    );
+    assert_eq!(metrics.snapshot().completed, 24, "every query answered once");
+    router.shutdown();
+}
+
 /// Hardware model consistency across the whole sweep surface: every Fig. 7
 /// point must respect the bandwidth wall and the monotonicities the paper
 /// reports.

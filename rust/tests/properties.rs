@@ -292,6 +292,70 @@ fn searcher_epoch_wraparound_matches_fresh_scratch() {
     });
 }
 
+/// Scan sharing changes nothing observable: `search_batch` is
+/// **bit-identical** to looping per-query `search` — same ids, same
+/// scores, same tie-breaking — for every exhaustive index (brute force,
+/// BitBound union-of-ranges walk, folding 2-stage, the combined
+/// BitBound & folding engine, and the sharded index over it), across
+/// random batch sizes (including B = 1 and the empty batch), duplicate
+/// queries in one batch, mixed k, cutoffs (0 and pruning), and folding
+/// levels. This is the acceptance contract of the batching layer:
+/// batching must be invisible in results.
+#[test]
+fn search_batch_bit_identical_to_sequential_search() {
+    use molfpga::index::{BitBoundFoldingIndex, BitBoundIndex, FoldedDatabase, TwoStageConfig};
+    check("batch_eq_sequential", 18, |g| {
+        let db = gen::database(g, 80, 900);
+        let k = 1 + g.below_usize(25);
+        let cutoff = if g.next_f64() < 0.3 { 0.0 } else { 0.3 + 0.6 * g.next_f64() };
+        let m = [1usize, 2, 4, 8][g.below_usize(4)];
+        let shards = 1 + g.below_usize(6);
+        let policy = [
+            PartitionPolicy::Contiguous,
+            PartitionPolicy::RoundRobin,
+            PartitionPolicy::PopcountStriped,
+        ][g.below_usize(3)];
+        let sharded = std::sync::Arc::new(ShardedDatabase::partition(db.clone(), shards, policy));
+        let cfg = TwoStageConfig { m, cutoff, ..TwoStageConfig::default() };
+        let indexes: Vec<Box<dyn SearchIndex>> = vec![
+            Box::new(BruteForceIndex::new(db.clone())),
+            Box::new(BitBoundIndex::new(db.clone(), cutoff)),
+            Box::new(FoldedDatabase::build(db.clone(), m, FoldScheme::Sectional)),
+            Box::new(BitBoundFoldingIndex::new(db.clone(), m, cutoff)),
+            Box::new(
+                ShardedSearchIndex::<BitBoundFoldingIndex>::build(sharded, &cfg)
+                    .with_parallel(g.next_f64() < 0.5),
+            ),
+        ];
+        // Random batch with duplicates; size 0..=17 (0 = empty batch).
+        let base = db.sample_queries(6, g.next_u64());
+        let nq = g.below_usize(18);
+        let batch: Vec<&Fingerprint> =
+            (0..nq).map(|_| &base[g.below_usize(base.len())]).collect();
+        for idx in &indexes {
+            let got = idx.search_batch(&batch, k);
+            assert_eq!(got.len(), batch.len(), "{} k={k} B={nq}", idx.name());
+            for (qi, q) in batch.iter().enumerate() {
+                let want = idx.search(q, k);
+                assert_eq!(
+                    got[qi].len(),
+                    want.len(),
+                    "{} k={k} m={m} Sc={cutoff:.2} s={shards} query {qi}",
+                    idx.name()
+                );
+                for (a, b) in got[qi].iter().zip(&want) {
+                    assert_eq!(
+                        (a.id, a.score),
+                        (b.id, b.score),
+                        "{} k={k} m={m} Sc={cutoff:.2} s={shards} query {qi}",
+                        idx.name()
+                    );
+                }
+            }
+        }
+    });
+}
+
 /// The count-bound early exit ([`BruteForceIndex::search_with_bound`])
 /// changes nothing observable: bit-identical to the plain scan for random
 /// databases, queries (including hard, no-neighbor queries), and k.
