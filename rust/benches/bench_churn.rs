@@ -1,0 +1,172 @@
+//! Bench: read QPS and p99 under live write churn — the cost of serving
+//! from the mutable segment stack instead of a frozen index.
+//!
+//! For each write ratio (writes per read) the loop interleaves `add`s
+//! into the serving read stream and measures the read latencies, with
+//! the background compactor off (the delta only grows) and on (sealed
+//! segments fold into the base concurrently with the reads). Two numbers
+//! to watch in `BENCH_churn.json`:
+//!
+//! * `read_qps` vs the frozen-index `baseline_qps` — the acceptance bar
+//!   is within 2× at a 1 % write ratio (the delta scan is a few thousand
+//!   extra exact rows per read, amortized away by compaction);
+//! * `compactions` > 0 on the compactor-on points with no read ever
+//!   blocking — compaction runs concurrently with serving (asserted
+//!   directly by the churn e2e test; here it shows up as compactor-on
+//!   read QPS ≥ compactor-off once the delta gets big).
+//!
+//! Honors `MOLFPGA_BENCH_FAST=1` (CI smoke) and `MOLFPGA_BENCH_N`.
+
+use molfpga::fingerprint::{ChemblModel, Database};
+use molfpga::index::{BitBoundFoldingIndex, SearchIndex, TwoStageConfig};
+use molfpga::ingest::{IngestConfig, MutableIndex};
+use molfpga::util::bench::black_box;
+use molfpga::util::minijson::Json;
+use molfpga::util::stats::percentile;
+use std::sync::Arc;
+use std::time::Instant;
+
+const WRITE_RATIOS: [f64; 4] = [0.0, 0.01, 0.05, 0.20];
+
+struct PointResult {
+    wall_qps: f64,
+    read_qps: f64,
+    p50_us: f64,
+    p99_us: f64,
+    adds: u64,
+    compactions: u64,
+    delta_rows_at_end: usize,
+}
+
+/// Run one churn point: `reads` searches with `write_ratio` adds evenly
+/// interleaved (deterministic schedule), returning read-side stats.
+fn run_point(
+    idx: &Arc<MutableIndex<BitBoundFoldingIndex>>,
+    queries: &[molfpga::fingerprint::Fingerprint],
+    pool: &Database,
+    reads: usize,
+    k: usize,
+    write_ratio: f64,
+) -> PointResult {
+    let mut owed = 0.0f64;
+    let mut wi = 0usize;
+    let mut lat = Vec::with_capacity(reads);
+    let t0 = Instant::now();
+    for r in 0..reads {
+        owed += write_ratio;
+        while owed >= 1.0 {
+            idx.add(pool.fps[wi % pool.len()].clone());
+            wi += 1;
+            owed -= 1.0;
+        }
+        let q = &queries[r % queries.len()];
+        let t = Instant::now();
+        black_box(idx.search(q, k));
+        lat.push(t.elapsed().as_secs_f64());
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let read_time: f64 = lat.iter().sum();
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let snap = idx.snapshot();
+    PointResult {
+        wall_qps: reads as f64 / wall,
+        read_qps: reads as f64 / read_time,
+        p50_us: percentile(&lat, 50.0) * 1e6,
+        p99_us: percentile(&lat, 99.0) * 1e6,
+        adds: wi as u64,
+        compactions: idx.stats().compactions.load(std::sync::atomic::Ordering::Relaxed),
+        delta_rows_at_end: snap.delta_rows(),
+    }
+}
+
+fn main() {
+    let fast = std::env::var("MOLFPGA_BENCH_FAST").ok().as_deref() == Some("1");
+    let n: usize = std::env::var("MOLFPGA_BENCH_N")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(if fast { 20_000 } else { 200_000 });
+    let reads: usize = if fast { 400 } else { 4000 };
+    let k = 10;
+    eprintln!("[bench_churn] db n={n} k={k} reads/point={reads}");
+    let db = Arc::new(Database::synthesize(n, &ChemblModel::default(), 42));
+    let queries = db.sample_queries(64, 7);
+    let pool = Database::synthesize(8192, &ChemblModel::default(), 43);
+    let two_stage = TwoStageConfig::default(); // the serving operating point
+
+    // Read-only baseline: the same engine with no ingest stack at all.
+    let frozen = BitBoundFoldingIndex::new(db.clone(), two_stage.m, two_stage.cutoff);
+    let t0 = Instant::now();
+    let mut blat = Vec::with_capacity(reads);
+    for r in 0..reads {
+        let q = &queries[r % queries.len()];
+        let t = Instant::now();
+        black_box(frozen.search(q, k));
+        blat.push(t.elapsed().as_secs_f64());
+    }
+    let baseline_qps = reads as f64 / t0.elapsed().as_secs_f64();
+    blat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let baseline_p99_us = percentile(&blat, 99.0) * 1e6;
+    println!(
+        "[bench_churn] frozen baseline: {baseline_qps:.1} QPS, p99 {baseline_p99_us:.0} us"
+    );
+
+    let mut points: Vec<Json> = Vec::new();
+    for &write_ratio in &WRITE_RATIOS {
+        for compactor in [false, true] {
+            if write_ratio == 0.0 && compactor {
+                continue; // nothing to compact
+            }
+            // The delta scan inherits the config's cutoff window
+            // automatically (ShardableIndex::config_cutoff).
+            let idx = Arc::new(MutableIndex::<BitBoundFoldingIndex>::new(
+                db.clone(),
+                two_stage.clone(),
+                IngestConfig { seal_rows: 2048, ..IngestConfig::default() },
+            ));
+            if compactor {
+                idx.clone().spawn_compactor();
+            }
+            let r = run_point(&idx, &queries, &pool, reads, k, write_ratio);
+            idx.stop_compactor();
+            println!(
+                "[bench_churn] ratio={write_ratio:.2} compactor={compactor}: \
+                 {:.1} read QPS (wall {:.1}), p99 {:.0} us, {} adds, \
+                 {} compactions, {} delta rows left ({:.2}x baseline)",
+                r.read_qps,
+                r.wall_qps,
+                r.p99_us,
+                r.adds,
+                r.compactions,
+                r.delta_rows_at_end,
+                baseline_qps / r.read_qps.max(1e-9),
+            );
+            points.push(
+                Json::obj()
+                    .set("write_ratio", write_ratio)
+                    .set("compactor", compactor)
+                    .set("read_qps", r.read_qps)
+                    .set("wall_qps", r.wall_qps)
+                    .set("p50_us", r.p50_us)
+                    .set("p99_us", r.p99_us)
+                    .set("adds", r.adds)
+                    .set("compactions", r.compactions)
+                    .set("delta_rows_at_end", r.delta_rows_at_end as u64)
+                    .set("qps_vs_baseline", r.read_qps / baseline_qps.max(1e-9)),
+            );
+        }
+    }
+
+    let doc = Json::obj()
+        .set("bench", "churn")
+        .set("n", n)
+        .set("k", k)
+        .set("reads_per_point", reads)
+        .set("baseline_qps", baseline_qps)
+        .set("baseline_p99_us", baseline_p99_us)
+        .set("points", Json::Arr(points));
+    if let Err(e) = std::fs::write("BENCH_churn.json", doc.to_string() + "\n") {
+        eprintln!("[bench_churn] could not write BENCH_churn.json: {e}");
+    } else {
+        println!("[bench_churn] wrote BENCH_churn.json");
+    }
+}

@@ -16,6 +16,11 @@
 //! * [`ShardedHnswBackend`] — shard-parallel HNSW: per-shard sub-graphs
 //!   traversed in parallel, partials reduced through the cross-shard
 //!   merge tree (docs/hnsw_sharding.md).
+//! * [`MutableExhaustive`] / [`MutableHnswBackend`] — the live-ingestion
+//!   variants (`serve --live`): every worker shares one
+//!   `ingest::MutableIndex` / `ingest::MutableHnsw`, so reads ride
+//!   lock-free snapshots while `ADD`/`DEL` and background compaction land
+//!   through the shared handle (docs/ingest.md).
 //!
 //! All backends answer through the same `SearchBackend` trait so the
 //! router/batcher/pool stack is engine-agnostic.
@@ -23,8 +28,9 @@
 use crate::fingerprint::{Database, Fingerprint};
 use crate::hnsw::{HnswBuilder, HnswGraph, HnswParams, SearchScratch, Searcher, ShardedHnsw};
 use crate::index::{BitBoundFoldingIndex, SearchIndex, TwoStageConfig};
+use crate::ingest::{MutableHnsw, MutableIndex};
 use crate::runtime::{ArtifactSet, PjRt, TfcEngine};
-use crate::shard::{ShardedDatabase, ShardedSearchIndex};
+use crate::shard::{ShardableIndex, ShardedDatabase, ShardedSearchIndex};
 use crate::topk::Scored;
 use anyhow::Result;
 use std::sync::Arc;
@@ -278,6 +284,76 @@ impl SearchBackend for ShardedHnswBackend {
     }
 }
 
+/// Live-ingestion exhaustive backend: every worker shares one
+/// [`MutableIndex`] (reads are lock-free snapshot clones, so a
+/// multi-worker pool scales reads while the shared index absorbs writes
+/// and compactions). `I` is whatever the deployment rebuilds at
+/// compaction time — `BitBoundFoldingIndex` unsharded, or
+/// `ShardedSearchIndex<BitBoundFoldingIndex>` for a shard-parallel base.
+pub struct MutableExhaustive<I: ShardableIndex> {
+    index: Arc<MutableIndex<I>>,
+}
+
+impl<I: ShardableIndex + 'static> MutableExhaustive<I>
+where
+    I::Config: 'static,
+{
+    pub fn new(index: Arc<MutableIndex<I>>) -> Self {
+        Self { index }
+    }
+
+    /// Factory handing the *same* mutable index to every pool worker.
+    pub fn factory(index: Arc<MutableIndex<I>>) -> BackendFactory {
+        Box::new(move || Ok(Box::new(Self { index }) as Box<dyn SearchBackend>))
+    }
+}
+
+impl<I: ShardableIndex> SearchBackend for MutableExhaustive<I> {
+    fn name(&self) -> &'static str {
+        "mutable-exhaustive"
+    }
+
+    fn search(&mut self, fp: &Fingerprint, k: usize) -> Result<Vec<Scored>> {
+        Ok(self.index.search(fp, k)) // k = 0 answered empty by the index
+    }
+
+    /// The whole batch reads one snapshot: base scan sharing plus a single
+    /// delta pass (`ingest::MutableIndex::search_batch`).
+    fn search_batch(&mut self, fps: &[&Fingerprint], k: usize) -> Result<Vec<Vec<Scored>>> {
+        Ok(self.index.search_batch(fps, k))
+    }
+}
+
+/// Live-ingestion approximate backend over a shared [`MutableHnsw`]
+/// (single-graph or sharded base + exact delta overlay; traversal scratch
+/// comes from the overlay's internal checkout pool).
+pub struct MutableHnswBackend {
+    index: Arc<MutableHnsw>,
+    ef: usize,
+}
+
+impl MutableHnswBackend {
+    pub fn new(index: Arc<MutableHnsw>, ef: usize) -> Self {
+        Self { index, ef }
+    }
+
+    /// Factory handing the *same* overlay to every pool worker.
+    pub fn factory(index: Arc<MutableHnsw>, ef: usize) -> BackendFactory {
+        Box::new(move || Ok(Box::new(Self { index, ef }) as Box<dyn SearchBackend>))
+    }
+}
+
+impl SearchBackend for MutableHnswBackend {
+    fn name(&self) -> &'static str {
+        "mutable-hnsw"
+    }
+
+    fn search(&mut self, fp: &Fingerprint, k: usize) -> Result<Vec<Scored>> {
+        let (hits, _stats) = self.index.knn(fp, k, self.ef.max(k));
+        Ok(hits)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -393,6 +469,48 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn mutable_backends_share_one_live_index_across_workers() {
+        use crate::ingest::IngestConfig;
+        let db = Arc::new(Database::synthesize(500, &ChemblModel::default(), 61));
+        let cfg = IngestConfig { seal_rows: 32, ..IngestConfig::default() };
+        let exact = Arc::new(MutableIndex::<BitBoundFoldingIndex>::new(
+            db.clone(),
+            TwoStageConfig { m: 1, cutoff: 0.0, ..TwoStageConfig::default() },
+            cfg.clone(),
+        ));
+        let approx =
+            Arc::new(MutableHnsw::new_single(db.clone(), HnswParams::new(6, 32, 3), cfg));
+        // Two "workers" per family sharing the same live index.
+        let mut e1 = (MutableExhaustive::factory(exact.clone()))().unwrap();
+        let mut e2 = (MutableExhaustive::factory(exact.clone()))().unwrap();
+        let mut a1 = (MutableHnswBackend::factory(approx.clone(), 32))().unwrap();
+
+        let brute = BruteForceIndex::new(db.clone());
+        let q = db.sample_queries(1, 9)[0].clone();
+        let truth = brute.search(&q, 8);
+        for w in [&mut e1, &mut e2] {
+            let got = w.search(&q, 8).unwrap();
+            assert_eq!(
+                got.iter().map(|s| (s.id, s.score)).collect::<Vec<_>>(),
+                truth.iter().map(|s| (s.id, s.score)).collect::<Vec<_>>(),
+                "mutable exhaustive is exact before any write"
+            );
+        }
+        // A write through the shared handle is visible to every worker.
+        let fresh = db.sample_queries(1, 33)[0].clone();
+        let id = exact.add(fresh.clone());
+        assert_eq!(approx.add(fresh.clone()), id);
+        assert_eq!(e1.search(&fresh, 1).unwrap()[0].id, id);
+        assert_eq!(e2.search(&fresh, 1).unwrap()[0].id, id);
+        assert_eq!(a1.search(&fresh, 1).unwrap()[0].id, id);
+        // k = 0 stays the answered-empty contract.
+        assert!(e1.search(&fresh, 0).unwrap().is_empty());
+        assert!(a1.search(&fresh, 0).unwrap().is_empty());
+        let batch = e1.search_batch(&[&fresh, &q], 0).unwrap();
+        assert!(batch.iter().all(Vec::is_empty));
     }
 
     #[test]

@@ -4,9 +4,10 @@
 //! completion is far off the hot path). Snapshot-on-read so reporters
 //! never block the serving path for long.
 
+use crate::ingest::IngestStats;
 use crate::util::prng::SplitMix64;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 /// Reservoir-sampled latency state (Vitter's Algorithm R): once full,
@@ -40,6 +41,9 @@ pub struct Metrics {
     pub errors: AtomicU64,
     /// Completed-query latencies. Bounded reservoir (Algorithm R).
     latencies: Mutex<Reservoir>,
+    /// Live-ingestion gauge sources, registered per mutable index at
+    /// serve wiring time (`serve --live`); read at snapshot time.
+    ingest: Mutex<Vec<(&'static str, Arc<IngestStats>)>>,
 }
 
 /// Reservoir cap — enough for stable p99 at any realistic test length.
@@ -80,6 +84,13 @@ impl Metrics {
         }
     }
 
+    /// Register a mutable index's ingestion gauges under `label`
+    /// (e.g. "exact" / "hnsw"); they ride every subsequent snapshot and
+    /// the `STATS` server reply.
+    pub fn register_ingest(&self, label: &'static str, stats: Arc<IngestStats>) {
+        self.ingest.lock().unwrap().push((label, stats));
+    }
+
     /// Snapshot of the current state.
     pub fn snapshot(&self) -> MetricsSnapshot {
         let mut lat = self.latencies.lock().unwrap().samples.clone();
@@ -91,6 +102,23 @@ impl Metrics {
                 crate::util::stats::percentile(&lat, p)
             }
         };
+        let ingest = self
+            .ingest
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(label, st)| IngestGauges {
+                label,
+                memtable_rows: st.memtable_rows.load(Ordering::Relaxed),
+                sealed_segments: st.sealed_segments.load(Ordering::Relaxed),
+                sealed_rows: st.sealed_rows.load(Ordering::Relaxed),
+                tombstones: st.tombstones.load(Ordering::Relaxed),
+                compactions: st.compactions.load(Ordering::Relaxed),
+                seals: st.seals.load(Ordering::Relaxed),
+                adds: st.adds.load(Ordering::Relaxed),
+                deletes: st.deletes.load(Ordering::Relaxed),
+            })
+            .collect();
         MetricsSnapshot {
             submitted: self.submitted.load(Ordering::Relaxed),
             completed: self.completed.load(Ordering::Relaxed),
@@ -100,8 +128,23 @@ impl Metrics {
             p90_s: pct(90.0),
             p99_s: pct(99.0),
             mean_s: if lat.is_empty() { 0.0 } else { lat.iter().sum::<f64>() / lat.len() as f64 },
+            ingest,
         }
     }
+}
+
+/// Point-in-time view of one mutable index's ingestion state.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IngestGauges {
+    pub label: &'static str,
+    pub memtable_rows: u64,
+    pub sealed_segments: u64,
+    pub sealed_rows: u64,
+    pub tombstones: u64,
+    pub compactions: u64,
+    pub seals: u64,
+    pub adds: u64,
+    pub deletes: u64,
 }
 
 /// Point-in-time metrics view.
@@ -115,11 +158,14 @@ pub struct MetricsSnapshot {
     pub p90_s: f64,
     pub p99_s: f64,
     pub mean_s: f64,
+    /// One entry per registered mutable index (empty when serving
+    /// read-only).
+    pub ingest: Vec<IngestGauges>,
 }
 
 impl MetricsSnapshot {
     pub fn report(&self) -> String {
-        format!(
+        let mut out = format!(
             "submitted {} completed {} rejected {} errors {} | latency mean {:.2}ms p50 {:.2}ms p90 {:.2}ms p99 {:.2}ms",
             self.submitted,
             self.completed,
@@ -129,7 +175,21 @@ impl MetricsSnapshot {
             self.p50_s * 1e3,
             self.p90_s * 1e3,
             self.p99_s * 1e3,
-        )
+        );
+        for g in &self.ingest {
+            out.push_str(&format!(
+                " | ingest[{}] adds {} deletes {} mem {} sealed {}x{} tombstones {} compactions {}",
+                g.label,
+                g.adds,
+                g.deletes,
+                g.memtable_rows,
+                g.sealed_segments,
+                g.sealed_rows,
+                g.tombstones,
+                g.compactions,
+            ));
+        }
+        out
     }
 }
 
@@ -152,6 +212,31 @@ mod tests {
         assert!((s.p50_s - 0.0505).abs() < 0.002, "p50 {}", s.p50_s);
         assert!(s.p99_s > 0.098);
         assert!(s.report().contains("completed 100"));
+    }
+
+    #[test]
+    fn ingest_gauges_ride_the_snapshot() {
+        let m = Metrics::new();
+        assert!(m.snapshot().ingest.is_empty(), "read-only serving reports no gauges");
+        let st = Arc::new(IngestStats::default());
+        st.memtable_rows.store(7, Ordering::Relaxed);
+        st.compactions.store(2, Ordering::Relaxed);
+        st.adds.store(11, Ordering::Relaxed);
+        st.seals.store(3, Ordering::Relaxed);
+        st.sealed_rows.store(48, Ordering::Relaxed);
+        m.register_ingest("exact", st.clone());
+        let s = m.snapshot();
+        assert_eq!(s.ingest.len(), 1);
+        assert_eq!(s.ingest[0].label, "exact");
+        assert_eq!(s.ingest[0].memtable_rows, 7);
+        assert_eq!(s.ingest[0].compactions, 2);
+        assert_eq!(s.ingest[0].seals, 3);
+        assert_eq!(s.ingest[0].sealed_rows, 48);
+        assert!(s.report().contains("ingest[exact]"), "report: {}", s.report());
+        assert!(s.report().contains("adds 11"));
+        // Gauges are live: a later snapshot sees updated values.
+        st.tombstones.store(3, Ordering::Relaxed);
+        assert_eq!(m.snapshot().ingest[0].tombstones, 3);
     }
 
     #[test]

@@ -1,16 +1,24 @@
 //! TCP front end: a line-oriented text protocol over the router.
 //!
-//! Protocol (one request per line):
+//! Protocol (one request per line; full reference in docs/protocol.md):
 //!
 //! ```text
 //! SEARCH <k> <mode> <hex fingerprint (256 hex chars = 1024 bits)>
 //!   → OK <row>:<score> <row>:<score> …
 //!   → BUSY            (backpressure rejection; retry later)
 //!   → ERR <message>
-//! STATS → OK <metrics summary>
+//! ADD <smiles>   → OK <id>          (live ingestion; `serve --live`)
+//! ADDFP <hex>    → OK <id>
+//! DEL <id>       → OK <id> | ERR unknown or already-deleted id
+//! STATS → OK <metrics summary (incl. ingest gauges when --live)>
 //! PING  → PONG
 //! QUIT  → closes the connection
 //! ```
+//!
+//! Writes route through [`crate::ingest::WritePath`], which lands each
+//! mutation in every mutable serving index with one shared global id;
+//! servers built without a write path answer the write verbs with `ERR
+//! ingestion disabled`.
 //!
 //! std-only (no async runtime in the vendored set): one thread per
 //! connection, which is plenty for the engine counts this serves.
@@ -18,10 +26,12 @@
 use super::request::{Query, QueryMode};
 use super::router::Router;
 use crate::fingerprint::{Fingerprint, FP_BITS};
+use crate::ingest::WritePath;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 
 /// Per-connection query-id block size. Each connection draws ids from its
 /// own block so concurrent connections never share an id; ids wrap
@@ -71,9 +81,22 @@ pub fn fingerprint_to_hex(fp: &Fingerprint) -> String {
     s
 }
 
+/// Default ceiling on how long a connection thread waits for a pool to
+/// answer one `SEARCH` before replying `BUSY` (overridable with
+/// `serve --reply-timeout-ms` / [`Server::with_reply_timeout`]).
+pub const DEFAULT_REPLY_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// What a connection handler needs: the read path, the (optional) write
+/// path, and the reply deadline.
+struct ConnCtx {
+    router: Arc<Router>,
+    ingest: Option<Arc<WritePath>>,
+    reply_timeout: Duration,
+}
+
 /// The serving loop. Bind, accept, answer until `stop` is raised.
 pub struct Server {
-    router: Arc<Router>,
+    ctx: Arc<ConnCtx>,
     next_id: AtomicU64,
     stop: Arc<AtomicBool>,
     /// Connection handlers currently tracked by the accept loop (finished
@@ -84,11 +107,31 @@ pub struct Server {
 impl Server {
     pub fn new(router: Arc<Router>) -> Self {
         Self {
-            router,
+            ctx: Arc::new(ConnCtx {
+                router,
+                ingest: None,
+                reply_timeout: DEFAULT_REPLY_TIMEOUT,
+            }),
             next_id: AtomicU64::new(1),
             stop: Arc::new(AtomicBool::new(false)),
             live_conns: AtomicUsize::new(0),
         }
+    }
+
+    /// Enable the write verbs (`ADD`/`ADDFP`/`DEL`) through `ingest`.
+    pub fn with_ingest(mut self, ingest: Arc<WritePath>) -> Self {
+        let ctx = Arc::get_mut(&mut self.ctx).expect("configure before serving");
+        ctx.ingest = Some(ingest);
+        self
+    }
+
+    /// Override the per-request `SEARCH` reply deadline (default
+    /// [`DEFAULT_REPLY_TIMEOUT`]). A wedged pool then costs a client this
+    /// long, not a minute.
+    pub fn with_reply_timeout(mut self, reply_timeout: Duration) -> Self {
+        let ctx = Arc::get_mut(&mut self.ctx).expect("configure before serving");
+        ctx.reply_timeout = reply_timeout;
+        self
     }
 
     pub fn stop_handle(&self) -> Arc<AtomicBool> {
@@ -120,11 +163,11 @@ impl Server {
                     // Reap finished handlers before tracking a new one, so
                     // churny traffic can't grow `conns` without bound.
                     conns.retain(|h| !h.is_finished());
-                    let router = self.router.clone();
+                    let ctx = self.ctx.clone();
                     let id_base = self.next_id.fetch_add(QID_BLOCK, Ordering::Relaxed);
                     let stop = self.stop.clone();
                     conns.push(std::thread::spawn(move || {
-                        let _ = handle_conn(stream, router, id_base, stop);
+                        let _ = handle_conn(stream, ctx, id_base, stop);
                     }));
                     self.live_conns.store(conns.len(), Ordering::Relaxed);
                 }
@@ -145,7 +188,7 @@ impl Server {
 
 fn handle_conn(
     stream: TcpStream,
-    router: Arc<Router>,
+    ctx: Arc<ConnCtx>,
     id_base: u64,
     stop: Arc<AtomicBool>,
 ) -> std::io::Result<()> {
@@ -170,7 +213,7 @@ fn handle_conn(
             }
             Err(e) => return Err(e),
         }
-        let reply = dispatch_line(line.trim(), &router, id_base, &mut served);
+        let reply = dispatch_line(line.trim(), &ctx, id_base, &mut served);
         match reply {
             Some(text) => {
                 writer.write_all(text.as_bytes())?;
@@ -181,7 +224,8 @@ fn handle_conn(
     }
 }
 
-fn dispatch_line(line: &str, router: &Router, id_base: u64, served: &mut u64) -> Option<String> {
+fn dispatch_line(line: &str, ctx: &ConnCtx, id_base: u64, served: &mut u64) -> Option<String> {
+    let router = &ctx.router;
     let mut parts = line.split_whitespace();
     match parts.next() {
         Some("PING") => Some("PONG".into()),
@@ -209,7 +253,7 @@ fn dispatch_line(line: &str, router: &Router, id_base: u64, served: &mut u64) ->
                 Ok(rx) => rx,
                 Err(e) => return Some(format!("ERR {e}")),
             };
-            match rx.recv_timeout(std::time::Duration::from_secs(60)) {
+            match rx.recv_timeout(ctx.reply_timeout) {
                 Ok(result) => {
                     let body: Vec<String> = result
                         .hits
@@ -219,6 +263,49 @@ fn dispatch_line(line: &str, router: &Router, id_base: u64, served: &mut u64) ->
                     Some(format!("OK {}", body.join(" ")))
                 }
                 Err(_) => Some("BUSY".into()),
+            }
+        }
+        Some("ADD") => {
+            let Some(ingest) = &ctx.ingest else {
+                return Some("ERR ingestion disabled (serve --live)".into());
+            };
+            // SMILES contains no whitespace; the rest of the line is the
+            // molecule.
+            let smiles = line["ADD".len()..].trim();
+            if smiles.is_empty() {
+                return Some("ERR missing smiles".into());
+            }
+            match ingest.add_smiles(smiles) {
+                Ok(id) => Some(format!("OK {id}")),
+                Err(e) => Some(format!("ERR {e}")),
+            }
+        }
+        Some("ADDFP") => {
+            let Some(ingest) = &ctx.ingest else {
+                return Some("ERR ingestion disabled (serve --live)".into());
+            };
+            let fp = match parts.next().map(fingerprint_from_hex) {
+                Some(Ok(fp)) => fp,
+                Some(Err(e)) => return Some(format!("ERR {e}")),
+                None => return Some("ERR missing fingerprint".into()),
+            };
+            match ingest.add_fingerprint(fp) {
+                Ok(id) => Some(format!("OK {id}")),
+                Err(e) => Some(format!("ERR {e}")),
+            }
+        }
+        Some("DEL") => {
+            let Some(ingest) = &ctx.ingest else {
+                return Some("ERR ingestion disabled (serve --live)".into());
+            };
+            let id: u64 = match parts.next().and_then(|s| s.parse().ok()) {
+                Some(id) => id,
+                None => return Some("ERR bad id".into()),
+            };
+            if ingest.delete(id) {
+                Some(format!("OK {id}"))
+            } else {
+                Some(format!("ERR unknown or already-deleted id {id}"))
             }
         }
         Some(other) => Some(format!("ERR unknown command {other:?}")),
@@ -245,6 +332,41 @@ impl Client {
         let mut reply = String::new();
         self.reader.read_line(&mut reply)?;
         Ok(reply.trim_end().to_string())
+    }
+
+    fn expect_ok_id(reply: String) -> std::io::Result<u64> {
+        if let Some(body) = reply.strip_prefix("OK ") {
+            body.trim().parse().map_err(|_| {
+                std::io::Error::new(std::io::ErrorKind::InvalidData, "non-numeric id in reply")
+            })
+        } else {
+            Err(std::io::Error::new(std::io::ErrorKind::Other, reply))
+        }
+    }
+
+    /// `ADDFP` convenience; returns the assigned global id.
+    pub fn add_fp(&mut self, fp: &Fingerprint) -> std::io::Result<u64> {
+        let reply = self.request(&format!("ADDFP {}", fingerprint_to_hex(fp)))?;
+        Self::expect_ok_id(reply)
+    }
+
+    /// `ADD` convenience; returns the assigned global id.
+    pub fn add_smiles(&mut self, smiles: &str) -> std::io::Result<u64> {
+        let reply = self.request(&format!("ADD {smiles}"))?;
+        Self::expect_ok_id(reply)
+    }
+
+    /// `DEL` convenience: `Ok(true)` when the row was live and is now
+    /// tombstoned, `Ok(false)` when the server rejected the id.
+    pub fn del(&mut self, id: u64) -> std::io::Result<bool> {
+        let reply = self.request(&format!("DEL {id}"))?;
+        if reply.starts_with("OK") {
+            Ok(true)
+        } else if reply.starts_with("ERR") {
+            Ok(false)
+        } else {
+            Err(std::io::Error::new(std::io::ErrorKind::Other, reply))
+        }
     }
 
     /// SEARCH convenience; returns (row, score) pairs.
@@ -370,6 +492,131 @@ mod tests {
         }
         assert!(fingerprint_from_hex("zz").is_err());
         assert!(fingerprint_from_hex(&"g".repeat(256)).is_err());
+    }
+
+    fn spawn(server: Arc<Server>) -> (std::net::SocketAddr, std::thread::JoinHandle<()>) {
+        let (addr_tx, addr_rx) = std::sync::mpsc::channel();
+        let srv = server.clone();
+        let handle = std::thread::spawn(move || {
+            srv.serve("127.0.0.1:0", move |a| {
+                let _ = addr_tx.send(a);
+            })
+            .unwrap();
+        });
+        (addr_rx.recv_timeout(Duration::from_secs(10)).unwrap(), handle)
+    }
+
+    #[test]
+    fn write_verbs_route_through_the_ingest_path() {
+        use crate::hnsw::HnswParams;
+        use crate::index::{BitBoundFoldingIndex, TwoStageConfig};
+        use crate::ingest::{IngestConfig, MutableHnsw, MutableIndex, MutableWriter, WritePath};
+        let db = Arc::new(Database::synthesize(600, &ChemblModel::default(), 23));
+        let metrics = Arc::new(Metrics::new());
+        let icfg = IngestConfig { seal_rows: 64, ..IngestConfig::default() };
+        let exact = Arc::new(MutableIndex::<BitBoundFoldingIndex>::new(
+            db.clone(),
+            TwoStageConfig { m: 1, cutoff: 0.0, ..TwoStageConfig::default() },
+            icfg.clone(),
+        ));
+        let approx =
+            Arc::new(MutableHnsw::new_single(db.clone(), HnswParams::new(6, 32, 3), icfg));
+        metrics.register_ingest("exact", exact.stats());
+        metrics.register_ingest("hnsw", approx.stats());
+        let exact_be = exact.clone();
+        let ex = Arc::new(EnginePool::new("live-ex", 1, 8, metrics.clone(), move |_| {
+            super::super::backend::MutableExhaustive::factory(exact_be.clone())
+        }));
+        let approx_be = approx.clone();
+        let ap = Arc::new(EnginePool::new("live-ap", 1, 8, metrics.clone(), move |_| {
+            super::super::backend::MutableHnswBackend::factory(approx_be.clone(), 32)
+        }));
+        let router = Arc::new(Router::new(
+            ex,
+            ap,
+            BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+            metrics,
+        ));
+        let wp = Arc::new(WritePath::new(vec![
+            exact.clone() as Arc<dyn MutableWriter>,
+            approx.clone() as Arc<dyn MutableWriter>,
+        ]));
+        let server = Arc::new(
+            Server::new(router)
+                .with_ingest(wp)
+                .with_reply_timeout(Duration::from_secs(20)),
+        );
+        let stop = server.stop_handle();
+        let (addr, handle) = spawn(server);
+
+        let mut c = Client::connect(addr).unwrap();
+        // ADDFP: the fresh row is immediately searchable in both families.
+        let fresh = db.sample_queries(1, 91)[0].clone();
+        let id = c.add_fp(&fresh).unwrap();
+        assert_eq!(id, 600);
+        let hits = c.search(&fresh, 3, "exact").unwrap();
+        assert_eq!(hits[0].0, 600);
+        assert!((hits[0].1 - 1.0).abs() < 1e-6);
+        let hits = c.search(&fresh, 3, "hnsw").unwrap();
+        assert_eq!(hits[0].0, 600);
+
+        // ADD via SMILES, then DEL masks the row for every later search.
+        let id2 = c.add_smiles("CC(=O)Oc1ccccc1C(=O)O").unwrap();
+        assert_eq!(id2, 601);
+        assert!(c.del(600).unwrap());
+        assert!(!c.del(600).unwrap(), "double delete rejected");
+        assert!(!c.del(99_999).unwrap(), "unknown id rejected");
+        let hits = c.search(&fresh, 3, "exact").unwrap();
+        assert_ne!(hits[0].0, 600, "tombstoned row masked");
+
+        // Bad writes are ERRs, not dead connections.
+        assert!(c.request("ADD").unwrap().starts_with("ERR"));
+        assert!(c.request("ADD ((((").unwrap().starts_with("ERR"));
+        assert!(c.request("ADDFP zz").unwrap().starts_with("ERR"));
+        assert!(c.request("DEL notanumber").unwrap().starts_with("ERR"));
+        // STATS carries the ingest gauges.
+        let stats = c.request("STATS").unwrap();
+        assert!(stats.contains("ingest[exact]"), "stats: {stats}");
+        assert!(stats.contains("ingest[hnsw]"), "stats: {stats}");
+        assert_eq!(c.request("QUIT").ok(), Some(String::new()));
+        stop.store(true, Ordering::Relaxed);
+        let _ = handle.join();
+    }
+
+    #[test]
+    fn read_only_server_rejects_write_verbs() {
+        let db = Arc::new(Database::synthesize(300, &ChemblModel::default(), 29));
+        let metrics = Arc::new(Metrics::new());
+        let dbc = db.clone();
+        let ex = Arc::new(EnginePool::new("ro-ex", 1, 8, metrics.clone(), move |_| {
+            NativeExhaustive::factory(dbc.clone(), 1, 0.0)
+        }));
+        let graph = NativeHnsw::build_graph(&db, 6, 32, 3);
+        let dbc2 = db.clone();
+        let ap = Arc::new(EnginePool::new("ro-ap", 1, 8, metrics.clone(), move |_| {
+            NativeHnsw::factory(dbc2.clone(), graph.clone(), 32)
+        }));
+        let router = Arc::new(Router::new(
+            ex,
+            ap,
+            BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+            metrics,
+        ));
+        let server = Arc::new(Server::new(router));
+        let stop = server.stop_handle();
+        let (addr, handle) = spawn(server);
+        let mut c = Client::connect(addr).unwrap();
+        for line in ["ADD CCO", "ADDFP 00", "DEL 3"] {
+            let reply = c.request(line).unwrap();
+            assert!(
+                reply.starts_with("ERR ingestion disabled"),
+                "{line:?} must be rejected without a write path: {reply}"
+            );
+        }
+        // The connection keeps serving reads afterwards.
+        assert_eq!(c.request("PING").unwrap(), "PONG");
+        stop.store(true, Ordering::Relaxed);
+        let _ = handle.join();
     }
 
     #[test]

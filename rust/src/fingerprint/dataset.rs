@@ -287,21 +287,52 @@ impl Database {
     }
 
     /// Load a database written by [`Database::save`].
+    ///
+    /// Hardened against corrupt input: a wrong magic, an out-of-range bit
+    /// width (zero, not a multiple of 64, or beyond
+    /// [`Database::MAX_LOAD_BITS`]), and any length mismatch (truncated
+    /// rows *or* trailing garbage) are rejected with a descriptive
+    /// `InvalidData` error **before** any row is materialized — a
+    /// corrupted header can neither propagate garbage fingerprints into a
+    /// serving index nor trigger an absurd allocation.
     pub fn load(path: &std::path::Path) -> std::io::Result<Self> {
         use std::io::Read;
-        let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+        let bad = |msg: String| std::io::Error::new(std::io::ErrorKind::InvalidData, msg);
+        let file = std::fs::File::open(path)?;
+        let file_len = file.metadata()?.len();
+        let mut f = std::io::BufReader::new(file);
         let mut magic = [0u8; 8];
-        f.read_exact(&mut magic)?;
+        f.read_exact(&mut magic)
+            .map_err(|_| bad(format!("truncated header: {file_len} bytes, need 24")))?;
         if &magic != b"MFPDB01\0" {
-            return Err(std::io::Error::new(std::io::ErrorKind::InvalidData, "bad magic"));
+            return Err(bad("bad magic (not a molfpga database file)".into()));
         }
         let mut buf8 = [0u8; 8];
-        f.read_exact(&mut buf8)?;
-        let n = u64::from_le_bytes(buf8) as usize;
-        f.read_exact(&mut buf8)?;
-        let bits = u64::from_le_bytes(buf8) as usize;
-        let words = bits / 64;
-        let mut fps = Vec::with_capacity(n);
+        f.read_exact(&mut buf8)
+            .map_err(|_| bad(format!("truncated header: {file_len} bytes, need 24")))?;
+        let n = u64::from_le_bytes(buf8);
+        f.read_exact(&mut buf8)
+            .map_err(|_| bad(format!("truncated header: {file_len} bytes, need 24")))?;
+        let bits = u64::from_le_bytes(buf8);
+        if bits == 0 || bits % 64 != 0 || bits > Self::MAX_LOAD_BITS as u64 {
+            return Err(bad(format!(
+                "fingerprint width {bits} out of range (positive multiple of 64, ≤ {})",
+                Self::MAX_LOAD_BITS
+            )));
+        }
+        let words = (bits / 64) as usize;
+        let expected = (words as u64)
+            .checked_mul(8)
+            .and_then(|b| b.checked_mul(n))
+            .and_then(|b| b.checked_add(24))
+            .ok_or_else(|| bad(format!("header claims an impossible size (n={n})")))?;
+        if file_len != expected {
+            return Err(bad(format!(
+                "file is {file_len} bytes but the header (n={n}, bits={bits}) \
+                 requires exactly {expected}: truncated or corrupt"
+            )));
+        }
+        let mut fps = Vec::with_capacity(n as usize);
         for _ in 0..n {
             let mut ws = vec![0u64; words];
             for w in ws.iter_mut() {
@@ -312,6 +343,11 @@ impl Database {
         }
         Ok(Self::new(fps))
     }
+
+    /// Widest fingerprint [`Database::load`] accepts (64× the full Morgan
+    /// width — far beyond anything [`Database::save`] writes, tight enough
+    /// that a corrupt header cannot demand a pathological allocation).
+    pub const MAX_LOAD_BITS: usize = FP_BITS * 64;
 }
 
 /// Bundled drug molecules (name, SMILES) for the real-chemistry path.
@@ -464,6 +500,56 @@ mod tests {
         let back = Database::load(&path).unwrap();
         assert_eq!(db.fps, back.fps);
         assert_eq!(db.counts, back.counts);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn load_rejects_corrupt_files_with_clear_errors() {
+        let db = Database::synthesize(60, &ChemblModel::default(), 13);
+        let path = std::env::temp_dir().join("molfpga_db_corrupt_test.bin");
+        db.save(&path).unwrap();
+        let pristine = std::fs::read(&path).unwrap();
+        let expect_invalid = |bytes: &[u8], needle: &str, label: &str| {
+            std::fs::write(&path, bytes).unwrap();
+            let err = Database::load(&path).expect_err(label);
+            assert_eq!(err.kind(), std::io::ErrorKind::InvalidData, "{label}");
+            assert!(
+                err.to_string().contains(needle),
+                "{label}: error {:?} should mention {needle:?}",
+                err.to_string()
+            );
+        };
+
+        // Truncations: inside the header, and inside the row payload.
+        expect_invalid(&pristine[..4], "truncated header", "header cut mid-magic");
+        expect_invalid(&pristine[..20], "truncated header", "header cut mid-bits");
+        expect_invalid(&pristine[..pristine.len() - 9], "truncated or corrupt", "rows cut");
+        // Trailing garbage is corruption too, not silently ignored.
+        let mut longer = pristine.clone();
+        longer.extend_from_slice(&[0xAB; 3]);
+        expect_invalid(&longer, "truncated or corrupt", "trailing bytes");
+        // Out-of-range bit widths (field at offset 16).
+        for bad_bits in [0u64, 100, (Database::MAX_LOAD_BITS as u64) + 64, u64::MAX] {
+            let mut patched = pristine.clone();
+            patched[16..24].copy_from_slice(&bad_bits.to_le_bytes());
+            expect_invalid(&patched, "out of range", &format!("bits={bad_bits}"));
+        }
+        // A lying row count is a length mismatch, never a huge allocation.
+        let mut big_n = pristine.clone();
+        big_n[8..16].copy_from_slice(&u64::MAX.to_le_bytes());
+        expect_invalid(&big_n, "impossible size", "n=u64::MAX overflows");
+        let mut wrong_n = pristine.clone();
+        wrong_n[8..16].copy_from_slice(&1_000_000u64.to_le_bytes());
+        expect_invalid(&wrong_n, "truncated or corrupt", "n inflated");
+        // Bad magic.
+        let mut bad_magic = pristine.clone();
+        bad_magic[0] = b'X';
+        expect_invalid(&bad_magic, "bad magic", "magic");
+
+        // And the pristine bytes still round-trip.
+        std::fs::write(&path, &pristine).unwrap();
+        let back = Database::load(&path).unwrap();
+        assert_eq!(back.fps, db.fps);
         let _ = std::fs::remove_file(&path);
     }
 

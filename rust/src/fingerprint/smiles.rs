@@ -316,7 +316,11 @@ impl<'a> Parser<'a> {
         let mut isotope: u16 = 0;
         while let Some(c) = self.peek() {
             if c.is_ascii_digit() {
-                isotope = isotope * 10 + (self.bump().unwrap() - b'0') as u16;
+                // Saturate: adversarial digit runs ([99999999C]) must parse
+                // (or fail) without overflowing — never panic.
+                isotope = isotope
+                    .saturating_mul(10)
+                    .saturating_add((self.bump().unwrap() - b'0') as u16);
             } else {
                 break;
             }
@@ -362,7 +366,9 @@ impl<'a> Parser<'a> {
             match c {
                 b'+' => {
                     self.bump();
-                    charge += 1;
+                    // Saturate: a run of 127+ signs ([C++++…]) must not
+                    // overflow the i8 (debug builds would panic).
+                    charge = charge.saturating_add(1);
                     if let Some(d) = self.peek() {
                         if d.is_ascii_digit() {
                             charge = (self.bump().unwrap() - b'0') as i8;
@@ -371,7 +377,7 @@ impl<'a> Parser<'a> {
                 }
                 b'-' => {
                     self.bump();
-                    charge -= 1;
+                    charge = charge.saturating_sub(1);
                     if let Some(d) = self.peek() {
                         if d.is_ascii_digit() {
                             charge = -((self.bump().unwrap() - b'0') as i8);

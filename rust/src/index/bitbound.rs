@@ -146,6 +146,10 @@ impl crate::shard::ShardableIndex for BitBoundIndex {
     fn build_shard(db: Arc<Database>, cutoff: &f64) -> Self {
         Self::new(db, *cutoff)
     }
+
+    fn config_cutoff(cutoff: &f64) -> f64 {
+        *cutoff
+    }
 }
 
 impl SearchIndex for BitBoundIndex {

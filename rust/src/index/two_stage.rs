@@ -95,6 +95,10 @@ impl crate::shard::ShardableIndex for BitBoundFoldingIndex {
     fn build_shard(db: Arc<Database>, cfg: &TwoStageConfig) -> Self {
         Self::with_scheme(db, cfg.m, cfg.cutoff, cfg.scheme)
     }
+
+    fn config_cutoff(cfg: &TwoStageConfig) -> f64 {
+        cfg.cutoff
+    }
 }
 
 impl SearchIndex for BitBoundFoldingIndex {

@@ -1,0 +1,478 @@
+//! Approximate serving with a live delta: HNSW base + exact overlay.
+//!
+//! [`MutableHnsw`] puts the same segment stack as
+//! [`super::MutableIndex`] in front of an HNSW base — either one graph
+//! ([`HnswBase::Single`]) or the shard-parallel
+//! [`crate::hnsw::ShardedHnsw`] ([`HnswBase::Sharded`]):
+//!
+//! * **Reads** traverse the sealed graph at `k + base_dead` — over-fetched
+//!   past the dead graph nodes only, so masking can never underfill the
+//!   top-k — then merge with the *exact* brute-scanned delta. Freshly ingested rows are therefore found with
+//!   recall 1.0 until compaction folds them into the graph — the overlay
+//!   *raises* recall on recent rows (the recall caveat, quantified in
+//!   docs/ingest.md, is only that graph-resident rows keep the base
+//!   graph's approximate recall).
+//! * **Compaction** extends the base graph in place through the existing
+//!   [`HnswBuilder::insert_with_scratch`] incremental path — cloning the
+//!   graph off the read path, appending every surviving sealed row, and
+//!   swapping the result in. Deleted graph nodes cannot be unlinked
+//!   cheaply, so tombstoned base rows stay in the graph masked at query
+//!   time until the dead fraction crosses
+//!   [`super::IngestConfig::hnsw_rebuild_frac`], at which point (or
+//!   whenever the base is sharded) compaction rebuilds from survivors.
+
+use super::segment::scan_rows_into;
+use super::state::{BaseOps, MutableCore, Snapshot};
+use super::IngestConfig;
+use crate::fingerprint::{Database, Fingerprint};
+use crate::hnsw::{HnswBuilder, HnswGraph, HnswParams, SearchScratch, SearchStats, Searcher, ShardedHnsw};
+use crate::shard::{PartitionPolicy, ShardedDatabase};
+use crate::topk::{Scored, ShardMerge, TopKMerge};
+use crate::util::prng::Pcg64;
+use std::collections::HashSet;
+use std::sync::{Arc, Mutex};
+
+/// The sealed approximate base: one graph, or per-shard sub-graphs with
+/// cross-shard merge. Either way `globals` maps the base database's row
+/// ids to global ingest ids (ascending).
+pub enum HnswBase {
+    Single {
+        db: Arc<Database>,
+        globals: Arc<Vec<u64>>,
+        graph: Arc<HnswGraph>,
+    },
+    Sharded {
+        index: Arc<ShardedHnsw>,
+        globals: Arc<Vec<u64>>,
+    },
+}
+
+impl HnswBase {
+    pub fn globals(&self) -> &Arc<Vec<u64>> {
+        match self {
+            HnswBase::Single { globals, .. } => globals,
+            HnswBase::Sharded { globals, .. } => globals,
+        }
+    }
+
+    /// The base database (full, unpartitioned view).
+    pub fn db(&self) -> &Arc<Database> {
+        match self {
+            HnswBase::Single { db, .. } => db,
+            HnswBase::Sharded { index, .. } => index.sharded().full(),
+        }
+    }
+}
+
+impl BaseOps for HnswBase {
+    fn rows(&self) -> usize {
+        self.globals().len()
+    }
+
+    fn contains(&self, id: u64) -> bool {
+        self.globals().binary_search(&id).is_ok()
+    }
+}
+
+/// A live-ingestion overlay over HNSW serving. Shared across pool workers
+/// behind an `Arc`; traversal scratch comes from an internal checkout
+/// pool, so long-lived instances allocate no per-query visited state.
+pub struct MutableHnsw {
+    core: MutableCore<HnswBase>,
+    params: HnswParams,
+    /// `Some` = the base is sharded and compaction rebuilds at this shape.
+    shard_shape: Option<(usize, PartitionPolicy)>,
+    scratch_pool: Mutex<Vec<SearchScratch>>,
+}
+
+impl MutableHnsw {
+    /// Single-graph base over `db` (global ids `0..n`).
+    pub fn new_single(db: Arc<Database>, params: HnswParams, cfg: IngestConfig) -> Self {
+        let graph = Arc::new(HnswBuilder::new(params.clone()).build(&db));
+        let next_id = db.len() as u64;
+        let base = HnswBase::Single {
+            globals: Arc::new(super::initial_globals(&db)),
+            graph,
+            db,
+        };
+        Self {
+            core: MutableCore::new(base, next_id, cfg),
+            params,
+            shard_shape: None,
+            scratch_pool: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Shard-parallel base: per-shard sub-graphs over a fresh partition of
+    /// `db`; compaction rebuilds at the same (shards, policy) shape.
+    pub fn new_sharded(
+        db: Arc<Database>,
+        shards: usize,
+        policy: PartitionPolicy,
+        params: HnswParams,
+        cfg: IngestConfig,
+    ) -> Self {
+        let next_id = db.len() as u64;
+        let globals = Arc::new(super::initial_globals(&db));
+        let sharded = Arc::new(ShardedDatabase::partition(db, shards, policy));
+        let index = Arc::new(ShardedHnsw::build(sharded, params.clone()));
+        let base = HnswBase::Sharded { index, globals };
+        Self {
+            core: MutableCore::new(base, next_id, cfg),
+            params,
+            shard_shape: Some((shards, policy)),
+            scratch_pool: Mutex::new(Vec::new()),
+        }
+    }
+
+    pub fn snapshot(&self) -> Arc<Snapshot<HnswBase>> {
+        self.core.snapshot()
+    }
+
+    pub fn stats(&self) -> Arc<super::IngestStats> {
+        self.core.stats.clone()
+    }
+
+    pub fn params(&self) -> &HnswParams {
+        &self.params
+    }
+
+    /// Rows a from-scratch rebuild would contain right now.
+    pub fn rows_live(&self) -> usize {
+        let snap = self.core.snapshot();
+        snap.base.rows() + snap.delta_rows() - snap.tombstones.len()
+    }
+
+    /// Ingest one fingerprint; returns its global id.
+    pub fn add(&self, fp: Fingerprint) -> u64 {
+        self.core.add(fp)
+    }
+
+    /// Tombstone a live row; `false` when unknown/already deleted.
+    pub fn delete(&self, id: u64) -> bool {
+        self.core.delete(id)
+    }
+
+    fn checkout_scratch(&self) -> SearchScratch {
+        // A fresh scratch grows to the graph size on first use
+        // (`begin_query` resizes), so the dry-pool fallback needs no
+        // sizing — and no extra snapshot lock on the read path.
+        self.scratch_pool.lock().unwrap().pop().unwrap_or_default()
+    }
+
+    fn checkin_scratch(&self, scratch: SearchScratch) {
+        self.scratch_pool.lock().unwrap().push(scratch);
+    }
+
+    /// Approximate k-NN over the live stack: sealed-graph traversal at
+    /// `k + base_dead` (past the dead graph nodes), exact delta scan,
+    /// tombstone-masked merge on global ids. `k = 0` answers empty.
+    pub fn knn(&self, q: &Fingerprint, k: usize, ef: usize) -> (Vec<Scored>, SearchStats) {
+        let snap = self.core.snapshot();
+        let mut stats = SearchStats::default();
+        if k == 0 {
+            return (Vec::new(), stats);
+        }
+        // Over-fetch past the dead graph nodes only (tombstones on delta
+        // rows are masked in-scan and cannot displace a graph result).
+        let k_eff = k + snap.base_dead;
+        let ef_eff = ef.max(k_eff);
+        let raw = match snap.base.as_ref() {
+            HnswBase::Single { db, graph, .. } => {
+                let mut scratch = self.checkout_scratch();
+                let (hits, s) = Searcher::new(graph, db, &mut scratch).knn(q, k_eff, ef_eff);
+                self.checkin_scratch(scratch);
+                stats = s;
+                hits
+            }
+            HnswBase::Sharded { index, .. } => {
+                let (hits, s) = index.knn(q, k_eff, ef_eff);
+                stats = s;
+                hits
+            }
+        };
+        let globals = snap.base.globals();
+        let mut base_partial = Vec::with_capacity(k);
+        for s in raw {
+            let gid = globals[s.id as usize];
+            if snap.tombstones.contains(&gid) {
+                continue;
+            }
+            base_partial.push(Scored::new(s.score, gid));
+            if base_partial.len() == k {
+                break;
+            }
+        }
+        let queries = [q];
+        let qcs = [q.count_ones()];
+        let mut banks = vec![TopKMerge::new(k)];
+        snap.for_each_delta_slice(|rows| {
+            stats.distance_evals +=
+                scan_rows_into(rows, &queries, &qcs, None, &snap.tombstones, &mut banks);
+        });
+        let mut merge = ShardMerge::new(k);
+        merge.push_partial(base_partial);
+        merge.push_partial(banks.pop().unwrap().finish());
+        (merge.finish(), stats)
+    }
+
+    /// Collect survivors of the captured base + sealed segments, plus the
+    /// applied-tombstone set (ids physically dropped by this compaction).
+    fn survivors(captured: &Snapshot<HnswBase>) -> (Vec<Fingerprint>, Vec<u64>, HashSet<u64>) {
+        let globals = captured.base.globals();
+        let cap = globals.len() + captured.sealed.iter().map(|s| s.len()).sum::<usize>();
+        let mut fps = Vec::with_capacity(cap);
+        let mut ids = Vec::with_capacity(cap);
+        let mut applied = HashSet::new();
+        super::state::collect_base_survivors(
+            captured.base.db(),
+            globals,
+            &captured.tombstones,
+            &mut fps,
+            &mut ids,
+            &mut applied,
+        );
+        captured.collect_sealed_survivors(&mut fps, &mut ids, &mut applied);
+        (fps, ids, applied)
+    }
+
+    /// Extend the single graph in place (clone, insert sealed survivors
+    /// via the incremental path, swap). Dead base rows stay masked.
+    fn extend_single(
+        &self,
+        db: &Arc<Database>,
+        globals: &Arc<Vec<u64>>,
+        graph: &Arc<HnswGraph>,
+        captured: &Snapshot<HnswBase>,
+    ) -> (HnswBase, HashSet<u64>) {
+        // Unlike a purging rebuild, every base row stays in place (the
+        // graph can't cheaply unlink nodes), so only the sealed half of
+        // the survivor collection runs.
+        let mut fps: Vec<Fingerprint> = db.fps.clone();
+        let mut ids: Vec<u64> = globals.as_ref().clone();
+        let mut applied = HashSet::new();
+        captured.collect_sealed_survivors(&mut fps, &mut ids, &mut applied);
+        let first_new = db.len();
+        let new_db = Arc::new(Database::new(fps));
+        let mut new_graph = graph.as_ref().clone();
+        let builder = HnswBuilder::new(self.params.clone());
+        let mut scratch = SearchScratch::with_rows(new_db.len());
+        // Level stream decorrelated per compaction but fully deterministic
+        // in (seed, epoch).
+        let mut g = Pcg64::with_stream(self.params.seed ^ captured.epoch, 0x1D6E);
+        for node in first_new..new_db.len() {
+            let level = builder.draw_level_pub(&mut g);
+            builder.insert_with_scratch(&mut new_graph, &new_db, node as u32, level, &mut scratch);
+        }
+        (
+            HnswBase::Single {
+                db: new_db,
+                globals: Arc::new(ids),
+                graph: Arc::new(new_graph),
+            },
+            applied,
+        )
+    }
+
+    /// Run one compaction cycle. Sealed survivors fold into the graph
+    /// (incremental extension for a single graph; survivor rebuild for a
+    /// sharded base or once the dead fraction crosses
+    /// `hnsw_rebuild_frac`). Returns `false` when there is nothing to do.
+    pub fn compact_once(&self) -> bool {
+        let _guard = self.core.compact_lock.lock().unwrap();
+        let captured = self.core.snapshot();
+        let applicable = self.core.applicable_tombstones(&captured);
+        if captured.sealed.is_empty() && applicable == 0 {
+            return false;
+        }
+        let (new_base, applied) = match captured.base.as_ref() {
+            HnswBase::Single { db, globals, graph } => {
+                let dead =
+                    globals.iter().filter(|&&g| captured.tombstones.contains(&g)).count();
+                let dead_frac = if globals.is_empty() {
+                    0.0
+                } else {
+                    dead as f64 / globals.len() as f64
+                };
+                // Rebuild when enough of the graph is dead, or when purging
+                // tombstones is the only work left (extension would no-op).
+                let rebuild = dead_frac > self.core.cfg.hnsw_rebuild_frac
+                    || (captured.sealed.is_empty() && dead > 0);
+                if rebuild {
+                    let (fps, ids, applied) = Self::survivors(&captured);
+                    let new_db = Arc::new(Database::new(fps));
+                    let graph = Arc::new(HnswBuilder::new(self.params.clone()).build(&new_db));
+                    (
+                        HnswBase::Single { db: new_db, globals: Arc::new(ids), graph },
+                        applied,
+                    )
+                } else if captured.sealed.is_empty() {
+                    return false; // only memtable rows — nothing to fold yet
+                } else {
+                    self.extend_single(db, globals, graph, &captured)
+                }
+            }
+            HnswBase::Sharded { .. } => {
+                let (shards, policy) =
+                    self.shard_shape.expect("sharded base always records its shape");
+                let (fps, ids, applied) = Self::survivors(&captured);
+                let new_db = Arc::new(Database::new(fps));
+                let sharded = Arc::new(ShardedDatabase::partition(new_db, shards, policy));
+                let index = Arc::new(ShardedHnsw::build(sharded, self.params.clone()));
+                (HnswBase::Sharded { index, globals: Arc::new(ids) }, applied)
+            }
+        };
+        self.core.install(&captured, new_base, &applied);
+        true
+    }
+
+    /// Spawn the background compactor (idempotent; call as
+    /// `idx.clone().spawn_compactor()` — see
+    /// [`super::MutableIndex::spawn_compactor`]).
+    pub fn spawn_compactor(self: Arc<Self>) {
+        self.core.spawn_compactor_with("mutable-hnsw", &self, |idx| {
+            let snap = idx.core.snapshot();
+            if idx.core.should_compact(&snap) {
+                idx.compact_once()
+            } else {
+                false
+            }
+        });
+    }
+
+    /// Stop and join the background compactor (idempotent).
+    pub fn stop_compactor(&self) {
+        self.core.stop_compactor();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fingerprint::ChemblModel;
+    use crate::index::{recall_at_k, BruteForceIndex, SearchIndex};
+    use crate::topk::topk_reference;
+
+    fn tiny_cfg() -> IngestConfig {
+        IngestConfig { seal_rows: 32, compact_min_tombstones: 8, ..IngestConfig::default() }
+    }
+
+    fn oracle(model: &[(u64, Fingerprint)], q: &Fingerprint, k: usize) -> Vec<Scored> {
+        let scored: Vec<Scored> =
+            model.iter().map(|(id, fp)| Scored::new(q.tanimoto(fp), *id)).collect();
+        topk_reference(&scored, k)
+    }
+
+    #[test]
+    fn fresh_rows_searchable_immediately_and_after_compaction() {
+        let db = Arc::new(Database::synthesize(600, &ChemblModel::default(), 31));
+        let extra = Database::synthesize(90, &ChemblModel::default(), 32);
+        let idx = MutableHnsw::new_single(db.clone(), HnswParams::new(8, 48, 7), tiny_cfg());
+        for (i, fp) in extra.fps.iter().enumerate() {
+            let id = idx.add(fp.clone());
+            assert_eq!(id, 600 + i as u64);
+            // A just-ingested row is served from the exact delta: its own
+            // query must rank it first at similarity 1.0.
+            let (hits, _) = idx.knn(fp, 3, 32);
+            assert_eq!(hits[0].id, id, "fresh row must be findable");
+            assert!((hits[0].score - 1.0).abs() < 1e-12);
+        }
+        assert!(idx.compact_once(), "sealed segments waiting");
+        while idx.compact_once() {}
+        // After folding into the graph, rows remain findable (self-queries
+        // are the easy case every HNSW build must serve).
+        for (i, fp) in extra.fps.iter().enumerate() {
+            let (hits, _) = idx.knn(fp, 3, 48);
+            assert_eq!(hits[0].id, 600 + i as u64, "compacted row still found");
+        }
+    }
+
+    #[test]
+    fn deletes_masked_and_purged_across_modes() {
+        let db = Arc::new(Database::synthesize(400, &ChemblModel::default(), 41));
+        let idx = MutableHnsw::new_single(db.clone(), HnswParams::new(8, 48, 3), tiny_cfg());
+        let q = db.fps[17].clone();
+        let (hits, _) = idx.knn(&q, 1, 32);
+        assert_eq!(hits[0].id, 17);
+        assert!(idx.delete(17));
+        let (hits, _) = idx.knn(&q, 1, 32);
+        assert_ne!(hits.first().map(|s| s.id), Some(17), "tombstone masks the row");
+        // Tombstone-only compaction purges via rebuild.
+        assert!(idx.compact_once());
+        let snap = idx.snapshot();
+        assert!(snap.tombstones.is_empty(), "purge applied the tombstone");
+        assert_eq!(snap.base.rows(), 399);
+        let (hits, _) = idx.knn(&q, 1, 32);
+        assert_ne!(hits.first().map(|s| s.id), Some(17));
+        assert!(!idx.delete(17), "purged id stays deleted");
+    }
+
+    #[test]
+    fn sharded_base_serves_and_rebuilds() {
+        let db = Arc::new(Database::synthesize(500, &ChemblModel::default(), 51));
+        let idx = MutableHnsw::new_sharded(
+            db.clone(),
+            3,
+            PartitionPolicy::PopcountStriped,
+            HnswParams::new(8, 48, 5),
+            tiny_cfg(),
+        );
+        let extra = Database::synthesize(70, &ChemblModel::default(), 52);
+        for fp in &extra.fps {
+            idx.add(fp.clone());
+        }
+        assert!(idx.delete(3));
+        let (hits, _) = idx.knn(&extra.fps[8], 2, 32);
+        assert_eq!(hits[0].id, 508, "fresh row served from the delta");
+        while idx.compact_once() {}
+        let snap = idx.snapshot();
+        assert!(snap.sealed.is_empty() && snap.tombstones.is_empty());
+        assert!(matches!(snap.base.as_ref(), HnswBase::Sharded { .. }));
+        let (hits, _) = idx.knn(&extra.fps[8], 2, 48);
+        assert_eq!(hits[0].id, 508, "row found in the rebuilt sharded graphs");
+    }
+
+    #[test]
+    fn recall_holds_after_live_ingest_of_a_fifth_of_the_rows() {
+        // The acceptance shape: 20%+ of the corpus arrives live; recall@10
+        // against the surviving-rows oracle stays ≥ 0.85 both before and
+        // after compaction.
+        let all = Database::synthesize(1200, &ChemblModel::default(), 61);
+        let base = Arc::new(Database::new(all.fps[..900].to_vec()));
+        let idx = MutableHnsw::new_single(
+            base,
+            HnswParams::new(8, 64, 9),
+            IngestConfig { seal_rows: 64, ..tiny_cfg() },
+        );
+        let mut model: Vec<(u64, Fingerprint)> =
+            all.fps[..900].iter().cloned().enumerate().map(|(i, f)| (i as u64, f)).collect();
+        for fp in &all.fps[900..] {
+            let id = idx.add(fp.clone());
+            model.push((id, fp.clone()));
+        }
+        let full = Database::new(all.fps.clone());
+        let queries = full.sample_queries(25, 77);
+        let k = 10;
+        let mean_recall = |idx: &MutableHnsw| -> f64 {
+            queries
+                .iter()
+                .map(|q| {
+                    let truth = oracle(&model, q, k);
+                    let (got, _) = idx.knn(q, k, 64);
+                    recall_at_k(&got, &truth, k)
+                })
+                .sum::<f64>()
+                / queries.len() as f64
+        };
+        let before = mean_recall(&idx);
+        assert!(before >= 0.85, "live-delta recall@10 {before:.3}");
+        while idx.compact_once() {}
+        let after = mean_recall(&idx);
+        assert!(after >= 0.85, "post-compaction recall@10 {after:.3}");
+        // Sanity: the exhaustive oracle and the exact overlay agree on a
+        // planted row.
+        let brute = BruteForceIndex::new(Arc::new(full));
+        let t = brute.search(&queries[0], 1);
+        assert!(!t.is_empty());
+    }
+}

@@ -1,0 +1,124 @@
+//! Live ingestion: LSM-style mutable serving over the sealed indexes.
+//!
+//! Every index in this crate is built once over a frozen [`Database`] —
+//! the right shape for the paper's benchmark, the wrong shape for a
+//! screening service whose chemical library grows while it serves. This
+//! subsystem makes the serving backends **mutable without blocking
+//! readers**, with the classic LSM decomposition:
+//!
+//! ```text
+//!            writes (ADD / ADDFP / DEL)
+//!                 │  writer lock (serializes mutations only)
+//!                 ▼
+//!   ┌──────────┐   seal at     ┌─────────────────┐   background   ┌──────────┐
+//!   │ memtable │ ────────────▶ │ sealed segments │ ─────────────▶ │   base   │
+//!   │ (append) │  seal_rows    │   (immutable)   │   compaction   │ (indexed)│
+//!   └──────────┘               └─────────────────┘                └──────────┘
+//!        ▲            reads take an epoch-tagged Arc snapshot of        ▲
+//!        └── brute-scanned ──── {base, sealed, memtable, tombstones} ───┘
+//! ```
+//!
+//! * **Memtable** ([`segment::Memtable`]) — append-only rows, brute-force
+//!   scanned at query time and therefore *exact by construction*. Stored
+//!   as immutable chunks so publishing a new snapshot copies at most one
+//!   partial chunk, never the whole memtable.
+//! * **Sealed segments** ([`segment::SealedSegment`]) — frozen memtables
+//!   awaiting compaction; scanned exactly like the memtable.
+//! * **Tombstones** — deletes are ids in a shared set, masked at merge
+//!   time: delta rows are skipped during the scan, and the sealed base is
+//!   over-fetched by the base-targeting tombstone count so filtering can
+//!   never underfill
+//!   the top-k (the exactness argument in docs/ingest.md).
+//! * **Background compaction** ([`MutableIndex::spawn_compactor`],
+//!   [`MutableHnsw::spawn_compactor`]) — folds sealed segments and
+//!   applicable tombstones into a fresh base **off the read path**: the
+//!   exhaustive base rebuilds its BitBound/folded sort orders, the HNSW
+//!   base extends its graph through the existing
+//!   [`crate::hnsw::HnswBuilder::insert_with_scratch`] incremental path
+//!   (full rebuild once enough of the graph is dead). Readers and the
+//!   compactor never contend: a query clones the current snapshot `Arc`
+//!   and the compactor installs its result with one pointer swap.
+//!
+//! **Exactness contract** — searching the segment stack is bit-identical
+//! to searching a from-scratch index over the surviving rows: same global
+//! ids, same scores, same tie-breaking (property-tested in
+//! `tests/properties.rs`; recall caveat for the approximate overlay in
+//! docs/ingest.md).
+//!
+//! Row identity: every ingested row gets a monotonically increasing
+//! **global id** (the initial database occupies `0..n`) that survives
+//! sealing and compaction — results, deletes, and the wire protocol all
+//! speak these ids.
+
+pub mod hnsw_overlay;
+pub mod mutable;
+pub mod segment;
+pub mod state;
+pub mod write_path;
+
+pub use state::{BaseOps, Snapshot};
+pub use hnsw_overlay::{HnswBase, MutableHnsw};
+pub use mutable::{BaseSegment, MutableIndex};
+pub use segment::{MemRow, Memtable, SealedSegment};
+pub use write_path::{MutableWriter, WritePath};
+
+use crate::fingerprint::Database;
+use std::sync::atomic::AtomicU64;
+
+/// Ingestion tuning knobs.
+#[derive(Debug, Clone)]
+pub struct IngestConfig {
+    /// Seal the memtable into an immutable segment once it holds this many
+    /// rows (bounds the exact-scan overhead a query pays for the delta).
+    pub seal_rows: usize,
+    /// Background compaction also triggers once this many tombstones are
+    /// *applicable* (target base/sealed rows, i.e. compaction would purge
+    /// them) even with no sealed segment waiting — keeps the base
+    /// over-fetch `k + tombstones` bounded under delete-heavy traffic.
+    pub compact_min_tombstones: usize,
+    /// HNSW overlay only: fraction of base rows that may be dead
+    /// (tombstoned in place) before compaction abandons the incremental
+    /// graph-extension path and rebuilds the graph from survivors.
+    pub hnsw_rebuild_frac: f64,
+    /// Idle back-off of the background compactor between polls.
+    pub compactor_poll: std::time::Duration,
+}
+
+impl Default for IngestConfig {
+    fn default() -> Self {
+        Self {
+            seal_rows: 4096,
+            compact_min_tombstones: 1024,
+            hnsw_rebuild_frac: 0.125,
+            compactor_poll: std::time::Duration::from_millis(5),
+        }
+    }
+}
+
+/// Shared gauges/counters for one mutable index (exported through
+/// `coordinator::Metrics` and the `STATS` server verb).
+#[derive(Debug, Default)]
+pub struct IngestStats {
+    /// Rows currently in the (unsealed) memtable.
+    pub memtable_rows: AtomicU64,
+    /// Sealed segments awaiting compaction.
+    pub sealed_segments: AtomicU64,
+    /// Rows across all sealed segments.
+    pub sealed_rows: AtomicU64,
+    /// Live tombstones (deletes not yet folded away by compaction).
+    pub tombstones: AtomicU64,
+    /// Completed compactions.
+    pub compactions: AtomicU64,
+    /// Memtable seals.
+    pub seals: AtomicU64,
+    /// Accepted row insertions (lifetime).
+    pub adds: AtomicU64,
+    /// Accepted deletes (lifetime).
+    pub deletes: AtomicU64,
+}
+
+/// Build the ascending `0..n` global-id map for an initial database — the
+/// identity the first base segment starts from.
+pub(crate) fn initial_globals(db: &Database) -> Vec<u64> {
+    (0..db.len() as u64).collect()
+}

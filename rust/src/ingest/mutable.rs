@@ -1,0 +1,458 @@
+//! Exhaustive mutable index: a sealed base index + exact delta overlay.
+//!
+//! [`MutableIndex<I>`] wraps any index buildable from a [`Database`]
+//! (the [`ShardableIndex`] factory contract — all four exhaustive indexes
+//! and, through [`crate::shard::ShardedBuildConfig`], the shard-parallel
+//! [`crate::shard::ShardedSearchIndex`]) and implements [`SearchIndex`]
+//! over the live segment stack:
+//!
+//! * the **base** answers through its sealed index, over-fetched to
+//!   `k + base_dead` (tombstones targeting base rows) so masking deleted
+//!   rows can never underfill the top-k;
+//! * the **delta** (sealed segments + memtable) is brute-force scanned —
+//!   one shared pass per query batch — with tombstoned rows skipped
+//!   in-scan;
+//! * partials meet in the [`ShardMerge`] tree on **global ids**, whose
+//!   ascending order across segments preserves brute-force tie-breaking.
+//!
+//! Result: `search`/`search_batch` are bit-identical to the same index
+//! type rebuilt from scratch over the surviving rows (property-tested in
+//! `tests/properties.rs`), while writes and compaction proceed
+//! concurrently.
+//!
+//! Contract scope: *bit-identity* holds for **exact** base configs
+//! (brute force; BitBound/two-stage at `m = 1`, any cutoff — the Eq. 2
+//! window is mirrored onto the delta). At folding levels `m > 1` the
+//! base's stage-1 proxy is itself lossy (recall ≈ 0.97 at the paper's H3
+//! point), and a delta row served exactly today may rank below the
+//! folded `k_r1` cut once compacted — the same ≤3 % recall envelope the
+//! sealed index always had, now simply entered at compaction time
+//! instead of build time.
+
+use super::segment::scan_rows_into;
+use super::state::{BaseOps, MutableCore, Snapshot};
+use super::IngestConfig;
+use crate::fingerprint::{Database, Fingerprint};
+use crate::index::SearchIndex;
+use crate::shard::ShardableIndex;
+use crate::topk::{Scored, ShardMerge, TopKMerge};
+use std::collections::HashSet;
+use std::sync::Arc;
+
+/// The sealed base: an indexed database plus its local→global id map
+/// (ascending — compaction emits survivors in global-id order).
+pub struct BaseSegment<I> {
+    pub db: Arc<Database>,
+    pub globals: Arc<Vec<u64>>,
+    pub index: I,
+}
+
+impl<I: Send + Sync> BaseOps for BaseSegment<I> {
+    fn rows(&self) -> usize {
+        self.db.len()
+    }
+
+    fn contains(&self, id: u64) -> bool {
+        self.globals.binary_search(&id).is_ok()
+    }
+}
+
+/// A mutable wrapper around a rebuildable exhaustive index. Shared across
+/// serving workers behind an `Arc`; reads, writes, and compaction never
+/// block each other (see `ingest::state` for the discipline).
+pub struct MutableIndex<I: ShardableIndex> {
+    core: MutableCore<BaseSegment<I>>,
+    icfg: I::Config,
+    /// Similarity cutoff `Sc` whose Eq. 2 popcount window the delta scan
+    /// applies per query (0 ⇒ every delta row visible). Derived from
+    /// `I::Config` at construction ([`ShardableIndex::config_cutoff`]) so
+    /// it always matches the base index's own BitBound cutoff — a row's
+    /// visibility must not change when compaction folds it into the
+    /// popcount-pruned base.
+    delta_cutoff: f64,
+}
+
+impl<I: ShardableIndex> MutableIndex<I> {
+    /// Start from `db` as the initial base (global ids `0..n`), built at
+    /// `icfg`. The delta scan automatically mirrors the base's Eq. 2
+    /// window (`I::config_cutoff(&icfg)`): a delta row outside a query's
+    /// `[⌈qc·Sc⌉, ⌊qc/Sc⌋]` popcount window is skipped for that query,
+    /// exactly as the pruned base will skip it after compaction.
+    pub fn new(db: Arc<Database>, icfg: I::Config, cfg: IngestConfig) -> Self {
+        let next_id = db.len() as u64;
+        let delta_cutoff = I::config_cutoff(&icfg);
+        assert!(
+            (0.0..=1.0).contains(&delta_cutoff),
+            "index config reports a cutoff outside [0, 1]"
+        );
+        let base = BaseSegment {
+            globals: Arc::new(super::initial_globals(&db)),
+            index: I::build_shard(db.clone(), &icfg),
+            db,
+        };
+        Self { core: MutableCore::new(base, next_id, cfg), icfg, delta_cutoff }
+    }
+
+    /// The current immutable view (tests and diagnostics).
+    pub fn snapshot(&self) -> Arc<Snapshot<BaseSegment<I>>> {
+        self.core.snapshot()
+    }
+
+    pub fn stats(&self) -> Arc<super::IngestStats> {
+        self.core.stats.clone()
+    }
+
+    /// Rows a from-scratch rebuild would contain right now.
+    pub fn rows_live(&self) -> usize {
+        let snap = self.core.snapshot();
+        snap.base.rows() + snap.delta_rows() - snap.tombstones.len()
+    }
+
+    /// Ingest one fingerprint; returns its global id.
+    pub fn add(&self, fp: Fingerprint) -> u64 {
+        self.core.add(fp)
+    }
+
+    /// Tombstone a live row; `false` when unknown/already deleted.
+    pub fn delete(&self, id: u64) -> bool {
+        self.core.delete(id)
+    }
+
+    /// Run one compaction cycle: fold every sealed segment and applicable
+    /// tombstone into a freshly built base (BitBound/folded sort orders
+    /// rebuilt by `I`'s factory). Returns `false` when there was nothing
+    /// to fold. Runs concurrently with reads and writes; concurrent
+    /// callers serialize.
+    pub fn compact_once(&self) -> bool {
+        let _guard = self.core.compact_lock.lock().unwrap();
+        let captured = self.core.snapshot();
+        if captured.sealed.is_empty() && self.core.applicable_tombstones(&captured) == 0 {
+            return false;
+        }
+        let cap = captured.base.rows() + captured.sealed.iter().map(|s| s.len()).sum::<usize>();
+        let mut fps = Vec::with_capacity(cap);
+        let mut ids = Vec::with_capacity(cap);
+        let mut applied: HashSet<u64> = HashSet::new();
+        super::state::collect_base_survivors(
+            &captured.base.db,
+            &captured.base.globals,
+            &captured.tombstones,
+            &mut fps,
+            &mut ids,
+            &mut applied,
+        );
+        captured.collect_sealed_survivors(&mut fps, &mut ids, &mut applied);
+        // The expensive part — off every lock: readers keep serving the
+        // captured (still-consistent) stack while this builds.
+        let db = Arc::new(Database::new(fps));
+        let index = I::build_shard(db.clone(), &self.icfg);
+        self.core.install(&captured, BaseSegment { db, globals: Arc::new(ids), index }, &applied);
+        true
+    }
+
+    /// Spawn the background compactor (idempotent; call as
+    /// `idx.clone().spawn_compactor()` on the shared `Arc`). It wakes on
+    /// a short poll, compacts when a sealed segment is waiting or enough
+    /// applicable tombstones accumulated, and exits when the index is
+    /// dropped or [`MutableIndex::stop_compactor`] is called — the thread
+    /// holds only a `Weak`, so this `Arc` does not outlive its callers.
+    pub fn spawn_compactor(self: Arc<Self>)
+    where
+        I: 'static,
+        I::Config: 'static,
+    {
+        self.core.spawn_compactor_with("mutable-index", &self, |idx| {
+            let snap = idx.core.snapshot();
+            if idx.core.should_compact(&snap) {
+                idx.compact_once()
+            } else {
+                false
+            }
+        });
+    }
+
+    /// Stop and join the background compactor (idempotent).
+    pub fn stop_compactor(&self) {
+        self.core.stop_compactor();
+    }
+
+    /// Serve a batch against one snapshot (the shared read path).
+    fn search_snapshot(
+        &self,
+        snap: &Snapshot<BaseSegment<I>>,
+        queries: &[&Fingerprint],
+        k: usize,
+    ) -> Vec<Vec<Scored>> {
+        if k == 0 || queries.is_empty() {
+            return vec![Vec::new(); queries.len()];
+        }
+        // Over-fetch by the number of tombstones that target a base row:
+        // at most that many base results can be masked, so the filtered
+        // list always contains the exact top-k surviving base rows.
+        // (Tombstones on delta rows are masked in-scan and never consume
+        // base slots — counting them would only inflate the read.)
+        let k_base = k + snap.base_dead;
+        let base_partials: Vec<Vec<Scored>> = snap
+            .base
+            .index
+            .search_batch(queries, k_base)
+            .into_iter()
+            .map(|hits| {
+                let mut out = Vec::with_capacity(k);
+                for s in hits {
+                    let gid = snap.base.globals[s.id as usize];
+                    if snap.tombstones.contains(&gid) {
+                        continue;
+                    }
+                    out.push(Scored::new(s.score, gid));
+                    if out.len() == k {
+                        break;
+                    }
+                }
+                out
+            })
+            .collect();
+        // Delta: one shared pass over every segment, all queries at once,
+        // tombstones skipped in-scan; with a cutoff, each query sees only
+        // rows inside its Eq. 2 popcount window (the base's own
+        // visibility rule — `BitBoundIndex::bounds` — so folding a row
+        // into the base never changes whether a query can see it).
+        let qcs: Vec<u32> = queries.iter().map(|q| q.count_ones()).collect();
+        let bounds: Option<Vec<(u32, u32)>> = if self.delta_cutoff > 0.0 {
+            Some(
+                qcs.iter()
+                    .map(|&qc| {
+                        (
+                            (qc as f64 * self.delta_cutoff).ceil() as u32,
+                            (qc as f64 / self.delta_cutoff).floor() as u32,
+                        )
+                    })
+                    .collect(),
+            )
+        } else {
+            None
+        };
+        let mut banks: Vec<TopKMerge> = (0..queries.len()).map(|_| TopKMerge::new(k)).collect();
+        snap.for_each_delta_slice(|rows| {
+            scan_rows_into(rows, queries, &qcs, bounds.as_deref(), &snap.tombstones, &mut banks);
+        });
+        base_partials
+            .into_iter()
+            .zip(banks)
+            .map(|(base, bank)| {
+                let mut merge = ShardMerge::new(k);
+                merge.push_partial(base);
+                merge.push_partial(bank.finish());
+                merge.finish()
+            })
+            .collect()
+    }
+}
+
+impl<I: ShardableIndex> SearchIndex for MutableIndex<I> {
+    fn search(&self, query: &Fingerprint, k: usize) -> Vec<Scored> {
+        let snap = self.core.snapshot();
+        self.search_snapshot(&snap, &[query], k).pop().unwrap_or_default()
+    }
+
+    /// Whole-batch read against **one** snapshot: every query in the batch
+    /// sees the same epoch, and the delta is scanned once for the batch.
+    fn search_batch(&self, queries: &[&Fingerprint], k: usize) -> Vec<Vec<Scored>> {
+        let snap = self.core.snapshot();
+        self.search_snapshot(&snap, queries, k)
+    }
+
+    fn name(&self) -> &'static str {
+        "mutable"
+    }
+
+    fn expected_candidates(&self, query: &Fingerprint) -> usize {
+        let snap = self.core.snapshot();
+        snap.base.index.expected_candidates(query) + snap.delta_rows()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fingerprint::ChemblModel;
+    use crate::index::BruteForceIndex;
+    use crate::topk::topk_reference;
+
+    /// Brute-force oracle over an explicit (id, fp) survivor model.
+    fn oracle(model: &[(u64, Fingerprint)], q: &Fingerprint, k: usize) -> Vec<Scored> {
+        let scored: Vec<Scored> =
+            model.iter().map(|(id, fp)| Scored::new(q.tanimoto(fp), *id)).collect();
+        topk_reference(&scored, k)
+    }
+
+    fn tiny_cfg() -> IngestConfig {
+        IngestConfig { seal_rows: 16, compact_min_tombstones: 4, ..IngestConfig::default() }
+    }
+
+    #[test]
+    fn add_delete_compact_track_oracle() {
+        let db = Arc::new(Database::synthesize(300, &ChemblModel::default(), 11));
+        let extra = Database::synthesize(120, &ChemblModel::default(), 12);
+        let idx = MutableIndex::<BruteForceIndex>::new(db.clone(), (), tiny_cfg());
+        let mut model: Vec<(u64, Fingerprint)> =
+            db.fps.iter().cloned().enumerate().map(|(i, fp)| (i as u64, fp)).collect();
+        let queries = db.sample_queries(3, 9);
+        let verify = |idx: &MutableIndex<BruteForceIndex>, model: &[(u64, Fingerprint)]| {
+            for q in &queries {
+                let got = idx.search(q, 12);
+                let want = oracle(model, q, 12);
+                assert_eq!(got.len(), want.len());
+                for (a, b) in got.iter().zip(&want) {
+                    assert_eq!((a.id, a.score), (b.id, b.score));
+                }
+            }
+        };
+        verify(&idx, &model);
+
+        // Ingest enough to roll sealed segments, deleting as we go.
+        for (i, fp) in extra.fps.iter().enumerate() {
+            let id = idx.add(fp.clone());
+            model.push((id, fp.clone()));
+            if i % 5 == 0 {
+                let victim = model[i % model.len()].0;
+                let deleted = idx.delete(victim);
+                let in_model = model.iter().position(|(mid, _)| *mid == victim);
+                assert_eq!(deleted, in_model.is_some());
+                if let Some(pos) = in_model {
+                    model.remove(pos);
+                }
+            }
+            if i % 40 == 17 {
+                idx.compact_once();
+            }
+        }
+        verify(&idx, &model);
+        assert!(idx.snapshot().epoch > 0);
+        assert_eq!(idx.rows_live(), model.len());
+
+        // Compact to quiescence: everything folds into the base.
+        while idx.compact_once() {}
+        let snap = idx.snapshot();
+        assert!(snap.sealed.is_empty(), "compaction consumed every sealed segment");
+        verify(&idx, &model);
+
+        // Batched reads agree with per-query reads.
+        let refs: Vec<&Fingerprint> = queries.iter().collect();
+        let batch = idx.search_batch(&refs, 7);
+        for (qi, q) in queries.iter().enumerate() {
+            assert_eq!(batch[qi], idx.search(q, 7), "batch ≡ sequential (query {qi})");
+        }
+    }
+
+    #[test]
+    fn delete_rejects_unknown_and_double_deletes() {
+        let db = Arc::new(Database::synthesize(50, &ChemblModel::default(), 3));
+        let idx = MutableIndex::<BruteForceIndex>::new(db, (), tiny_cfg());
+        assert!(idx.delete(7), "live base row deletes");
+        assert!(!idx.delete(7), "double delete rejected");
+        assert!(!idx.delete(999), "unknown id rejected");
+        let id = idx.add(Fingerprint::zero_full());
+        assert!(idx.delete(id), "memtable row deletes");
+        // Purge the base tombstone, then the id is unknown for good.
+        assert!(idx.compact_once());
+        assert!(!idx.delete(7), "purged id stays deleted");
+        assert_eq!(idx.rows_live(), 49);
+    }
+
+    #[test]
+    fn empty_base_grows_from_nothing() {
+        let idx = MutableIndex::<BruteForceIndex>::new(
+            Arc::new(Database::new(Vec::new())),
+            (),
+            tiny_cfg(),
+        );
+        let db = Database::synthesize(40, &ChemblModel::default(), 21);
+        for fp in &db.fps {
+            idx.add(fp.clone());
+        }
+        let hits = idx.search(&db.fps[5], 1);
+        assert_eq!(hits[0].id, 5);
+        assert!((hits[0].score - 1.0).abs() < 1e-12);
+        assert!(idx.compact_once());
+        let hits = idx.search(&db.fps[5], 1);
+        assert_eq!(hits[0].id, 5, "ids survive compaction");
+        assert!(idx.search(&db.fps[0], 0).is_empty(), "k=0 answers empty");
+    }
+
+    #[test]
+    fn delta_cutoff_matches_base_visibility_across_compaction() {
+        use crate::index::{BitBoundFoldingIndex, TwoStageConfig};
+        // Regression: without the delta-side Eq. 2 window, a delta row
+        // outside a query's popcount window was visible while in the
+        // memtable and vanished once compaction folded it into the
+        // popcount-pruned base — results changed under the reader's feet.
+        let db = Arc::new(Database::synthesize(400, &ChemblModel::default(), 71));
+        let sc = 0.8;
+        // The delta window is derived from the config's cutoff — no
+        // separate knob for call sites to forget.
+        let idx = MutableIndex::<BitBoundFoldingIndex>::new(
+            db.clone(),
+            TwoStageConfig { m: 1, cutoff: sc, ..TwoStageConfig::default() },
+            IngestConfig { seal_rows: 2, ..IngestConfig::default() },
+        );
+        let qi = (0..db.len()).find(|&i| db.counts[i] >= 30).unwrap();
+        let q = db.fps[qi].clone();
+        // Out-of-window row: popcount 4 « ⌈qc·Sc⌉, bits a subset of q's
+        // (nonzero similarity, so only the window can hide it).
+        let mut tiny = Fingerprint::zero_full();
+        let mut set = 0;
+        for b in 0..crate::fingerprint::FP_BITS {
+            if q.get(b) {
+                tiny.set(b);
+                set += 1;
+                if set == 4 {
+                    break;
+                }
+            }
+        }
+        let tiny_id = idx.add(tiny);
+        // In-window row: a duplicate of q itself.
+        let dup_id = idx.add(q.clone());
+        let k = 400; // everything visible surfaces
+        let before = idx.search(&q, k);
+        assert!(before.iter().any(|s| s.id == dup_id), "in-window delta row visible");
+        assert!(
+            before.iter().all(|s| s.id != tiny_id),
+            "out-of-window delta row must be invisible, as it will be in the base"
+        );
+        // Fold the (sealed) delta into the base and re-ask: bit-identical.
+        assert!(idx.compact_once(), "the two adds sealed at seal_rows = 2");
+        assert_eq!(idx.snapshot().delta_rows(), 0, "delta fully folded");
+        let after = idx.search(&q, k);
+        assert_eq!(before, after, "visibility must not change across compaction");
+    }
+
+    #[test]
+    fn background_compactor_drains_sealed_segments() {
+        let db = Arc::new(Database::synthesize(64, &ChemblModel::default(), 5));
+        let idx = Arc::new(MutableIndex::<BruteForceIndex>::new(db.clone(), (), tiny_cfg()));
+        idx.clone().spawn_compactor();
+        let extra = Database::synthesize(200, &ChemblModel::default(), 6);
+        for fp in &extra.fps {
+            idx.add(fp.clone());
+        }
+        let t0 = std::time::Instant::now();
+        loop {
+            let snap = idx.snapshot();
+            if snap.sealed.is_empty() && snap.mem.rows() < tiny_cfg().seal_rows {
+                break;
+            }
+            assert!(
+                t0.elapsed() < std::time::Duration::from_secs(30),
+                "background compactor never drained the sealed segments"
+            );
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        assert!(idx.stats().compactions.load(std::sync::atomic::Ordering::Relaxed) > 0);
+        // Reads stay exact after the background folds.
+        let hits = idx.search(&extra.fps[10], 1);
+        assert_eq!(hits[0].id, 64 + 10);
+        idx.stop_compactor();
+    }
+}

@@ -1,0 +1,235 @@
+//! Delta storage: memtable chunks and sealed segments.
+//!
+//! Everything a reader can see is **immutable** (`Arc`-shared); the writer
+//! publishes a fresh snapshot per mutation. The memtable is chunked so a
+//! publish copies at most one partial chunk (≤ [`MEM_CHUNK_ROWS`] rows),
+//! never the whole delta. Rows carry their global id and precomputed
+//! popcount, so a delta scan is the same
+//! `tanimoto_with_counts`-per-row loop the brute-force index runs — exact
+//! by construction, and shared across a whole query batch in one pass.
+//!
+//! Ordering invariant: global ids ascend within every chunk and segment,
+//! and across the stack (base < sealed[0] < … < memtable), because ids
+//! are assigned monotonically and segments seal in arrival order. Scanning
+//! the delta front to back therefore pushes candidates in ascending global
+//! id — exactly the order a from-scratch scan of the compacted database
+//! would use, which is what keeps tie-breaking bit-identical to the
+//! rebuilt oracle.
+
+use crate::fingerprint::Fingerprint;
+use crate::topk::{Scored, TopKMerge};
+use std::collections::HashSet;
+use std::sync::Arc;
+
+/// Rows per immutable memtable chunk (bounds the copy a publish performs).
+pub const MEM_CHUNK_ROWS: usize = 256;
+
+/// One ingested row: global id + fingerprint + cached popcount.
+#[derive(Debug, Clone)]
+pub struct MemRow {
+    pub id: u64,
+    pub count: u32,
+    pub fp: Fingerprint,
+}
+
+impl MemRow {
+    pub fn new(id: u64, fp: Fingerprint) -> Self {
+        Self { id, count: fp.count_ones(), fp }
+    }
+}
+
+/// The unsealed delta: full immutable chunks plus one partial tail chunk.
+/// Cloning is cheap (`Arc` per chunk); only the writer ever builds a new
+/// tail (by copying the old one plus the appended row).
+#[derive(Debug, Clone)]
+pub struct Memtable {
+    pub chunks: Vec<Arc<Vec<MemRow>>>,
+    pub tail: Arc<Vec<MemRow>>,
+}
+
+impl Memtable {
+    pub fn empty() -> Self {
+        Self { chunks: Vec::new(), tail: Arc::new(Vec::new()) }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.chunks.iter().map(|c| c.len()).sum::<usize>() + self.tail.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.chunks.is_empty() && self.tail.is_empty()
+    }
+
+    /// Append one row, returning the successor memtable (the receiver is a
+    /// shared snapshot and stays untouched).
+    pub fn appended(&self, row: MemRow) -> Memtable {
+        let mut chunks = self.chunks.clone();
+        let mut tail: Vec<MemRow> = self.tail.as_ref().clone();
+        tail.push(row);
+        if tail.len() >= MEM_CHUNK_ROWS {
+            chunks.push(Arc::new(tail));
+            Memtable { chunks, tail: Arc::new(Vec::new()) }
+        } else {
+            Memtable { chunks, tail: Arc::new(tail) }
+        }
+    }
+
+    /// Iterate rows in insertion (= ascending global id) order.
+    pub fn iter(&self) -> impl Iterator<Item = &MemRow> {
+        self.chunks.iter().flat_map(|c| c.iter()).chain(self.tail.iter())
+    }
+
+    /// Whether `id` is one of this memtable's rows (chunks are id-sorted).
+    pub fn contains(&self, id: u64) -> bool {
+        self.chunks
+            .iter()
+            .map(|c| c.as_ref())
+            .chain(std::iter::once(self.tail.as_ref()))
+            .any(|rows| rows.binary_search_by_key(&id, |r| r.id).is_ok())
+    }
+
+    /// Flatten into one id-ordered row vector (the sealing step).
+    pub fn to_rows(&self) -> Vec<MemRow> {
+        self.iter().cloned().collect()
+    }
+}
+
+/// A frozen memtable: immutable, id-sorted, awaiting compaction. Scanned
+/// exactly like the memtable it came from.
+#[derive(Debug)]
+pub struct SealedSegment {
+    pub rows: Vec<MemRow>,
+}
+
+impl SealedSegment {
+    pub fn from_memtable(mem: &Memtable) -> Self {
+        Self { rows: mem.to_rows() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn contains(&self, id: u64) -> bool {
+        self.rows.binary_search_by_key(&id, |r| r.id).is_ok()
+    }
+
+    pub fn max_id(&self) -> Option<u64> {
+        self.rows.last().map(|r| r.id)
+    }
+}
+
+/// One shared pass over a row slice scoring every query against each
+/// non-tombstoned row into per-query top-k banks — the delta counterpart
+/// of `index::shared_full_scan`, pushing **global** ids. Banks must have
+/// been created with the same query order. Returns the rows scored
+/// (tombstoned rows are skipped, not scored).
+///
+/// `bounds`, when given, holds one inclusive popcount window per query
+/// (the base index's Eq. 2 candidate bounds): a row outside a query's
+/// window is invisible to that query, exactly as it would be once
+/// compaction folds it into the popcount-pruned base — the filter that
+/// keeps delta-vs-base visibility identical at `cutoff > 0`.
+pub(crate) fn scan_rows_into(
+    rows: &[MemRow],
+    queries: &[&Fingerprint],
+    qcs: &[u32],
+    bounds: Option<&[(u32, u32)]>,
+    tombstones: &HashSet<u64>,
+    banks: &mut [TopKMerge],
+) -> usize {
+    let mut scored = 0usize;
+    for row in rows {
+        if tombstones.contains(&row.id) {
+            continue;
+        }
+        scored += 1;
+        for (qi, q) in queries.iter().enumerate() {
+            if let Some(bs) = bounds {
+                let (lo, hi) = bs[qi];
+                if row.count < lo || row.count > hi {
+                    continue;
+                }
+            }
+            banks[qi].push(Scored::new(
+                q.tanimoto_with_counts(&row.fp, qcs[qi], row.count),
+                row.id,
+            ));
+        }
+    }
+    scored
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fingerprint::{ChemblModel, Database};
+
+    #[test]
+    fn memtable_chunks_roll_and_iterate_in_order() {
+        let db = Database::synthesize(MEM_CHUNK_ROWS * 2 + 7, &ChemblModel::default(), 3);
+        let mut mem = Memtable::empty();
+        for (i, fp) in db.fps.iter().enumerate() {
+            mem = mem.appended(MemRow::new(100 + i as u64, fp.clone()));
+        }
+        assert_eq!(mem.rows(), db.len());
+        assert_eq!(mem.chunks.len(), 2, "two full chunks");
+        assert_eq!(mem.tail.len(), 7, "partial tail");
+        let ids: Vec<u64> = mem.iter().map(|r| r.id).collect();
+        assert!(ids.windows(2).all(|w| w[0] < w[1]), "ids ascend");
+        assert!(mem.contains(100) && mem.contains(100 + db.len() as u64 - 1));
+        assert!(!mem.contains(99) && !mem.contains(100 + db.len() as u64));
+        let sealed = SealedSegment::from_memtable(&mem);
+        assert_eq!(sealed.len(), db.len());
+        assert!(sealed.contains(100 + MEM_CHUNK_ROWS as u64));
+        assert_eq!(sealed.max_id(), Some(100 + db.len() as u64 - 1));
+    }
+
+    #[test]
+    fn snapshot_memtable_unchanged_by_later_appends() {
+        let db = Database::synthesize(10, &ChemblModel::default(), 5);
+        let mut mem = Memtable::empty();
+        for (i, fp) in db.fps.iter().take(4).enumerate() {
+            mem = mem.appended(MemRow::new(i as u64, fp.clone()));
+        }
+        let snapshot = mem.clone();
+        for (i, fp) in db.fps.iter().skip(4).enumerate() {
+            mem = mem.appended(MemRow::new(4 + i as u64, fp.clone()));
+        }
+        assert_eq!(snapshot.rows(), 4, "published snapshot must be frozen");
+        assert_eq!(mem.rows(), 10);
+    }
+
+    #[test]
+    fn scan_skips_tombstones_and_pushes_global_ids() {
+        let db = Database::synthesize(50, &ChemblModel::default(), 7);
+        let rows: Vec<MemRow> = db
+            .fps
+            .iter()
+            .enumerate()
+            .map(|(i, fp)| MemRow::new(1000 + i as u64, fp.clone()))
+            .collect();
+        let q = db.fps[13].clone();
+        let mut tombs = HashSet::new();
+        tombs.insert(1013u64); // the exact match is deleted
+        let mut banks = vec![TopKMerge::new(3)];
+        scan_rows_into(&rows, &[&q], &[q.count_ones()], None, &tombs, &mut banks);
+        let hits = banks.pop().unwrap().finish();
+        assert_eq!(hits.len(), 3);
+        assert!(hits.iter().all(|s| s.id != 1013), "tombstoned row masked");
+        assert!(hits.iter().all(|s| s.id >= 1000), "ids are global");
+        // A popcount window hides out-of-range rows from that query.
+        let mut banks = vec![TopKMerge::new(50)];
+        let qc = q.count_ones();
+        scan_rows_into(&rows, &[&q], &[qc], Some(&[(qc, qc)]), &tombs, &mut banks);
+        let bounded = banks.pop().unwrap().finish();
+        assert!(
+            bounded.iter().all(|s| rows[(s.id - 1000) as usize].count == qc),
+            "rows outside the popcount window must be invisible"
+        );
+    }
+}

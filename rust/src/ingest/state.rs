@@ -1,0 +1,363 @@
+//! Snapshot machinery shared by the exhaustive and HNSW mutable wrappers.
+//!
+//! Concurrency discipline (the "never block readers" contract):
+//!
+//! * Readers clone the current `Arc<Snapshot>` under a pointer-sized lock
+//!   and then run entirely on immutable data — a compaction or a million
+//!   writes later, the snapshot they hold is still internally consistent.
+//! * All mutations (add / delete / seal / compaction install) serialize on
+//!   the **writer lock**; each publishes a fresh snapshot with a bumped
+//!   epoch. Publishing swaps one `Arc` — readers never wait on index
+//!   builds.
+//! * Compaction *builds* (the expensive part) run on a captured snapshot
+//!   with **no lock held**; only the final install takes the writer lock,
+//!   reconciling with whatever sealed segments / tombstones arrived while
+//!   the build ran. A single compaction lock serializes concurrent
+//!   `compact_once` callers (manual + background).
+
+use super::segment::{MemRow, Memtable, SealedSegment};
+use super::{IngestConfig, IngestStats};
+use crate::fingerprint::Fingerprint;
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, Weak};
+
+/// What a base segment must answer for the write/compaction paths; the
+/// search path is type-specific (exhaustive [`super::BaseSegment`] vs the
+/// approximate [`super::HnswBase`]).
+pub trait BaseOps: Send + Sync {
+    /// Rows physically present in the base (including rows that are
+    /// tombstoned but not yet purged).
+    fn rows(&self) -> usize;
+    /// Whether global id `id` is physically present in the base.
+    fn contains(&self, id: u64) -> bool;
+}
+
+/// An epoch-tagged, fully immutable view of the segment stack.
+pub struct Snapshot<B> {
+    /// Bumped by every published mutation (diagnostics + tests).
+    pub epoch: u64,
+    pub base: Arc<B>,
+    /// Oldest first; ids ascend across segments.
+    pub sealed: Vec<Arc<SealedSegment>>,
+    pub mem: Memtable,
+    pub tombstones: Arc<HashSet<u64>>,
+    /// How many tombstones target a **physically present base row** —
+    /// the only ones that can mask a base result, hence the exact
+    /// over-fetch a read needs (`k + base_dead`). Tombstones on delta
+    /// rows are masked in-scan and never consume base top-k slots, so
+    /// counting them too would only inflate every read's work.
+    /// Maintained incrementally on delete, recomputed at compaction
+    /// install.
+    pub base_dead: usize,
+}
+
+// Manual Clone: `B` itself need not be Clone (it sits behind an Arc).
+impl<B> Clone for Snapshot<B> {
+    fn clone(&self) -> Self {
+        Self {
+            epoch: self.epoch,
+            base: self.base.clone(),
+            sealed: self.sealed.clone(),
+            mem: self.mem.clone(),
+            tombstones: self.tombstones.clone(),
+            base_dead: self.base_dead,
+        }
+    }
+}
+
+impl<B> Snapshot<B> {
+    /// Rows in the delta (sealed + memtable), tombstoned or not.
+    pub fn delta_rows(&self) -> usize {
+        self.sealed.iter().map(|s| s.len()).sum::<usize>() + self.mem.rows()
+    }
+
+    /// Whether `id` lives in a delta segment (sealed or memtable).
+    pub fn delta_contains(&self, id: u64) -> bool {
+        self.sealed.iter().any(|s| s.contains(id)) || self.mem.contains(id)
+    }
+
+    /// Visit every delta row, oldest segment first (ascending global id).
+    pub fn for_each_delta_slice(&self, mut f: impl FnMut(&[MemRow])) {
+        for seg in &self.sealed {
+            f(&seg.rows);
+        }
+        for chunk in &self.mem.chunks {
+            f(chunk);
+        }
+        f(&self.mem.tail);
+    }
+
+    /// Append every sealed-segment survivor to `(fps, ids)` in global-id
+    /// order, recording tombstoned sealed rows in `applied` instead — the
+    /// shared half of every compaction's survivor collection.
+    pub(crate) fn collect_sealed_survivors(
+        &self,
+        fps: &mut Vec<Fingerprint>,
+        ids: &mut Vec<u64>,
+        applied: &mut HashSet<u64>,
+    ) {
+        for seg in &self.sealed {
+            for row in &seg.rows {
+                if self.tombstones.contains(&row.id) {
+                    applied.insert(row.id);
+                } else {
+                    fps.push(row.fp.clone());
+                    ids.push(row.id);
+                }
+            }
+        }
+    }
+}
+
+/// Append the base's surviving rows to `(fps, ids)` in global-id order,
+/// recording tombstoned base rows in `applied` — the base half of a
+/// purging compaction (the HNSW extend path instead keeps dead base rows
+/// in place and skips this).
+pub(crate) fn collect_base_survivors(
+    db: &crate::fingerprint::Database,
+    globals: &[u64],
+    tombstones: &HashSet<u64>,
+    fps: &mut Vec<Fingerprint>,
+    ids: &mut Vec<u64>,
+    applied: &mut HashSet<u64>,
+) {
+    for (local, &gid) in globals.iter().enumerate() {
+        if tombstones.contains(&gid) {
+            applied.insert(gid);
+        } else {
+            fps.push(db.fps[local].clone());
+            ids.push(gid);
+        }
+    }
+}
+
+struct WriterState {
+    next_id: u64,
+}
+
+/// The shared mutable-core: snapshot pointer + writer/compaction locks.
+pub(crate) struct MutableCore<B> {
+    snapshot: Mutex<Arc<Snapshot<B>>>,
+    writer: Mutex<WriterState>,
+    /// Serializes `compact_once` callers (manual + background thread).
+    pub(crate) compact_lock: Mutex<()>,
+    pub(crate) cfg: IngestConfig,
+    pub(crate) stats: Arc<IngestStats>,
+    /// Background compactor bookkeeping (stop flag + join handle).
+    compactor: Mutex<Option<(Arc<AtomicBool>, std::thread::JoinHandle<()>)>>,
+}
+
+impl<B: BaseOps> MutableCore<B> {
+    pub fn new(base: B, next_id: u64, cfg: IngestConfig) -> Self {
+        let snap = Snapshot {
+            epoch: 0,
+            base: Arc::new(base),
+            sealed: Vec::new(),
+            mem: Memtable::empty(),
+            tombstones: Arc::new(HashSet::new()),
+            base_dead: 0,
+        };
+        Self {
+            snapshot: Mutex::new(Arc::new(snap)),
+            writer: Mutex::new(WriterState { next_id }),
+            compact_lock: Mutex::new(()),
+            cfg,
+            stats: Arc::new(IngestStats::default()),
+            compactor: Mutex::new(None),
+        }
+    }
+
+    /// The current immutable view (readers' entry point; one short lock).
+    pub fn snapshot(&self) -> Arc<Snapshot<B>> {
+        self.snapshot.lock().unwrap().clone()
+    }
+
+    /// Swap in `snap` and refresh the gauges. Caller holds the writer lock.
+    fn publish(&self, snap: Snapshot<B>) {
+        let st = &self.stats;
+        st.memtable_rows.store(snap.mem.rows() as u64, Ordering::Relaxed);
+        st.sealed_segments.store(snap.sealed.len() as u64, Ordering::Relaxed);
+        st.sealed_rows
+            .store(snap.sealed.iter().map(|s| s.len() as u64).sum(), Ordering::Relaxed);
+        st.tombstones.store(snap.tombstones.len() as u64, Ordering::Relaxed);
+        *self.snapshot.lock().unwrap() = Arc::new(snap);
+    }
+
+    /// Append one row; returns its assigned global id. Seals the memtable
+    /// into an immutable segment once it reaches `cfg.seal_rows`.
+    pub fn add(&self, fp: Fingerprint) -> u64 {
+        let mut w = self.writer.lock().unwrap();
+        let id = w.next_id;
+        w.next_id += 1;
+        let cur = self.snapshot();
+        let mut sealed = cur.sealed.clone();
+        let mut mem = cur.mem.appended(MemRow::new(id, fp));
+        if mem.rows() >= self.cfg.seal_rows.max(1) {
+            sealed.push(Arc::new(SealedSegment::from_memtable(&mem)));
+            mem = Memtable::empty();
+            self.stats.seals.fetch_add(1, Ordering::Relaxed);
+        }
+        self.stats.adds.fetch_add(1, Ordering::Relaxed);
+        self.publish(Snapshot {
+            epoch: cur.epoch + 1,
+            base: cur.base.clone(),
+            sealed,
+            mem,
+            tombstones: cur.tombstones.clone(),
+            base_dead: cur.base_dead,
+        });
+        id
+    }
+
+    /// Tombstone a live row. Returns `false` (and changes nothing) when
+    /// `id` is unknown, already deleted, or already purged.
+    ///
+    /// Publish cost: clones the tombstone set (O(live tombstones) under
+    /// the writer lock). Compaction keeps the set near
+    /// `compact_min_tombstones`, so this stays small in steady state;
+    /// a delete-heavy deploy running `--no-compactor` should expect the
+    /// cost to grow with the uncompacted tombstone count (a chunked
+    /// tombstone log, like the memtable's, is the upgrade path).
+    pub fn delete(&self, id: u64) -> bool {
+        let _w = self.writer.lock().unwrap();
+        let cur = self.snapshot();
+        if cur.tombstones.contains(&id) {
+            return false;
+        }
+        let in_base = cur.base.contains(id);
+        if !in_base && !cur.delta_contains(id) {
+            return false;
+        }
+        let mut tombs: HashSet<u64> = cur.tombstones.as_ref().clone();
+        tombs.insert(id);
+        self.stats.deletes.fetch_add(1, Ordering::Relaxed);
+        self.publish(Snapshot {
+            epoch: cur.epoch + 1,
+            base: cur.base.clone(),
+            sealed: cur.sealed.clone(),
+            mem: cur.mem.clone(),
+            tombstones: Arc::new(tombs),
+            base_dead: cur.base_dead + usize::from(in_base),
+        });
+        true
+    }
+
+    /// Tombstones the compactor could fold away right now (they target a
+    /// base or sealed row, not a memtable row).
+    pub fn applicable_tombstones(&self, snap: &Snapshot<B>) -> usize {
+        snap.tombstones
+            .iter()
+            .filter(|&&t| snap.base.contains(t) || snap.sealed.iter().any(|s| s.contains(t)))
+            .count()
+    }
+
+    /// Install a compaction result built from `captured`: the new base
+    /// replaces `captured.base` + `captured.sealed`; `applied` tombstones
+    /// (rows physically dropped by the build) leave the set; everything
+    /// that arrived during the build — new sealed segments, memtable rows,
+    /// new tombstones — is preserved verbatim.
+    pub fn install(&self, captured: &Snapshot<B>, new_base: B, applied: &HashSet<u64>) {
+        let _w = self.writer.lock().unwrap();
+        let cur = self.snapshot();
+        // Sealing only appends and compactions are serialized, so the
+        // captured sealed list is a prefix of the current one.
+        let consumed = captured.sealed.len();
+        debug_assert!(
+            cur.sealed.len() >= consumed
+                && cur
+                    .sealed
+                    .iter()
+                    .zip(&captured.sealed)
+                    .all(|(a, b)| Arc::ptr_eq(a, b)),
+            "captured sealed segments must be a prefix of the current list"
+        );
+        let sealed = cur.sealed[consumed..].to_vec();
+        let tombs: HashSet<u64> =
+            cur.tombstones.iter().filter(|t| !applied.contains(t)).cloned().collect();
+        // The base changed shape: recount which surviving tombstones still
+        // target a physically present base row (zero after a purging
+        // rebuild; the HNSW extend path keeps its dead rows in place).
+        let base_dead = tombs.iter().filter(|&&t| new_base.contains(t)).count();
+        self.stats.compactions.fetch_add(1, Ordering::Relaxed);
+        self.publish(Snapshot {
+            epoch: cur.epoch + 1,
+            base: Arc::new(new_base),
+            sealed,
+            mem: cur.mem.clone(),
+            tombstones: Arc::new(tombs),
+            base_dead,
+        });
+    }
+
+    /// Whether the background compactor should run a cycle on `snap`.
+    pub fn should_compact(&self, snap: &Snapshot<B>) -> bool {
+        if !snap.sealed.is_empty() {
+            return true;
+        }
+        !snap.tombstones.is_empty()
+            && self.applicable_tombstones(snap) >= self.cfg.compact_min_tombstones.max(1)
+    }
+
+    /// Spawn the background compaction loop. `owner` is the wrapper the
+    /// loop drives (held weakly: dropping the index retires the thread at
+    /// its next poll); `compact` runs one cycle and reports whether it
+    /// made progress. No-op if a compactor is already running.
+    pub fn spawn_compactor_with<T>(
+        &self,
+        name: &str,
+        owner: &Arc<T>,
+        compact: impl Fn(&T) -> bool + Send + 'static,
+    ) where
+        T: Send + Sync + 'static,
+    {
+        let mut slot = self.compactor.lock().unwrap();
+        if slot.is_some() {
+            return;
+        }
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_t = stop.clone();
+        let weak: Weak<T> = Arc::downgrade(owner);
+        let poll = self.cfg.compactor_poll;
+        let handle = std::thread::Builder::new()
+            .name(format!("{name}-compactor"))
+            .spawn(move || loop {
+                if stop_t.load(Ordering::Relaxed) {
+                    return;
+                }
+                let progressed = match weak.upgrade() {
+                    // Drop the strong ref before sleeping so the owner can
+                    // be freed while the thread idles.
+                    Some(owner) => compact(&owner),
+                    None => return,
+                };
+                if !progressed {
+                    std::thread::sleep(poll);
+                }
+            })
+            .expect("spawn compactor");
+        *slot = Some((stop, handle));
+    }
+
+    /// Stop and join the background compactor (idempotent).
+    pub fn stop_compactor(&self) {
+        let taken = self.compactor.lock().unwrap().take();
+        if let Some((stop, handle)) = taken {
+            stop.store(true, Ordering::Relaxed);
+            let _ = handle.join();
+        }
+    }
+}
+
+impl<B> Drop for MutableCore<B> {
+    fn drop(&mut self) {
+        // Best effort: raise the stop flag so a still-running compactor
+        // thread (holding only a Weak to its owner) exits promptly.
+        // Tolerate poisoning — drop must never double-panic.
+        if let Ok(slot) = self.compactor.lock() {
+            if let Some((stop, _)) = slot.as_ref() {
+                stop.store(true, Ordering::Relaxed);
+            }
+        }
+    }
+}

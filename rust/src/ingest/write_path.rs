@@ -1,0 +1,163 @@
+//! The coordinator-facing write route: one ordered stream of mutations
+//! applied to every mutable serving index.
+//!
+//! A deployment serves each query family from its own mutable index (the
+//! exhaustive [`super::MutableIndex`] and the approximate
+//! [`super::MutableHnsw`]), but a write must land in **all** of them with
+//! the **same global id** — otherwise `SEARCH` results from the two
+//! families would disagree about what a row is. [`WritePath`] serializes
+//! the mutation stream across its targets: every target applies the same
+//! adds/deletes in the same order, so their id sequences stay identical
+//! (asserted in debug builds).
+
+use super::IngestStats;
+use crate::fingerprint::{morgan::MorganGenerator, Fingerprint, FP_BITS};
+use std::sync::{Arc, Mutex};
+
+/// A serving index that accepts live mutations — implemented by
+/// [`super::MutableIndex`] (any rebuildable exhaustive index) and
+/// [`super::MutableHnsw`].
+pub trait MutableWriter: Send + Sync {
+    /// Ingest one fingerprint; returns the assigned global id.
+    fn ingest(&self, fp: Fingerprint) -> u64;
+    /// Tombstone a live row; `false` when unknown or already deleted.
+    fn remove(&self, id: u64) -> bool;
+    /// This index's ingestion gauges.
+    fn ingest_stats(&self) -> Arc<IngestStats>;
+}
+
+impl<I: crate::shard::ShardableIndex> MutableWriter for super::MutableIndex<I> {
+    fn ingest(&self, fp: Fingerprint) -> u64 {
+        self.add(fp)
+    }
+
+    fn remove(&self, id: u64) -> bool {
+        self.delete(id)
+    }
+
+    fn ingest_stats(&self) -> Arc<IngestStats> {
+        self.stats()
+    }
+}
+
+impl MutableWriter for super::MutableHnsw {
+    fn ingest(&self, fp: Fingerprint) -> u64 {
+        self.add(fp)
+    }
+
+    fn remove(&self, id: u64) -> bool {
+        self.delete(id)
+    }
+
+    fn ingest_stats(&self) -> Arc<IngestStats> {
+        self.stats()
+    }
+}
+
+/// Fans one ordered write stream out to every mutable index in a
+/// deployment (`ADD`/`ADDFP`/`DEL` land here from the server).
+pub struct WritePath {
+    /// Serializes mutations across targets so id sequences stay aligned.
+    order: Mutex<()>,
+    targets: Vec<Arc<dyn MutableWriter>>,
+    morgan: MorganGenerator,
+}
+
+impl WritePath {
+    /// `targets` must all have been seeded from the same initial database
+    /// (same starting id); at least one target is required.
+    pub fn new(targets: Vec<Arc<dyn MutableWriter>>) -> Self {
+        assert!(!targets.is_empty(), "write path needs at least one mutable index");
+        Self { order: Mutex::new(()), targets, morgan: MorganGenerator::default() }
+    }
+
+    /// Ingest a full-width fingerprint into every target; returns the
+    /// (shared) global id.
+    pub fn add_fingerprint(&self, fp: Fingerprint) -> Result<u64, String> {
+        if fp.bits() != FP_BITS {
+            return Err(format!("expected a {FP_BITS}-bit fingerprint, got {}", fp.bits()));
+        }
+        let _order = self.order.lock().unwrap();
+        // Eager: every target must apply the add (the assertion below is
+        // compiled out in release builds).
+        let ids: Vec<u64> = self.targets.iter().map(|t| t.ingest(fp.clone())).collect();
+        debug_assert!(
+            ids.iter().all(|&id| id == ids[0]),
+            "write targets drifted: differing global ids for one add"
+        );
+        Ok(ids[0])
+    }
+
+    /// Parse `smiles` through the Morgan generator and ingest the result.
+    pub fn add_smiles(&self, smiles: &str) -> Result<u64, String> {
+        let fp = self.morgan.fingerprint_smiles(smiles).map_err(|e| e.to_string())?;
+        self.add_fingerprint(fp)
+    }
+
+    /// Delete global id `id` from every target. `true` iff the row was
+    /// live (the targets agree by construction).
+    pub fn delete(&self, id: u64) -> bool {
+        let _order = self.order.lock().unwrap();
+        let mut ok = false;
+        for t in &self.targets {
+            let r = t.remove(id);
+            ok = ok || r;
+        }
+        ok
+    }
+
+    /// Gauges of every target, labelled by position (the serving layer
+    /// names them "exact"/"hnsw" when registering with `Metrics`).
+    pub fn stats(&self) -> Vec<Arc<IngestStats>> {
+        self.targets.iter().map(|t| t.ingest_stats()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{IngestConfig, MutableHnsw, MutableIndex};
+    use super::*;
+    use crate::fingerprint::{ChemblModel, Database};
+    use crate::hnsw::HnswParams;
+    use crate::index::{BruteForceIndex, SearchIndex};
+
+    #[test]
+    fn writes_land_in_every_target_with_one_id() {
+        let db = Arc::new(Database::synthesize(200, &ChemblModel::default(), 3));
+        let cfg = IngestConfig { seal_rows: 16, ..IngestConfig::default() };
+        let exact =
+            Arc::new(MutableIndex::<BruteForceIndex>::new(db.clone(), (), cfg.clone()));
+        let approx =
+            Arc::new(MutableHnsw::new_single(db.clone(), HnswParams::new(6, 32, 1), cfg));
+        let wp = WritePath::new(vec![
+            exact.clone() as Arc<dyn MutableWriter>,
+            approx.clone() as Arc<dyn MutableWriter>,
+        ]);
+
+        let extra = Database::synthesize(30, &ChemblModel::default(), 4);
+        let mut ids = Vec::new();
+        for fp in &extra.fps {
+            ids.push(wp.add_fingerprint(fp.clone()).unwrap());
+        }
+        assert_eq!(ids, (200u64..230).collect::<Vec<_>>(), "ids are the shared sequence");
+        // Both families see the row.
+        let ex_hits = exact.search(&extra.fps[7], 1);
+        assert_eq!(ex_hits[0].id, 207);
+        let (ap_hits, _) = approx.knn(&extra.fps[7], 1, 16);
+        assert_eq!(ap_hits[0].id, 207);
+
+        assert!(wp.delete(207), "live row deletes once");
+        assert!(!wp.delete(207), "second delete rejected");
+        assert_ne!(exact.search(&extra.fps[7], 1)[0].id, 207);
+        assert_ne!(approx.knn(&extra.fps[7], 1, 16).0[0].id, 207);
+
+        // SMILES route: aspirin lands with the morgan fingerprint.
+        let id = wp.add_smiles("CC(=O)Oc1ccccc1C(=O)O").unwrap();
+        let fp = MorganGenerator::default()
+            .fingerprint_smiles("CC(=O)Oc1ccccc1C(=O)O")
+            .unwrap();
+        assert_eq!(exact.search(&fp, 1)[0].id, id);
+        assert!(wp.add_smiles("not a molecule ((").is_err());
+        assert_eq!(wp.stats().len(), 2);
+    }
+}

@@ -9,7 +9,9 @@
 //!                   [--pjrt] [--m 4] [--cutoff 0.8] [--hnsw-m 8] [--ef 64] \
 //!                   [--shards 4] [--partition popcount|roundrobin|contiguous] \
 //!                   [--mode exact|hnsw|both] \
-//!                   [--max-batch 16] [--max-wait-us 2000]
+//!                   [--max-batch 16] [--max-wait-us 2000] \
+//!                   [--live] [--seal-rows 4096] [--no-compactor] \
+//!                   [--reply-timeout-ms 60000]
 //! molfpga bench-qps --db data/db.bin --queries 200 [--pjrt] [--shards 4] \
 //!                   [--max-batch 16]
 //! ```
@@ -29,10 +31,19 @@
 //! when sharded — instead of one walk per query, trading bounded latency
 //! (`--max-wait-us`) for QPS (docs/batching.md; `bench_batched` records
 //! the B-vs-QPS frontier in `BENCH_batched.json`).
+//!
+//! `--live` serves both families from **mutable** indexes (LSM-style
+//! memtable + sealed segments + background compaction, docs/ingest.md)
+//! and enables the write verbs `ADD <smiles>` / `ADDFP <hex>` /
+//! `DEL <id>` on the wire protocol (docs/protocol.md). `--seal-rows`
+//! bounds the exact-scanned delta, `--no-compactor` pins the segment
+//! stack (benchmarks / tests), and `--reply-timeout-ms` caps how long a
+//! connection waits on a wedged pool before answering `BUSY`.
 
 use anyhow::{bail, Context, Result};
 use molfpga::coordinator::backend::{
-    NativeExhaustive, NativeHnsw, PjrtExhaustive, ShardedHnswBackend,
+    MutableExhaustive, MutableHnswBackend, NativeExhaustive, NativeHnsw, PjrtExhaustive,
+    ShardedHnswBackend,
 };
 use molfpga::coordinator::batcher::BatchPolicy;
 use molfpga::coordinator::metrics::Metrics;
@@ -40,8 +51,12 @@ use molfpga::coordinator::server::Server;
 use molfpga::coordinator::{EnginePool, Query, QueryMode, QueryPool, Router, ShardedEnginePool};
 use molfpga::fingerprint::{morgan::MorganGenerator, ChemblModel, Database};
 use molfpga::hnsw::{HnswParams, ShardedHnsw};
+use molfpga::index::{BitBoundFoldingIndex, TwoStageConfig};
+use molfpga::ingest::{IngestConfig, MutableHnsw, MutableIndex, MutableWriter, WritePath};
 use molfpga::runtime::ArtifactSet;
-use molfpga::shard::{PartitionPolicy, ShardedDatabase};
+use molfpga::shard::{
+    PartitionPolicy, ShardedBuildConfig, ShardedDatabase, ShardedSearchIndex,
+};
 use molfpga::util::cli::Args;
 use std::sync::Arc;
 
@@ -182,7 +197,127 @@ fn cmd_query(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn build_router(args: &Args, db: Arc<Database>) -> Result<(Arc<Router>, Arc<Metrics>)> {
+/// Serving stack for `--live`: both families run mutable indexes sharing
+/// one write path; background compactors fold the delta unless
+/// `--no-compactor`.
+fn build_live_router(
+    args: &Args,
+    db: Arc<Database>,
+) -> Result<(Arc<Router>, Arc<Metrics>, Option<Arc<WritePath>>)> {
+    let metrics = Arc::new(Metrics::new());
+    let workers = args.get_or("workers", 2usize)?;
+    let queue = args.get_or("queue", 64usize)?;
+    let m = args.get_or("m", 4usize)?;
+    let cutoff = args.get_or("cutoff", 0.8)?;
+    let shards = args.get_or("shards", 1usize)?;
+    let hnsw_m = args.get_or("hnsw-m", 8usize)?;
+    let ef_c = args.get_or("ef-construction", 96usize)?;
+    let ef = args.get_or("ef", 64usize)?;
+    let policy: PartitionPolicy =
+        args.get("partition").unwrap_or("popcount").parse().map_err(anyhow::Error::msg)?;
+    // --mode keeps its read-only meaning: which families are
+    // shard-parallel when --shards > 1 (both families are always mutable
+    // under --live — the write path must land in each).
+    let (shard_exact, shard_hnsw) =
+        match args.get("mode").unwrap_or("both").to_ascii_lowercase().as_str() {
+            "both" | "all" => (true, true),
+            "exact" | "exhaustive" | "bitbound" => (true, false),
+            "hnsw" | "approx" | "approximate" => (false, true),
+            other => bail!("unknown --mode {other:?} (expected exact|hnsw|both)"),
+        };
+    let run_compactor = !args.flag("no-compactor");
+    if args.flag("pjrt") {
+        eprintln!("[molfpga] --pjrt is read-only; --live serves from the native engines");
+    }
+    let icfg = IngestConfig {
+        seal_rows: args.get_or("seal-rows", 4096usize)?,
+        compact_min_tombstones: args.get_or("compact-min-tombstones", 1024usize)?,
+        ..IngestConfig::default()
+    };
+    let two_stage = TwoStageConfig { m, cutoff, ..TwoStageConfig::default() };
+    eprintln!(
+        "[molfpga] live ingestion: seal at {} rows, shards {shards}, compactor {}",
+        icfg.seal_rows,
+        if run_compactor { "on" } else { "off" }
+    );
+
+    // Exhaustive family: one shared mutable index (sharded base when
+    // --shards > 1 and --mode includes it), replicated read workers.
+    let (ex, exact_writer): (Arc<dyn QueryPool>, Arc<dyn MutableWriter>) = if shards > 1
+        && shard_exact
+    {
+        let cfg = ShardedBuildConfig { shards, policy, inner: two_stage };
+        let idx = Arc::new(MutableIndex::<ShardedSearchIndex<BitBoundFoldingIndex>>::new(
+            db.clone(),
+            cfg,
+            icfg.clone(),
+        ));
+        if run_compactor {
+            idx.clone().spawn_compactor();
+        }
+        let be = idx.clone();
+        (
+            Arc::new(EnginePool::new("exhaustive", workers, queue, metrics.clone(), move |_| {
+                MutableExhaustive::factory(be.clone())
+            })),
+            idx,
+        )
+    } else {
+        let idx = Arc::new(MutableIndex::<BitBoundFoldingIndex>::new(
+            db.clone(),
+            two_stage,
+            icfg.clone(),
+        ));
+        if run_compactor {
+            idx.clone().spawn_compactor();
+        }
+        let be = idx.clone();
+        (
+            Arc::new(EnginePool::new("exhaustive", workers, queue, metrics.clone(), move |_| {
+                MutableExhaustive::factory(be.clone())
+            })),
+            idx,
+        )
+    };
+    metrics.register_ingest("exact", exact_writer.ingest_stats());
+
+    // Approximate family: mutable HNSW overlay (per-shard sub-graphs when
+    // --shards > 1 and --mode includes it), replicated read workers.
+    eprintln!("[molfpga] building mutable HNSW base…");
+    let params = HnswParams::new(hnsw_m, ef_c, 7);
+    let approx = Arc::new(if shards > 1 && shard_hnsw {
+        MutableHnsw::new_sharded(db.clone(), shards, policy, params, icfg)
+    } else {
+        MutableHnsw::new_single(db.clone(), params, icfg)
+    });
+    if run_compactor {
+        approx.clone().spawn_compactor();
+    }
+    metrics.register_ingest("hnsw", approx.stats());
+    let be = approx.clone();
+    let ap: Arc<dyn QueryPool> =
+        Arc::new(EnginePool::new("approximate", workers, queue, metrics.clone(), move |_| {
+            MutableHnswBackend::factory(be.clone(), ef)
+        }));
+
+    let policy = BatchPolicy {
+        max_batch: args.get_or("max-batch", 16usize)?,
+        max_wait: std::time::Duration::from_micros(args.get_or("max-wait-us", 2000u64)?),
+    };
+    let wp = Arc::new(WritePath::new(vec![
+        exact_writer,
+        approx as Arc<dyn MutableWriter>,
+    ]));
+    Ok((Arc::new(Router::new(ex, ap, policy, metrics.clone())), metrics, Some(wp)))
+}
+
+fn build_router(
+    args: &Args,
+    db: Arc<Database>,
+) -> Result<(Arc<Router>, Arc<Metrics>, Option<Arc<WritePath>>)> {
+    if args.flag("live") {
+        return build_live_router(args, db);
+    }
     let metrics = Arc::new(Metrics::new());
     let workers = args.get_or("workers", 2usize)?;
     let queue = args.get_or("queue", 64usize)?;
@@ -274,14 +409,19 @@ fn build_router(args: &Args, db: Arc<Database>) -> Result<(Arc<Router>, Arc<Metr
         max_batch: args.get_or("max-batch", 16usize)?,
         max_wait: std::time::Duration::from_micros(args.get_or("max-wait-us", 2000u64)?),
     };
-    Ok((Arc::new(Router::new(ex, ap, policy, metrics.clone())), metrics))
+    Ok((Arc::new(Router::new(ex, ap, policy, metrics.clone())), metrics, None))
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let db = load_db(args)?;
-    let (router, metrics) = build_router(args, db)?;
+    let (router, metrics, ingest) = build_router(args, db)?;
     let port = args.get_or("port", 7878u16)?;
-    let server = Server::new(router);
+    let mut server = Server::new(router).with_reply_timeout(std::time::Duration::from_millis(
+        args.get_or("reply-timeout-ms", 60_000u64)?,
+    ));
+    if let Some(wp) = ingest {
+        server = server.with_ingest(wp);
+    }
     let m2 = metrics.clone();
     std::thread::spawn(move || loop {
         std::thread::sleep(std::time::Duration::from_secs(10));
@@ -295,7 +435,7 @@ fn cmd_bench_qps(args: &Args) -> Result<()> {
     let db = load_db(args)?;
     let nq = args.get_or("queries", 200usize)?;
     let k = args.get_or("k", 10usize)?;
-    let (router, metrics) = build_router(args, db.clone())?;
+    let (router, metrics, _ingest) = build_router(args, db.clone())?;
     let queries = db.sample_queries(nq, 99);
     for mode in [QueryMode::Exhaustive, QueryMode::Approximate] {
         let t0 = std::time::Instant::now();

@@ -239,6 +239,43 @@ pub trait ShardableIndex: SearchIndex + Send + Sync + Sized {
     type Config: Clone + Send + Sync;
 
     fn build_shard(db: Arc<Database>, cfg: &Self::Config) -> Self;
+
+    /// The BitBound similarity cutoff `cfg` bakes into the built index
+    /// (0 ⇒ no popcount pruning — the default for indexes that scan
+    /// everything). The live-ingestion layer mirrors this window onto its
+    /// delta scan (`ingest::MutableIndex`), so an index type with Eq. 2
+    /// pruning **must** override it or delta rows outside a query's
+    /// window would be visible only until compaction folds them into the
+    /// pruned base.
+    fn config_cutoff(_cfg: &Self::Config) -> f64 {
+        0.0
+    }
+}
+
+/// Build parameters for constructing a whole [`ShardedSearchIndex`] from
+/// one *unpartitioned* database: partition shape + per-shard index config.
+/// This makes the sharded index itself satisfy [`ShardableIndex`]'s
+/// build-from-a-database factory contract, which is how the live-ingestion
+/// layer ([`crate::ingest::MutableIndex`]) rebuilds a shard-parallel base
+/// from the surviving rows at compaction time.
+#[derive(Clone)]
+pub struct ShardedBuildConfig<C> {
+    pub shards: usize,
+    pub policy: PartitionPolicy,
+    pub inner: C,
+}
+
+impl<I: ShardableIndex> ShardableIndex for ShardedSearchIndex<I> {
+    type Config = ShardedBuildConfig<I::Config>;
+
+    fn build_shard(db: Arc<Database>, cfg: &Self::Config) -> Self {
+        let sharded = Arc::new(ShardedDatabase::partition(db, cfg.shards, cfg.policy));
+        ShardedSearchIndex::build(sharded, &cfg.inner)
+    }
+
+    fn config_cutoff(cfg: &Self::Config) -> f64 {
+        I::config_cutoff(&cfg.inner)
+    }
 }
 
 /// Below this many rows in the largest shard, per-query thread fan-out

@@ -1,0 +1,269 @@
+//! Live-ingestion churn tests: the full TCP serving stack under
+//! interleaved ADD/DEL/SEARCH traffic, and the no-reader-stall contract
+//! while compaction runs.
+//!
+//! The exactness oracle is a client-side model of the surviving rows:
+//! after any prefix of the write stream, exact-mode `SEARCH` results must
+//! be identical (ids exactly; scores up to the wire's 6-decimal
+//! rendering) to a brute-force top-k over exactly those rows — i.e. to a
+//! from-scratch rebuild.
+
+use molfpga::coordinator::backend::{MutableExhaustive, MutableHnswBackend};
+use molfpga::coordinator::batcher::BatchPolicy;
+use molfpga::coordinator::metrics::Metrics;
+use molfpga::coordinator::server::{Client, Server};
+use molfpga::coordinator::{EnginePool, Router};
+use molfpga::fingerprint::{morgan::MorganGenerator, ChemblModel, Database, Fingerprint};
+use molfpga::hnsw::HnswParams;
+use molfpga::index::{BitBoundFoldingIndex, SearchIndex, TwoStageConfig};
+use molfpga::ingest::{IngestConfig, MutableHnsw, MutableIndex, MutableWriter, WritePath};
+use molfpga::topk::{topk_reference, Scored};
+use molfpga::util::prng::Pcg64;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Brute-force top-k over the model, in global ids (the rebuild oracle).
+fn oracle(model: &[(u64, Fingerprint)], q: &Fingerprint, k: usize) -> Vec<Scored> {
+    let scored: Vec<Scored> =
+        model.iter().map(|(id, fp)| Scored::new(q.tanimoto(fp), *id)).collect();
+    topk_reference(&scored, k)
+}
+
+/// Assert a wire result matches the oracle: ids exactly, scores to the
+/// protocol's 6-decimal rendering.
+fn assert_matches(got: &[(u64, f64)], want: &[Scored], ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: result size");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(g.0, w.id, "{ctx}: rank {i} id");
+        assert!(
+            (g.1 - w.score).abs() < 5e-7,
+            "{ctx}: rank {i} score {} vs oracle {}",
+            g.1,
+            w.score
+        );
+    }
+}
+
+struct LiveStack {
+    exact: Arc<MutableIndex<BitBoundFoldingIndex>>,
+    approx: Arc<MutableHnsw>,
+    server: Arc<Server>,
+    stop: Arc<AtomicBool>,
+    addr: std::net::SocketAddr,
+    handle: std::thread::JoinHandle<()>,
+}
+
+fn serve_live(db: Arc<Database>, seal_rows: usize, background_compactors: bool) -> LiveStack {
+    let metrics = Arc::new(Metrics::new());
+    let icfg = IngestConfig {
+        seal_rows,
+        compact_min_tombstones: 8,
+        ..IngestConfig::default()
+    };
+    // Exact two-stage config so the serving results are bit-comparable to
+    // the brute-force oracle.
+    let exact = Arc::new(MutableIndex::<BitBoundFoldingIndex>::new(
+        db.clone(),
+        TwoStageConfig { m: 1, cutoff: 0.0, ..TwoStageConfig::default() },
+        icfg.clone(),
+    ));
+    let approx = Arc::new(MutableHnsw::new_single(db.clone(), HnswParams::new(8, 48, 7), icfg));
+    if background_compactors {
+        exact.clone().spawn_compactor();
+        approx.clone().spawn_compactor();
+    }
+    metrics.register_ingest("exact", exact.stats());
+    metrics.register_ingest("hnsw", approx.stats());
+    let be = exact.clone();
+    let ex = Arc::new(EnginePool::new("churn-ex", 2, 16, metrics.clone(), move |_| {
+        MutableExhaustive::factory(be.clone())
+    }));
+    let be = approx.clone();
+    let ap = Arc::new(EnginePool::new("churn-ap", 2, 16, metrics.clone(), move |_| {
+        MutableHnswBackend::factory(be.clone(), 48)
+    }));
+    let router = Arc::new(Router::new(
+        ex,
+        ap,
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
+        metrics,
+    ));
+    let wp = Arc::new(WritePath::new(vec![
+        exact.clone() as Arc<dyn MutableWriter>,
+        approx.clone() as Arc<dyn MutableWriter>,
+    ]));
+    let server = Arc::new(
+        Server::new(router)
+            .with_ingest(wp)
+            .with_reply_timeout(Duration::from_secs(30)),
+    );
+    let stop = server.stop_handle();
+    let (addr_tx, addr_rx) = std::sync::mpsc::channel();
+    let srv = server.clone();
+    let handle = std::thread::spawn(move || {
+        srv.serve("127.0.0.1:0", move |a| {
+            let _ = addr_tx.send(a);
+        })
+        .unwrap();
+    });
+    let addr = addr_rx.recv_timeout(Duration::from_secs(10)).unwrap();
+    LiveStack { exact, approx, server, stop, addr, handle }
+}
+
+/// Interleaved ADD/ADDFP/DEL/SEARCH through the TCP server with
+/// background compaction live; exact-mode results stay bit-identical to
+/// the from-scratch oracle throughout and at quiescence.
+#[test]
+fn churn_e2e_interleaved_writes_bit_identical_to_rebuild() {
+    let db = Arc::new(Database::synthesize(800, &ChemblModel::default(), 93));
+    let stack = serve_live(db.clone(), 48, true);
+    let mut model: Vec<(u64, Fingerprint)> =
+        db.fps.iter().cloned().enumerate().map(|(i, f)| (i as u64, f)).collect();
+    let pool = Database::synthesize(160, &ChemblModel::default(), 94);
+    let mut c = Client::connect(stack.addr).unwrap();
+    let mut g = Pcg64::with_stream(7, 0xC0FFEE);
+
+    // The SMILES route once up front: the model needs the exact Morgan
+    // fingerprint the server computes.
+    let aspirin_fp =
+        MorganGenerator::default().fingerprint_smiles("CC(=O)Oc1ccccc1C(=O)O").unwrap();
+    let id = c.add_smiles("CC(=O)Oc1ccccc1C(=O)O").unwrap();
+    assert_eq!(id, 800, "ids continue the base sequence");
+    model.push((id, aspirin_fp));
+
+    for (i, fp) in pool.fps.iter().enumerate() {
+        let id = c.add_fp(fp).unwrap();
+        model.push((id, fp.clone()));
+        if i % 4 == 1 {
+            let vi = g.below_usize(model.len());
+            let vid = model[vi].0;
+            assert!(c.del(vid).unwrap(), "live row must delete (id {vid})");
+            model.remove(vi);
+            assert!(!c.del(vid).unwrap(), "double delete must be rejected");
+        }
+        if i % 9 == 4 {
+            // Mid-stream read-your-writes: the freshest row is findable,
+            // and a full top-k matches the surviving-rows oracle.
+            let (last_id, last_fp) = model.last().cloned().unwrap();
+            let got = c.search(&last_fp, 5, "exact").unwrap();
+            assert_eq!(got[0].0, last_id, "freshly written row served first");
+            let q = model[g.below_usize(model.len())].1.clone();
+            let got = c.search(&q, 10, "exact").unwrap();
+            assert_matches(&got, &oracle(&model, &q, 10), &format!("mid-stream op {i}"));
+        }
+    }
+
+    // Quiescence: drain sealed segments, then verify a query battery over
+    // both serving families.
+    let t0 = std::time::Instant::now();
+    loop {
+        let s = stack.exact.snapshot();
+        if s.sealed.is_empty() {
+            break;
+        }
+        assert!(t0.elapsed() < Duration::from_secs(60), "compactor never drained");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let queries: Vec<Fingerprint> = (0..6)
+        .map(|i| model[(i * 37) % model.len()].1.clone())
+        .chain(db.sample_queries(3, 95))
+        .collect();
+    for (qi, q) in queries.iter().enumerate() {
+        for k in [1usize, 10, 25] {
+            let got = c.search(q, k, "exact").unwrap();
+            assert_matches(&got, &oracle(&model, q, k), &format!("final q={qi} k={k}"));
+        }
+        // The approximate family sees the same live corpus: a surviving
+        // model row queried by its own fingerprint must come back first.
+        if qi < 6 {
+            let own_id = model[(qi * 37) % model.len()].0;
+            let got = c.search(q, 3, "hnsw").unwrap();
+            assert_eq!(got[0].0, own_id, "hnsw finds the live row (q={qi})");
+            assert!((got[0].1 - 1.0).abs() < 1e-6);
+        }
+    }
+    // Gauges made it to the wire, and the background compactor really ran.
+    let stats = c.request("STATS").unwrap();
+    assert!(stats.contains("ingest[exact]"), "stats: {stats}");
+    assert!(
+        stack.exact.stats().compactions.load(Ordering::Relaxed) > 0,
+        "background compaction must have folded the churn"
+    );
+    assert_eq!(stack.exact.rows_live(), model.len());
+    assert_eq!(stack.approx.rows_live(), model.len());
+
+    assert_eq!(c.request("QUIT").ok(), Some(String::new()));
+    stack.stop.store(true, Ordering::Relaxed);
+    drop(stack.server);
+    let _ = stack.handle.join();
+    stack.exact.stop_compactor();
+    stack.approx.stop_compactor();
+}
+
+/// The no-reader-stall contract: while a compaction (an O(n) base
+/// rebuild) runs, concurrent readers keep completing exact queries
+/// against the pre-install snapshot. Readers never block on the build;
+/// the install is one pointer swap.
+#[test]
+fn compaction_runs_concurrently_with_serving() {
+    let db = Arc::new(Database::synthesize(6000, &ChemblModel::default(), 101));
+    let icfg = IngestConfig { seal_rows: 512, ..IngestConfig::default() };
+    let idx = Arc::new(MutableIndex::<BitBoundFoldingIndex>::new(
+        db.clone(),
+        TwoStageConfig { m: 1, cutoff: 0.0, ..TwoStageConfig::default() },
+        icfg,
+    ));
+    let extra = Database::synthesize(1500, &ChemblModel::default(), 102);
+    let mut model: Vec<(u64, Fingerprint)> =
+        db.fps.iter().cloned().enumerate().map(|(i, f)| (i as u64, f)).collect();
+    for fp in &extra.fps {
+        let id = idx.add(fp.clone());
+        model.push((id, fp.clone()));
+    }
+    assert!(
+        !idx.snapshot().sealed.is_empty(),
+        "churn must have sealed segments for the compactor to fold"
+    );
+
+    // One thread compacts (rebuilds a 7.5k-row base); the main thread
+    // reads until the install lands.
+    let done = Arc::new(AtomicBool::new(false));
+    let compactor = {
+        let idx = idx.clone();
+        let done = done.clone();
+        std::thread::spawn(move || {
+            while idx.compact_once() {}
+            done.store(true, Ordering::Relaxed);
+        })
+    };
+    let queries = db.sample_queries(4, 103);
+    let mut reads_completed = 0usize;
+    loop {
+        let q = &queries[reads_completed % queries.len()];
+        let got = idx.search(q, 10);
+        let want = oracle(&model, q, 10);
+        assert_eq!(got.len(), want.len());
+        for (a, b) in got.iter().zip(&want) {
+            assert_eq!((a.id, a.score), (b.id, b.score), "mid-compaction read");
+        }
+        reads_completed += 1;
+        if done.load(Ordering::Relaxed) {
+            break;
+        }
+    }
+    compactor.join().unwrap();
+    assert!(
+        reads_completed > 0,
+        "readers must make progress while the compactor rebuilds"
+    );
+    // And the post-install view is the same corpus, now fully folded.
+    let snap = idx.snapshot();
+    assert!(snap.sealed.is_empty());
+    let q = &queries[0];
+    let got = idx.search(q, 10);
+    for (a, b) in got.iter().zip(&oracle(&model, q, 10)) {
+        assert_eq!((a.id, a.score), (b.id, b.score), "post-compaction read");
+    }
+    assert!(idx.stats().compactions.load(Ordering::Relaxed) >= 1);
+}

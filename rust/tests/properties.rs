@@ -356,6 +356,172 @@ fn search_batch_bit_identical_to_sequential_search() {
     });
 }
 
+/// Live ingestion changes nothing observable: for random interleavings of
+/// inserts, deletes, and compactions — across shard counts ∈ {1, 2, 4},
+/// random seal thresholds, and mid-stream as well as quiescent reads —
+/// `search`/`search_batch` on the mutable index is **bit-identical**
+/// (ids, scores, tie-breaking) to a brute-force oracle over exactly the
+/// surviving rows. This is the acceptance contract of the ingest layer:
+/// the segment stack {base, sealed, memtable, tombstones} must be
+/// invisible in results.
+#[test]
+fn mutable_index_bit_identical_to_rebuilt_oracle() {
+    use molfpga::fingerprint::{ChemblModel, Database};
+    use molfpga::index::{BitBoundFoldingIndex, TwoStageConfig};
+    use molfpga::ingest::{IngestConfig, MutableIndex};
+    use molfpga::shard::ShardedBuildConfig;
+    use molfpga::topk::{topk_reference, Scored};
+    check("mutable_vs_rebuilt_oracle", 10, |g| {
+        let shards = [1usize, 2, 4][g.below_usize(3)];
+        let db = gen::database(g, 60, 260);
+        let cfg = IngestConfig {
+            seal_rows: 8 + g.below_usize(25),
+            compact_min_tombstones: 4,
+            ..IngestConfig::default()
+        };
+        // Two mutable stacks over the same op stream: shard-parallel brute
+        // force (exact for any shard count) and the exact-configured
+        // two-stage engine (m = 1, cutoff 0).
+        let sharded = MutableIndex::<ShardedSearchIndex<BruteForceIndex>>::new(
+            db.clone(),
+            ShardedBuildConfig {
+                shards,
+                policy: PartitionPolicy::PopcountStriped,
+                inner: (),
+            },
+            cfg.clone(),
+        );
+        let two_stage = MutableIndex::<BitBoundFoldingIndex>::new(
+            db.clone(),
+            TwoStageConfig { m: 1, cutoff: 0.0, ..TwoStageConfig::default() },
+            cfg,
+        );
+        let mut model: Vec<(u64, Fingerprint)> =
+            db.fps.iter().cloned().enumerate().map(|(i, f)| (i as u64, f)).collect();
+        let pool = Database::synthesize(140, &ChemblModel::default(), g.next_u64());
+        let queries = {
+            let mut qs = db.sample_queries(2, g.next_u64());
+            qs.push(pool.fps[0].clone());
+            qs
+        };
+        let ks = [1usize, 7, 23];
+        let verify = |sharded: &MutableIndex<ShardedSearchIndex<BruteForceIndex>>,
+                      two_stage: &MutableIndex<BitBoundFoldingIndex>,
+                      model: &[(u64, Fingerprint)],
+                      ctx: &str| {
+            for q in &queries {
+                for &k in &ks {
+                    let scored: Vec<Scored> =
+                        model.iter().map(|(id, fp)| Scored::new(q.tanimoto(fp), *id)).collect();
+                    let want = topk_reference(&scored, k);
+                    for (name, got) in
+                        [("sharded", sharded.search(q, k)), ("two-stage", two_stage.search(q, k))]
+                    {
+                        assert_eq!(got.len(), want.len(), "{ctx} {name} k={k} s={shards}");
+                        for (a, b) in got.iter().zip(&want) {
+                            assert_eq!(
+                                (a.id, a.score),
+                                (b.id, b.score),
+                                "{ctx} {name} k={k} s={shards}"
+                            );
+                        }
+                    }
+                }
+            }
+        };
+        verify(&sharded, &two_stage, &model, "pristine");
+
+        let n_ops = 50 + g.below_usize(110);
+        for op in 0..n_ops {
+            let roll = g.below(100);
+            if roll < 55 {
+                let fp = pool.fps[op % pool.len()].clone();
+                let id1 = sharded.add(fp.clone());
+                let id2 = two_stage.add(fp.clone());
+                assert_eq!(id1, id2, "aligned id sequences");
+                model.push((id1, fp));
+            } else if roll < 80 && !model.is_empty() {
+                let vi = g.below_usize(model.len());
+                let vid = model[vi].0;
+                assert!(sharded.delete(vid), "live row must delete");
+                assert!(two_stage.delete(vid));
+                model.remove(vi);
+            } else if roll < 90 {
+                sharded.compact_once();
+                two_stage.compact_once();
+            }
+            if op % 23 == 11 {
+                verify(&sharded, &two_stage, &model, "mid-stream");
+            }
+        }
+        verify(&sharded, &two_stage, &model, "final");
+        // Batched reads are bit-identical to sequential reads on the live
+        // stack too (the batching contract survives mutability).
+        let refs: Vec<&Fingerprint> = queries.iter().collect();
+        for k in [1usize, 9] {
+            let got = sharded.search_batch(&refs, k);
+            for (qi, q) in queries.iter().enumerate() {
+                assert_eq!(got[qi], sharded.search(q, k), "batch ≡ sequential q={qi} k={k}");
+            }
+        }
+        // Compact to quiescence and re-verify: segments fold away, results
+        // must not move.
+        while sharded.compact_once() || two_stage.compact_once() {}
+        verify(&sharded, &two_stage, &model, "quiescent");
+        assert!(sharded.snapshot().sealed.is_empty());
+    });
+}
+
+/// The SMILES parser is total: arbitrary printable-ASCII garbage, grammar
+/// -token soup, and mutated real drug SMILES must all *return* (`Err` is
+/// the expected common case) — never panic. Mirrors the fuzz targets real
+/// SMILES parsers ship; the parser feeds the `ADD <smiles>` ingestion
+/// verb, where a panic would kill a server connection thread.
+#[test]
+fn smiles_parser_never_panics() {
+    use molfpga::fingerprint::dataset::DRUG_SMILES;
+    use molfpga::fingerprint::smiles::parse_smiles;
+    check("smiles_parser_total", 400, |g| {
+        let s: String = match g.below(3) {
+            0 => {
+                // Arbitrary printable ASCII.
+                let n = g.below_usize(60);
+                (0..n).map(|_| (0x20 + g.below(0x5F) as u8) as char).collect()
+            }
+            1 => {
+                // Grammar-token soup: hits brackets, charges, isotopes,
+                // ring digits, branches far more often than uniform noise.
+                const ALPHA: &[u8] = b"CNOPSFIBclnobsp[]()=#%+-@H0123456789./\\rl";
+                let n = g.below_usize(48);
+                (0..n).map(|_| ALPHA[g.below_usize(ALPHA.len())] as char).collect()
+            }
+            _ => {
+                // Mutated valid SMILES: substitute / delete / insert a few
+                // printable bytes into a real drug string.
+                let (_, smi) = DRUG_SMILES[g.below_usize(DRUG_SMILES.len())];
+                let mut bytes = smi.as_bytes().to_vec();
+                for _ in 0..1 + g.below_usize(4) {
+                    let pos = g.below_usize(bytes.len());
+                    match g.below(3) {
+                        0 => bytes[pos] = 0x20 + g.below(0x5F) as u8,
+                        1 => {
+                            bytes.remove(pos);
+                            if bytes.is_empty() {
+                                bytes.push(b'C');
+                            }
+                        }
+                        _ => bytes.insert(pos, 0x20 + g.below(0x5F) as u8),
+                    }
+                }
+                String::from_utf8_lossy(&bytes).into_owned()
+            }
+        };
+        // Totality is the property: a panic here fails the test with the
+        // offending case + seed in the report.
+        let _ = parse_smiles(&s);
+    });
+}
+
 /// The count-bound early exit ([`BruteForceIndex::search_with_bound`])
 /// changes nothing observable: bit-identical to the plain scan for random
 /// databases, queries (including hard, no-neighbor queries), and k.
