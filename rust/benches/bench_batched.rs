@@ -134,6 +134,7 @@ fn main() {
 
     let doc = Json::obj()
         .set("bench", "batched")
+        .set("provenance", "measured")
         .set("n", n)
         .set("k", k)
         .set("queries", NQ)

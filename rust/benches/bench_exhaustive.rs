@@ -3,12 +3,22 @@
 //! Measures the native CPU hot path at each folding level and cutoff —
 //! the numbers the Fig. 11 CPU frontier and the H5 speedup denominators
 //! come from — plus the raw TFC kernel rate (compounds scored per second,
-//! the CPU analogue of H1).
+//! the CPU analogue of H1) and the **kernel sweep**: scalar vs each
+//! available SIMD backend vs the bit-sliced layout, reported against the
+//! paper's 450 M compounds/s single-engine anchor and snapshotted to
+//! `BENCH_exhaustive.json` (the file `ScanCalibration::from_bench_json`
+//! reads back for hwmodel calibration).
 
-use molfpga::fingerprint::{ChemblModel, Database};
+use molfpga::fingerprint::{packed, ChemblModel, Database};
+use molfpga::hwmodel::qps::engine_speedup_vs_cpu;
 use molfpga::index::{BitBoundFoldingIndex, BruteForceIndex, SearchIndex};
+use molfpga::kernel::{self, sliced::BitSliced, RowKernel};
 use molfpga::util::bench::{black_box, Bencher};
+use molfpga::util::minijson::Json;
 use std::sync::Arc;
+
+/// The paper's H1 anchor: compounds/s for one FPGA query engine.
+const FPGA_ENGINE_CPS: f64 = 450e6;
 
 fn main() {
     let mut b = Bencher::new();
@@ -20,21 +30,75 @@ fn main() {
     let db = Arc::new(Database::synthesize(n, &ChemblModel::default(), 42));
     let queries = db.sample_queries(16, 7);
     let k = 20;
+    let query = &queries[0];
+    let qc = query.count_ones();
 
-    // Raw TFC rate: compounds scored per second (H1's CPU analogue).
+    // ---- Kernel sweep: scalar vs SIMD vs bit-sliced compounds/s --------
+    // Full Tanimoto scan (intersection + score) per configuration; the
+    // per-core compounds/s lands in BENCH_exhaustive.json with its
+    // speedup over scalar and its fraction of one FPGA engine (450 M/s).
+    let mut sweep: Vec<(String, String, f64)> = Vec::new(); // (layout, backend, cps)
+    for &backend in &kernel::available_backends() {
+        let kern = RowKernel::forced(backend);
+        let r = b.bench_elems(
+            &format!("kernel_scan/rowmajor/{}/n={n}", backend.name()),
+            n as f64,
+            || {
+                let mut acc = 0.0f64;
+                for (fp, &c) in db.fps.iter().zip(&db.counts) {
+                    let inter = kern.intersection_count(query.words(), fp.words());
+                    acc += packed::tanimoto_from_counts(inter, qc, c);
+                }
+                black_box(acc);
+            },
+        );
+        sweep.push(("rowmajor".into(), backend.name().into(), r.throughput().unwrap_or(0.0)));
+    }
+    let sliced = BitSliced::from_fps(&db.fps);
+    for &backend in &kernel::available_backends() {
+        let r = b.bench_elems(
+            &format!("kernel_scan/bitsliced/{}/n={n}", backend.name()),
+            n as f64,
+            || {
+                let mut acc = 0.0f64;
+                sliced.for_each_intersection(backend, query.words(), 0..n, |row, inter| {
+                    acc += packed::tanimoto_from_counts(inter, qc, db.counts[row]);
+                });
+                black_box(acc);
+            },
+        );
+        sweep.push(("bitsliced".into(), backend.name().into(), r.throughput().unwrap_or(0.0)));
+    }
+    let scalar_cps = sweep
+        .iter()
+        .find(|(l, be, _)| l == "rowmajor" && be == "scalar")
+        .map(|&(_, _, cps)| cps)
+        .unwrap_or(0.0);
+    for (layout, backend, cps) in &sweep {
+        eprintln!(
+            "[kernel_sweep] {layout:>9}/{backend:<6} {:7.1} Mcps  {:5.2}x scalar  {:.4} of one FPGA engine",
+            cps / 1e6,
+            if scalar_cps > 0.0 { cps / scalar_cps } else { 0.0 },
+            cps / FPGA_ENGINE_CPS,
+        );
+    }
+
+    // ---- Index-level paths (dispatched through the selected kernel) ----
     let brute = BruteForceIndex::new(db.clone());
+    let mut scores = Vec::new();
     b.bench_elems(&format!("tfc_scan/n={n}"), n as f64, || {
-        black_box(brute.score_all(&queries[0]));
+        brute.score_all_into(&queries[0], &mut scores);
+        black_box(scores.len());
     });
 
     b.bench_elems(&format!("brute_force_topk/n={n}/k={k}"), n as f64, || {
         black_box(brute.search(&queries[0], k));
     });
 
-    // Micro-opt deltas (packed.rs hot path): unrolled vs scalar
+    // Micro-opt deltas (packed.rs hot path): dispatched vs scalar-oracle
     // intersection popcount, and the count-bound early exit vs the plain
     // top-k scan (identical results, measured side by side).
-    b.bench_elems(&format!("tfc_intersect_unrolled/n={n}"), n as f64, || {
+    b.bench_elems(&format!("tfc_intersect_dispatched/n={n}"), n as f64, || {
         let mut acc = 0u32;
         for fp in &db.fps {
             acc = acc.wrapping_add(queries[0].intersection_count(fp));
@@ -65,6 +129,41 @@ fn main() {
                 },
             );
         }
+    }
+
+    // ---- Snapshot: BENCH_exhaustive.json (reviewable in-repo) ----------
+    let sweep_json: Vec<Json> = sweep
+        .iter()
+        .map(|(layout, backend, cps)| {
+            Json::obj()
+                .set("layout", layout.as_str())
+                .set("backend", backend.as_str())
+                .set("compounds_per_sec", *cps)
+                .set(
+                    "speedup_vs_scalar",
+                    if scalar_cps > 0.0 { cps / scalar_cps } else { 0.0 },
+                )
+                .set(
+                    "frac_of_fpga_engine",
+                    if *cps > 0.0 { 1.0 / engine_speedup_vs_cpu(FPGA_ENGINE_CPS, *cps) } else { 0.0 },
+                )
+        })
+        .collect();
+    let doc = Json::obj()
+        .set("bench", "exhaustive_kernel_sweep")
+        .set("n", n)
+        .set("provenance", "measured")
+        .set(
+            "host_backends",
+            Json::Arr(
+                kernel::available_backends().iter().map(|be| Json::from(be.name())).collect(),
+            ),
+        )
+        .set("anchor_compounds_per_sec", FPGA_ENGINE_CPS)
+        .set("sweep", Json::Arr(sweep_json));
+    match std::fs::write("BENCH_exhaustive.json", doc.to_string() + "\n") {
+        Ok(()) => eprintln!("[bench_exhaustive] wrote BENCH_exhaustive.json"),
+        Err(e) => eprintln!("[bench_exhaustive] snapshot write failed: {e}"),
     }
 
     let _ = b.write_jsonl(std::path::Path::new("results/bench_exhaustive.jsonl"));

@@ -1,0 +1,35 @@
+//! Build script: feature-gate AVX-512 kernel code on toolchain support.
+//!
+//! The AVX-512 `std::arch` intrinsics (`_mm512_popcnt_epi64` et al.) were
+//! stabilized in Rust 1.89. Older toolchains must not see that code at all,
+//! so the build script sniffs `rustc --version` and emits the
+//! `molfpga_avx512` cfg only when the compiler is new enough AND the target
+//! is x86_64. Runtime CPU detection still gates actual dispatch — this cfg
+//! only controls whether the code compiles.
+
+use std::process::Command;
+
+fn rustc_version() -> Option<(u32, u32)> {
+    let rustc = std::env::var("RUSTC").unwrap_or_else(|_| "rustc".to_string());
+    let out = Command::new(rustc).arg("--version").output().ok()?;
+    let text = String::from_utf8(out.stdout).ok()?;
+    // Format: "rustc 1.89.0 (abc 2025-01-01)" (possibly -nightly etc.)
+    let ver = text.split_whitespace().nth(1)?;
+    let mut parts = ver.split(|c: char| !c.is_ascii_digit());
+    let major: u32 = parts.next()?.parse().ok()?;
+    let minor: u32 = parts.next()?.parse().ok()?;
+    Some((major, minor))
+}
+
+fn main() {
+    println!("cargo:rustc-check-cfg=cfg(molfpga_avx512)");
+    let is_x86_64 =
+        std::env::var("CARGO_CFG_TARGET_ARCH").map(|a| a == "x86_64").unwrap_or(false);
+    let new_enough = match rustc_version() {
+        Some((major, minor)) => major > 1 || (major == 1 && minor >= 89),
+        None => false,
+    };
+    if is_x86_64 && new_enough {
+        println!("cargo:rustc-cfg=molfpga_avx512");
+    }
+}

@@ -1,12 +1,133 @@
 //! Measured CPU baselines — the Fig. 11 comparison points, re-measured on
-//! this host with the same algorithm substrates the FPGA engines model.
+//! this host with the same algorithm substrates the FPGA engines model —
+//! plus the scan-kernel calibration ([`ScanCalibration`]) that anchors the
+//! hwmodel's CPU baseline to this host's measured compounds/s instead of a
+//! hardcoded figure.
 
-use crate::fingerprint::{Database, Fingerprint};
+use crate::fingerprint::{packed, Database, Fingerprint};
 use crate::hnsw::{HnswBuilder, HnswGraph, HnswParams, Searcher};
 use crate::index::{BitBoundFoldingIndex, BruteForceIndex, SearchIndex};
+use crate::kernel::{self, sliced::BitSliced, Backend, RowKernel};
 use crate::topk::Scored;
 use std::sync::Arc;
 use std::time::Instant;
+
+/// Calibrated single-core exhaustive-scan throughput, in compounds/s, for
+/// the three kernel configurations `bench_exhaustive` sweeps. Obtained
+/// either by measuring on this host ([`ScanCalibration::measure`]) or by
+/// reading back a committed `BENCH_exhaustive.json` snapshot
+/// ([`ScanCalibration::from_bench_json`]). The hwmodel turns `best_cps()`
+/// into the CPU-vs-FPGA engine speedup
+/// ([`crate::hwmodel::qps::engine_speedup_vs_cpu`]).
+#[derive(Debug, Clone)]
+pub struct ScanCalibration {
+    /// Best vector backend used for the simd/bitsliced rows.
+    pub backend: String,
+    /// Database rows behind the measurement.
+    pub n: usize,
+    /// Row-major scan with the scalar kernel.
+    pub scalar_cps: f64,
+    /// Row-major scan with the best SIMD kernel.
+    pub simd_cps: f64,
+    /// Bit-sliced scan with the best SIMD kernel.
+    pub bitsliced_cps: f64,
+}
+
+impl ScanCalibration {
+    /// Measure all three configurations on this host with `reps` full
+    /// scans each (one query, scores black-boxed; single-threaded, so the
+    /// result is per-core).
+    pub fn measure(db: &Database, reps: usize) -> ScanCalibration {
+        assert!(!db.is_empty() && reps > 0);
+        let query = &db.fps[0];
+        let qc = query.count_ones();
+        let time_scan = |kernel: RowKernel| -> f64 {
+            let t0 = Instant::now();
+            for _ in 0..reps {
+                let mut acc = 0.0f64;
+                for (fp, &c) in db.fps.iter().zip(&db.counts) {
+                    let inter = kernel.intersection_count(query.words(), fp.words());
+                    acc += packed::tanimoto_from_counts(inter, qc, c);
+                }
+                std::hint::black_box(acc);
+            }
+            (reps * db.len()) as f64 / t0.elapsed().as_secs_f64()
+        };
+        let best = kernel::best_backend();
+        let scalar_cps = time_scan(RowKernel::forced(Backend::Scalar));
+        let simd_cps = time_scan(RowKernel::forced(best));
+        // Bit-sliced: same scoring loop shape over the transposed layout.
+        let sliced = BitSliced::from_fps(&db.fps);
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            let mut acc = 0.0f64;
+            sliced.for_each_intersection(best, query.words(), 0..db.len(), |row, inter| {
+                acc += packed::tanimoto_from_counts(inter, qc, db.counts[row]);
+            });
+            std::hint::black_box(acc);
+        }
+        let bitsliced_cps = (reps * db.len()) as f64 / t0.elapsed().as_secs_f64();
+        ScanCalibration {
+            backend: best.name().to_string(),
+            n: db.len(),
+            scalar_cps,
+            simd_cps,
+            bitsliced_cps,
+        }
+    }
+
+    /// Read a calibration back from a committed `BENCH_exhaustive.json`
+    /// snapshot (see `rust/benches/bench_exhaustive.rs` for the schema).
+    /// Returns `None` if the file is missing or doesn't carry the sweep.
+    pub fn from_bench_json(path: &std::path::Path) -> Option<ScanCalibration> {
+        use crate::util::minijson::Json;
+        let doc = Json::parse(&std::fs::read_to_string(path).ok()?)?;
+        let n = doc.get("n")?.as_f64()? as usize;
+        let sweep = doc.get("sweep")?.as_arr()?;
+        let mut out = ScanCalibration {
+            backend: "scalar".into(),
+            n,
+            scalar_cps: 0.0,
+            simd_cps: 0.0,
+            bitsliced_cps: 0.0,
+        };
+        for entry in sweep {
+            let layout = entry.get("layout")?.as_str()?;
+            let backend = entry.get("backend")?.as_str()?;
+            let cps = entry.get("compounds_per_sec")?.as_f64()?;
+            match layout {
+                "rowmajor" if backend == "scalar" => out.scalar_cps = cps,
+                // The sweep lists every available backend; keep the fastest.
+                "rowmajor" if cps > out.simd_cps => {
+                    out.simd_cps = cps;
+                    out.backend = backend.to_string();
+                }
+                "bitsliced" if cps > out.bitsliced_cps => out.bitsliced_cps = cps,
+                _ => {}
+            }
+        }
+        if out.scalar_cps > 0.0 {
+            Some(out)
+        } else {
+            None
+        }
+    }
+
+    /// The best measured configuration, compounds/s.
+    pub fn best_cps(&self) -> f64 {
+        self.scalar_cps.max(self.simd_cps).max(self.bitsliced_cps)
+    }
+
+    /// Best-configuration speedup over the scalar row-major scan (the
+    /// acceptance metric of the kernel sweep).
+    pub fn speedup_vs_scalar(&self) -> f64 {
+        if self.scalar_cps > 0.0 {
+            self.best_cps() / self.scalar_cps
+        } else {
+            0.0
+        }
+    }
+}
 
 /// A measured (recall, QPS) observation.
 #[derive(Debug, Clone)]
@@ -180,6 +301,53 @@ mod tests {
         assert_eq!(m.queries, 6);
         assert!(m.qps > 0.0);
         assert!(m.name.contains("s=4"));
+    }
+
+    #[test]
+    fn scan_calibration_measures_all_configs() {
+        let db = Database::synthesize(4000, &ChemblModel::default(), 17);
+        let cal = ScanCalibration::measure(&db, 2);
+        assert_eq!(cal.n, 4000);
+        assert!(cal.scalar_cps > 0.0 && cal.simd_cps > 0.0 && cal.bitsliced_cps > 0.0);
+        assert!(cal.best_cps() >= cal.scalar_cps);
+        assert!(cal.speedup_vs_scalar() >= 1.0, "speedup {}", cal.speedup_vs_scalar());
+        assert_eq!(cal.backend, crate::kernel::best_backend().name());
+    }
+
+    #[test]
+    fn scan_calibration_reads_bench_snapshot() {
+        use crate::util::minijson::Json;
+        let doc = Json::obj().set("bench", "exhaustive_kernel_sweep").set("n", 50_000usize).set(
+            "sweep",
+            Json::Arr(vec![
+                Json::obj()
+                    .set("layout", "rowmajor")
+                    .set("backend", "scalar")
+                    .set("compounds_per_sec", 48.0e6),
+                Json::obj()
+                    .set("layout", "rowmajor")
+                    .set("backend", "avx2")
+                    .set("compounds_per_sec", 290.0e6),
+                Json::obj()
+                    .set("layout", "bitsliced")
+                    .set("backend", "avx2")
+                    .set("compounds_per_sec", 340.0e6),
+            ]),
+        );
+        let dir = std::env::temp_dir().join("molfpga_test_cal");
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join("BENCH_exhaustive.json");
+        std::fs::write(&path, doc.to_string()).unwrap();
+        let cal = ScanCalibration::from_bench_json(&path).expect("snapshot must parse");
+        let _ = std::fs::remove_dir_all(&dir);
+        assert_eq!(cal.n, 50_000);
+        assert_eq!(cal.backend, "avx2");
+        assert_eq!(cal.scalar_cps, 48.0e6);
+        assert_eq!(cal.simd_cps, 290.0e6);
+        assert_eq!(cal.bitsliced_cps, 340.0e6);
+        assert_eq!(cal.best_cps(), 340.0e6);
+        assert!((cal.speedup_vs_scalar() - 340.0 / 48.0).abs() < 1e-9);
+        assert!(ScanCalibration::from_bench_json(&dir.join("missing.json")).is_none());
     }
 
     #[test]

@@ -111,31 +111,16 @@ impl Fingerprint {
 
     /// Popcount of the intersection |A∩B| — the TFC inner loop.
     ///
-    /// 4-word-unrolled with independent accumulators: the full-length
-    /// 16 × u64 case runs in exactly four iterations, and the split
-    /// accumulators break the dependency chain so the four `popcnt`s per
-    /// iteration issue in parallel (the software analogue of the TFC
-    /// module's parallel popcount tree). Folded widths that are not a
-    /// multiple of four words fall through to the scalar tail.
+    /// Dispatches through the process-selected scan kernel
+    /// (`crate::kernel`): a SIMD popcount where the host supports one,
+    /// otherwise the 4-word-unrolled scalar loop (the software analogue of
+    /// the TFC module's parallel popcount tree). Every backend returns the
+    /// same exact integer, so scores downstream are bit-identical
+    /// regardless of dispatch (see `docs/kernels.md`).
     #[inline]
     pub fn intersection_count(&self, other: &Self) -> u32 {
         debug_assert_eq!(self.bits, other.bits);
-        let mut ca = self.words.chunks_exact(4);
-        let mut cb = other.words.chunks_exact(4);
-        let mut acc = [0u32; 4];
-        for (x, y) in (&mut ca).zip(&mut cb) {
-            acc[0] += (x[0] & y[0]).count_ones();
-            acc[1] += (x[1] & y[1]).count_ones();
-            acc[2] += (x[2] & y[2]).count_ones();
-            acc[3] += (x[3] & y[3]).count_ones();
-        }
-        let tail: u32 = ca
-            .remainder()
-            .iter()
-            .zip(cb.remainder())
-            .map(|(a, b)| (a & b).count_ones())
-            .sum();
-        acc[0] + acc[1] + acc[2] + acc[3] + tail
+        crate::kernel::intersection_count(&self.words, &other.words)
     }
 
     /// Reference scalar intersection popcount — kept for the
@@ -164,13 +149,7 @@ impl Fingerprint {
     /// pass, not two).
     #[inline]
     pub fn tanimoto_with_counts(&self, other: &Self, cnt_self: u32, cnt_other: u32) -> f64 {
-        let inter = self.intersection_count(other);
-        let union = cnt_self + cnt_other - inter;
-        if union == 0 {
-            0.0
-        } else {
-            inter as f64 / union as f64
-        }
+        tanimoto_from_counts(self.intersection_count(other), cnt_self, cnt_other)
     }
 
     /// Fold by level `m` with the given scheme (paper Fig. 3). `m = 1`
@@ -237,6 +216,21 @@ impl Fingerprint {
             }
         }
         Self { bits: out_bits, words }
+    }
+}
+
+/// Tanimoto from an already-computed intersection popcount and the two row
+/// popcounts (paper Eq. 1 via the one-popcount identity). This is the
+/// single scoring formula every kernel path funnels through — row-major,
+/// bit-sliced, and delta-segment scans all produce the same integer
+/// `inter`, so scores are bit-identical across backends by construction.
+#[inline]
+pub fn tanimoto_from_counts(inter: u32, cnt_a: u32, cnt_b: u32) -> f64 {
+    let union = cnt_a + cnt_b - inter;
+    if union == 0 {
+        0.0
+    } else {
+        inter as f64 / union as f64
     }
 }
 

@@ -64,6 +64,23 @@ impl BruteForceDesign {
     pub fn compounds_per_second_per_kernel(&self) -> f64 {
         self.board.clock_hz
     }
+
+    /// Speedup of one FPGA engine over a *measured* CPU scan throughput
+    /// (compounds/s per core from the `bench_exhaustive` kernel sweep /
+    /// [`crate::baselines::cpu::ScanCalibration`]) — the calibrated
+    /// replacement for the paper's hardcoded CPU-baseline comparison.
+    pub fn speedup_vs_cpu(&self, cpu_compounds_per_sec: f64) -> f64 {
+        engine_speedup_vs_cpu(self.compounds_per_second_per_kernel(), cpu_compounds_per_sec)
+    }
+}
+
+/// Speedup of an FPGA engine scoring `engine_compounds_per_sec` over a CPU
+/// core scanning `cpu_compounds_per_sec` (both in compounds/s). The CPU
+/// figure should come from a measurement — `bench_exhaustive`'s kernel
+/// sweep or [`crate::baselines::cpu::ScanCalibration`] — not a constant.
+pub fn engine_speedup_vs_cpu(engine_compounds_per_sec: f64, cpu_compounds_per_sec: f64) -> f64 {
+    assert!(cpu_compounds_per_sec > 0.0, "CPU baseline must be a positive measurement");
+    engine_compounds_per_sec / cpu_compounds_per_sec
 }
 
 /// BitBound & folding design (paper Figs. 6–7, H3).
@@ -252,6 +269,25 @@ mod tests {
         let hi_m = HnswDesign::new(50, 20, 1800.0, 25.0).qps();
         assert!(lo > hi_ef, "small ef faster: {lo:.0} vs {hi_ef:.0}");
         assert!(lo > hi_m, "small M faster: {lo:.0} vs {hi_m:.0}");
+    }
+
+    #[test]
+    fn engine_speedup_uses_measured_cpu_anchor() {
+        let d = BruteForceDesign::default();
+        // A measured ~300 M compounds/s SIMD scan puts one 450 MHz engine
+        // at 1.5x a core; a ~45 M scalar scan puts it at 10x.
+        assert!((d.speedup_vs_cpu(300e6) - 1.5).abs() < 1e-9);
+        assert!((engine_speedup_vs_cpu(450e6, 45e6) - 10.0).abs() < 1e-9);
+        // Calibration wiring: a snapshot-shaped ScanCalibration feeds the
+        // same anchor (no hardcoded CPU figure in the chain).
+        let cal = crate::baselines::cpu::ScanCalibration {
+            backend: "avx2".into(),
+            n: 50_000,
+            scalar_cps: 45e6,
+            simd_cps: 200e6,
+            bitsliced_cps: 300e6,
+        };
+        assert!((d.speedup_vs_cpu(cal.best_cps()) - 1.5).abs() < 1e-9);
     }
 
     #[test]

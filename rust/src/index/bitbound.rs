@@ -13,10 +13,11 @@
 //! Fig. 2 pruned-search-space analysis and the FPGA QPS estimator.
 
 use super::SearchIndex;
-use crate::fingerprint::{Database, Fingerprint};
+use crate::fingerprint::{packed, Database, Fingerprint};
+use crate::kernel::{self, sliced::BitSliced};
 use crate::topk::{Scored, TopKMerge};
 use crate::util::stats::Gaussian;
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 
 /// Popcount-sorted exhaustive index with cutoff-based pruning.
 #[derive(Clone)]
@@ -30,6 +31,9 @@ pub struct BitBoundIndex {
     cutoff: f64,
     /// Gaussian fit of the popcount distribution (paper Eq. 3).
     model: Gaussian,
+    /// Lazily-built transposed copy in popcount-sorted order, so the Eq. 2
+    /// candidate window is a contiguous, cache-blocked streaming read.
+    sliced: OnceLock<BitSliced>,
 }
 
 impl BitBoundIndex {
@@ -40,7 +44,16 @@ impl BitBoundIndex {
         let sorted_counts: Vec<u32> = order.iter().map(|&i| db.counts[i as usize]).collect();
         let model = Gaussian::fit(&db.counts.iter().map(|&c| c as f64).collect::<Vec<_>>())
             .unwrap_or(Gaussian { mu: 0.0, sigma: 1.0 });
-        Self { db, order, sorted_counts, cutoff, model }
+        Self { db, order, sorted_counts, cutoff, model, sliced: OnceLock::new() }
+    }
+
+    /// The popcount-sorted bit-sliced copy, if the process kernel selection
+    /// uses one.
+    fn sliced(&self) -> Option<&BitSliced> {
+        if !kernel::selection().bitsliced || self.db.is_empty() {
+            return None;
+        }
+        Some(self.sliced.get_or_init(|| BitSliced::from_fps_order(&self.db.fps, &self.order)))
     }
 
     pub fn cutoff(&self) -> f64 {
@@ -157,6 +170,16 @@ impl SearchIndex for BitBoundIndex {
         let qc = query.count_ones();
         let range = self.candidate_range(qc);
         let mut tk = TopKMerge::new(k);
+        if let Some(s) = self.sliced() {
+            // The sorted-order slice makes the Eq. 2 window a contiguous
+            // block walk: same positions, same ascending order, same
+            // integer intersections — bit-identical to the row path.
+            s.for_each_intersection(kernel::selection().backend, query.words(), range, |pos, inter| {
+                let score = packed::tanimoto_from_counts(inter, qc, self.sorted_counts[pos]);
+                tk.push(Scored::new(score, self.order[pos] as u64));
+            });
+            return tk.finish();
+        }
         for &row in &self.order[range] {
             let fp = &self.db.fps[row as usize];
             let s = query.tanimoto_with_counts(fp, qc, self.db.counts[row as usize]);
@@ -184,6 +207,36 @@ impl SearchIndex for BitBoundIndex {
         let ranges: Vec<std::ops::Range<usize>> =
             qcs.iter().map(|&qc| self.candidate_range(qc)).collect();
         let mut banks: Vec<TopKMerge> = (0..queries.len()).map(|_| TopKMerge::new(k)).collect();
+        if let Some(s) = self.sliced() {
+            // Block-granular union sweep: each covered block is streamed
+            // once; every query active on the block scores its in-range
+            // lanes with one kernel call. Blocks ascend and lanes ascend,
+            // so per-query push order (and thus results) matches the
+            // sequential walk exactly.
+            use crate::kernel::sliced::BLOCK;
+            let backend = kernel::selection().backend;
+            let mut bc = [0u32; BLOCK];
+            super::union_sweep_blocks(&ranges, |blk, active| {
+                let base = blk * BLOCK;
+                for &qi in active {
+                    let lo = ranges[qi].start.max(base);
+                    let hi = ranges[qi].end.min(base + BLOCK);
+                    if lo >= hi {
+                        continue;
+                    }
+                    s.block_counts(backend, queries[qi].words(), blk, &mut bc);
+                    for pos in lo..hi {
+                        let score = packed::tanimoto_from_counts(
+                            bc[pos - base],
+                            qcs[qi],
+                            self.sorted_counts[pos],
+                        );
+                        banks[qi].push(Scored::new(score, self.order[pos] as u64));
+                    }
+                }
+            });
+            return banks.into_iter().map(TopKMerge::finish).collect();
+        }
         super::union_sweep(&ranges, |pos, active| {
             let row = self.order[pos] as usize;
             let fp = &self.db.fps[row];

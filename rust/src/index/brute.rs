@@ -9,33 +9,70 @@
 
 use super::SearchIndex;
 use crate::fingerprint::{packed, Database, Fingerprint};
+use crate::kernel::{self, sliced::BitSliced};
 use crate::topk::{Scored, TopKMerge};
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 
 /// Linear-scan exact top-k index.
 #[derive(Clone)]
 pub struct BruteForceIndex {
     db: Arc<Database>,
+    /// Lazily-built transposed copy of the database (natural row order),
+    /// used when the process kernel selection enables the bit-sliced
+    /// layout. `OnceLock` keeps construction off the build path and lets
+    /// clones share nothing but rebuild cheaply on first use.
+    sliced: OnceLock<BitSliced>,
 }
 
 impl BruteForceIndex {
     pub fn new(db: Arc<Database>) -> Self {
-        Self { db }
+        Self { db, sliced: OnceLock::new() }
     }
 
     pub fn database(&self) -> &Database {
         &self.db
     }
 
+    /// The bit-sliced copy, if the process kernel selection uses one.
+    fn sliced(&self) -> Option<&BitSliced> {
+        if !kernel::selection().bitsliced || self.db.is_empty() {
+            return None;
+        }
+        Some(self.sliced.get_or_init(|| BitSliced::from_fps(&self.db.fps)))
+    }
+
     /// Score all rows (no top-k) — used by the rescoring stage and tests.
     pub fn score_all(&self, query: &Fingerprint) -> Vec<f64> {
+        let mut out = Vec::new();
+        self.score_all_into(query, &mut out);
+        out
+    }
+
+    /// [`Self::score_all`] into a caller-owned buffer, so batch callers can
+    /// reuse one allocation across queries. The buffer is cleared first;
+    /// on return `out[i]` is the query's Tanimoto against row `i`.
+    pub fn score_all_into(&self, query: &Fingerprint, out: &mut Vec<f64>) {
+        out.clear();
+        out.reserve(self.db.len());
         let qc = query.count_ones();
-        self.db
-            .fps
-            .iter()
-            .zip(&self.db.counts)
-            .map(|(fp, &c)| query.tanimoto_with_counts(fp, qc, c))
-            .collect()
+        if let Some(s) = self.sliced() {
+            s.for_each_intersection(
+                kernel::selection().backend,
+                query.words(),
+                0..self.db.len(),
+                |row, inter| {
+                    out.push(packed::tanimoto_from_counts(inter, qc, self.db.counts[row]));
+                },
+            );
+            return;
+        }
+        out.extend(
+            self.db
+                .fps
+                .iter()
+                .zip(&self.db.counts)
+                .map(|(fp, &c)| query.tanimoto_with_counts(fp, qc, c)),
+        );
     }
 
     /// Linear scan with the per-row count bound as an early exit: once the
@@ -73,6 +110,18 @@ impl SearchIndex for BruteForceIndex {
     fn search(&self, query: &Fingerprint, k: usize) -> Vec<Scored> {
         let qc = query.count_ones();
         let mut tk = TopKMerge::new(k);
+        if let Some(s) = self.sliced() {
+            s.for_each_intersection(
+                kernel::selection().backend,
+                query.words(),
+                0..self.db.len(),
+                |row, inter| {
+                    let score = packed::tanimoto_from_counts(inter, qc, self.db.counts[row]);
+                    tk.push(Scored::new(score, row as u64));
+                },
+            );
+            return tk.finish();
+        }
         for (i, (fp, &c)) in self.db.fps.iter().zip(&self.db.counts).enumerate() {
             let s = query.tanimoto_with_counts(fp, qc, c);
             tk.push(Scored::new(s, i as u64));
@@ -88,6 +137,9 @@ impl SearchIndex for BruteForceIndex {
     fn search_batch(&self, queries: &[&Fingerprint], k: usize) -> Vec<Vec<Scored>> {
         if queries.is_empty() {
             return Vec::new();
+        }
+        if let Some(s) = self.sliced() {
+            return super::shared_full_scan_sliced(s, &self.db.counts, queries, k);
         }
         super::shared_full_scan(&self.db.fps, &self.db.counts, queries, k)
     }

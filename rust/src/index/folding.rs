@@ -13,9 +13,10 @@
 //! returns the exact-ordered top k. Table I measures the residual error.
 
 use super::SearchIndex;
-use crate::fingerprint::{packed::FoldScheme, Database, Fingerprint};
+use crate::fingerprint::{packed, packed::FoldScheme, Database, Fingerprint};
+use crate::kernel::{self, sliced::BitSliced};
 use crate::topk::{Scored, TopKMerge};
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 
 /// First-round candidate count for the 2-stage search — the paper's
 /// relationship `k_r1 = k · m · log2(2m)` (§III-B).
@@ -36,6 +37,10 @@ pub struct FoldedDatabase {
     folded_counts: Vec<u32>,
     m: usize,
     scheme: FoldScheme,
+    /// Lazily-built transposed copy of the *folded* rows (natural order).
+    /// At m = 1 the folded rows equal the full rows, so this one store also
+    /// serves the uncompressed single-pass paths.
+    sliced: OnceLock<BitSliced>,
 }
 
 impl FoldedDatabase {
@@ -49,7 +54,16 @@ impl FoldedDatabase {
             })
             .collect();
         let folded_counts = folded.iter().map(|f| f.count_ones()).collect();
-        Self { full, folded, folded_counts, m, scheme }
+        Self { full, folded, folded_counts, m, scheme, sliced: OnceLock::new() }
+    }
+
+    /// The bit-sliced copy of the folded rows, if the process kernel
+    /// selection uses one.
+    fn sliced(&self) -> Option<&BitSliced> {
+        if !kernel::selection().bitsliced || self.folded.is_empty() {
+            return None;
+        }
+        Some(self.sliced.get_or_init(|| BitSliced::from_fps(&self.folded)))
     }
 
     pub fn m(&self) -> usize {
@@ -84,6 +98,18 @@ impl FoldedDatabase {
     pub fn stage1(&self, folded_query: &Fingerprint, k1: usize) -> Vec<Scored> {
         let qc = folded_query.count_ones();
         let mut tk = TopKMerge::new(k1);
+        if let Some(s) = self.sliced() {
+            s.for_each_intersection(
+                kernel::selection().backend,
+                folded_query.words(),
+                0..self.folded.len(),
+                |row, inter| {
+                    let score = packed::tanimoto_from_counts(inter, qc, self.folded_counts[row]);
+                    tk.push(Scored::new(score, row as u64));
+                },
+            );
+            return tk.finish();
+        }
         for (i, (fp, &c)) in self.folded.iter().zip(&self.folded_counts).enumerate() {
             tk.push(Scored::new(folded_query.tanimoto_with_counts(fp, qc, c), i as u64));
         }
@@ -123,13 +149,9 @@ impl SearchIndex for FoldedDatabase {
     /// Full 2-stage search with the paper's `k_r1` sizing.
     fn search(&self, query: &Fingerprint, k: usize) -> Vec<Scored> {
         if self.m <= 1 {
-            // No compression: single exact pass.
-            let qc = query.count_ones();
-            let mut tk = TopKMerge::new(k);
-            for (i, (fp, &c)) in self.full.fps.iter().zip(&self.full.counts).enumerate() {
-                tk.push(Scored::new(query.tanimoto_with_counts(fp, qc, c), i as u64));
-            }
-            return tk.finish();
+            // No compression: single exact pass (folded rows == full rows
+            // at m = 1, so stage 1 over them IS the exact full scan).
+            return self.stage1(query, k);
         }
         let fq = self.fold_query(query);
         let k1 = k_r1(k, self.m).min(self.full.len());
@@ -146,22 +168,27 @@ impl SearchIndex for FoldedDatabase {
             return Vec::new();
         }
         if self.m <= 1 {
-            // No compression: single shared exact pass.
+            // No compression: single shared exact pass (folded rows ==
+            // full rows at m = 1, so the folded sliced store serves it).
+            if let Some(s) = self.sliced() {
+                return super::shared_full_scan_sliced(s, &self.folded_counts, queries, k);
+            }
             return super::shared_full_scan(&self.full.fps, &self.full.counts, queries, k);
         }
         let fqs: Vec<Fingerprint> = queries.iter().map(|q| self.fold_query(q)).collect();
-        let fqcs: Vec<u32> = fqs.iter().map(|f| f.count_ones()).collect();
         let k1 = k_r1(k, self.m).min(self.full.len());
-        let mut banks: Vec<TopKMerge> = (0..queries.len()).map(|_| TopKMerge::new(k1)).collect();
-        for (i, (fp, &c)) in self.folded.iter().zip(&self.folded_counts).enumerate() {
-            for (qi, fq) in fqs.iter().enumerate() {
-                banks[qi].push(Scored::new(fq.tanimoto_with_counts(fp, fqcs[qi], c), i as u64));
-            }
-        }
-        banks
+        let fq_refs: Vec<&Fingerprint> = fqs.iter().collect();
+        // Stage 1, shared: one pass over the folded rows fills every
+        // query's k1 bank (bit-sliced when enabled — identical results).
+        let cand_banks = if let Some(s) = self.sliced() {
+            super::shared_full_scan_sliced(s, &self.folded_counts, &fq_refs, k1)
+        } else {
+            super::shared_full_scan(&self.folded, &self.folded_counts, &fq_refs, k1)
+        };
+        cand_banks
             .into_iter()
             .zip(queries)
-            .map(|(tk, q)| self.stage2(q, &tk.finish(), k))
+            .map(|(cands, q)| self.stage2(q, &cands, k))
             .collect()
     }
 

@@ -85,6 +85,42 @@ pub(crate) fn shared_full_scan(
     banks.into_iter().map(TopKMerge::finish).collect()
 }
 
+/// Bit-sliced counterpart of [`shared_full_scan`]: stream the transposed
+/// blocks once, scoring each block against every query with one kernel call
+/// per (block, query) pair. Per-query push order is blocks-ascending,
+/// lanes-ascending = ascending row id — identical to the row-major scan, so
+/// results are bit-identical (the intersection integers themselves are
+/// backend-independent).
+pub(crate) fn shared_full_scan_sliced(
+    sliced: &crate::kernel::sliced::BitSliced,
+    counts: &[u32],
+    queries: &[&Fingerprint],
+    k: usize,
+) -> Vec<Vec<Scored>> {
+    use crate::kernel::sliced::BLOCK;
+    let backend = crate::kernel::selection().backend;
+    let qcs: Vec<u32> = queries.iter().map(|q| q.count_ones()).collect();
+    let mut banks: Vec<TopKMerge> = (0..queries.len()).map(|_| TopKMerge::new(k)).collect();
+    let rows = sliced.rows();
+    let mut bc = [0u32; BLOCK];
+    for blk in 0..sliced.blocks() {
+        let lanes = (rows - blk * BLOCK).min(BLOCK);
+        for (qi, q) in queries.iter().enumerate() {
+            sliced.block_counts(backend, q.words(), blk, &mut bc);
+            for lane in 0..lanes {
+                let row = blk * BLOCK + lane;
+                let s = crate::fingerprint::packed::tanimoto_from_counts(
+                    bc[lane],
+                    qcs[qi],
+                    counts[row],
+                );
+                banks[qi].push(Scored::new(s, row as u64));
+            }
+        }
+    }
+    banks.into_iter().map(TopKMerge::finish).collect()
+}
+
 /// Walk the union of per-query candidate ranges (half-open, over the
 /// popcount-sorted position space) in one ascending pass, calling
 /// `visit(pos, active)` once per covered position; `active` holds the
@@ -143,6 +179,31 @@ pub fn union_sweep(ranges: &[std::ops::Range<usize>], mut visit: impl FnMut(usiz
         visit(pos, &active);
         pos += 1;
     }
+}
+
+/// Block-granular [`union_sweep`]: visit `(blk, active)` for every
+/// bit-sliced block intersecting the union of per-query *row* ranges, in
+/// ascending block order. `active` holds the queries whose row range
+/// intersects the block — callers must still clip each query's visit to its
+/// exact row range within the block. Implemented as a [`union_sweep`] over
+/// the block-quantized ranges, so it inherits that sweep's ordering and
+/// skip behavior.
+pub fn union_sweep_blocks(
+    ranges: &[std::ops::Range<usize>],
+    mut visit: impl FnMut(usize, &[usize]),
+) {
+    use crate::kernel::sliced::BLOCK;
+    let block_ranges: Vec<std::ops::Range<usize>> = ranges
+        .iter()
+        .map(|r| {
+            if r.start >= r.end {
+                0..0
+            } else {
+                r.start / BLOCK..r.end.div_ceil(BLOCK)
+            }
+        })
+        .collect();
+    union_sweep(&block_ranges, &mut visit);
 }
 
 /// Top-k recall of `got` against ground truth `truth` (paper's accuracy

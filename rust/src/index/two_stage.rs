@@ -18,9 +18,10 @@
 use super::bitbound::BitBoundIndex;
 use super::folding::{k_r1, FoldedDatabase};
 use super::SearchIndex;
-use crate::fingerprint::{packed::FoldScheme, Database, Fingerprint};
+use crate::fingerprint::{packed, packed::FoldScheme, Database, Fingerprint};
+use crate::kernel::{self, sliced::BitSliced};
 use crate::topk::{Scored, TopKMerge};
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 
 /// Build parameters of the combined index — one bundle so per-shard
 /// construction ([`crate::shard::ShardableIndex`]) and the coordinator's
@@ -49,6 +50,9 @@ pub struct BitBoundFoldingIndex {
     bitbound: BitBoundIndex,
     /// Rows sorted by full-length popcount (shared with the BitBound order).
     order: Vec<u32>,
+    /// Lazily-built transposed copy of the *folded* rows in popcount-sorted
+    /// order, so the stage-1 Eq. 2 window walk is a contiguous block stream.
+    folded_sorted_sliced: OnceLock<BitSliced>,
 }
 
 impl BitBoundFoldingIndex {
@@ -61,7 +65,18 @@ impl BitBoundFoldingIndex {
         let bitbound = BitBoundIndex::new(db.clone(), cutoff);
         let mut order: Vec<u32> = (0..db.len() as u32).collect();
         order.sort_by_key(|&i| db.counts[i as usize]);
-        Self { folded, bitbound, order }
+        Self { folded, bitbound, order, folded_sorted_sliced: OnceLock::new() }
+    }
+
+    /// The sorted-order bit-sliced copy of the folded rows, if the process
+    /// kernel selection uses one.
+    fn sliced(&self) -> Option<&BitSliced> {
+        if !kernel::selection().bitsliced || self.order.is_empty() {
+            return None;
+        }
+        Some(self.folded_sorted_sliced.get_or_init(|| {
+            BitSliced::from_fps_order(self.folded.folded_fps(), &self.order)
+        }))
     }
 
     pub fn m(&self) -> usize {
@@ -105,19 +120,13 @@ impl SearchIndex for BitBoundFoldingIndex {
     fn search(&self, query: &Fingerprint, k: usize) -> Vec<Scored> {
         let qc = query.count_ones();
         let range = self.bitbound.candidate_range(qc);
-        let db = self.folded.full();
 
         if self.m() <= 1 {
-            // Pure BitBound: exact scan of the candidate range.
-            let mut tk = TopKMerge::new(k);
-            for &row in &self.order[range] {
-                let fp = &db.fps[row as usize];
-                tk.push(Scored::new(
-                    query.tanimoto_with_counts(fp, qc, db.counts[row as usize]),
-                    row as u64,
-                ));
-            }
-            return tk.finish();
+            // Pure BitBound: exact scan of the candidate range. The inner
+            // index shares this order array (identical stable sort over the
+            // same counts) and scoring formula, so delegating is
+            // bit-identical — and routes through its sliced walk.
+            return self.bitbound.search(query, k);
         }
 
         // Stage 1: folded scores over the candidate range only.
@@ -127,12 +136,20 @@ impl SearchIndex for BitBoundFoldingIndex {
         let mut tk1 = TopKMerge::new(k1.max(1));
         let folded_fps = self.folded.folded_fps();
         let folded_counts = self.folded.folded_counts();
-        for &row in &self.order[range] {
-            let r = row as usize;
-            tk1.push(Scored::new(
-                fq.tanimoto_with_counts(&folded_fps[r], fqc, folded_counts[r]),
-                row as u64,
-            ));
+        if let Some(s) = self.sliced() {
+            s.for_each_intersection(kernel::selection().backend, fq.words(), range, |pos, inter| {
+                let row = self.order[pos] as usize;
+                let score = packed::tanimoto_from_counts(inter, fqc, folded_counts[row]);
+                tk1.push(Scored::new(score, row as u64));
+            });
+        } else {
+            for &row in &self.order[range] {
+                let r = row as usize;
+                tk1.push(Scored::new(
+                    fq.tanimoto_with_counts(&folded_fps[r], fqc, folded_counts[r]),
+                    row as u64,
+                ));
+            }
         }
         // Stage 2: exact rescore.
         self.folded.stage2(query, &tk1.finish(), k)
@@ -171,15 +188,48 @@ impl SearchIndex for BitBoundFoldingIndex {
             .collect();
         let folded_fps = self.folded.folded_fps();
         let folded_counts = self.folded.folded_counts();
-        super::union_sweep(&ranges, |pos, active| {
-            let row = self.order[pos] as usize;
-            for &qi in active {
-                banks[qi].push(Scored::new(
-                    fqs[qi].tanimoto_with_counts(&folded_fps[row], fqcs[qi], folded_counts[row]),
-                    row as u64,
-                ));
-            }
-        });
+        if let Some(s) = self.sliced() {
+            // Block-granular union sweep over the sorted folded slice:
+            // blocks ascend and in-range lanes ascend, replaying each
+            // query's sequential stage-1 push order exactly.
+            use crate::kernel::sliced::BLOCK;
+            let backend = kernel::selection().backend;
+            let mut bc = [0u32; BLOCK];
+            super::union_sweep_blocks(&ranges, |blk, active| {
+                let base = blk * BLOCK;
+                for &qi in active {
+                    let lo = ranges[qi].start.max(base);
+                    let hi = ranges[qi].end.min(base + BLOCK);
+                    if lo >= hi {
+                        continue;
+                    }
+                    s.block_counts(backend, fqs[qi].words(), blk, &mut bc);
+                    for pos in lo..hi {
+                        let row = self.order[pos] as usize;
+                        let score = packed::tanimoto_from_counts(
+                            bc[pos - base],
+                            fqcs[qi],
+                            folded_counts[row],
+                        );
+                        banks[qi].push(Scored::new(score, row as u64));
+                    }
+                }
+            });
+        } else {
+            super::union_sweep(&ranges, |pos, active| {
+                let row = self.order[pos] as usize;
+                for &qi in active {
+                    banks[qi].push(Scored::new(
+                        fqs[qi].tanimoto_with_counts(
+                            &folded_fps[row],
+                            fqcs[qi],
+                            folded_counts[row],
+                        ),
+                        row as u64,
+                    ));
+                }
+            });
+        }
         // Stage 2 (per query): exact rescore of each query's own rescue set.
         banks
             .into_iter()

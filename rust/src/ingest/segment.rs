@@ -142,6 +142,11 @@ pub(crate) fn scan_rows_into(
     tombstones: &HashSet<u64>,
     banks: &mut [TopKMerge],
 ) -> usize {
+    // Delta rows are row-major (no bit-sliced copy — deltas are small and
+    // short-lived), but they still score through the process-selected SIMD
+    // row kernel; the intersection integer is backend-independent, so
+    // delta scores stay bit-identical to the rebuilt-oracle path.
+    let kernel = crate::kernel::RowKernel::active();
     let mut scored = 0usize;
     for row in rows {
         if tombstones.contains(&row.id) {
@@ -155,8 +160,9 @@ pub(crate) fn scan_rows_into(
                     continue;
                 }
             }
+            let inter = kernel.intersection_count(q.words(), row.fp.words());
             banks[qi].push(Scored::new(
-                q.tanimoto_with_counts(&row.fp, qcs[qi], row.count),
+                crate::fingerprint::packed::tanimoto_from_counts(inter, qcs[qi], row.count),
                 row.id,
             ));
         }

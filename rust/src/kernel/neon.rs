@@ -1,0 +1,62 @@
+//! aarch64 NEON kernels: `vcnt`-based popcount, 128 bits per step.
+//!
+//! NEON has no 64-bit popcount; `vcntq_u8` counts per byte, then a
+//! pairwise-widening add chain (u8→u16→u32→u64) folds the byte counts into
+//! 64-bit lanes.
+
+#![allow(unsafe_op_in_unsafe_fn)]
+
+use super::sliced::BLOCK;
+
+use std::arch::aarch64::*;
+
+/// Popcount of a 128-bit vector into two u64 lane counts.
+#[inline]
+unsafe fn popcount_u64x2(v: uint64x2_t) -> uint64x2_t {
+    let bytes = vcntq_u8(vreinterpretq_u8_u64(v));
+    vpaddlq_u32(vpaddlq_u16(vpaddlq_u8(bytes)))
+}
+
+/// NEON row kernel: AND + byte popcount, 2 words (128 bits) per step.
+///
+/// # Safety
+/// Host must support `neon`.
+#[target_feature(enable = "neon")]
+pub unsafe fn row_neon(a: &[u64], b: &[u64]) -> u32 {
+    let n = a.len().min(b.len());
+    let chunks = n / 2;
+    let mut acc = vdupq_n_u64(0);
+    for c in 0..chunks {
+        let va = vld1q_u64(a.as_ptr().add(c * 2));
+        let vb = vld1q_u64(b.as_ptr().add(c * 2));
+        acc = vaddq_u64(acc, popcount_u64x2(vandq_u64(va, vb)));
+    }
+    let mut total = vaddvq_u64(acc) as u32;
+    if n % 2 == 1 {
+        total += (a[n - 1] & b[n - 1]).count_ones();
+    }
+    total
+}
+
+/// NEON bit-sliced block kernel: one broadcast query word against the eight
+/// lanes of a block word (four 128-bit vectors) per step.
+///
+/// # Safety
+/// Host must support `neon`.
+#[target_feature(enable = "neon")]
+pub unsafe fn block_neon(query: &[u64], block: &[u64], out: &mut [u32; BLOCK]) {
+    debug_assert_eq!(block.len(), query.len() * BLOCK);
+    let mut acc = [vdupq_n_u64(0); 4];
+    for (w, &qw) in query.iter().enumerate() {
+        let q = vdupq_n_u64(qw);
+        let p = block.as_ptr().add(w * BLOCK);
+        for (pair, a) in acc.iter_mut().enumerate() {
+            let lanes = vld1q_u64(p.add(pair * 2));
+            *a = vaddq_u64(*a, popcount_u64x2(vandq_u64(q, lanes)));
+        }
+    }
+    for pair in 0..4 {
+        out[pair * 2] = vgetq_lane_u64::<0>(acc[pair]) as u32;
+        out[pair * 2 + 1] = vgetq_lane_u64::<1>(acc[pair]) as u32;
+    }
+}

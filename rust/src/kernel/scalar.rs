@@ -1,0 +1,69 @@
+//! Portable scalar kernels — always compiled, the dispatch fallback.
+//!
+//! `row` keeps the 4-word-unrolled / split-accumulator shape the repo's
+//! original inner loop used: the 1024-bit production width runs in exactly
+//! four iterations and the independent accumulators let `count_ones`
+//! lowerings issue in parallel.
+
+use super::sliced::BLOCK;
+
+/// Intersection popcount over the common prefix of `a` and `b`.
+#[inline]
+pub fn row(a: &[u64], b: &[u64]) -> u32 {
+    let mut ca = a.chunks_exact(4);
+    let mut cb = b.chunks_exact(4);
+    let mut acc = [0u32; 4];
+    for (x, y) in (&mut ca).zip(&mut cb) {
+        acc[0] += (x[0] & y[0]).count_ones();
+        acc[1] += (x[1] & y[1]).count_ones();
+        acc[2] += (x[2] & y[2]).count_ones();
+        acc[3] += (x[3] & y[3]).count_ones();
+    }
+    let tail: u32 =
+        ca.remainder().iter().zip(cb.remainder()).map(|(x, y)| (x & y).count_ones()).sum();
+    acc[0] + acc[1] + acc[2] + acc[3] + tail
+}
+
+/// Score one bit-sliced block: `out[lane] += |query[w] AND block[w][lane]|`
+/// summed over words. `block` holds `query.len() * BLOCK` words, word-major
+/// (word `w`'s eight lanes are `block[w*BLOCK .. w*BLOCK+BLOCK]`).
+#[inline]
+pub fn block(query: &[u64], block: &[u64], out: &mut [u32; BLOCK]) {
+    debug_assert_eq!(block.len(), query.len() * BLOCK);
+    *out = [0; BLOCK];
+    for (w, &qw) in query.iter().enumerate() {
+        let lanes = &block[w * BLOCK..w * BLOCK + BLOCK];
+        for lane in 0..BLOCK {
+            out[lane] += (qw & lanes[lane]).count_ones();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn row_handles_tails_and_empty() {
+        assert_eq!(row(&[], &[]), 0);
+        assert_eq!(row(&[u64::MAX], &[u64::MAX]), 64);
+        // 5 words: one unrolled chunk + 1 tail word.
+        let a = [u64::MAX; 5];
+        let b = [0x0f0f_0f0f_0f0f_0f0fu64; 5];
+        assert_eq!(row(&a, &b), 5 * 32);
+    }
+
+    #[test]
+    fn block_sums_words_per_lane() {
+        let query = [u64::MAX, 0u64];
+        let mut blk = [0u64; 2 * BLOCK];
+        blk[0] = 0b1011; // word 0, lane 0
+        blk[BLOCK - 1] = u64::MAX; // word 0, last lane
+        blk[BLOCK + 2] = u64::MAX; // word 1, lane 2 (masked off by query)
+        let mut out = [0u32; BLOCK];
+        block(&query, &blk, &mut out);
+        assert_eq!(out[0], 3);
+        assert_eq!(out[2], 0);
+        assert_eq!(out[BLOCK - 1], 64);
+    }
+}

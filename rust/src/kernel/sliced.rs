@@ -1,0 +1,221 @@
+//! Transposed bit-sliced database layout.
+//!
+//! Row-major fingerprint storage makes each comparison walk one row's words
+//! sequentially — the vector units spend their width across *one* row. The
+//! paper's fine-grained distance engine instead scores many database
+//! entries per cycle. The CPU analogue is this transposed layout: rows are
+//! grouped into blocks of [`BLOCK`] and, within a block, storage is
+//! word-major / lane-minor:
+//!
+//! ```text
+//! data[(blk * words_per_row + w) * BLOCK + lane]  ==  word w of row (blk*BLOCK + lane)
+//! ```
+//!
+//! One broadcast of a query word then ANDs against [`BLOCK`] rows' words at
+//! once (a single 512-bit vector op with AVX-512, two 256-bit ops with
+//! AVX2), and block words are contiguous in memory so a scan is a pure
+//! streaming read. Tail lanes of the last block are zero-padded; a zero row
+//! has intersection 0 with everything, so padding can never surface in
+//! results (callers additionally clamp visits to `rows`).
+
+use super::Backend;
+
+/// Rows per block. Eight u64 lanes = one AVX-512 vector (or two AVX2 /
+/// four NEON vectors) per database word.
+pub const BLOCK: usize = 8;
+
+/// A bit-sliced copy of a fingerprint set (see module docs for layout).
+///
+/// The slice stores rows in whatever order the builder supplies — natural
+/// database order for brute-force scans, popcount-sorted order for BitBound
+/// range walks (so the Eq. 2 candidate window is a contiguous block range).
+#[derive(Debug, Clone)]
+pub struct BitSliced {
+    words_per_row: usize,
+    rows: usize,
+    data: Vec<u64>,
+}
+
+impl BitSliced {
+    fn build<'a, F: Fn(usize) -> &'a [u64]>(rows: usize, words_per_row: usize, get: F) -> Self {
+        let blocks = rows.div_ceil(BLOCK);
+        let mut data = vec![0u64; blocks * words_per_row * BLOCK];
+        for r in 0..rows {
+            let (blk, lane) = (r / BLOCK, r % BLOCK);
+            let words = get(r);
+            debug_assert_eq!(words.len(), words_per_row);
+            for (w, &word) in words.iter().enumerate() {
+                data[(blk * words_per_row + w) * BLOCK + lane] = word;
+            }
+        }
+        Self { words_per_row, rows, data }
+    }
+
+    /// Bit-slice fingerprints in natural order. All rows must share one
+    /// width; an empty set yields an empty slice.
+    pub fn from_fps(fps: &[crate::fingerprint::Fingerprint]) -> Self {
+        let words_per_row = fps.first().map_or(0, |fp| fp.words().len());
+        Self::build(fps.len(), words_per_row, |r| fps[r].words())
+    }
+
+    /// Bit-slice fingerprints in a caller-supplied row order: slice row `i`
+    /// is `fps[order[i]]` (used by BitBound so its popcount-sorted walk is
+    /// contiguous in the slice).
+    pub fn from_fps_order(fps: &[crate::fingerprint::Fingerprint], order: &[u32]) -> Self {
+        let words_per_row = fps.first().map_or(0, |fp| fp.words().len());
+        Self::build(order.len(), words_per_row, |r| fps[order[r] as usize].words())
+    }
+
+    /// Number of (real, unpadded) rows.
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Words per row.
+    #[inline]
+    pub fn words_per_row(&self) -> usize {
+        self.words_per_row
+    }
+
+    /// Number of blocks (including the padded tail block, if any).
+    #[inline]
+    pub fn blocks(&self) -> usize {
+        self.rows.div_ceil(BLOCK)
+    }
+
+    /// The contiguous word storage of block `blk`.
+    #[inline]
+    pub fn block_words(&self, blk: usize) -> &[u64] {
+        let stride = self.words_per_row * BLOCK;
+        &self.data[blk * stride..(blk + 1) * stride]
+    }
+
+    /// Intersection counts of `query` against all [`BLOCK`] lanes of block
+    /// `blk` (padded lanes report 0).
+    #[inline]
+    pub fn block_counts(
+        &self,
+        backend: Backend,
+        query: &[u64],
+        blk: usize,
+        out: &mut [u32; BLOCK],
+    ) {
+        super::block_dispatch(backend, query, self.block_words(blk), out);
+    }
+
+    /// Visit `(slice_row, intersection_count)` for every row in `range`,
+    /// ascending. The range is clamped to `rows`; whole blocks are scored
+    /// with one kernel call and out-of-range lanes are skipped.
+    pub fn for_each_intersection(
+        &self,
+        backend: Backend,
+        query: &[u64],
+        range: std::ops::Range<usize>,
+        mut visit: impl FnMut(usize, u32),
+    ) {
+        let start = range.start.min(self.rows);
+        let end = range.end.min(self.rows);
+        if start >= end {
+            return;
+        }
+        let mut counts = [0u32; BLOCK];
+        for blk in start / BLOCK..end.div_ceil(BLOCK) {
+            self.block_counts(backend, query, blk, &mut counts);
+            let lane_lo = start.saturating_sub(blk * BLOCK).min(BLOCK);
+            let lane_hi = (end - blk * BLOCK).min(BLOCK);
+            for lane in lane_lo..lane_hi {
+                visit(blk * BLOCK + lane, counts[lane]);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fingerprint::Fingerprint;
+    use crate::kernel;
+    use crate::util::prng::Pcg64;
+
+    fn random_fps(g: &mut Pcg64, n: usize, bits: usize) -> Vec<Fingerprint> {
+        (0..n)
+            .map(|_| {
+                let mut fp = Fingerprint::zero(bits);
+                for i in 0..bits {
+                    if g.next_f64() < 0.2 {
+                        fp.set(i);
+                    }
+                }
+                fp
+            })
+            .collect()
+    }
+
+    #[test]
+    fn layout_roundtrips_rows() {
+        let mut g = Pcg64::new(21);
+        for &n in &[0usize, 1, 7, 8, 9, 40] {
+            let fps = random_fps(&mut g, n, 256);
+            let s = BitSliced::from_fps(&fps);
+            assert_eq!(s.rows(), n);
+            assert_eq!(s.blocks(), n.div_ceil(BLOCK));
+            for (r, fp) in fps.iter().enumerate() {
+                let (blk, lane) = (r / BLOCK, r % BLOCK);
+                let bw = s.block_words(blk);
+                for (w, &word) in fp.words().iter().enumerate() {
+                    assert_eq!(bw[w * BLOCK + lane], word, "row {r} word {w}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn for_each_intersection_matches_rowwise_over_every_backend() {
+        let mut g = Pcg64::new(22);
+        let fps = random_fps(&mut g, 21, 192); // 3-word rows, padded tail block
+        let query = random_fps(&mut g, 1, 192).pop().unwrap();
+        let s = BitSliced::from_fps(&fps);
+        for &backend in &kernel::available_backends() {
+            for range in [0..21usize, 3..17, 8..8, 5..6, 0..usize::MAX] {
+                let mut got = Vec::new();
+                s.for_each_intersection(backend, query.words(), range.clone(), |r, c| {
+                    got.push((r, c));
+                });
+                let lo = range.start.min(fps.len());
+                let hi = range.end.min(fps.len());
+                let expect: Vec<(usize, u32)> = (lo..hi)
+                    .map(|r| (r, query.intersection_count_scalar(&fps[r])))
+                    .collect();
+                assert_eq!(got, expect, "backend={} range={range:?}", backend.name());
+            }
+        }
+    }
+
+    #[test]
+    fn order_permutes_rows() {
+        let mut g = Pcg64::new(23);
+        let fps = random_fps(&mut g, 10, 128);
+        let order: Vec<u32> = vec![9, 0, 4, 4, 1];
+        let s = BitSliced::from_fps_order(&fps, &order);
+        assert_eq!(s.rows(), 5);
+        let query = random_fps(&mut g, 1, 128).pop().unwrap();
+        let mut got = Vec::new();
+        s.for_each_intersection(kernel::Backend::Scalar, query.words(), 0..5, |r, c| {
+            got.push((r, c))
+        });
+        for (i, &src) in order.iter().enumerate() {
+            assert_eq!(got[i], (i, query.intersection_count_scalar(&fps[src as usize])));
+        }
+    }
+
+    #[test]
+    fn empty_set_is_harmless() {
+        let s = BitSliced::from_fps(&[]);
+        assert_eq!(s.rows(), 0);
+        assert_eq!(s.blocks(), 0);
+        s.for_each_intersection(kernel::Backend::Scalar, &[1, 2], 0..10, |_, _| {
+            panic!("no rows should be visited")
+        });
+    }
+}

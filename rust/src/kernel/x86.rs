@@ -1,0 +1,169 @@
+//! x86_64 SIMD kernels: POPCNT, AVX2 (Muła nibble-LUT popcount), and —
+//! on new-enough toolchains (`molfpga_avx512` cfg from `build.rs`) —
+//! AVX-512 VPOPCNTDQ.
+//!
+//! Every function here is `unsafe` with a `#[target_feature]` attribute;
+//! callers (the dispatcher in `kernel::mod`) must have verified the host
+//! supports the features at runtime. Bodies are duplicated rather than
+//! delegating to the scalar module so the feature-enabled codegen applies
+//! to the whole loop (cross-function inlining into a `#[target_feature]`
+//! context is not guaranteed).
+
+#![allow(unsafe_op_in_unsafe_fn)]
+
+use super::sliced::BLOCK;
+
+#[cfg(target_arch = "x86_64")]
+use std::arch::x86_64::*;
+
+/// Scalar loop compiled with hardware POPCNT enabled. The default x86-64
+/// target baseline lowers `count_ones` to a SWAR bit-trick sequence; with
+/// the feature enabled it becomes a single `popcnt` instruction.
+///
+/// # Safety
+/// Host must support `popcnt`.
+#[target_feature(enable = "popcnt")]
+pub unsafe fn row_popcnt(a: &[u64], b: &[u64]) -> u32 {
+    let mut ca = a.chunks_exact(4);
+    let mut cb = b.chunks_exact(4);
+    let mut acc = [0u32; 4];
+    for (x, y) in (&mut ca).zip(&mut cb) {
+        acc[0] += (x[0] & y[0]).count_ones();
+        acc[1] += (x[1] & y[1]).count_ones();
+        acc[2] += (x[2] & y[2]).count_ones();
+        acc[3] += (x[3] & y[3]).count_ones();
+    }
+    let tail: u32 =
+        ca.remainder().iter().zip(cb.remainder()).map(|(x, y)| (x & y).count_ones()).sum();
+    acc[0] + acc[1] + acc[2] + acc[3] + tail
+}
+
+/// Bit-sliced block kernel with hardware POPCNT.
+///
+/// # Safety
+/// Host must support `popcnt`.
+#[target_feature(enable = "popcnt")]
+pub unsafe fn block_popcnt(query: &[u64], block: &[u64], out: &mut [u32; BLOCK]) {
+    debug_assert_eq!(block.len(), query.len() * BLOCK);
+    *out = [0; BLOCK];
+    for (w, &qw) in query.iter().enumerate() {
+        let lanes = &block[w * BLOCK..w * BLOCK + BLOCK];
+        for lane in 0..BLOCK {
+            out[lane] += (qw & lanes[lane]).count_ones();
+        }
+    }
+}
+
+/// 256-bit popcount of `v` accumulated into per-64-bit-lane sums, using the
+/// Muła nibble-lookup method: split each byte into nibbles, look up their
+/// popcounts in a shuffled table, then horizontally sum bytes into u64
+/// lanes with SAD against zero.
+#[cfg(target_arch = "x86_64")]
+#[inline]
+unsafe fn popcount_epi64_avx2(v: __m256i) -> __m256i {
+    let lut = _mm256_setr_epi8(
+        0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4, //
+        0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4,
+    );
+    let low_mask = _mm256_set1_epi8(0x0f);
+    let lo = _mm256_and_si256(v, low_mask);
+    let hi = _mm256_and_si256(_mm256_srli_epi16::<4>(v), low_mask);
+    let cnt = _mm256_add_epi8(_mm256_shuffle_epi8(lut, lo), _mm256_shuffle_epi8(lut, hi));
+    _mm256_sad_epu8(cnt, _mm256_setzero_si256())
+}
+
+/// AVX2 row kernel: AND + Muła popcount, 4 words (256 bits) per step.
+///
+/// # Safety
+/// Host must support `avx2` and `popcnt`.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,popcnt")]
+pub unsafe fn row_avx2(a: &[u64], b: &[u64]) -> u32 {
+    let n = a.len().min(b.len());
+    let chunks = n / 4;
+    let mut acc = _mm256_setzero_si256();
+    for c in 0..chunks {
+        let pa = a.as_ptr().add(c * 4) as *const __m256i;
+        let pb = b.as_ptr().add(c * 4) as *const __m256i;
+        let va = _mm256_loadu_si256(pa);
+        let vb = _mm256_loadu_si256(pb);
+        acc = _mm256_add_epi64(acc, popcount_epi64_avx2(_mm256_and_si256(va, vb)));
+    }
+    let lanes: [u64; 4] = std::mem::transmute(acc);
+    let mut total = (lanes[0] + lanes[1] + lanes[2] + lanes[3]) as u32;
+    for i in chunks * 4..n {
+        total += (a[i] & b[i]).count_ones();
+    }
+    total
+}
+
+/// AVX2 bit-sliced block kernel: one broadcast query word ANDed against all
+/// eight lanes of a block word (two 256-bit vectors) per step.
+///
+/// # Safety
+/// Host must support `avx2` and `popcnt`.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,popcnt")]
+pub unsafe fn block_avx2(query: &[u64], block: &[u64], out: &mut [u32; BLOCK]) {
+    debug_assert_eq!(block.len(), query.len() * BLOCK);
+    let mut acc_lo = _mm256_setzero_si256(); // lanes 0..4
+    let mut acc_hi = _mm256_setzero_si256(); // lanes 4..8
+    for (w, &qw) in query.iter().enumerate() {
+        let q = _mm256_set1_epi64x(qw as i64);
+        let p = block.as_ptr().add(w * BLOCK);
+        let lo = _mm256_loadu_si256(p as *const __m256i);
+        let hi = _mm256_loadu_si256(p.add(4) as *const __m256i);
+        acc_lo = _mm256_add_epi64(acc_lo, popcount_epi64_avx2(_mm256_and_si256(q, lo)));
+        acc_hi = _mm256_add_epi64(acc_hi, popcount_epi64_avx2(_mm256_and_si256(q, hi)));
+    }
+    let lo: [u64; 4] = std::mem::transmute(acc_lo);
+    let hi: [u64; 4] = std::mem::transmute(acc_hi);
+    for lane in 0..4 {
+        out[lane] = lo[lane] as u32;
+        out[lane + 4] = hi[lane] as u32;
+    }
+}
+
+/// AVX-512 row kernel: AND + VPOPCNTDQ, 8 words (512 bits) per step.
+///
+/// # Safety
+/// Host must support `avx512f`, `avx512vpopcntdq`, and `popcnt`.
+#[cfg(molfpga_avx512)]
+#[target_feature(enable = "avx512f,avx512vpopcntdq,popcnt")]
+pub unsafe fn row_avx512(a: &[u64], b: &[u64]) -> u32 {
+    let n = a.len().min(b.len());
+    let chunks = n / 8;
+    let mut acc = _mm512_setzero_si512();
+    for c in 0..chunks {
+        let va = core::ptr::read_unaligned(a.as_ptr().add(c * 8) as *const __m512i);
+        let vb = core::ptr::read_unaligned(b.as_ptr().add(c * 8) as *const __m512i);
+        acc = _mm512_add_epi64(acc, _mm512_popcnt_epi64(_mm512_and_si512(va, vb)));
+    }
+    let lanes: [u64; 8] = std::mem::transmute(acc);
+    let mut total = lanes.iter().sum::<u64>() as u32;
+    for i in chunks * 8..n {
+        total += (a[i] & b[i]).count_ones();
+    }
+    total
+}
+
+/// AVX-512 bit-sliced block kernel: one broadcast query word against all
+/// eight lanes of a block word in a single 512-bit vector per step.
+///
+/// # Safety
+/// Host must support `avx512f`, `avx512vpopcntdq`, and `popcnt`.
+#[cfg(molfpga_avx512)]
+#[target_feature(enable = "avx512f,avx512vpopcntdq,popcnt")]
+pub unsafe fn block_avx512(query: &[u64], block: &[u64], out: &mut [u32; BLOCK]) {
+    debug_assert_eq!(block.len(), query.len() * BLOCK);
+    let mut acc = _mm512_setzero_si512();
+    for (w, &qw) in query.iter().enumerate() {
+        let q = _mm512_set1_epi64(qw as i64);
+        let lanes = core::ptr::read_unaligned(block.as_ptr().add(w * BLOCK) as *const __m512i);
+        acc = _mm512_add_epi64(acc, _mm512_popcnt_epi64(_mm512_and_si512(q, lanes)));
+    }
+    let lanes: [u64; 8] = std::mem::transmute(acc);
+    for lane in 0..BLOCK {
+        out[lane] = lanes[lane] as u32;
+    }
+}

@@ -1,14 +1,17 @@
-//! Tiny JSON value builder/writer (offline replacement for `serde_json`).
+//! Tiny JSON value builder/writer/parser (offline replacement for
+//! `serde_json`).
 //!
 //! Experiment drivers emit machine-readable result records (one JSON object
 //! per line) alongside the human-readable tables so that EXPERIMENTS.md
-//! numbers can be regenerated and diffed mechanically.
+//! numbers can be regenerated and diffed mechanically. The parser exists so
+//! committed bench snapshots (`BENCH_exhaustive.json`) can be read back for
+//! calibration (`baselines::cpu::ScanCalibration::from_bench_json`).
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
-/// A JSON value. Only what the result writers need: no parsing, documents
-/// are built programmatically and serialized.
+/// A JSON value: built programmatically by the result writers, or parsed
+/// from a snapshot with [`Json::parse`].
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
     Null,
@@ -22,6 +25,57 @@ pub enum Json {
 impl Json {
     pub fn obj() -> Json {
         Json::Obj(BTreeMap::new())
+    }
+
+    /// Parse a complete JSON document. Returns `None` on any syntax error
+    /// or trailing non-whitespace (good enough for our own snapshot files;
+    /// not a validator of arbitrary input).
+    pub fn parse(s: &str) -> Option<Json> {
+        let mut p = Parser { s, b: s.as_bytes(), i: 0 };
+        p.skip_ws();
+        let v = p.value()?;
+        p.skip_ws();
+        if p.i == p.b.len() {
+            Some(v)
+        } else {
+            None
+        }
+    }
+
+    /// Object member lookup (`None` if not an object or key absent).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(xs) => Some(xs),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
     }
 
     /// Insert into an object; panics if `self` is not an object (builder
@@ -152,6 +206,150 @@ impl<T: Into<Json>> From<Vec<T>> for Json {
     }
 }
 
+/// Recursive-descent JSON parser over the document bytes (ASCII structure;
+/// multi-byte UTF-8 only ever appears inside strings, where it is copied
+/// through verbatim).
+struct Parser<'a> {
+    s: &'a str,
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn skip_ws(&mut self) {
+        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+            self.i += 1;
+        }
+    }
+
+    fn eat(&mut self, c: u8) -> bool {
+        if self.i < self.b.len() && self.b[self.i] == c {
+            self.i += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn lit(&mut self, word: &str, v: Json) -> Option<Json> {
+        if self.s[self.i..].starts_with(word) {
+            self.i += word.len();
+            Some(v)
+        } else {
+            None
+        }
+    }
+
+    fn value(&mut self) -> Option<Json> {
+        match *self.b.get(self.i)? {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => self.string().map(Json::Str),
+            b't' => self.lit("true", Json::Bool(true)),
+            b'f' => self.lit("false", Json::Bool(false)),
+            b'n' => self.lit("null", Json::Null),
+            _ => self.number(),
+        }
+    }
+
+    fn object(&mut self) -> Option<Json> {
+        self.eat(b'{');
+        let mut m = BTreeMap::new();
+        self.skip_ws();
+        if self.eat(b'}') {
+            return Some(Json::Obj(m));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            if !self.eat(b':') {
+                return None;
+            }
+            self.skip_ws();
+            m.insert(key, self.value()?);
+            self.skip_ws();
+            if self.eat(b',') {
+                continue;
+            }
+            return if self.eat(b'}') { Some(Json::Obj(m)) } else { None };
+        }
+    }
+
+    fn array(&mut self) -> Option<Json> {
+        self.eat(b'[');
+        let mut xs = Vec::new();
+        self.skip_ws();
+        if self.eat(b']') {
+            return Some(Json::Arr(xs));
+        }
+        loop {
+            self.skip_ws();
+            xs.push(self.value()?);
+            self.skip_ws();
+            if self.eat(b',') {
+                continue;
+            }
+            return if self.eat(b']') { Some(Json::Arr(xs)) } else { None };
+        }
+    }
+
+    fn string(&mut self) -> Option<String> {
+        if !self.eat(b'"') {
+            return None;
+        }
+        let mut out = String::new();
+        loop {
+            let c = *self.b.get(self.i)?;
+            match c {
+                b'"' => {
+                    self.i += 1;
+                    return Some(out);
+                }
+                b'\\' => {
+                    self.i += 1;
+                    match *self.b.get(self.i)? {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'b' => out.push('\u{8}'),
+                        b'f' => out.push('\u{c}'),
+                        b'u' => {
+                            let hex = self.s.get(self.i + 1..self.i + 5)?;
+                            let code = u32::from_str_radix(hex, 16).ok()?;
+                            // Surrogate pairs are not needed by our own
+                            // writers; map them to the replacement char.
+                            out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                            self.i += 4;
+                        }
+                        _ => return None,
+                    }
+                    self.i += 1;
+                }
+                _ => {
+                    // Copy one (possibly multi-byte) character through.
+                    let ch = self.s[self.i..].chars().next()?;
+                    out.push(ch);
+                    self.i += ch.len_utf8();
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Option<Json> {
+        let start = self.i;
+        while self.i < self.b.len()
+            && matches!(self.b[self.i], b'-' | b'+' | b'.' | b'e' | b'E' | b'0'..=b'9')
+        {
+            self.i += 1;
+        }
+        self.s[start..self.i].parse::<f64>().ok().map(Json::Num)
+    }
+}
+
 /// Append one JSON object as a line to a `.jsonl` results file, creating
 /// parent directories as needed.
 pub fn append_jsonl(path: &std::path::Path, v: &Json) -> std::io::Result<()> {
@@ -197,6 +395,49 @@ mod tests {
     fn non_finite_numbers_become_null() {
         assert_eq!(Json::from(f64::NAN).to_string(), "null");
         assert_eq!(Json::from(f64::INFINITY).to_string(), "null");
+    }
+
+    #[test]
+    fn parse_roundtrips_writer_output() {
+        let j = Json::obj()
+            .set("name", "fig7")
+            .set("qps", 25403.5)
+            .set("neg", -1.5e-3)
+            .set("ok", true)
+            .set("m", vec![1u64, 2, 4])
+            .set("nested", Json::obj().set("deep", Json::Arr(vec![Json::Null])))
+            .set("text", "a\"b\\c\nd\u{1}é");
+        let parsed = Json::parse(&j.to_string()).expect("own output must parse");
+        assert_eq!(parsed, j);
+    }
+
+    #[test]
+    fn parse_accepts_whitespace_and_rejects_garbage() {
+        let v = Json::parse(" { \"a\" : [ 1 , 2.5 ] ,\n\t\"b\" : null } ").unwrap();
+        assert_eq!(v.get("a").and_then(|a| a.as_arr()).map(|a| a.len()), Some(2));
+        assert_eq!(v.get("a").unwrap().as_arr().unwrap()[1].as_f64(), Some(2.5));
+        assert_eq!(v.get("b"), Some(&Json::Null));
+        for bad in ["", "{", "[1,]", "{\"a\":}", "tru", "1 2", "{\"a\":1} x", "\"\\q\""] {
+            assert!(Json::parse(bad).is_none(), "should reject {bad:?}");
+        }
+    }
+
+    #[test]
+    fn accessors() {
+        let v = Json::parse(r#"{"s":"hi","n":3,"b":false,"a":[],"o":{}}"#).unwrap();
+        assert_eq!(v.get("s").unwrap().as_str(), Some("hi"));
+        assert_eq!(v.get("n").unwrap().as_f64(), Some(3.0));
+        assert_eq!(v.get("b").unwrap().as_bool(), Some(false));
+        assert!(v.get("a").unwrap().as_arr().unwrap().is_empty());
+        assert!(v.get("missing").is_none());
+        assert!(v.get("s").unwrap().get("x").is_none(), "get on non-object is None");
+        assert!(v.get("n").unwrap().as_str().is_none());
+    }
+
+    #[test]
+    fn parse_unicode_escapes() {
+        let v = Json::parse(r#""caf\u00e9""#).unwrap();
+        assert_eq!(v.as_str(), Some("café"));
     }
 
     #[test]

@@ -522,6 +522,189 @@ fn smiles_parser_never_panics() {
     });
 }
 
+/// The SIMD kernel layer changes nothing observable: every compiled
+/// backend (scalar, popcnt, AVX2, AVX-512, NEON) and both storage layouts
+/// (row-major, bit-sliced) produce **bit-identical** results to plain
+/// scalar arithmetic. Two layers of the contract:
+///
+/// 1. **Primitives**: forced row kernels and the bit-sliced block walk
+///    return the exact scalar intersection integer at random word widths
+///    (including widths that are not a multiple of the 256-/512-bit
+///    vector registers, exercising every tail path), densities, and
+///    sub-ranges — and the sliced walk visits rows exactly once, in
+///    ascending order (what preserves tie-breaking).
+/// 2. **Serving paths**: whatever kernel the process selected (the CI
+///    matrix re-runs this binary under `MOLFPGA_KERNEL=scalar`, `simd`,
+///    and `bitsliced`), `search`, `score_all_into`, and `search_batch`
+///    on brute-force, BitBound, the folding 2-stage engine, and the
+///    sharded index match a scalar-math oracle — across cutoffs, folding
+///    levels, shard counts ∈ {1, 2, 4}, and batch sizes B ∈ {0, 1, 8, 32}.
+#[test]
+fn simd_kernel_bit_identical_to_scalar() {
+    use molfpga::fingerprint::packed::tanimoto_from_counts;
+    use molfpga::index::{BitBoundFoldingIndex, BitBoundIndex};
+    use molfpga::kernel::{self, sliced::BitSliced, RowKernel};
+    use molfpga::topk::{topk_reference, Scored};
+
+    // (1) primitives: every available backend vs the scalar integer.
+    check("kernel_primitives_eq_scalar", 30, |g| {
+        let words = [1usize, 2, 3, 5, 7, 8, 11, 16][g.below_usize(8)];
+        let density = 0.02 + 0.9 * g.next_f64();
+        let rows = 1 + g.below_usize(30);
+        let fps: Vec<Fingerprint> =
+            (0..rows).map(|_| gen::sparse_fp(g, words * 64, density)).collect();
+        let q = gen::sparse_fp(g, words * 64, density);
+        let scalar =
+            |a: &[u64], b: &[u64]| a.iter().zip(b).map(|(x, y)| (x & y).count_ones()).sum::<u32>();
+        let sliced = BitSliced::from_fps(&fps);
+        let lo = g.below_usize(rows + 1);
+        let hi = lo + g.below_usize(rows - lo + 1);
+        for &backend in &kernel::available_backends() {
+            let kern = RowKernel::forced(backend);
+            for fp in &fps {
+                assert_eq!(
+                    kern.intersection_count(q.words(), fp.words()),
+                    scalar(q.words(), fp.words()),
+                    "row kernel {} at {words} words",
+                    backend.name()
+                );
+            }
+            let mut seen = Vec::new();
+            sliced.for_each_intersection(backend, q.words(), lo..hi, |row, inter| {
+                assert_eq!(
+                    inter,
+                    scalar(q.words(), fps[row].words()),
+                    "sliced {} at {words} words, row {row}",
+                    backend.name()
+                );
+                seen.push(row);
+            });
+            assert_eq!(
+                seen,
+                (lo..hi).collect::<Vec<_>>(),
+                "sliced {} must visit {lo}..{hi} exactly once, ascending",
+                backend.name()
+            );
+        }
+    });
+
+    // (2) serving paths under the process-selected kernel vs scalar math.
+    check("kernel_serving_eq_scalar_oracle", 10, |g| {
+        let db = gen::database(g, 80, 700);
+        let k = 1 + g.below_usize(25);
+        let cutoff = if g.next_f64() < 0.3 { 0.0 } else { 0.3 + 0.6 * g.next_f64() };
+        let m = [1usize, 2, 4, 8][g.below_usize(4)];
+        let shards = [1usize, 2, 4][g.below_usize(3)];
+        let brute = BruteForceIndex::new(db.clone());
+        let bitbound = BitBoundIndex::new(db.clone(), cutoff);
+        let folding = BitBoundFoldingIndex::new(db.clone(), m, cutoff);
+        let sharded = ShardedSearchIndex::<BruteForceIndex>::build(
+            std::sync::Arc::new(ShardedDatabase::partition(
+                db.clone(),
+                shards,
+                PartitionPolicy::PopcountStriped,
+            )),
+            &(),
+        )
+        .with_parallel(g.next_f64() < 0.5);
+        let queries = db.sample_queries(4, g.next_u64());
+        let mut scores = Vec::new();
+        for q in &queries {
+            let qc = q.count_ones();
+            // Scalar oracle scores, one per row in id order.
+            let all: Vec<Scored> = db
+                .fps
+                .iter()
+                .enumerate()
+                .map(|(i, fp)| {
+                    let inter = q.intersection_count_scalar(fp);
+                    Scored::new(tanimoto_from_counts(inter, qc, db.counts[i]), i as u64)
+                })
+                .collect();
+            // Full scan (the bit-sliced fast path when selected).
+            brute.score_all_into(q, &mut scores);
+            assert_eq!(scores.len(), all.len());
+            for (i, s) in scores.iter().enumerate() {
+                assert!(*s == all[i].score, "score_all_into row {i}: {s} vs {}", all[i].score);
+            }
+            let want_brute = topk_reference(&all, k);
+            for (name, got) in [("brute", brute.search(q, k)), ("sharded", sharded.search(q, k))]
+            {
+                assert_eq!(got.len(), want_brute.len(), "{name} k={k} s={shards}");
+                for (a, b) in got.iter().zip(&want_brute) {
+                    assert_eq!((a.id, a.score), (b.id, b.score), "{name} k={k} s={shards}");
+                }
+            }
+            // BitBound: top-k over the Eq. 2 popcount window, scalar-scored.
+            let (lo, hi) = bitbound.bounds(qc);
+            let eligible: Vec<Scored> = all
+                .iter()
+                .filter(|s| {
+                    let c = db.counts[s.id as usize];
+                    c >= lo && c <= hi
+                })
+                .map(|s| Scored::new(s.score, s.id))
+                .collect();
+            let want_bb = topk_reference(&eligible, k);
+            let got_bb = bitbound.search(q, k);
+            assert_eq!(got_bb.len(), want_bb.len(), "bitbound k={k} Sc={cutoff:.2}");
+            for (a, b) in got_bb.iter().zip(&want_bb) {
+                assert_eq!((a.id, a.score), (b.id, b.score), "bitbound k={k} Sc={cutoff:.2}");
+            }
+            // Folding 2-stage: at m = 1 it must equal the BitBound oracle
+            // exactly; at m > 1 every stage-2 hit is rescored with the full
+            // fingerprint, so each score must be the scalar truth for its
+            // row, and each row must sit inside the Eq. 2 window.
+            let got_f = folding.search(q, k);
+            if m == 1 {
+                assert_eq!(got_f.len(), want_bb.len(), "folding m=1 k={k} Sc={cutoff:.2}");
+                for (a, b) in got_f.iter().zip(&want_bb) {
+                    assert_eq!((a.id, a.score), (b.id, b.score), "folding m=1 k={k}");
+                }
+            } else {
+                for s in &got_f {
+                    let row = s.id as usize;
+                    assert!(
+                        s.score == all[row].score,
+                        "folding m={m} row {row}: {} vs scalar {}",
+                        s.score,
+                        all[row].score
+                    );
+                    let c = db.counts[row];
+                    assert!(c >= lo && c <= hi, "folding m={m} row {row} escaped Eq. 2");
+                }
+            }
+        }
+        // Batching is invisible at every B, including the empty batch.
+        let indexes: [&dyn SearchIndex; 4] = [&brute, &bitbound, &folding, &sharded];
+        for bsz in [0usize, 1, 8, 32] {
+            let batch: Vec<&Fingerprint> =
+                (0..bsz).map(|i| &queries[i % queries.len()]).collect();
+            for idx in indexes {
+                let got = idx.search_batch(&batch, k);
+                assert_eq!(got.len(), bsz, "{} B={bsz}", idx.name());
+                for (qi, q) in batch.iter().enumerate() {
+                    let want = idx.search(q, k);
+                    assert_eq!(
+                        got[qi].len(),
+                        want.len(),
+                        "{} B={bsz} k={k} m={m} Sc={cutoff:.2} s={shards} query {qi}",
+                        idx.name()
+                    );
+                    for (a, b) in got[qi].iter().zip(&want) {
+                        assert_eq!(
+                            (a.id, a.score),
+                            (b.id, b.score),
+                            "{} B={bsz} k={k} m={m} Sc={cutoff:.2} s={shards} query {qi}",
+                            idx.name()
+                        );
+                    }
+                }
+            }
+        }
+    });
+}
+
 /// The count-bound early exit ([`BruteForceIndex::search_with_bound`])
 /// changes nothing observable: bit-identical to the plain scan for random
 /// databases, queries (including hard, no-neighbor queries), and k.
