@@ -1,0 +1,84 @@
+//! Repo static analysis (see `docs/static_analysis.md`).
+//!
+//! ```text
+//! molfpga-lint                 # scan rust/src (fixtures excluded); exit 1 on errors
+//! molfpga-lint --root DIR      # scan an explicit tree (CI points this at the fixtures)
+//! molfpga-lint --list-rules    # print the rule catalog
+//! ```
+
+use molfpga::lint;
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn print_help() {
+    println!(
+        "molfpga-lint: repo-specific static analysis (docs/static_analysis.md)\n\
+         \n\
+         USAGE: molfpga-lint [--root DIR] [--list-rules]\n\
+         \n\
+         --root DIR     scan DIR instead of the crate's src/ tree\n\
+         --list-rules   print the rule catalog and exit\n\
+         \n\
+         Exit status: 0 clean, 1 error-severity diagnostics, 2 usage/IO failure."
+    );
+}
+
+fn main() -> ExitCode {
+    let mut args = std::env::args().skip(1);
+    let mut root: Option<PathBuf> = None;
+    let mut list = false;
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--root" => match args.next() {
+                Some(dir) => root = Some(PathBuf::from(dir)),
+                None => {
+                    eprintln!("molfpga-lint: --root needs a directory argument");
+                    return ExitCode::from(2);
+                }
+            },
+            "--list-rules" => list = true,
+            "-h" | "--help" => {
+                print_help();
+                return ExitCode::SUCCESS;
+            }
+            other => {
+                eprintln!("molfpga-lint: unknown argument {other:?} (see --help)");
+                return ExitCode::from(2);
+            }
+        }
+    }
+
+    if list {
+        for rule in lint::rules::registry() {
+            let sev = match rule.severity {
+                lint::Severity::Warning => "warning",
+                lint::Severity::Error => "error",
+            };
+            println!("{:<24} {:<8} {}", rule.name, sev, rule.summary);
+        }
+        return ExitCode::SUCCESS;
+    }
+
+    let root = root.unwrap_or_else(lint::default_src_root);
+    let report = match lint::scan_tree(&root) {
+        Ok(report) => report,
+        Err(e) => {
+            eprintln!("molfpga-lint: scanning {}: {e}", root.display());
+            return ExitCode::from(2);
+        }
+    };
+    for d in &report.diagnostics {
+        println!("{}", d.render());
+    }
+    let errors = report.errors();
+    let warnings = report.diagnostics.len() - errors;
+    println!(
+        "molfpga-lint: {} file(s) scanned, {errors} error(s), {warnings} warning(s)",
+        report.files
+    );
+    if errors > 0 {
+        ExitCode::FAILURE
+    } else {
+        ExitCode::SUCCESS
+    }
+}

@@ -49,26 +49,38 @@ pub struct Metrics {
 /// Reservoir cap — enough for stable p99 at any realistic test length.
 const RESERVOIR: usize = 65_536;
 
+/// Poison-tolerant lock: metrics must survive a panicking holder (the
+/// inner state is a reservoir/registration list — worst case one sample
+/// is half-written, which percentiles tolerate).
+fn lock_unpoisoned<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
 impl Metrics {
     pub fn new() -> Self {
         Self::default()
     }
 
     pub fn record_submit(&self) {
+        // ordering: Relaxed — monotonic counter, read only by the
+        // snapshot gauge loads; no data is published through it.
         self.submitted.fetch_add(1, Ordering::Relaxed);
     }
 
     pub fn record_reject(&self) {
+        // ordering: Relaxed — monotonic counter (see record_submit).
         self.rejected.fetch_add(1, Ordering::Relaxed);
     }
 
     pub fn record_error(&self) {
+        // ordering: Relaxed — monotonic counter (see record_submit).
         self.errors.fetch_add(1, Ordering::Relaxed);
     }
 
     pub fn record_complete(&self, latency: Duration) {
+        // ordering: Relaxed — monotonic counter (see record_submit).
         self.completed.fetch_add(1, Ordering::Relaxed);
-        let mut r = self.latencies.lock().unwrap();
+        let mut r = lock_unpoisoned(&self.latencies);
         r.seen += 1;
         if r.samples.len() < RESERVOIR {
             r.samples.push(latency.as_secs_f64());
@@ -88,13 +100,15 @@ impl Metrics {
     /// (e.g. "exact" / "hnsw"); they ride every subsequent snapshot and
     /// the `STATS` server reply.
     pub fn register_ingest(&self, label: &'static str, stats: Arc<IngestStats>) {
-        self.ingest.lock().unwrap().push((label, stats));
+        lock_unpoisoned(&self.ingest).push((label, stats));
     }
 
     /// Snapshot of the current state.
     pub fn snapshot(&self) -> MetricsSnapshot {
-        let mut lat = self.latencies.lock().unwrap().samples.clone();
-        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut lat = lock_unpoisoned(&self.latencies).samples.clone();
+        // total_cmp: samples are finite, but a total order keeps the sort
+        // panic-free by construction (partial_cmp().unwrap() was not).
+        lat.sort_by(f64::total_cmp);
         let pct = |p: f64| -> f64 {
             if lat.is_empty() {
                 0.0
@@ -102,13 +116,13 @@ impl Metrics {
                 crate::util::stats::percentile(&lat, p)
             }
         };
-        let ingest = self
-            .ingest
-            .lock()
-            .unwrap()
+        let ingest = lock_unpoisoned(&self.ingest)
             .iter()
             .map(|(label, st)| IngestGauges {
                 label,
+                // ordering: Relaxed — monitoring gauges; the writer side
+                // (ingest::state::publish) stores Relaxed for the same
+                // reason, and a stale read only staleness-skews a report.
                 memtable_rows: st.memtable_rows.load(Ordering::Relaxed),
                 sealed_segments: st.sealed_segments.load(Ordering::Relaxed),
                 sealed_rows: st.sealed_rows.load(Ordering::Relaxed),
@@ -120,6 +134,9 @@ impl Metrics {
             })
             .collect();
         MetricsSnapshot {
+            // ordering: Relaxed — counter reads for a point-in-time
+            // report; no acquire pairing needed (nothing is read through
+            // the counters).
             submitted: self.submitted.load(Ordering::Relaxed),
             completed: self.completed.load(Ordering::Relaxed),
             rejected: self.rejected.load(Ordering::Relaxed),

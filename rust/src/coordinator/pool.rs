@@ -140,6 +140,9 @@ impl EnginePool {
                                                 latency,
                                                 backend: backend.name(),
                                             });
+                                            // ordering: Relaxed — advisory
+                                            // load gauge; the mpsc channels
+                                            // carry the real happens-before.
                                             inflight.fetch_sub(1, Ordering::Relaxed);
                                         }
                                     }
@@ -150,6 +153,8 @@ impl EnginePool {
                                                 "[{name}-worker-{wi}] query {} failed: {e:#}",
                                                 job.batch[qi].id
                                             );
+                                            // ordering: Relaxed — advisory
+                                            // load gauge (see above).
                                             inflight.fetch_sub(1, Ordering::Relaxed);
                                         }
                                     }
@@ -169,6 +174,8 @@ impl EnginePool {
 
     /// Queries queued or executing.
     pub fn inflight(&self) -> usize {
+        // ordering: Relaxed — advisory load gauge for batcher/router
+        // backpressure decisions; a momentarily stale count is fine.
         self.inflight.load(Ordering::Relaxed)
     }
 
@@ -180,10 +187,13 @@ impl EnginePool {
         for _ in 0..n {
             self.metrics.record_submit();
         }
+        // ordering: Relaxed — advisory load gauge; the sync_channel send
+        // below is the synchronization edge to the worker.
         self.inflight.fetch_add(n, Ordering::Relaxed);
         match self.tx.try_send(Job { batch, respond: rtx }) {
             Ok(()) => Ok(rrx),
             Err(TrySendError::Full(job)) | Err(TrySendError::Disconnected(job)) => {
+                // ordering: Relaxed — undo the advisory gauge bump.
                 self.inflight.fetch_sub(n, Ordering::Relaxed);
                 for _ in 0..n {
                     self.metrics.record_reject();
@@ -378,6 +388,9 @@ impl ShardedEnginePool {
                                     // Decrement before sending so a caller
                                     // that observed the response also
                                     // observes the query as retired.
+                                    // ordering: Relaxed — advisory load
+                                    // gauge; the respond channel carries
+                                    // the real happens-before.
                                     inflight.fetch_sub(1, Ordering::Relaxed);
                                     if fail {
                                         continue; // error already recorded
@@ -409,6 +422,7 @@ impl ShardedEnginePool {
     }
 
     pub fn inflight(&self) -> usize {
+        // ordering: Relaxed — advisory load gauge (see EnginePool).
         self.inflight.load(Ordering::Relaxed)
     }
 
@@ -420,6 +434,8 @@ impl ShardedEnginePool {
         for _ in 0..n {
             self.metrics.record_submit();
         }
+        // ordering: Relaxed — advisory load gauge; the shard sync_channel
+        // sends below are the synchronization edges to the workers.
         self.inflight.fetch_add(n, Ordering::Relaxed);
         let merges = batch.iter().map(|q| ShardMerge::new(q.k.max(1))).collect();
         let job = Arc::new(ShardJob {
@@ -435,6 +451,7 @@ impl ShardedEnginePool {
         for tx in &self.txs {
             if tx.try_send(job.clone()).is_err() {
                 job.state.lock().unwrap().cancelled = true;
+                // ordering: Relaxed — undo the advisory gauge bump.
                 self.inflight.fetch_sub(n, Ordering::Relaxed);
                 for _ in 0..n {
                     self.metrics.record_reject();

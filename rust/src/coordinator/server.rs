@@ -76,6 +76,7 @@ pub fn fingerprint_to_hex(fp: &Fingerprint) -> String {
                 v |= 1 << b;
             }
         }
+        // lint: allow(panic-free-serving, reason = "v is a 4-bit accumulator (v < 16), always a valid hex digit")
         s.push(char::from_digit(v, 16).unwrap());
     }
     s
@@ -120,6 +121,7 @@ impl Server {
 
     /// Enable the write verbs (`ADD`/`ADDFP`/`DEL`) through `ingest`.
     pub fn with_ingest(mut self, ingest: Arc<WritePath>) -> Self {
+        // lint: allow(panic-free-serving, reason = "builder runs before serve(); no connection exists to take down")
         let ctx = Arc::get_mut(&mut self.ctx).expect("configure before serving");
         ctx.ingest = Some(ingest);
         self
@@ -129,6 +131,7 @@ impl Server {
     /// [`DEFAULT_REPLY_TIMEOUT`]). A wedged pool then costs a client this
     /// long, not a minute.
     pub fn with_reply_timeout(mut self, reply_timeout: Duration) -> Self {
+        // lint: allow(panic-free-serving, reason = "builder runs before serve(); no connection exists to take down")
         let ctx = Arc::get_mut(&mut self.ctx).expect("configure before serving");
         ctx.reply_timeout = reply_timeout;
         self
@@ -142,6 +145,7 @@ impl Server {
     /// reaped in the accept loop (regression: they used to accumulate
     /// until shutdown — unbounded memory growth under churny traffic).
     pub fn tracked_connections(&self) -> usize {
+        // ordering: Relaxed — diagnostics gauge; readers only poll it.
         self.live_conns.load(Ordering::Relaxed)
     }
 
@@ -157,6 +161,8 @@ impl Server {
         listener.set_nonblocking(true)?;
         on_bound(listener.local_addr()?);
         let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
+        // ordering: Relaxed — stop is a quiescent shutdown flag; no data
+        // is read through it and the accept loop re-polls within 5ms.
         while !self.stop.load(Ordering::Relaxed) {
             match listener.accept() {
                 Ok((stream, _peer)) => {
@@ -164,15 +170,19 @@ impl Server {
                     // churny traffic can't grow `conns` without bound.
                     conns.retain(|h| !h.is_finished());
                     let ctx = self.ctx.clone();
+                    // ordering: Relaxed — block allocation needs only
+                    // atomicity (disjoint ranges), not ordering.
                     let id_base = self.next_id.fetch_add(QID_BLOCK, Ordering::Relaxed);
                     let stop = self.stop.clone();
                     conns.push(std::thread::spawn(move || {
                         let _ = handle_conn(stream, ctx, id_base, stop);
                     }));
+                    // ordering: Relaxed — diagnostics gauge.
                     self.live_conns.store(conns.len(), Ordering::Relaxed);
                 }
                 Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                     conns.retain(|h| !h.is_finished());
+                    // ordering: Relaxed — diagnostics gauge.
                     self.live_conns.store(conns.len(), Ordering::Relaxed);
                     std::thread::sleep(std::time::Duration::from_millis(5));
                 }
@@ -198,6 +208,8 @@ fn handle_conn(
     let mut line = String::new();
     let mut served: u64 = 0;
     loop {
+        // ordering: Relaxed — quiescent shutdown flag; the 200ms read
+        // timeout bounds how stale this poll can be.
         if stop.load(Ordering::Relaxed) {
             return Ok(());
         }
@@ -213,7 +225,17 @@ fn handle_conn(
             }
             Err(e) => return Err(e),
         }
-        let reply = dispatch_line(line.trim(), &ctx, id_base, &mut served);
+        // Panic fence: a bug in one request handler must cost that client
+        // one ERR reply, not the connection (and with it every later
+        // request on it). The mutated `served` counter stays consistent —
+        // dispatch_line bumps it before any work that could panic.
+        let reply = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            dispatch_line(line.trim(), &ctx, id_base, &mut served)
+        }))
+        .unwrap_or_else(|_| {
+            ctx.router.metrics().record_error();
+            Some("ERR internal handler panic (see server log)".into())
+        });
         match reply {
             Some(text) => {
                 writer.write_all(text.as_bytes())?;
@@ -308,6 +330,12 @@ fn dispatch_line(line: &str, ctx: &ConnCtx, id_base: u64, served: &mut u64) -> O
                 Some(format!("ERR unknown or already-deleted id {id}"))
             }
         }
+        // Test-only fault injection: proves the catch_unwind fence in
+        // handle_conn answers a panicking handler with ERR and keeps the
+        // connection alive (handler_panic_answers_err_and_connection_survives).
+        #[cfg(test)]
+        // lint: allow(panic-free-serving, reason = "test-only fault-injection verb behind cfg(test)")
+        Some("PANIC") => panic!("injected handler panic"),
         Some(other) => Some(format!("ERR unknown command {other:?}")),
         None => Some("ERR empty".into()),
     }
@@ -615,6 +643,53 @@ mod tests {
         }
         // The connection keeps serving reads afterwards.
         assert_eq!(c.request("PING").unwrap(), "PONG");
+        stop.store(true, Ordering::Relaxed);
+        let _ = handle.join();
+    }
+
+    #[test]
+    fn handler_panic_answers_err_and_connection_survives() {
+        // Regression for the panic fence in handle_conn: before it, a
+        // panicking handler killed the connection thread mid-protocol —
+        // the client saw a dead socket instead of an ERR, and every later
+        // request on that connection was lost.
+        let db = Arc::new(Database::synthesize(300, &ChemblModel::default(), 31));
+        let metrics = Arc::new(Metrics::new());
+        let dbc = db.clone();
+        let ex = Arc::new(EnginePool::new("panic-ex", 1, 8, metrics.clone(), move |_| {
+            NativeExhaustive::factory(dbc.clone(), 1, 0.0)
+        }));
+        let graph = NativeHnsw::build_graph(&db, 6, 32, 3);
+        let dbc2 = db.clone();
+        let ap = Arc::new(EnginePool::new("panic-ap", 1, 8, metrics.clone(), move |_| {
+            NativeHnsw::factory(dbc2.clone(), graph.clone(), 32)
+        }));
+        let router = Arc::new(Router::new(
+            ex,
+            ap,
+            BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+            metrics.clone(),
+        ));
+        let server = Arc::new(Server::new(router));
+        let stop = server.stop_handle();
+        let (addr, handle) = spawn(server);
+        let mut c = Client::connect(addr).unwrap();
+        let errors_before = metrics.snapshot().errors;
+        // The injected panic comes back as an ERR reply on the same
+        // connection…
+        let reply = c.request("PANIC").unwrap();
+        assert!(
+            reply.starts_with("ERR internal handler panic"),
+            "panic must surface as ERR, got: {reply}"
+        );
+        // …is counted as an error…
+        assert_eq!(metrics.snapshot().errors, errors_before + 1);
+        // …and the connection keeps serving afterwards.
+        assert_eq!(c.request("PING").unwrap(), "PONG");
+        let target = 42usize;
+        let hits = c.search(&db.fps[target], 3, "exact").unwrap();
+        assert_eq!(hits[0].0, target as u64, "search still exact after a handler panic");
+        assert_eq!(c.request("QUIT").ok(), Some(String::new()));
         stop.store(true, Ordering::Relaxed);
         let _ = handle.join();
     }

@@ -176,6 +176,9 @@ impl<B: BaseOps> MutableCore<B> {
     /// Swap in `snap` and refresh the gauges. Caller holds the writer lock.
     fn publish(&self, snap: Snapshot<B>) {
         let st = &self.stats;
+        // ordering: Relaxed — monitoring gauges with no pairing load; the
+        // snapshot itself is published via the Mutex below, which is the
+        // real synchronization edge. Stale gauge reads are acceptable.
         st.memtable_rows.store(snap.mem.rows() as u64, Ordering::Relaxed);
         st.sealed_segments.store(snap.sealed.len() as u64, Ordering::Relaxed);
         st.sealed_rows
@@ -196,8 +199,11 @@ impl<B: BaseOps> MutableCore<B> {
         if mem.rows() >= self.cfg.seal_rows.max(1) {
             sealed.push(Arc::new(SealedSegment::from_memtable(&mem)));
             mem = Memtable::empty();
+            // ordering: Relaxed — monotonic event counter, no pairing
+            // load; exactness is guaranteed by the writer lock held here.
             self.stats.seals.fetch_add(1, Ordering::Relaxed);
         }
+        // ordering: Relaxed — monotonic event counter (see seals above).
         self.stats.adds.fetch_add(1, Ordering::Relaxed);
         self.publish(Snapshot {
             epoch: cur.epoch + 1,
@@ -231,6 +237,8 @@ impl<B: BaseOps> MutableCore<B> {
         }
         let mut tombs: HashSet<u64> = cur.tombstones.as_ref().clone();
         tombs.insert(id);
+        // ordering: Relaxed — monotonic event counter, no pairing load;
+        // exactness is guaranteed by the writer lock held here.
         self.stats.deletes.fetch_add(1, Ordering::Relaxed);
         self.publish(Snapshot {
             epoch: cur.epoch + 1,
@@ -279,6 +287,8 @@ impl<B: BaseOps> MutableCore<B> {
         // target a physically present base row (zero after a purging
         // rebuild; the HNSW extend path keeps its dead rows in place).
         let base_dead = tombs.iter().filter(|&&t| new_base.contains(t)).count();
+        // ordering: Relaxed — monotonic event counter, no pairing load;
+        // exactness is guaranteed by the writer lock held here.
         self.stats.compactions.fetch_add(1, Ordering::Relaxed);
         self.publish(Snapshot {
             epoch: cur.epoch + 1,
@@ -322,7 +332,11 @@ impl<B: BaseOps> MutableCore<B> {
         let handle = std::thread::Builder::new()
             .name(format!("{name}-compactor"))
             .spawn(move || loop {
-                if stop_t.load(Ordering::Relaxed) {
+                // ordering: Acquire — pairs with the Release stores in
+                // stop_compactor()/Drop so everything the stopping thread
+                // did before raising the flag is visible here before the
+                // loop exits.
+                if stop_t.load(Ordering::Acquire) {
                     return;
                 }
                 let progressed = match weak.upgrade() {
@@ -343,7 +357,10 @@ impl<B: BaseOps> MutableCore<B> {
     pub fn stop_compactor(&self) {
         let taken = self.compactor.lock().unwrap().take();
         if let Some((stop, handle)) = taken {
-            stop.store(true, Ordering::Relaxed);
+            // ordering: Release — pairs with the Acquire load in the
+            // compactor loop. join() below also synchronizes, but the
+            // flag alone must be sufficient (Drop has no join).
+            stop.store(true, Ordering::Release);
             let _ = handle.join();
         }
     }
@@ -356,7 +373,9 @@ impl<B> Drop for MutableCore<B> {
         // Tolerate poisoning — drop must never double-panic.
         if let Ok(slot) = self.compactor.lock() {
             if let Some((stop, _)) = slot.as_ref() {
-                stop.store(true, Ordering::Relaxed);
+                // ordering: Release — pairs with the Acquire load in the
+                // compactor loop (no join here; the flag is the only edge).
+                stop.store(true, Ordering::Release);
             }
         }
     }

@@ -28,10 +28,15 @@
 pub mod scalar;
 pub mod sliced;
 
+// The SIMD backends are the crate's only `#[allow(unsafe_code)]` scopes
+// (the crate root carries `#![deny(unsafe_code)]`): every function in
+// them is `#[target_feature]`-gated and documents its safety contract.
 #[cfg(target_arch = "x86_64")]
+#[allow(unsafe_code)]
 pub mod x86;
 
 #[cfg(target_arch = "aarch64")]
+#[allow(unsafe_code)]
 pub mod neon;
 
 use std::sync::OnceLock;
@@ -232,17 +237,29 @@ impl RowKernel {
     }
 }
 
+// Dispatchers are the only unsafe call sites outside the backend modules:
+// every arm upholds the callee's `#[target_feature]` contract because a
+// backend value only reaches here after `is_available()` returned true —
+// at `selection()` resolution, `RowKernel::forced`, or
+// `intersection_count_with`'s assert.
 #[inline]
+#[allow(unsafe_code)]
 fn row_dispatch(backend: Backend, a: &[u64], b: &[u64]) -> u32 {
     match backend {
         #[cfg(target_arch = "x86_64")]
-        // SAFETY: availability was verified at selection/construction time.
+        // SAFETY: Popcnt is only selected after is_available() verified
+        // the `popcnt` feature on this host.
         Backend::Popcnt => unsafe { x86::row_popcnt(a, b) },
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: Avx2 selection requires `avx2` + `popcnt` detection.
         Backend::Avx2 => unsafe { x86::row_avx2(a, b) },
         #[cfg(molfpga_avx512)]
+        // SAFETY: Avx512 selection requires `avx512f` + `avx512vpopcntdq`
+        // + `popcnt` detection.
         Backend::Avx512 => unsafe { x86::row_avx512(a, b) },
         #[cfg(target_arch = "aarch64")]
+        // SAFETY: Neon is only selected after is_available() verified the
+        // `neon` feature on this host.
         Backend::Neon => unsafe { neon::row_neon(a, b) },
         _ => scalar::row(a, b),
     }
@@ -252,6 +269,7 @@ fn row_dispatch(backend: Backend, a: &[u64], b: &[u64]) -> u32 {
 /// for the [`sliced::BLOCK`] rows in `block`. `block` is laid out
 /// word-major, lane-minor (see [`sliced::BitSliced`]).
 #[inline]
+#[allow(unsafe_code)]
 pub(crate) fn block_dispatch(
     backend: Backend,
     query: &[u64],
@@ -260,13 +278,19 @@ pub(crate) fn block_dispatch(
 ) {
     match backend {
         #[cfg(target_arch = "x86_64")]
-        // SAFETY: availability was verified at selection/construction time.
+        // SAFETY: Popcnt is only selected after is_available() verified
+        // the `popcnt` feature on this host (see row_dispatch).
         Backend::Popcnt => unsafe { x86::block_popcnt(query, block, out) },
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: Avx2 selection requires `avx2` + `popcnt` detection.
         Backend::Avx2 => unsafe { x86::block_avx2(query, block, out) },
         #[cfg(molfpga_avx512)]
+        // SAFETY: Avx512 selection requires `avx512f` + `avx512vpopcntdq`
+        // + `popcnt` detection.
         Backend::Avx512 => unsafe { x86::block_avx512(query, block, out) },
         #[cfg(target_arch = "aarch64")]
+        // SAFETY: Neon is only selected after is_available() verified the
+        // `neon` feature on this host.
         Backend::Neon => unsafe { neon::block_neon(query, block, out) },
         _ => scalar::block(query, block, out),
     }

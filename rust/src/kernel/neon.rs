@@ -11,6 +11,10 @@ use super::sliced::BLOCK;
 use std::arch::aarch64::*;
 
 /// Popcount of a 128-bit vector into two u64 lane counts.
+///
+/// # Safety
+/// Host must support `neon`; only called from `#[target_feature(enable =
+/// "neon")]` kernels, which inherit that guarantee from their callers.
 #[inline]
 unsafe fn popcount_u64x2(v: uint64x2_t) -> uint64x2_t {
     let bytes = vcntq_u8(vreinterpretq_u8_u64(v));

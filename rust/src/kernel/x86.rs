@@ -58,6 +58,10 @@ pub unsafe fn block_popcnt(query: &[u64], block: &[u64], out: &mut [u32; BLOCK])
 /// Muła nibble-lookup method: split each byte into nibbles, look up their
 /// popcounts in a shuffled table, then horizontally sum bytes into u64
 /// lanes with SAD against zero.
+///
+/// # Safety
+/// Host must support `avx2`; only called from `#[target_feature(enable =
+/// "avx2,...")]` kernels, which inherit that guarantee from their callers.
 #[cfg(target_arch = "x86_64")]
 #[inline]
 unsafe fn popcount_epi64_avx2(v: __m256i) -> __m256i {

@@ -37,7 +37,25 @@
 //! | [`coordinator`] | serving layer: router, scan-sharing batcher (`serve --max-batch`, docs/batching.md), engine pool, metrics |
 //! | [`baselines`] | CPU brute-force / BitBound / HNSW and GPU model comparators |
 //! | [`exp`] | shared experiment harnesses behind the figure/table drivers |
+//! | [`lint`] | repo-specific static analysis (`molfpga-lint` binary): unsafe placement, ad-hoc similarity, atomic-ordering audit, panic-free serving, deterministic simulation (docs/static_analysis.md) |
 //! | [`util`] | PRNG, CLI parsing, stats, mini-bench, JSON writer, property-test helpers |
+
+// `unsafe` is a kernel-only privilege: the SIMD backends (`kernel::x86`,
+// `kernel::neon`) and the two dispatch functions in `kernel` carry scoped
+// `#[allow(unsafe_code)]`; everything else in the crate is compiler-
+// enforced safe. `molfpga-lint` checks the same contract (plus SAFETY-
+// comment coverage) as a source-level pass — docs/static_analysis.md.
+#![deny(unsafe_code)]
+// Curated restriction/pedantic subset, promoted to errors by CI's
+// `-D warnings` clippy invocation.
+#![warn(
+    clippy::dbg_macro,
+    clippy::todo,
+    clippy::unimplemented,
+    clippy::mem_forget,
+    clippy::lossy_float_literal,
+    clippy::rest_pat_in_fully_bound_structs
+)]
 
 pub mod baselines;
 pub mod coordinator;
@@ -48,6 +66,7 @@ pub mod hwmodel;
 pub mod index;
 pub mod ingest;
 pub mod kernel;
+pub mod lint;
 pub mod runtime;
 pub mod shard;
 pub mod simulator;

@@ -1,0 +1,12 @@
+//! Lint fixture (never compiled): panic paths in a request handler.
+//! `panic-free-serving` must flag the unwrap, the expect, the literal
+//! subscript, and the panic!.
+
+pub fn reply(parts: &[&str]) -> String {
+    let k: usize = parts[0].parse().unwrap();
+    let mode = parts.get(1).expect("mode argument");
+    if k == 0 {
+        panic!("zero k");
+    }
+    format!("OK {k} {mode}")
+}

@@ -1,0 +1,11 @@
+//! Lint fixture (never compiled): Tanimoto recomputed by hand instead of
+//! calling `fingerprint::packed::tanimoto_from_counts`. `adhoc-tanimoto`
+//! must flag both the local definition and the inline division.
+
+pub fn tanimoto_local(inter: u32, pa: u32, pb: u32) -> f64 {
+    inter as f64 / (pa + pb - inter) as f64
+}
+
+pub fn score_inline(intersection: u32, union_count: u32) -> f64 {
+    intersection as f64 / union_count as f64
+}

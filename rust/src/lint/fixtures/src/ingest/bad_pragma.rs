@@ -1,0 +1,10 @@
+//! Lint fixture (never compiled): a suppression pragma without a reason.
+//! `lint-pragma` must flag the pragma itself, and the reasonless pragma
+//! must NOT suppress the underlying `atomic-ordering-audit` diagnostic.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+pub fn bump(counter: &AtomicU64) -> u64 {
+    // lint: allow(atomic-ordering-audit)
+    counter.fetch_add(1, Ordering::Relaxed)
+}

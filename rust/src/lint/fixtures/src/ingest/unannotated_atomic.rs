@@ -1,0 +1,8 @@
+//! Lint fixture (never compiled): an atomic access with no `// ordering:`
+//! pairing note. `atomic-ordering-audit` must flag it.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+pub fn bump(counter: &AtomicU64) -> u64 {
+    counter.fetch_add(1, Ordering::Relaxed)
+}

@@ -1,0 +1,7 @@
+//! Lint fixture (never compiled): an unsafe fn inside kernel/ with no
+//! `// SAFETY:` or `/// # Safety` justification. `unsafe-outside-kernel`
+//! must flag it.
+
+pub unsafe fn row_undocumented(a: *const u64) -> u64 {
+    *a
+}

@@ -1,0 +1,6 @@
+//! Lint fixture (never compiled): `unsafe` outside rust/src/kernel/.
+//! `unsafe-outside-kernel` must flag the block below.
+
+pub fn sneaky_first_word(v: &[u64]) -> u64 {
+    unsafe { *v.as_ptr() }
+}

@@ -1,0 +1,15 @@
+//! Lint fixture (never compiled): wall-clock reads inside the cycle
+//! simulator. `nondeterministic-sim` must flag both functions.
+
+pub fn now_nanos() -> u128 {
+    let t = std::time::Instant::now();
+    t.elapsed().as_nanos()
+}
+
+pub fn wall_seconds() -> u64 {
+    use std::time::SystemTime;
+    SystemTime::now()
+        .duration_since(SystemTime::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0)
+}

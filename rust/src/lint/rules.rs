@@ -1,0 +1,298 @@
+//! The rule registry: each contract the repo enforces statically.
+//!
+//! Rules are plain functions over a scanned [`SourceFile`]; scoping is by
+//! repo-relative path prefix. All five ship at `Error` severity — the
+//! contracts they encode (exactness, memory safety, panic-free serving,
+//! deterministic simulation) are the repo's core promises, not style.
+
+use super::{has_word, has_word_prefix, justified_above, Diagnostic, Severity, SourceFile};
+
+pub const UNSAFE_OUTSIDE_KERNEL: &str = "unsafe-outside-kernel";
+pub const ADHOC_TANIMOTO: &str = "adhoc-tanimoto";
+pub const ATOMIC_ORDERING_AUDIT: &str = "atomic-ordering-audit";
+pub const PANIC_FREE_SERVING: &str = "panic-free-serving";
+pub const NONDETERMINISTIC_SIM: &str = "nondeterministic-sim";
+
+/// One registered rule.
+pub struct Rule {
+    pub name: &'static str,
+    pub severity: Severity,
+    pub summary: &'static str,
+    pub check: fn(&SourceFile, &mut Vec<Diagnostic>),
+}
+
+/// Every rule, in catalog order (see docs/static_analysis.md).
+pub fn registry() -> Vec<Rule> {
+    vec![
+        Rule {
+            name: UNSAFE_OUTSIDE_KERNEL,
+            severity: Severity::Error,
+            summary: "`unsafe` only inside kernel/, and always under a SAFETY justification",
+            check: check_unsafe_outside_kernel,
+        },
+        Rule {
+            name: ADHOC_TANIMOTO,
+            severity: Severity::Error,
+            summary: "similarity math funnels through fingerprint::packed::tanimoto_from_counts",
+            check: check_adhoc_tanimoto,
+        },
+        Rule {
+            name: ATOMIC_ORDERING_AUDIT,
+            severity: Severity::Error,
+            summary: "atomics in the concurrency core carry an `ordering:` pairing note",
+            check: check_atomic_ordering_audit,
+        },
+        Rule {
+            name: PANIC_FREE_SERVING,
+            severity: Severity::Error,
+            summary: "request-handling paths answer ERR instead of panicking",
+            check: check_panic_free_serving,
+        },
+        Rule {
+            name: NONDETERMINISTIC_SIM,
+            severity: Severity::Error,
+            summary: "cycle models derive time from cycles, never wall clocks",
+            check: check_nondeterministic_sim,
+        },
+    ]
+}
+
+/// Is `name` a rule (or the pragma pseudo-rule) this pass knows about?
+pub fn is_known(name: &str) -> bool {
+    name == super::PRAGMA_RULE || registry().iter().any(|r| r.name == name)
+}
+
+fn diag(
+    rule: &'static str,
+    file: &SourceFile,
+    idx: usize,
+    message: String,
+    out: &mut Vec<Diagnostic>,
+) {
+    out.push(Diagnostic {
+        rule,
+        file: file.rel.clone(),
+        line: idx + 1,
+        message,
+        severity: Severity::Error,
+    });
+}
+
+fn in_scope_dirs(rel: &str, scopes: &[&str]) -> bool {
+    scopes.iter().any(|s| rel.starts_with(s))
+}
+
+/// Rule 1: the `unsafe` keyword is a kernel-only privilege, and every
+/// kernel site must sit under a `// SAFETY:` comment or a `/// # Safety`
+/// doc section (same line or the contiguous block directly above).
+/// `#![deny(unsafe_code)]` at the crate root enforces the placement half
+/// in depth; this rule adds the justification half.
+fn check_unsafe_outside_kernel(file: &SourceFile, out: &mut Vec<Diagnostic>) {
+    let in_kernel = file.rel.starts_with("kernel/");
+    for (i, line) in file.lines.iter().enumerate() {
+        if line.in_test || !has_word(&line.code, "unsafe") {
+            continue;
+        }
+        if !in_kernel {
+            diag(
+                UNSAFE_OUTSIDE_KERNEL,
+                file,
+                i,
+                "`unsafe` outside rust/src/kernel/ — move the code behind a kernel API or \
+                 make it safe"
+                    .to_string(),
+                out,
+            );
+        } else if !justified_above(file, i, &["SAFETY:", "# Safety"], 10) {
+            diag(
+                UNSAFE_OUTSIDE_KERNEL,
+                file,
+                i,
+                "kernel unsafe site without an adjacent `// SAFETY:` (or `/// # Safety`) \
+                 justification"
+                    .to_string(),
+                out,
+            );
+        }
+    }
+}
+
+/// Rule 2: no hand-rolled Tanimoto on the scan/merge/ingest paths. Two
+/// detectors: a local `fn tanimoto*` definition, or a float division on a
+/// line handling intersection/union/overlap counts. Exactness depends on
+/// every backend computing the score with the *same* float expression —
+/// `fingerprint::packed::tanimoto_from_counts` is that single expression.
+fn check_adhoc_tanimoto(file: &SourceFile, out: &mut Vec<Diagnostic>) {
+    const SCOPES: &[&str] = &["index/", "topk/", "ingest/", "shard/", "kernel/"];
+    if !in_scope_dirs(&file.rel, SCOPES) {
+        return;
+    }
+    for (i, line) in file.lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        let code = &line.code;
+        if code.contains("fn tanimoto") {
+            diag(
+                ADHOC_TANIMOTO,
+                file,
+                i,
+                "local Tanimoto definition — all similarity must funnel through \
+                 fingerprint::packed::tanimoto_from_counts"
+                    .to_string(),
+                out,
+            );
+        }
+        let floaty = code.contains("as f64") || code.contains("as f32");
+        let county = has_word_prefix(code, "inter")
+            || has_word_prefix(code, "union")
+            || has_word_prefix(code, "overlap");
+        if floaty && county && code.contains('/') {
+            diag(
+                ADHOC_TANIMOTO,
+                file,
+                i,
+                "float division over intersection/union counts — call \
+                 fingerprint::packed::tanimoto_from_counts so scores stay bit-identical \
+                 across backends"
+                    .to_string(),
+                out,
+            );
+        }
+    }
+}
+
+/// Rule 3: every atomic memory-ordering use in the ingest/coordinator
+/// concurrency core (plus the parallel HNSW build) documents its pairing
+/// with an `// ordering:` comment heading the statement block.
+fn check_atomic_ordering_audit(file: &SourceFile, out: &mut Vec<Diagnostic>) {
+    const ORDERINGS: &[&str] = &[
+        "Ordering::Relaxed",
+        "Ordering::Acquire",
+        "Ordering::Release",
+        "Ordering::AcqRel",
+        "Ordering::SeqCst",
+    ];
+    let scoped = file.rel.starts_with("ingest/")
+        || file.rel.starts_with("coordinator/")
+        || file.rel == "hnsw/parallel.rs";
+    if !scoped {
+        return;
+    }
+    for (i, line) in file.lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        if ORDERINGS.iter().any(|o| line.code.contains(o))
+            && !justified_above(file, i, &["ordering:"], 12)
+        {
+            diag(
+                ATOMIC_ORDERING_AUDIT,
+                file,
+                i,
+                "atomic ordering without an adjacent `// ordering:` note — document what \
+                 this pairs with (or why Relaxed is enough)"
+                    .to_string(),
+                out,
+            );
+        }
+    }
+}
+
+/// Fixed-offset indexing like `parts[0]` / `hits[2]` — panics on
+/// malformed input. Only literal numeric subscripts count; range slices
+/// and variable subscripts are left to review.
+fn has_fixed_index(code: &str) -> bool {
+    let b: Vec<char> = code.chars().collect();
+    let mut i = 1;
+    while i < b.len() {
+        let prev = b[i - 1];
+        let indexable = prev == ')' || prev == ']' || prev == '_' || prev.is_ascii_alphanumeric();
+        if b[i] == '[' && indexable {
+            let mut j = i + 1;
+            let mut digits = 0;
+            while j < b.len() && b[j].is_ascii_digit() {
+                digits += 1;
+                j += 1;
+            }
+            if digits > 0 && j < b.len() && b[j] == ']' {
+                return true;
+            }
+        }
+        i += 1;
+    }
+    false
+}
+
+/// Rule 4: the request-handling files answer `ERR <reason>` — they never
+/// unwrap, expect, panic, or index with a literal subscript outside
+/// tests. A justified pragma marks the few total-by-construction sites.
+fn check_panic_free_serving(file: &SourceFile, out: &mut Vec<Diagnostic>) {
+    const FILES: &[&str] = &["coordinator/server.rs", "coordinator/router.rs", "runtime/client.rs"];
+    const PATTERNS: &[&str] =
+        &[".unwrap()", ".expect(", "panic!(", "unreachable!(", "todo!(", "unimplemented!("];
+    if !FILES.contains(&file.rel.as_str()) {
+        return;
+    }
+    for (i, line) in file.lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        for pat in PATTERNS {
+            if line.code.contains(pat) {
+                diag(
+                    PANIC_FREE_SERVING,
+                    file,
+                    i,
+                    format!(
+                        "`{pat}` on a request-handling path — answer `ERR <reason>` and keep \
+                         the worker alive, or add a reasoned pragma for a \
+                         total-by-construction site"
+                    ),
+                    out,
+                );
+            }
+        }
+        if has_fixed_index(&line.code) {
+            diag(
+                PANIC_FREE_SERVING,
+                file,
+                i,
+                "fixed-offset indexing can panic on malformed input — use `.get(..)` and \
+                 answer `ERR <reason>`"
+                    .to_string(),
+                out,
+            );
+        }
+    }
+}
+
+/// Rule 5: the cycle simulator and the hardware model must stay
+/// deterministic — identical inputs produce identical cycle counts, so
+/// figures regenerate reproducibly. Wall clocks and ambient RNGs are the
+/// two ways nondeterminism sneaks in.
+fn check_nondeterministic_sim(file: &SourceFile, out: &mut Vec<Diagnostic>) {
+    const SCOPES: &[&str] = &["simulator/", "hwmodel/"];
+    if !in_scope_dirs(&file.rel, SCOPES) {
+        return;
+    }
+    for (i, line) in file.lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        let wall_clock = has_word(&line.code, "Instant") || has_word(&line.code, "SystemTime");
+        let ambient_rng =
+            line.code.contains("thread_rng") || line.code.contains("rand::random");
+        if wall_clock || ambient_rng {
+            diag(
+                NONDETERMINISTIC_SIM,
+                file,
+                i,
+                "wall-clock/ambient-RNG use inside a cycle model — derive time from \
+                 simulated cycles and randomness from a seeded PRNG"
+                    .to_string(),
+                out,
+            );
+        }
+    }
+}

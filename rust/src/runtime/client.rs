@@ -34,10 +34,17 @@ impl PjRt {
         &self.client
     }
 
+    /// Poison-tolerant cache lock: a panic elsewhere must not wedge the
+    /// serving path — the map is always usable (worst case one insert
+    /// was lost, costing a recompile).
+    fn cache_lock(&self) -> std::sync::MutexGuard<'_, HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>> {
+        self.cache.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
     /// Load + compile an HLO text file, memoized by path.
     pub fn load(&self, path: &Path) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
         let key = path.to_string_lossy().into_owned();
-        if let Some(exe) = self.cache.lock().unwrap().get(&key) {
+        if let Some(exe) = self.cache_lock().get(&key) {
             return Ok(exe.clone());
         }
         let proto = xla::HloModuleProto::from_text_file(path)
@@ -48,7 +55,7 @@ impl PjRt {
             .compile(&comp)
             .with_context(|| format!("compiling {}", path.display()))?;
         let exe = std::sync::Arc::new(exe);
-        self.cache.lock().unwrap().insert(key, exe.clone());
+        self.cache_lock().insert(key, exe.clone());
         Ok(exe)
     }
 
@@ -61,7 +68,7 @@ impl PjRt {
 
     /// Number of cached executables (diagnostics).
     pub fn cached(&self) -> usize {
-        self.cache.lock().unwrap().len()
+        self.cache_lock().len()
     }
 }
 
