@@ -1,0 +1,165 @@
+//! Bench: what durability costs and what recovery costs.
+//!
+//! Two sweeps into `BENCH_recovery.json`:
+//!
+//! * **Ingest throughput vs fsync policy** — acked adds/s through a
+//!   store-attached mutable index on a real directory, for `every`
+//!   (fsync per write, the default ack guarantee), `batch:64`, `never`,
+//!   and a store-less baseline. The gap between `every` and `never` is
+//!   the price of the per-write durability ack; `batch` is the usual
+//!   middle ground (docs/durability.md).
+//! * **Recovery wall time vs WAL tail length** — time to re-read
+//!   manifest + base + segments and replay an N-row WAL tail
+//!   (`recover`), and separately the in-memory index rebuild
+//!   (`from_recovered`), which bounds restart-to-serving latency.
+//!
+//! Honors `MOLFPGA_BENCH_FAST=1` (CI smoke) and `MOLFPGA_BENCH_N`.
+
+use molfpga::fingerprint::{ChemblModel, Database};
+use molfpga::index::{BitBoundFoldingIndex, TwoStageConfig};
+use molfpga::ingest::{
+    open_or_create, recover, AtomicDir, FsyncPolicy, IngestConfig, MutableIndex, RealDir,
+};
+use molfpga::util::bench::black_box;
+use molfpga::util::minijson::Json;
+use std::sync::Arc;
+use std::time::Instant;
+
+fn temp_dir(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("molfpga-bench-recovery-{}-{tag}", std::process::id()))
+}
+
+fn main() {
+    let fast = std::env::var("MOLFPGA_BENCH_FAST").ok().as_deref() == Some("1");
+    let base_n: usize = std::env::var("MOLFPGA_BENCH_N")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(if fast { 1_000 } else { 10_000 });
+    let adds: usize = if fast { 500 } else { 5_000 };
+    eprintln!("[bench_recovery] base n={base_n} adds/point={adds}");
+    let seed = Arc::new(Database::synthesize(base_n, &ChemblModel::default(), 42));
+    let pool = Database::synthesize(adds, &ChemblModel::default(), 43);
+    let two_stage = TwoStageConfig::default();
+    // Big seal threshold: the sweep measures the WAL append + fsync cost,
+    // not segment-install churn (bench_churn covers the LSM side).
+    let icfg = IngestConfig { seal_rows: 1usize << 20, ..IngestConfig::default() };
+
+    // --- Ingest throughput vs fsync policy --------------------------------
+    let mut ingest_points: Vec<Json> = Vec::new();
+    for (name, policy) in [
+        ("none", None),
+        ("every", Some(FsyncPolicy::Every)),
+        ("batch:64", Some(FsyncPolicy::Batch(64))),
+        ("never", Some(FsyncPolicy::Never)),
+    ] {
+        let path = temp_dir(&format!("ingest-{}", name.replace(':', "-")));
+        let _ = std::fs::remove_dir_all(&path);
+        let idx = match policy {
+            Some(policy) => {
+                let dir: Arc<dyn AtomicDir> =
+                    Arc::new(RealDir::open(&path).expect("bench temp dir"));
+                let s = seed.clone();
+                let (rec, store) =
+                    open_or_create(dir, policy, move || Ok(s)).expect("create durable state");
+                MutableIndex::<BitBoundFoldingIndex>::from_recovered(
+                    &rec,
+                    store,
+                    two_stage.clone(),
+                    icfg.clone(),
+                )
+            }
+            None => MutableIndex::<BitBoundFoldingIndex>::new(
+                seed.clone(),
+                two_stage.clone(),
+                icfg.clone(),
+            ),
+        };
+        let t0 = Instant::now();
+        for fp in &pool.fps {
+            black_box(idx.try_add(fp.clone()).expect("acked add"));
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        drop(idx); // clean shutdown: flush the WAL
+        let adds_per_s = adds as f64 / dt;
+        println!(
+            "[bench_recovery] ingest fsync={name}: {adds_per_s:.0} acked adds/s \
+             ({:.1} us/add)",
+            dt * 1e6 / adds as f64
+        );
+        ingest_points.push(
+            Json::obj()
+                .set("fsync", name)
+                .set("adds", adds as u64)
+                .set("adds_per_s", adds_per_s)
+                .set("us_per_add", dt * 1e6 / adds as f64),
+        );
+        let _ = std::fs::remove_dir_all(&path);
+    }
+
+    // --- Recovery wall time vs WAL tail length ----------------------------
+    let tails: &[usize] = if fast { &[200, 2_000] } else { &[1_000, 10_000] };
+    let mut recovery_points: Vec<Json> = Vec::new();
+    for &tail_rows in tails {
+        let path = temp_dir(&format!("tail-{tail_rows}"));
+        let _ = std::fs::remove_dir_all(&path);
+        let dir: Arc<dyn AtomicDir> = Arc::new(RealDir::open(&path).expect("bench temp dir"));
+        {
+            let s = seed.clone();
+            let (rec, store) = open_or_create(dir.clone(), FsyncPolicy::Never, move || Ok(s))
+                .expect("create durable state");
+            let idx = MutableIndex::<BitBoundFoldingIndex>::from_recovered(
+                &rec,
+                store,
+                two_stage.clone(),
+                icfg.clone(),
+            );
+            let extra = Database::synthesize(tail_rows, &ChemblModel::default(), 44);
+            for fp in &extra.fps {
+                idx.try_add(fp.clone()).expect("acked add");
+            }
+            idx.flush().expect("flush tail");
+            // Dropped: the whole tail sits in the WAL (seal_rows is huge).
+        }
+        let t0 = Instant::now();
+        let rec = recover(&dir).expect("recover");
+        let recover_ms = t0.elapsed().as_secs_f64() * 1e3;
+        assert_eq!(rec.mem_rows.len(), tail_rows, "tail fully replayed");
+        let t1 = Instant::now();
+        let s = seed.clone();
+        let (rec2, store2) =
+            open_or_create(dir.clone(), FsyncPolicy::Never, move || Ok(s)).expect("reopen");
+        let idx = MutableIndex::<BitBoundFoldingIndex>::from_recovered(
+            &rec2,
+            store2,
+            two_stage.clone(),
+            icfg.clone(),
+        );
+        let rebuild_ms = t1.elapsed().as_secs_f64() * 1e3;
+        black_box(idx.rows_live());
+        println!(
+            "[bench_recovery] tail={tail_rows}: recover {recover_ms:.1} ms \
+             ({:.0} rows/s), reopen+rebuild {rebuild_ms:.1} ms",
+            tail_rows as f64 / (recover_ms / 1e3)
+        );
+        recovery_points.push(
+            Json::obj()
+                .set("tail_rows", tail_rows as u64)
+                .set("recover_ms", recover_ms)
+                .set("replay_rows_per_s", tail_rows as f64 / (recover_ms / 1e3))
+                .set("reopen_rebuild_ms", rebuild_ms),
+        );
+        drop(idx);
+        let _ = std::fs::remove_dir_all(&path);
+    }
+
+    let doc = Json::obj()
+        .set("bench", "recovery")
+        .set("base_n", base_n as u64)
+        .set("ingest", Json::Arr(ingest_points))
+        .set("recovery", Json::Arr(recovery_points));
+    if let Err(e) = std::fs::write("BENCH_recovery.json", doc.to_string() + "\n") {
+        eprintln!("[bench_recovery] could not write BENCH_recovery.json: {e}");
+    } else {
+        println!("[bench_recovery] wrote BENCH_recovery.json");
+    }
+}

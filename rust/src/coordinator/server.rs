@@ -324,10 +324,10 @@ fn dispatch_line(line: &str, ctx: &ConnCtx, id_base: u64, served: &mut u64) -> O
                 Some(id) => id,
                 None => return Some("ERR bad id".into()),
             };
-            if ingest.delete(id) {
-                Some(format!("OK {id}"))
-            } else {
-                Some(format!("ERR unknown or already-deleted id {id}"))
+            match ingest.delete(id) {
+                Ok(true) => Some(format!("OK {id}")),
+                Ok(false) => Some(format!("ERR unknown or already-deleted id {id}")),
+                Err(e) => Some(format!("ERR {e}")),
             }
         }
         // Test-only fault injection: proves the catch_unwind fence in

@@ -270,20 +270,27 @@ impl Database {
         out
     }
 
-    /// Serialize to a compact binary file (magic, n, bits, words, counts).
-    pub fn save(&self, path: &std::path::Path) -> std::io::Result<()> {
-        use std::io::Write;
-        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-        f.write_all(b"MFPDB01\0")?;
-        f.write_all(&(self.len() as u64).to_le_bytes())?;
+    /// Serialize to the compact binary image [`Database::save`] writes
+    /// (magic, n, bits, row words) — also embedded verbatim inside the
+    /// durability layer's segment files (`ingest::durable`).
+    pub fn to_bytes(&self) -> Vec<u8> {
         let bits = self.fps.first().map(|f| f.bits()).unwrap_or(FP_BITS) as u64;
-        f.write_all(&bits.to_le_bytes())?;
+        let words = (bits / 64) as usize;
+        let mut out = Vec::with_capacity(24 + self.len() * words * 8);
+        out.extend_from_slice(b"MFPDB01\0");
+        out.extend_from_slice(&(self.len() as u64).to_le_bytes());
+        out.extend_from_slice(&bits.to_le_bytes());
         for fp in &self.fps {
             for w in fp.words() {
-                f.write_all(&w.to_le_bytes())?;
+                out.extend_from_slice(&w.to_le_bytes());
             }
         }
-        Ok(())
+        out
+    }
+
+    /// Serialize to a compact binary file (magic, n, bits, words, counts).
+    pub fn save(&self, path: &std::path::Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_bytes())
     }
 
     /// Load a database written by [`Database::save`].
@@ -296,24 +303,25 @@ impl Database {
     /// corrupted header can neither propagate garbage fingerprints into a
     /// serving index nor trigger an absurd allocation.
     pub fn load(path: &std::path::Path) -> std::io::Result<Self> {
-        use std::io::Read;
+        Self::from_bytes(&std::fs::read(path)?)
+    }
+
+    /// Decode a [`Database::to_bytes`] image — [`Database::load`] on an
+    /// in-memory buffer, with the same hardening and error messages.
+    pub fn from_bytes(bytes: &[u8]) -> std::io::Result<Self> {
         let bad = |msg: String| std::io::Error::new(std::io::ErrorKind::InvalidData, msg);
-        let file = std::fs::File::open(path)?;
-        let file_len = file.metadata()?.len();
-        let mut f = std::io::BufReader::new(file);
-        let mut magic = [0u8; 8];
-        f.read_exact(&mut magic)
-            .map_err(|_| bad(format!("truncated header: {file_len} bytes, need 24")))?;
-        if &magic != b"MFPDB01\0" {
+        let file_len = bytes.len() as u64;
+        if bytes.len() < 24 {
+            if bytes.len() >= 8 && &bytes[..8] != b"MFPDB01\0" {
+                return Err(bad("bad magic (not a molfpga database file)".into()));
+            }
+            return Err(bad(format!("truncated header: {file_len} bytes, need 24")));
+        }
+        if &bytes[..8] != b"MFPDB01\0" {
             return Err(bad("bad magic (not a molfpga database file)".into()));
         }
-        let mut buf8 = [0u8; 8];
-        f.read_exact(&mut buf8)
-            .map_err(|_| bad(format!("truncated header: {file_len} bytes, need 24")))?;
-        let n = u64::from_le_bytes(buf8);
-        f.read_exact(&mut buf8)
-            .map_err(|_| bad(format!("truncated header: {file_len} bytes, need 24")))?;
-        let bits = u64::from_le_bytes(buf8);
+        let n = u64::from_le_bytes(bytes[8..16].try_into().unwrap_or([0; 8]));
+        let bits = u64::from_le_bytes(bytes[16..24].try_into().unwrap_or([0; 8]));
         if bits == 0 || bits % 64 != 0 || bits > Self::MAX_LOAD_BITS as u64 {
             return Err(bad(format!(
                 "fingerprint width {bits} out of range (positive multiple of 64, ≤ {})",
@@ -333,12 +341,11 @@ impl Database {
             )));
         }
         let mut fps = Vec::with_capacity(n as usize);
-        for _ in 0..n {
-            let mut ws = vec![0u64; words];
-            for w in ws.iter_mut() {
-                f.read_exact(&mut buf8)?;
-                *w = u64::from_le_bytes(buf8);
-            }
+        for row in bytes[24..].chunks_exact(words * 8) {
+            let ws: Vec<u64> = row
+                .chunks_exact(8)
+                .map(|c| u64::from_le_bytes(c.try_into().unwrap_or([0; 8])))
+                .collect();
             fps.push(Fingerprint::from_words(ws));
         }
         Ok(Self::new(fps))

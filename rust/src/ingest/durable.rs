@@ -1,0 +1,771 @@
+//! Durable state for the mutable indexes: segment files, the manifest,
+//! and the [`DurableStore`] that the write path drives.
+//!
+//! On-disk layout (one flat [`AtomicDir`]):
+//!
+//! ```text
+//! MANIFEST        which base + segment files + WAL are live (atomic swap)
+//! base-<s>.seg    the compacted base (ids + MFPDB01 database image)
+//! seg-<s>.seg     one sealed segment each, same format
+//! wal-<s>.log     the mutation tail (ingest::wal framing)
+//! ```
+//!
+//! Invariants (the recovery contract leans on all three):
+//!
+//! 1. **WAL-before-apply** — a mutation is framed (and fsynced per
+//!    policy) before the in-memory snapshot changes, so an acked write is
+//!    durable first.
+//! 2. **Install order** — a seal writes its segment file *before* the
+//!    manifest that references it; a compaction writes its base file and
+//!    seeds its fresh WAL *before* the manifest swap; file GC runs only
+//!    *after* the swap. A crash anywhere therefore leaves a manifest
+//!    whose references all exist, plus at worst orphans (re-collected on
+//!    the next boot).
+//! 3. **Replay cursor** — everything before `MANIFEST.replay_from` is
+//!    covered by {base, segments, manifest tombstones}; the WAL tail from
+//!    the cursor reproduces the memtable and the post-swap deletes.
+//!
+//! A store I/O error **poisons** the store: the failed mutation was not
+//! acked and every later mutation fails fast, so the in-memory index can
+//! never drift ahead of a durable state it silently stopped writing
+//! (fail-stop; restart recovers — docs/durability.md).
+
+use super::io::AtomicDir;
+use super::segment::MemRow;
+use super::wal::{read_records, FsyncPolicy, Wal, WalRecord, WalTail};
+use crate::fingerprint::{Database, Fingerprint};
+use crate::util::crc::crc32;
+use std::collections::HashSet;
+use std::io;
+use std::sync::{Arc, Mutex};
+
+const MANIFEST: &str = "MANIFEST";
+const MANIFEST_MAGIC: &[u8; 8] = b"MFPMAN1\0";
+const SEGMENT_MAGIC: &[u8; 8] = b"MFPSEG1\0";
+
+fn bad(msg: String) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg)
+}
+
+// ---------------------------------------------------------------------------
+// Segment files: ids + database image, CRC-framed
+// ---------------------------------------------------------------------------
+
+/// Encode one segment (or base): global ids + the fingerprints as a
+/// [`Database::to_bytes`] image, the whole body CRC-framed.
+pub fn encode_segment(ids: &[u64], db: &Database) -> Vec<u8> {
+    let db_bytes = db.to_bytes();
+    let mut body = Vec::with_capacity(8 + ids.len() * 8 + db_bytes.len());
+    body.extend_from_slice(&(ids.len() as u64).to_le_bytes());
+    for id in ids {
+        body.extend_from_slice(&id.to_le_bytes());
+    }
+    body.extend_from_slice(&db_bytes);
+    let mut out = Vec::with_capacity(12 + body.len());
+    out.extend_from_slice(SEGMENT_MAGIC);
+    out.extend_from_slice(&crc32(&body).to_le_bytes());
+    out.extend_from_slice(&body);
+    out
+}
+
+/// Decode a segment file; every malformation is a clean `InvalidData`.
+pub fn decode_segment(bytes: &[u8]) -> io::Result<(Vec<u64>, Database)> {
+    if bytes.len() < 12 {
+        return Err(bad(format!("segment file is {} bytes, need ≥ 12", bytes.len())));
+    }
+    if &bytes[..8] != SEGMENT_MAGIC {
+        return Err(bad("bad magic (not a molfpga segment file)".into()));
+    }
+    let crc = u32::from_le_bytes(bytes[8..12].try_into().unwrap_or([0; 4]));
+    let body = &bytes[12..];
+    if crc32(body) != crc {
+        return Err(bad("segment checksum mismatch (corrupt or truncated)".into()));
+    }
+    if body.len() < 8 {
+        return Err(bad("segment body truncated before the id count".into()));
+    }
+    let n = u64::from_le_bytes(body[..8].try_into().unwrap_or([0; 8]));
+    let ids_end = (n as usize)
+        .checked_mul(8)
+        .and_then(|b| b.checked_add(8))
+        .filter(|&end| end <= body.len())
+        .ok_or_else(|| bad(format!("segment claims {n} ids but holds {} bytes", body.len())))?;
+    let ids: Vec<u64> = body[8..ids_end]
+        .chunks_exact(8)
+        .map(|c| u64::from_le_bytes(c.try_into().unwrap_or([0; 8])))
+        .collect();
+    let db = Database::from_bytes(&body[ids_end..])?;
+    if db.len() != ids.len() {
+        return Err(bad(format!("segment has {} ids but {} rows", ids.len(), db.len())));
+    }
+    if ids.windows(2).any(|w| w[0] >= w[1]) {
+        return Err(bad("segment ids are not strictly ascending".into()));
+    }
+    Ok((ids, db))
+}
+
+// ---------------------------------------------------------------------------
+// Manifest
+// ---------------------------------------------------------------------------
+
+/// The decoded manifest: which files are live plus the replay cursor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Manifest {
+    pub next_id: u64,
+    /// First sequence number not yet used for a file name.
+    pub file_seq: u64,
+    pub base: String,
+    pub segments: Vec<String>,
+    pub wal: String,
+    /// Byte offset into `wal` from which replay starts.
+    pub replay_from: u64,
+    /// Live tombstones at manifest-swap time (deletes after the swap sit
+    /// in the WAL tail).
+    pub tombstones: Vec<u64>,
+}
+
+impl Manifest {
+    pub fn encode(&self) -> Vec<u8> {
+        fn put_name(out: &mut Vec<u8>, name: &str) {
+            out.extend_from_slice(&(name.len() as u32).to_le_bytes());
+            out.extend_from_slice(name.as_bytes());
+        }
+        let mut body = Vec::with_capacity(64 + self.segments.len() * 16 + self.tombstones.len() * 8);
+        body.extend_from_slice(&self.next_id.to_le_bytes());
+        body.extend_from_slice(&self.file_seq.to_le_bytes());
+        body.extend_from_slice(&self.replay_from.to_le_bytes());
+        put_name(&mut body, &self.base);
+        put_name(&mut body, &self.wal);
+        body.extend_from_slice(&(self.segments.len() as u32).to_le_bytes());
+        for s in &self.segments {
+            put_name(&mut body, s);
+        }
+        body.extend_from_slice(&(self.tombstones.len() as u64).to_le_bytes());
+        for t in &self.tombstones {
+            body.extend_from_slice(&t.to_le_bytes());
+        }
+        let mut out = Vec::with_capacity(12 + body.len());
+        out.extend_from_slice(MANIFEST_MAGIC);
+        out.extend_from_slice(&crc32(&body).to_le_bytes());
+        out.extend_from_slice(&body);
+        out
+    }
+
+    pub fn decode(bytes: &[u8]) -> io::Result<Self> {
+        if bytes.len() < 12 {
+            return Err(bad(format!("manifest is {} bytes, need ≥ 12", bytes.len())));
+        }
+        if &bytes[..8] != MANIFEST_MAGIC {
+            return Err(bad("bad magic (not a molfpga manifest)".into()));
+        }
+        let crc = u32::from_le_bytes(bytes[8..12].try_into().unwrap_or([0; 4]));
+        let body = &bytes[12..];
+        if crc32(body) != crc {
+            return Err(bad("manifest checksum mismatch (corrupt or truncated)".into()));
+        }
+        let mut at = 0usize;
+        let mut take = |n: usize| -> io::Result<&[u8]> {
+            let slice = body
+                .get(at..at + n)
+                .ok_or_else(|| bad("manifest body truncated".into()))?;
+            at += n;
+            Ok(slice)
+        };
+        let mut take_u64 = || -> io::Result<u64> {
+            Ok(u64::from_le_bytes(take(8)?.try_into().unwrap_or([0; 8])))
+        };
+        let next_id = take_u64()?;
+        let file_seq = take_u64()?;
+        let replay_from = take_u64()?;
+        let mut take_name = || -> io::Result<String> {
+            let len = u32::from_le_bytes(take(4)?.try_into().unwrap_or([0; 4])) as usize;
+            if len > 4096 {
+                return Err(bad(format!("manifest name of {len} bytes is implausible")));
+            }
+            String::from_utf8(take(len)?.to_vec())
+                .map_err(|_| bad("manifest name is not UTF-8".into()))
+        };
+        let base = take_name()?;
+        let wal = take_name()?;
+        let nsegs = u32::from_le_bytes(take(4)?.try_into().unwrap_or([0; 4]));
+        if nsegs > 1 << 20 {
+            return Err(bad(format!("manifest claims {nsegs} segments")));
+        }
+        let mut segments = Vec::with_capacity(nsegs as usize);
+        for _ in 0..nsegs {
+            segments.push(take_name()?);
+        }
+        let ntombs = take_u64()?;
+        if (ntombs as usize).checked_mul(8).map(|b| b != body.len() - at).unwrap_or(true) {
+            return Err(bad(format!(
+                "manifest claims {ntombs} tombstones but {} bytes remain",
+                body.len() - at
+            )));
+        }
+        let mut tombstones = Vec::with_capacity(ntombs as usize);
+        for _ in 0..ntombs {
+            tombstones.push(take_u64()?);
+        }
+        Ok(Self { next_id, file_seq, base, segments, wal, replay_from, tombstones })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The durable store
+// ---------------------------------------------------------------------------
+
+struct StoreInner {
+    wal: Wal,
+    wal_name: String,
+    replay_from: u64,
+    file_seq: u64,
+    base_name: String,
+    seg_names: Vec<String>,
+    policy: FsyncPolicy,
+    /// Set on the first I/O error; every later mutation fails fast.
+    poisoned: bool,
+}
+
+impl StoreInner {
+    fn manifest(&self, next_id: u64, tombstones: &HashSet<u64>) -> Manifest {
+        let mut tombs: Vec<u64> = tombstones.iter().copied().collect();
+        tombs.sort_unstable();
+        Manifest {
+            next_id,
+            file_seq: self.file_seq,
+            base: self.base_name.clone(),
+            segments: self.seg_names.clone(),
+            wal: self.wal_name.clone(),
+            replay_from: self.replay_from,
+            tombstones: tombs,
+        }
+    }
+}
+
+/// The durability sink one mutable index drives (the *durable family* —
+/// `serve --live` attaches it to the exhaustive index; the HNSW overlay
+/// rebuilds its graph from the recovered rows instead of persisting it).
+/// All operations serialize on one internal lock; the callers already
+/// hold their index's writer lock, which orders mutations against
+/// installs (see `ingest::state`).
+pub struct DurableStore {
+    dir: Arc<dyn AtomicDir>,
+    inner: Mutex<StoreInner>,
+}
+
+impl DurableStore {
+    /// Initialize a fresh directory: base file, empty WAL, manifest.
+    pub fn create(
+        dir: Arc<dyn AtomicDir>,
+        policy: FsyncPolicy,
+        db: &Database,
+        globals: &[u64],
+        next_id: u64,
+    ) -> io::Result<Arc<Self>> {
+        let base_name = "base-0.seg".to_string();
+        let wal_name = "wal-1.log".to_string();
+        dir.write_atomic(&base_name, &encode_segment(globals, db))?;
+        let wal = Wal::new(dir.create_wal(&wal_name)?, policy);
+        let inner = StoreInner {
+            wal,
+            wal_name,
+            replay_from: 0,
+            file_seq: 2,
+            base_name,
+            seg_names: Vec::new(),
+            policy,
+            poisoned: false,
+        };
+        dir.write_atomic(MANIFEST, &inner.manifest(next_id, &HashSet::new()).encode())?;
+        Ok(Arc::new(Self { dir, inner: Mutex::new(inner) }))
+    }
+
+    /// Resume on a recovered directory: the base/segment files stay as the
+    /// manifest named them; the (possibly torn) old WAL is replaced by a
+    /// fresh one re-seeded with the recovered memtable rows, and orphaned
+    /// files from the crash window are collected.
+    pub fn open_recovered(
+        dir: Arc<dyn AtomicDir>,
+        policy: FsyncPolicy,
+        rec: &Recovered,
+    ) -> io::Result<Arc<Self>> {
+        let mut file_seq = rec.file_seq;
+        let wal_name = format!("wal-{file_seq}.log");
+        file_seq += 1;
+        let mut wal = Wal::new(dir.create_wal(&wal_name)?, policy);
+        for row in &rec.mem_rows {
+            wal.append(&WalRecord::Add { id: row.id, fp: row.fp.clone() })?;
+        }
+        wal.sync()?;
+        let inner = StoreInner {
+            wal,
+            wal_name,
+            replay_from: 0,
+            file_seq,
+            base_name: rec.base_name.clone(),
+            seg_names: rec.seg_names.clone(),
+            policy,
+            poisoned: false,
+        };
+        dir.write_atomic(MANIFEST, &inner.manifest(rec.next_id, &rec.tombstones).encode())?;
+        let store = Self { dir, inner: Mutex::new(inner) };
+        store.gc(|inner| {
+            let mut live: HashSet<String> = inner.seg_names.iter().cloned().collect();
+            live.insert(inner.base_name.clone());
+            live.insert(inner.wal_name.clone());
+            live
+        });
+        Ok(Arc::new(store))
+    }
+
+    /// Remove every file that matches our naming patterns but is not in
+    /// the live set (post-swap garbage + crash-window orphans). Errors are
+    /// swallowed: an orphan is re-collected on the next boot, and GC must
+    /// never fail an install whose manifest is already durable.
+    fn gc(&self, live: impl Fn(&StoreInner) -> HashSet<String>) {
+        let inner = self.inner.lock().unwrap();
+        let live = live(&inner);
+        drop(inner);
+        let Ok(names) = self.dir.list() else { return };
+        for name in names {
+            let ours = name.starts_with("wal-")
+                || name.starts_with("seg-")
+                || name.starts_with("base-")
+                || name.starts_with(".tmp-");
+            if ours && name != MANIFEST && !live.contains(&name) {
+                let _ = self.dir.remove(&name);
+            }
+        }
+    }
+
+    /// Run `f` under the store lock with fail-stop poisoning.
+    fn mutate<T>(&self, f: impl FnOnce(&mut StoreInner) -> io::Result<T>) -> io::Result<T> {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.poisoned {
+            return Err(io::Error::new(
+                io::ErrorKind::Other,
+                "durable store poisoned by an earlier I/O error; restart to recover",
+            ));
+        }
+        let out = f(&mut inner);
+        if out.is_err() {
+            inner.poisoned = true;
+        }
+        out
+    }
+
+    /// Frame an ADD before it is applied (fsync per policy).
+    pub fn log_add(&self, id: u64, fp: &Fingerprint) -> io::Result<()> {
+        self.mutate(|inner| inner.wal.append(&WalRecord::Add { id, fp: fp.clone() }))
+    }
+
+    /// Frame a DEL before it is applied (fsync per policy).
+    pub fn log_del(&self, id: u64) -> io::Result<()> {
+        self.mutate(|inner| inner.wal.append(&WalRecord::Del { id }))
+    }
+
+    /// Persist a freshly sealed segment and advance the replay cursor:
+    /// SEAL control record (always fsynced) → segment file → manifest
+    /// swap. Caller holds its index's writer lock; `tombstones` is the
+    /// live set at seal time (it covers every delete before the cursor).
+    pub fn install_seal(
+        &self,
+        rows: &[MemRow],
+        tombstones: &HashSet<u64>,
+        next_id: u64,
+    ) -> io::Result<()> {
+        self.mutate(|inner| {
+            let upto = rows.last().map(|r| r.id).unwrap_or(0);
+            inner.wal.append_durable(&WalRecord::Seal { upto })?;
+            let name = format!("seg-{}.seg", inner.file_seq);
+            inner.file_seq += 1;
+            let ids: Vec<u64> = rows.iter().map(|r| r.id).collect();
+            let db = Database::new(rows.iter().map(|r| r.fp.clone()).collect());
+            self.dir.write_atomic(&name, &encode_segment(&ids, &db))?;
+            inner.seg_names.push(name);
+            inner.replay_from = inner.wal.offset();
+            self.dir.write_atomic(MANIFEST, &inner.manifest(next_id, tombstones).encode())
+        })
+    }
+
+    /// Persist a compaction install: COMPACT control record → new base
+    /// file → fresh WAL seeded with the current memtable → manifest swap
+    /// → GC of the consumed files. `consumed` sealed segments (oldest
+    /// first) folded into the new base; `tombstones` is the live set
+    /// *after* the install (applied ones dropped).
+    pub fn install_compaction(
+        &self,
+        db: &Database,
+        globals: &[u64],
+        consumed: usize,
+        mem_rows: &[MemRow],
+        tombstones: &HashSet<u64>,
+        next_id: u64,
+        epoch: u64,
+    ) -> io::Result<()> {
+        self.mutate(|inner| {
+            inner.wal.append_durable(&WalRecord::Compact { epoch })?;
+            let base_name = format!("base-{}.seg", inner.file_seq);
+            let wal_name = format!("wal-{}.log", inner.file_seq + 1);
+            inner.file_seq += 2;
+            self.dir.write_atomic(&base_name, &encode_segment(globals, db))?;
+            let mut wal = Wal::new(self.dir.create_wal(&wal_name)?, inner.policy);
+            for row in mem_rows {
+                wal.append(&WalRecord::Add { id: row.id, fp: row.fp.clone() })?;
+            }
+            wal.sync()?;
+            // Point of no return: swap the manifest to the new generation.
+            inner.wal = wal;
+            inner.wal_name = wal_name;
+            inner.base_name = base_name;
+            inner.seg_names.drain(..consumed.min(inner.seg_names.len()));
+            inner.replay_from = 0;
+            self.dir.write_atomic(MANIFEST, &inner.manifest(next_id, tombstones).encode())
+        })?;
+        // Old generation files are unreferenced now; collect them.
+        self.gc(|inner| {
+            let mut live: HashSet<String> = inner.seg_names.iter().cloned().collect();
+            live.insert(inner.base_name.clone());
+            live.insert(inner.wal_name.clone());
+            live
+        });
+        Ok(())
+    }
+
+    /// Flush the WAL (clean shutdown; also called by the owning index's
+    /// `Drop` so a clean exit never loses an acked write under
+    /// `fsync batch|never`).
+    pub fn flush(&self) -> io::Result<()> {
+        self.mutate(|inner| inner.wal.sync())
+    }
+}
+
+impl Drop for DurableStore {
+    fn drop(&mut self) {
+        // Best effort — the owning index flushes explicitly first; this
+        // catches stores dropped without one.
+        if let Ok(mut inner) = self.inner.lock() {
+            if !inner.poisoned {
+                let _ = inner.wal.sync();
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Recovery
+// ---------------------------------------------------------------------------
+
+/// Everything `recover` reconstructs from a data directory — the inputs
+/// to `MutableIndex::from_recovered` / `MutableHnsw::from_recovered` and
+/// to [`DurableStore::open_recovered`].
+pub struct Recovered {
+    /// The compacted base (may be empty) and its global-id map.
+    pub db: Arc<Database>,
+    pub globals: Vec<u64>,
+    /// Sealed segments, oldest first, as raw rows.
+    pub segments: Vec<Vec<MemRow>>,
+    /// The replayed WAL tail (the pre-crash memtable's surviving rows).
+    pub mem_rows: Vec<MemRow>,
+    pub tombstones: HashSet<u64>,
+    pub next_id: u64,
+    /// How the WAL tail ended (diagnostics; `Truncated` after a torn
+    /// final record is normal crash recovery, not an error).
+    pub wal_tail: WalTail,
+    pub base_name: String,
+    pub seg_names: Vec<String>,
+    pub file_seq: u64,
+}
+
+impl Recovered {
+    /// A fresh (never-persisted) state over an initial database — what a
+    /// first boot starts from.
+    pub fn fresh(db: Arc<Database>) -> Self {
+        let next_id = db.len() as u64;
+        let globals = super::initial_globals(&db);
+        Self {
+            db,
+            globals,
+            segments: Vec::new(),
+            mem_rows: Vec::new(),
+            tombstones: HashSet::new(),
+            next_id,
+            wal_tail: WalTail::Clean,
+            base_name: "base-0.seg".to_string(),
+            seg_names: Vec::new(),
+            file_seq: 2,
+        }
+    }
+
+    /// Every live row (id + fingerprint), ascending by id — the flat view
+    /// the crash-point harness compares against its model, and the input
+    /// to an oracle rebuild.
+    pub fn live_rows(&self) -> Vec<(u64, Fingerprint)> {
+        let mut out = Vec::new();
+        for (local, &gid) in self.globals.iter().enumerate() {
+            if !self.tombstones.contains(&gid) {
+                out.push((gid, self.db.fps[local].clone()));
+            }
+        }
+        for seg in &self.segments {
+            for row in seg {
+                if !self.tombstones.contains(&row.id) {
+                    out.push((row.id, row.fp.clone()));
+                }
+            }
+        }
+        for row in &self.mem_rows {
+            if !self.tombstones.contains(&row.id) {
+                out.push((row.id, row.fp.clone()));
+            }
+        }
+        out
+    }
+}
+
+/// Whether `dir` holds a manifest (i.e. a previous generation to recover).
+pub fn manifest_exists(dir: &Arc<dyn AtomicDir>) -> bool {
+    dir.exists(MANIFEST)
+}
+
+/// Load the durable state: manifest → base + segments → WAL-tail replay.
+/// Corruption in the manifest, base, or a referenced segment is a hard
+/// `InvalidData` error (those files were installed atomically and
+/// CRC-framed — damage means the disk lied, and serving garbage silently
+/// would break the exactness contract). A torn or missing WAL *tail* is
+/// expected crash damage and recovers to the last durable record.
+pub fn recover(dir: &Arc<dyn AtomicDir>) -> io::Result<Recovered> {
+    let manifest = Manifest::decode(&dir.read(MANIFEST)?)?;
+    let (globals, db) = decode_segment(&dir.read(&manifest.base).map_err(|e| {
+        bad(format!("manifest references base {:?}: {e}", manifest.base))
+    })?)
+    .map_err(|e| bad(format!("base {:?}: {e}", manifest.base)))?;
+    let mut segments = Vec::with_capacity(manifest.segments.len());
+    for name in &manifest.segments {
+        let (ids, seg_db) = decode_segment(&dir.read(name).map_err(|e| {
+            bad(format!("manifest references missing segment {name:?}: {e}"))
+        })?)
+        .map_err(|e| bad(format!("segment {name:?}: {e}")))?;
+        let rows: Vec<MemRow> = ids
+            .into_iter()
+            .zip(seg_db.fps.iter())
+            .map(|(id, fp)| MemRow::new(id, fp.clone()))
+            .collect();
+        segments.push(rows);
+    }
+    // The WAL tail: a missing file or a cursor past its end means every
+    // tail byte died unsynced — by the ack contract nothing in it was
+    // acknowledged under `fsync every`, so an empty tail is a valid state.
+    let (records, wal_tail) = match dir.read(&manifest.wal) {
+        Ok(bytes) => read_records(&bytes, manifest.replay_from),
+        Err(_) => (Vec::new(), WalTail::Clean),
+    };
+    let mut tombstones: HashSet<u64> = manifest.tombstones.iter().copied().collect();
+    let mut mem_rows: Vec<MemRow> = Vec::new();
+    let mut next_id = manifest.next_id;
+    for rec in records {
+        match rec {
+            WalRecord::Add { id, fp } => {
+                next_id = next_id.max(id + 1);
+                mem_rows.push(MemRow::new(id, fp));
+            }
+            WalRecord::Del { id } => {
+                tombstones.insert(id);
+            }
+            // Control markers: the state they announce is already
+            // reflected by the manifest that pointed us here.
+            WalRecord::Seal { .. } | WalRecord::Compact { .. } => {}
+        }
+    }
+    Ok(Recovered {
+        db: Arc::new(db),
+        globals,
+        segments,
+        mem_rows,
+        tombstones,
+        next_id,
+        wal_tail,
+        base_name: manifest.base,
+        seg_names: manifest.segments,
+        file_seq: manifest.file_seq,
+    })
+}
+
+/// The `serve --live --data-dir` entry point: recover an existing
+/// generation, or initialize the directory from `init` on first boot.
+/// Returns the recovered state plus the store resumed on top of it.
+pub fn open_or_create(
+    dir: Arc<dyn AtomicDir>,
+    policy: FsyncPolicy,
+    init: impl FnOnce() -> io::Result<Arc<Database>>,
+) -> io::Result<(Recovered, Arc<DurableStore>)> {
+    if manifest_exists(&dir) {
+        let rec = recover(&dir)?;
+        let store = DurableStore::open_recovered(dir, policy, &rec)?;
+        Ok((rec, store))
+    } else {
+        let db = init()?;
+        let rec = Recovered::fresh(db);
+        let store = DurableStore::create(dir, policy, &rec.db, &rec.globals, rec.next_id)?;
+        Ok((rec, store))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::io::MemDir;
+    use super::*;
+    use crate::fingerprint::ChemblModel;
+
+    fn mem_dir() -> Arc<dyn AtomicDir> {
+        Arc::new(MemDir::new())
+    }
+
+    #[test]
+    fn segment_files_round_trip_and_reject_corruption() {
+        let db = Database::synthesize(20, &ChemblModel::default(), 9);
+        let ids: Vec<u64> = (0..20u64).map(|i| i * 3 + 1).collect();
+        let bytes = encode_segment(&ids, &db);
+        let (got_ids, got_db) = decode_segment(&bytes).unwrap();
+        assert_eq!(got_ids, ids);
+        assert_eq!(got_db.len(), db.len());
+        assert!(got_db.fps.iter().zip(&db.fps).all(|(a, b)| a.words() == b.words()));
+
+        let expect_invalid = |bytes: &[u8], what: &str| {
+            let err = decode_segment(bytes).unwrap_err();
+            assert_eq!(err.kind(), io::ErrorKind::InvalidData, "{what}: {err}");
+        };
+        expect_invalid(&bytes[..7], "short file");
+        expect_invalid(&bytes[..bytes.len() - 1], "truncated");
+        let mut b = bytes.clone();
+        b[0] ^= 0xFF;
+        expect_invalid(&b, "bad magic");
+        // A bit flip anywhere past the magic trips the CRC (or, for flips
+        // inside the stored CRC itself, the mismatch) — sampled stride to
+        // keep the corpus cheap.
+        for at in (8..bytes.len()).step_by(41) {
+            let mut b = bytes.clone();
+            b[at] ^= 1 << (at % 8);
+            expect_invalid(&b, &format!("bit flip at {at}"));
+        }
+        let mut b = bytes.clone();
+        b.extend_from_slice(b"trailing garbage");
+        expect_invalid(&b, "trailing garbage");
+    }
+
+    #[test]
+    fn manifest_round_trips_and_rejects_corruption() {
+        let m = Manifest {
+            next_id: 123,
+            file_seq: 9,
+            base: "base-4.seg".into(),
+            segments: vec!["seg-5.seg".into(), "seg-7.seg".into()],
+            wal: "wal-8.log".into(),
+            replay_from: 456,
+            tombstones: vec![1, 5, 44],
+        };
+        let bytes = m.encode();
+        assert_eq!(Manifest::decode(&bytes).unwrap(), m);
+        for at in 0..bytes.len() {
+            let mut b = bytes.clone();
+            b[at] ^= 1 << (at % 8);
+            let err = Manifest::decode(&b).unwrap_err();
+            assert_eq!(err.kind(), io::ErrorKind::InvalidData, "flip at {at}");
+        }
+        for cut in 0..bytes.len() {
+            let err = Manifest::decode(&bytes[..cut]).unwrap_err();
+            assert_eq!(err.kind(), io::ErrorKind::InvalidData, "cut at {cut}");
+        }
+    }
+
+    #[test]
+    fn create_log_seal_compact_recover_round_trip() {
+        let dir = mem_dir();
+        let db = Database::synthesize(10, &ChemblModel::default(), 3);
+        let extra = Database::synthesize(7, &ChemblModel::default(), 4);
+        let globals: Vec<u64> = (0..10).collect();
+        let store =
+            DurableStore::create(dir.clone(), FsyncPolicy::Every, &db, &globals, 10).unwrap();
+        // Three adds, one delete, then a seal of the three.
+        let rows: Vec<MemRow> = (0..3)
+            .map(|i| MemRow::new(10 + i as u64, extra.fps[i].clone()))
+            .collect();
+        for row in &rows {
+            store.log_add(row.id, &row.fp).unwrap();
+        }
+        store.log_del(4).unwrap();
+        let tombs: HashSet<u64> = [4u64].into_iter().collect();
+        store.install_seal(&rows, &tombs, 13).unwrap();
+        // Two more adds after the seal live in the WAL tail.
+        store.log_add(13, &extra.fps[3]).unwrap();
+        store.log_del(11).unwrap();
+
+        let rec = recover(&dir).unwrap();
+        assert_eq!(rec.wal_tail, WalTail::Clean);
+        assert_eq!(rec.next_id, 14);
+        assert_eq!(rec.globals, globals);
+        assert_eq!(rec.segments.len(), 1);
+        assert_eq!(rec.segments[0].iter().map(|r| r.id).collect::<Vec<_>>(), vec![10, 11, 12]);
+        assert_eq!(rec.mem_rows.iter().map(|r| r.id).collect::<Vec<_>>(), vec![13]);
+        assert_eq!(rec.tombstones, [4u64, 11].into_iter().collect::<HashSet<_>>());
+        let live: Vec<u64> = rec.live_rows().iter().map(|(id, _)| *id).collect();
+        assert_eq!(live, vec![0, 1, 2, 3, 5, 6, 7, 8, 9, 10, 12, 13]);
+
+        // Compaction folds everything into a new base; the old generation
+        // is GC'd and recovery sees the new one.
+        let live_rows = rec.live_rows();
+        let new_ids: Vec<u64> = live_rows.iter().map(|(id, _)| *id).collect();
+        let new_db = Database::new(live_rows.iter().map(|(_, fp)| fp.clone()).collect());
+        store
+            .install_compaction(&new_db, &new_ids, 1, &[], &HashSet::new(), 14, 7)
+            .unwrap();
+        let rec2 = recover(&dir).unwrap();
+        assert_eq!(rec2.segments.len(), 0);
+        assert!(rec2.mem_rows.is_empty());
+        assert!(rec2.tombstones.is_empty());
+        let live2: Vec<u64> = rec2.live_rows().iter().map(|(id, _)| *id).collect();
+        assert_eq!(live2, live);
+        let names = dir.list().unwrap();
+        assert!(
+            !names.contains(&"wal-1.log".to_string()) && !names.contains(&"base-0.seg".to_string()),
+            "old generation collected: {names:?}"
+        );
+    }
+
+    #[test]
+    fn stale_manifest_pointing_at_missing_segment_is_invalid_data() {
+        let dir = mem_dir();
+        let db = Database::synthesize(5, &ChemblModel::default(), 3);
+        let globals: Vec<u64> = (0..5).collect();
+        let store =
+            DurableStore::create(dir.clone(), FsyncPolicy::Every, &db, &globals, 5).unwrap();
+        let rows = vec![MemRow::new(5, db.fps[0].clone())];
+        store.install_seal(&rows, &HashSet::new(), 6).unwrap();
+        dir.remove("seg-2.seg").unwrap();
+        let err = recover(&dir).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        assert!(err.to_string().contains("seg-2.seg"), "names the missing file: {err}");
+        // Same for a vanished base.
+        let dir2 = mem_dir();
+        DurableStore::create(dir2.clone(), FsyncPolicy::Every, &db, &globals, 5).unwrap();
+        dir2.remove("base-0.seg").unwrap();
+        let err = recover(&dir2).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+    }
+
+    #[test]
+    fn poisoned_store_fails_fast_after_first_error() {
+        let dir = mem_dir();
+        let db = Database::synthesize(3, &ChemblModel::default(), 3);
+        let globals: Vec<u64> = (0..3).collect();
+        let store =
+            DurableStore::create(dir.clone(), FsyncPolicy::Every, &db, &globals, 3).unwrap();
+        // Removing the WAL out from under the store forces an I/O error.
+        dir.remove("wal-1.log").unwrap();
+        assert!(store.log_add(3, &db.fps[0]).is_err());
+        // Even an operation that would now succeed is refused: fail-stop.
+        let err = store.log_del(1).unwrap_err();
+        assert!(err.to_string().contains("poisoned"), "{err}");
+        assert!(store.flush().is_err(), "flush refuses too");
+    }
+}

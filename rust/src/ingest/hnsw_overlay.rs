@@ -72,6 +72,10 @@ impl BaseOps for HnswBase {
     fn contains(&self, id: u64) -> bool {
         self.globals().binary_search(&id).is_ok()
     }
+
+    fn parts(&self) -> (&Database, &[u64]) {
+        (self.db(), self.globals())
+    }
 }
 
 /// A live-ingestion overlay over HNSW serving. Shared across pool workers
@@ -125,6 +129,51 @@ impl MutableHnsw {
         }
     }
 
+    /// Rebuild the approximate family from a recovered durable state: the
+    /// graph is reconstructed from the persisted base rows (the graph
+    /// itself is derived data and is never persisted — docs/durability.md),
+    /// sealed segments and memtable rehydrate into the exact delta, and
+    /// tombstones restore. No store attaches here: the exact family owns
+    /// the WAL; this family follows the same recovered mutation stream.
+    pub fn from_recovered(
+        rec: &super::durable::Recovered,
+        params: HnswParams,
+        shard_shape: Option<(usize, PartitionPolicy)>,
+        cfg: IngestConfig,
+    ) -> Self {
+        let globals = Arc::new(rec.globals.clone());
+        let base = match shard_shape {
+            None => HnswBase::Single {
+                graph: Arc::new(HnswBuilder::new(params.clone()).build(&rec.db)),
+                globals,
+                db: rec.db.clone(),
+            },
+            Some((shards, policy)) => {
+                let sharded = Arc::new(ShardedDatabase::partition(rec.db.clone(), shards, policy));
+                HnswBase::Sharded {
+                    index: Arc::new(ShardedHnsw::build(sharded, params.clone())),
+                    globals,
+                }
+            }
+        };
+        let sealed: Vec<Arc<super::SealedSegment>> = rec
+            .segments
+            .iter()
+            .map(|rows| Arc::new(super::SealedSegment::from_rows(rows.clone())))
+            .collect();
+        let mem = super::Memtable::from_rows(&rec.mem_rows);
+        let core = MutableCore::with_state(
+            base,
+            sealed,
+            mem,
+            rec.tombstones.clone(),
+            rec.next_id,
+            cfg,
+            None,
+        );
+        Self { core, params, shard_shape, scratch_pool: Mutex::new(Vec::new()) }
+    }
+
     pub fn snapshot(&self) -> Arc<Snapshot<HnswBase>> {
         self.core.snapshot()
     }
@@ -151,6 +200,23 @@ impl MutableHnsw {
     /// Tombstone a live row; `false` when unknown/already deleted.
     pub fn delete(&self, id: u64) -> bool {
         self.core.delete(id)
+    }
+
+    /// Fallible [`MutableHnsw::add`] (infallible here — this family never
+    /// attaches a store — but the [`super::MutableWriter`] contract is
+    /// fallible so every target reports through one shape).
+    pub fn try_add(&self, fp: Fingerprint) -> std::io::Result<u64> {
+        self.core.try_add(fp)
+    }
+
+    /// Fallible [`MutableHnsw::delete`] (see `try_add`).
+    pub fn try_delete(&self, id: u64) -> std::io::Result<bool> {
+        self.core.try_delete(id)
+    }
+
+    /// Flush the attached WAL, if any (none for this family; no-op).
+    pub fn flush(&self) -> std::io::Result<()> {
+        self.core.flush()
     }
 
     fn checkout_scratch(&self) -> SearchScratch {

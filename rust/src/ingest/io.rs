@@ -1,0 +1,522 @@
+//! The durability I/O seam: every byte the ingest subsystem persists goes
+//! through [`AtomicDir`] (a directory of named files with atomic
+//! write-temp-+-rename installs) and [`WalFile`] (an append-only log
+//! handle with explicit fsync). Two implementations:
+//!
+//! * [`RealDir`] — the real filesystem, used by `serve --live --data-dir`.
+//! * [`MemDir`] — an in-process filesystem that models durability the way
+//!   a kernel does: appended bytes sit in a *pending* buffer until
+//!   `sync`, and a simulated crash ([`MemDir::crash`]) drops everything
+//!   pending. [`CrashPointFs`] wraps it to abort the write path at
+//!   exactly operation N (optionally tearing the final append), which is
+//!   what makes the crash-point recovery sweep in `tests/recovery.rs`
+//!   deterministic.
+//!
+//! The trait surface is deliberately tiny — create/append/sync a WAL,
+//! read a file, atomically replace a file, list/remove — because every
+//! operation here is a crash point the recovery contract must survive.
+
+use std::collections::BTreeMap;
+use std::io;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+/// An append-only log file. `append` buffers; `sync` is the durability
+/// point (a record is guaranteed to survive a crash only once a `sync`
+/// covering it returned).
+pub trait WalFile: Send {
+    fn append(&mut self, buf: &[u8]) -> io::Result<()>;
+    fn sync(&mut self) -> io::Result<()>;
+}
+
+/// A flat directory of named files with atomic replacement. All durable
+/// ingest state (WAL, manifest, base/segment files) lives in one such
+/// directory; names never contain path separators.
+pub trait AtomicDir: Send + Sync {
+    /// Create (or truncate) an append-only log file.
+    fn create_wal(&self, name: &str) -> io::Result<Box<dyn WalFile>>;
+    /// Read a whole file.
+    fn read(&self, name: &str) -> io::Result<Vec<u8>>;
+    /// Atomically install `bytes` as `name` (write temp → fsync → rename):
+    /// after a crash the file holds either its old contents or `bytes`,
+    /// never a prefix.
+    fn write_atomic(&self, name: &str, bytes: &[u8]) -> io::Result<()>;
+    fn exists(&self, name: &str) -> bool;
+    /// Remove a file (garbage collection; callers treat failure as
+    /// best-effort — an orphaned file is re-collected on the next boot).
+    fn remove(&self, name: &str) -> io::Result<()>;
+    /// All file names currently present (sorted).
+    fn list(&self) -> io::Result<Vec<String>>;
+}
+
+// ---------------------------------------------------------------------------
+// Real filesystem
+// ---------------------------------------------------------------------------
+
+/// [`AtomicDir`] over a real directory (created on construction).
+pub struct RealDir {
+    root: PathBuf,
+}
+
+impl RealDir {
+    pub fn open(root: impl Into<PathBuf>) -> io::Result<Self> {
+        let root = root.into();
+        std::fs::create_dir_all(&root)?;
+        Ok(Self { root })
+    }
+
+    pub fn root(&self) -> &std::path::Path {
+        &self.root
+    }
+
+    fn path(&self, name: &str) -> PathBuf {
+        debug_assert!(
+            !name.contains('/') && !name.contains('\\'),
+            "AtomicDir names are flat"
+        );
+        self.root.join(name)
+    }
+
+    /// Flush the directory entry itself so a just-created or just-renamed
+    /// name survives a crash (a file fsync does not cover its directory).
+    fn sync_dir(&self) -> io::Result<()> {
+        std::fs::File::open(&self.root)?.sync_all()
+    }
+}
+
+struct RealWal {
+    file: std::fs::File,
+}
+
+impl WalFile for RealWal {
+    fn append(&mut self, buf: &[u8]) -> io::Result<()> {
+        use std::io::Write;
+        self.file.write_all(buf)
+    }
+
+    fn sync(&mut self) -> io::Result<()> {
+        self.file.sync_data()
+    }
+}
+
+impl AtomicDir for RealDir {
+    fn create_wal(&self, name: &str) -> io::Result<Box<dyn WalFile>> {
+        let file = std::fs::File::create(self.path(name))?;
+        // Make the directory entry durable before any record is: a WAL
+        // that vanishes wholesale after its manifest was installed would
+        // read as silent data loss rather than an empty tail.
+        self.sync_dir()?;
+        Ok(Box::new(RealWal { file }))
+    }
+
+    fn read(&self, name: &str) -> io::Result<Vec<u8>> {
+        std::fs::read(self.path(name))
+    }
+
+    fn write_atomic(&self, name: &str, bytes: &[u8]) -> io::Result<()> {
+        let tmp = self.path(&format!(".tmp-{name}"));
+        {
+            use std::io::Write;
+            let mut f = std::fs::File::create(&tmp)?;
+            f.write_all(bytes)?;
+            f.sync_all()?;
+        }
+        std::fs::rename(&tmp, self.path(name))?;
+        self.sync_dir()
+    }
+
+    fn exists(&self, name: &str) -> bool {
+        self.path(name).exists()
+    }
+
+    fn remove(&self, name: &str) -> io::Result<()> {
+        std::fs::remove_file(self.path(name))
+    }
+
+    fn list(&self) -> io::Result<Vec<String>> {
+        let mut names: Vec<String> = std::fs::read_dir(&self.root)?
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_type().map(|t| t.is_file()).unwrap_or(false))
+            .filter_map(|e| e.file_name().into_string().ok())
+            .collect();
+        names.sort();
+        Ok(names)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// In-memory filesystem with kernel-style durability semantics
+// ---------------------------------------------------------------------------
+
+#[derive(Default, Clone)]
+struct MemFile {
+    /// Bytes that survive a crash (covered by a sync or an atomic install).
+    durable: Vec<u8>,
+    /// Appended but not yet synced — dropped by [`MemDir::crash`].
+    pending: Vec<u8>,
+}
+
+#[derive(Default)]
+struct MemState {
+    files: BTreeMap<String, MemFile>,
+}
+
+/// In-memory [`AtomicDir`]. Clones share the same state, so a test can
+/// hold one handle for writing and another for post-crash recovery.
+#[derive(Clone, Default)]
+pub struct MemDir {
+    state: Arc<Mutex<MemState>>,
+}
+
+impl MemDir {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Simulate a crash: every unsynced (pending) byte is lost; durable
+    /// contents survive. The handle stays usable — recovery reopens it.
+    pub fn crash(&self) {
+        let mut st = self.state.lock().unwrap();
+        for f in st.files.values_mut() {
+            f.pending.clear();
+        }
+    }
+
+    /// Overwrite a file's durable bytes in place (corruption-corpus tests:
+    /// bit flips, truncation, trailing garbage — things a real disk does
+    /// that `write_atomic` never would).
+    pub fn corrupt(&self, name: &str, bytes: Vec<u8>) {
+        let mut st = self.state.lock().unwrap();
+        st.files.insert(name.to_string(), MemFile { durable: bytes, pending: Vec::new() });
+    }
+
+    /// Durable bytes of `name` (what a crash would leave behind).
+    pub fn durable_bytes(&self, name: &str) -> Option<Vec<u8>> {
+        self.state.lock().unwrap().files.get(name).map(|f| f.durable.clone())
+    }
+}
+
+struct MemWal {
+    state: Arc<Mutex<MemState>>,
+    name: String,
+}
+
+impl WalFile for MemWal {
+    fn append(&mut self, buf: &[u8]) -> io::Result<()> {
+        let mut st = self.state.lock().unwrap();
+        match st.files.get_mut(&self.name) {
+            Some(f) => {
+                f.pending.extend_from_slice(buf);
+                Ok(())
+            }
+            None => Err(io::Error::new(io::ErrorKind::NotFound, "wal removed")),
+        }
+    }
+
+    fn sync(&mut self) -> io::Result<()> {
+        let mut st = self.state.lock().unwrap();
+        match st.files.get_mut(&self.name) {
+            Some(f) => {
+                let pending = std::mem::take(&mut f.pending);
+                f.durable.extend_from_slice(&pending);
+                Ok(())
+            }
+            None => Err(io::Error::new(io::ErrorKind::NotFound, "wal removed")),
+        }
+    }
+}
+
+impl AtomicDir for MemDir {
+    fn create_wal(&self, name: &str) -> io::Result<Box<dyn WalFile>> {
+        let mut st = self.state.lock().unwrap();
+        st.files.insert(name.to_string(), MemFile::default());
+        Ok(Box::new(MemWal { state: self.state.clone(), name: name.to_string() }))
+    }
+
+    fn read(&self, name: &str) -> io::Result<Vec<u8>> {
+        let st = self.state.lock().unwrap();
+        match st.files.get(name) {
+            // A live read sees written-but-unsynced bytes, like the page
+            // cache would; only a crash distinguishes durable from pending.
+            Some(f) => {
+                let mut out = f.durable.clone();
+                out.extend_from_slice(&f.pending);
+                Ok(out)
+            }
+            None => Err(io::Error::new(io::ErrorKind::NotFound, format!("no file {name}"))),
+        }
+    }
+
+    fn write_atomic(&self, name: &str, bytes: &[u8]) -> io::Result<()> {
+        let mut st = self.state.lock().unwrap();
+        st.files
+            .insert(name.to_string(), MemFile { durable: bytes.to_vec(), pending: Vec::new() });
+        Ok(())
+    }
+
+    fn exists(&self, name: &str) -> bool {
+        self.state.lock().unwrap().files.contains_key(name)
+    }
+
+    fn remove(&self, name: &str) -> io::Result<()> {
+        let mut st = self.state.lock().unwrap();
+        match st.files.remove(name) {
+            Some(_) => Ok(()),
+            None => Err(io::Error::new(io::ErrorKind::NotFound, format!("no file {name}"))),
+        }
+    }
+
+    fn list(&self) -> io::Result<Vec<String>> {
+        Ok(self.state.lock().unwrap().files.keys().cloned().collect())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Crash-point fault injection
+// ---------------------------------------------------------------------------
+
+#[derive(Default)]
+struct Injection {
+    /// Durable-effect operations remaining before the crash fires; `None`
+    /// counts without crashing (the sizing pass of a sweep).
+    budget: Option<u64>,
+    /// Total durable-effect operations observed.
+    ops: u64,
+    /// Once tripped, every subsequent operation fails (the process is
+    /// "dead" — only a fresh recovery handle may touch the state again).
+    tripped: bool,
+    /// Tear the final append: persist a deterministic prefix of the very
+    /// buffer whose append crashed, modelling a torn sector write.
+    torn: bool,
+}
+
+/// A fault-injecting [`AtomicDir`]: counts durable-effect operations
+/// (append / sync / atomic install / remove) and makes operation N — and
+/// everything after it — fail, crashing the shared [`MemDir`] state at
+/// that exact point. See `tests/recovery.rs` for the sweep harness.
+#[derive(Clone)]
+pub struct CrashPointFs {
+    mem: MemDir,
+    inj: Arc<Mutex<Injection>>,
+}
+
+impl CrashPointFs {
+    /// Count operations without ever crashing (pass `crash_at_op` `None`),
+    /// or crash at the `n`-th durable-effect operation (1-based).
+    pub fn new(mem: MemDir, crash_at_op: Option<u64>, torn: bool) -> Self {
+        Self {
+            mem,
+            inj: Arc::new(Mutex::new(Injection {
+                budget: crash_at_op,
+                ops: 0,
+                tripped: false,
+                torn,
+            })),
+        }
+    }
+
+    /// Durable-effect operations observed so far (the sizing pass reads
+    /// this to bound the sweep).
+    pub fn ops(&self) -> u64 {
+        self.inj.lock().unwrap().ops
+    }
+
+    /// Whether the injected crash has fired.
+    pub fn tripped(&self) -> bool {
+        self.inj.lock().unwrap().tripped
+    }
+
+    /// The post-crash filesystem, as a recovery process would see it.
+    pub fn after_crash(&self) -> MemDir {
+        self.mem.clone()
+    }
+
+    /// Account one durable-effect operation. `Err` means the operation
+    /// must not take effect; `Ok(torn)` carries the tear request for the
+    /// append that trips the crash.
+    fn charge(&self) -> io::Result<bool> {
+        let mut inj = self.inj.lock().unwrap();
+        if inj.tripped {
+            return Err(io::Error::new(io::ErrorKind::Other, "crashed (post-trip op)"));
+        }
+        inj.ops += 1;
+        if let Some(budget) = inj.budget {
+            if inj.ops >= budget {
+                inj.tripped = true;
+                let torn = inj.torn;
+                drop(inj);
+                // Everything unsynced dies with the process.
+                self.mem.crash();
+                return Ok(torn);
+            }
+        }
+        Ok(false)
+    }
+
+    fn crash_err(&self) -> io::Error {
+        io::Error::new(io::ErrorKind::Other, format!("injected crash at op {}", self.ops()))
+    }
+}
+
+struct CrashWal {
+    inner: Box<dyn WalFile>,
+    fs: CrashPointFs,
+    name: String,
+}
+
+impl WalFile for CrashWal {
+    fn append(&mut self, buf: &[u8]) -> io::Result<()> {
+        match self.fs.charge() {
+            Ok(false) => self.inner.append(buf),
+            Ok(true) => {
+                // Torn write: a deterministic prefix of this record reaches
+                // the platter before the crash. The prefix length is a
+                // function of the op counter, so every crash point tears at
+                // a different boundary across the sweep.
+                let keep = (self.fs.ops() as usize * 7) % (buf.len() + 1);
+                let mut st = self.fs.mem.state.lock().unwrap();
+                if let Some(f) = st.files.get_mut(&self.name) {
+                    f.durable.extend_from_slice(&buf[..keep]);
+                }
+                Err(self.fs.crash_err())
+            }
+            Err(e) => Err(e),
+        }
+    }
+
+    fn sync(&mut self) -> io::Result<()> {
+        match self.fs.charge() {
+            Ok(false) => self.inner.sync(),
+            Ok(true) => Err(self.fs.crash_err()),
+            Err(e) => Err(e),
+        }
+    }
+}
+
+impl AtomicDir for CrashPointFs {
+    fn create_wal(&self, name: &str) -> io::Result<Box<dyn WalFile>> {
+        match self.charge() {
+            Ok(false) => Ok(Box::new(CrashWal {
+                inner: self.mem.create_wal(name)?,
+                fs: self.clone(),
+                name: name.to_string(),
+            })),
+            Ok(true) => Err(self.crash_err()),
+            Err(e) => Err(e),
+        }
+    }
+
+    fn read(&self, name: &str) -> io::Result<Vec<u8>> {
+        // Reads have no durable effect: not a crash point.
+        self.mem.read(name)
+    }
+
+    fn write_atomic(&self, name: &str, bytes: &[u8]) -> io::Result<()> {
+        match self.charge() {
+            // Atomic by contract: either the whole install lands (charged
+            // before the crash) or none of it does.
+            Ok(false) => self.mem.write_atomic(name, bytes),
+            Ok(true) => Err(self.crash_err()),
+            Err(e) => Err(e),
+        }
+    }
+
+    fn exists(&self, name: &str) -> bool {
+        self.mem.exists(name)
+    }
+
+    fn remove(&self, name: &str) -> io::Result<()> {
+        match self.charge() {
+            Ok(false) => self.mem.remove(name),
+            Ok(true) => Err(self.crash_err()),
+            Err(e) => Err(e),
+        }
+    }
+
+    fn list(&self) -> io::Result<Vec<String>> {
+        self.mem.list()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn memdir_models_sync_as_the_durability_point() {
+        let dir = MemDir::new();
+        let mut wal = dir.create_wal("wal").unwrap();
+        wal.append(b"abc").unwrap();
+        wal.sync().unwrap();
+        wal.append(b"def").unwrap();
+        // A live read sees everything, like the page cache.
+        assert_eq!(dir.read("wal").unwrap(), b"abcdef");
+        dir.crash();
+        // The crash drops the unsynced suffix only.
+        assert_eq!(dir.read("wal").unwrap(), b"abc");
+        // Atomic installs are durable without a separate sync.
+        dir.write_atomic("manifest", b"m1").unwrap();
+        dir.crash();
+        assert_eq!(dir.read("manifest").unwrap(), b"m1");
+        assert_eq!(dir.list().unwrap(), vec!["manifest".to_string(), "wal".to_string()]);
+        dir.remove("wal").unwrap();
+        assert!(!dir.exists("wal"));
+    }
+
+    #[test]
+    fn crash_point_fs_trips_at_op_n_and_stays_dead() {
+        // Sizing pass: count ops without crashing.
+        let count = {
+            let fs = CrashPointFs::new(MemDir::new(), None, false);
+            let mut wal = fs.create_wal("wal").unwrap(); // op 1
+            wal.append(b"a").unwrap(); // op 2
+            wal.sync().unwrap(); // op 3
+            fs.write_atomic("m", b"x").unwrap(); // op 4
+            fs.ops()
+        };
+        assert_eq!(count, 4);
+        // Crash at op 3 (the sync): the append's bytes never became durable.
+        let fs = CrashPointFs::new(MemDir::new(), Some(3), false);
+        let mut wal = fs.create_wal("wal").unwrap();
+        wal.append(b"a").unwrap();
+        assert!(wal.sync().is_err(), "op 3 crashes");
+        assert!(fs.tripped());
+        assert!(fs.write_atomic("m", b"x").is_err(), "post-trip ops fail");
+        assert_eq!(fs.after_crash().read("wal").unwrap(), b"", "unsynced bytes lost");
+    }
+
+    #[test]
+    fn torn_mode_persists_a_prefix_of_the_final_append() {
+        let fs = CrashPointFs::new(MemDir::new(), Some(2), true);
+        let mut wal = fs.create_wal("wal").unwrap(); // op 1
+        let err = wal.append(b"0123456789").unwrap_err(); // op 2: torn crash
+        assert!(err.to_string().contains("injected crash"));
+        let left = fs.after_crash().read("wal").unwrap();
+        assert!(left.len() < 10, "only a prefix survives");
+        assert_eq!(&b"0123456789"[..left.len()], &left[..], "and it is a prefix");
+    }
+
+    #[test]
+    fn real_dir_round_trips_and_installs_atomically() {
+        let root = std::env::temp_dir().join(format!(
+            "molfpga-io-test-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let dir = RealDir::open(&root).unwrap();
+        let mut wal = dir.create_wal("wal-0.log").unwrap();
+        wal.append(b"hello ").unwrap();
+        wal.append(b"wal").unwrap();
+        wal.sync().unwrap();
+        assert_eq!(dir.read("wal-0.log").unwrap(), b"hello wal");
+        dir.write_atomic("MANIFEST", b"gen-1").unwrap();
+        dir.write_atomic("MANIFEST", b"gen-2").unwrap();
+        assert_eq!(dir.read("MANIFEST").unwrap(), b"gen-2");
+        let names = dir.list().unwrap();
+        assert!(names.contains(&"MANIFEST".to_string()) && names.contains(&"wal-0.log".to_string()));
+        assert!(!names.iter().any(|n| n.starts_with(".tmp-")), "temp files never linger");
+        dir.remove("wal-0.log").unwrap();
+        assert!(!dir.exists("wal-0.log"));
+        let _ = std::fs::remove_dir_all(&root);
+    }
+}

@@ -49,17 +49,32 @@
 //! **global id** (the initial database occupies `0..n`) that survives
 //! sealing and compaction — results, deletes, and the wire protocol all
 //! speak these ids.
+//!
+//! **Durability** (optional; `serve --live --data-dir <d>`) — mutations
+//! are framed into a write-ahead log *before* they apply ([`wal`]), seals
+//! and compactions persist their outputs as CRC-framed files named by an
+//! atomically swapped manifest ([`durable`]), and startup recovers the
+//! pre-crash index bit-identically over the surviving rows. All file I/O
+//! goes through the [`io`] seam so the crash-point fault-injection
+//! harness (`tests/recovery.rs`) can kill the "machine" at every
+//! individual write/fsync/rename. See docs/durability.md.
 
+pub mod durable;
 pub mod hnsw_overlay;
+pub mod io;
 pub mod mutable;
 pub mod segment;
 pub mod state;
+pub mod wal;
 pub mod write_path;
 
 pub use state::{BaseOps, Snapshot};
+pub use durable::{open_or_create, recover, DurableStore, Recovered};
 pub use hnsw_overlay::{HnswBase, MutableHnsw};
+pub use io::{AtomicDir, CrashPointFs, MemDir, RealDir, WalFile};
 pub use mutable::{BaseSegment, MutableIndex};
 pub use segment::{MemRow, Memtable, SealedSegment};
+pub use wal::{FsyncPolicy, WalRecord};
 pub use write_path::{MutableWriter, WritePath};
 
 use crate::fingerprint::Database;

@@ -29,7 +29,8 @@
 //! sealed index always had, now simply entered at compaction time
 //! instead of build time.
 
-use super::segment::scan_rows_into;
+use super::durable::{DurableStore, Recovered};
+use super::segment::{scan_rows_into, Memtable, SealedSegment};
 use super::state::{BaseOps, MutableCore, Snapshot};
 use super::IngestConfig;
 use crate::fingerprint::{Database, Fingerprint};
@@ -37,6 +38,7 @@ use crate::index::SearchIndex;
 use crate::shard::ShardableIndex;
 use crate::topk::{Scored, ShardMerge, TopKMerge};
 use std::collections::HashSet;
+use std::io;
 use std::sync::Arc;
 
 /// The sealed base: an indexed database plus its local→global id map
@@ -54,6 +56,10 @@ impl<I: Send + Sync> BaseOps for BaseSegment<I> {
 
     fn contains(&self, id: u64) -> bool {
         self.globals.binary_search(&id).is_ok()
+    }
+
+    fn parts(&self) -> (&Database, &[u64]) {
+        (&self.db, &self.globals)
     }
 }
 
@@ -93,6 +99,46 @@ impl<I: ShardableIndex> MutableIndex<I> {
         Self { core: MutableCore::new(base, next_id, cfg), icfg, delta_cutoff }
     }
 
+    /// Rebuild the exact pre-crash index from a recovered durable state
+    /// (base index rebuilt from the persisted rows, sealed segments and
+    /// memtable rehydrated, tombstones restored), attaching `store` so
+    /// every subsequent mutation is logged. Searches over the result are
+    /// bit-identical to the pre-crash index over the surviving rows —
+    /// the crash-point harness in `tests/recovery.rs` proves it.
+    pub fn from_recovered(
+        rec: &Recovered,
+        store: Arc<DurableStore>,
+        icfg: I::Config,
+        cfg: IngestConfig,
+    ) -> Self {
+        let delta_cutoff = I::config_cutoff(&icfg);
+        assert!(
+            (0.0..=1.0).contains(&delta_cutoff),
+            "index config reports a cutoff outside [0, 1]"
+        );
+        let base = BaseSegment {
+            db: rec.db.clone(),
+            globals: Arc::new(rec.globals.clone()),
+            index: I::build_shard(rec.db.clone(), &icfg),
+        };
+        let sealed: Vec<Arc<SealedSegment>> = rec
+            .segments
+            .iter()
+            .map(|rows| Arc::new(SealedSegment::from_rows(rows.clone())))
+            .collect();
+        let mem = Memtable::from_rows(&rec.mem_rows);
+        let core = MutableCore::with_state(
+            base,
+            sealed,
+            mem,
+            rec.tombstones.clone(),
+            rec.next_id,
+            cfg,
+            Some(store),
+        );
+        Self { core, icfg, delta_cutoff }
+    }
+
     /// The current immutable view (tests and diagnostics).
     pub fn snapshot(&self) -> Arc<Snapshot<BaseSegment<I>>> {
         self.core.snapshot()
@@ -118,16 +164,49 @@ impl<I: ShardableIndex> MutableIndex<I> {
         self.core.delete(id)
     }
 
+    /// Fallible [`MutableIndex::add`] — with a durable store attached,
+    /// `Ok` means the row is WAL-framed (fsynced per policy) *and*
+    /// applied; `Err` means neither (the store fail-stops).
+    pub fn try_add(&self, fp: Fingerprint) -> io::Result<u64> {
+        self.core.try_add(fp)
+    }
+
+    /// Fallible [`MutableIndex::delete`] (same contract as `try_add`).
+    pub fn try_delete(&self, id: u64) -> io::Result<bool> {
+        self.core.try_delete(id)
+    }
+
+    /// Flush the WAL so every applied mutation is durable (no-op without
+    /// a store).
+    pub fn flush(&self) -> io::Result<()> {
+        self.core.flush()
+    }
+
     /// Run one compaction cycle: fold every sealed segment and applicable
     /// tombstone into a freshly built base (BitBound/folded sort orders
     /// rebuilt by `I`'s factory). Returns `false` when there was nothing
     /// to fold. Runs concurrently with reads and writes; concurrent
     /// callers serialize.
     pub fn compact_once(&self) -> bool {
+        match self.try_compact_once() {
+            Ok(progressed) => progressed,
+            Err(e) => {
+                // The store fail-stopped; the in-memory (old) generation
+                // keeps serving and the background loop backs off. Writes
+                // fail fast with the same poisoned-store error.
+                eprintln!("[molfpga] compaction install failed: {e}");
+                false
+            }
+        }
+    }
+
+    /// Fallible [`MutableIndex::compact_once`]: an `Err` means the durable
+    /// install failed — nothing was swapped, in memory or on disk.
+    pub fn try_compact_once(&self) -> io::Result<bool> {
         let _guard = self.core.compact_lock.lock().unwrap();
         let captured = self.core.snapshot();
         if captured.sealed.is_empty() && self.core.applicable_tombstones(&captured) == 0 {
-            return false;
+            return Ok(false);
         }
         let cap = captured.base.rows() + captured.sealed.iter().map(|s| s.len()).sum::<usize>();
         let mut fps = Vec::with_capacity(cap);
@@ -146,8 +225,9 @@ impl<I: ShardableIndex> MutableIndex<I> {
         // captured (still-consistent) stack while this builds.
         let db = Arc::new(Database::new(fps));
         let index = I::build_shard(db.clone(), &self.icfg);
-        self.core.install(&captured, BaseSegment { db, globals: Arc::new(ids), index }, &applied);
-        true
+        self.core
+            .try_install(&captured, BaseSegment { db, globals: Arc::new(ids), index }, &applied)?;
+        Ok(true)
     }
 
     /// Spawn the background compactor (idempotent; call as

@@ -92,6 +92,18 @@ impl Memtable {
     pub fn to_rows(&self) -> Vec<MemRow> {
         self.iter().cloned().collect()
     }
+
+    /// Rebuild a memtable from flat rows (the recovery path: a replayed
+    /// WAL tail becomes the memtable again, re-chunked exactly as if the
+    /// rows had arrived live — `appended` rolls a full tail into a chunk,
+    /// so full chunks first, remainder in the tail).
+    pub fn from_rows(rows: &[MemRow]) -> Self {
+        debug_assert!(rows.windows(2).all(|w| w[0].id < w[1].id), "rows must be id-sorted");
+        let full = rows.len() - rows.len() % MEM_CHUNK_ROWS;
+        let chunks: Vec<Arc<Vec<MemRow>>> =
+            rows[..full].chunks(MEM_CHUNK_ROWS).map(|c| Arc::new(c.to_vec())).collect();
+        Self { chunks, tail: Arc::new(rows[full..].to_vec()) }
+    }
 }
 
 /// A frozen memtable: immutable, id-sorted, awaiting compaction. Scanned
@@ -104,6 +116,13 @@ pub struct SealedSegment {
 impl SealedSegment {
     pub fn from_memtable(mem: &Memtable) -> Self {
         Self { rows: mem.to_rows() }
+    }
+
+    /// Rehydrate a sealed segment from its durable file's rows
+    /// (`ingest::durable::recover`).
+    pub fn from_rows(rows: Vec<MemRow>) -> Self {
+        debug_assert!(rows.windows(2).all(|w| w[0].id < w[1].id), "rows must be id-sorted");
+        Self { rows }
     }
 
     pub fn len(&self) -> usize {

@@ -15,10 +15,12 @@
 //!   the build ran. A single compaction lock serializes concurrent
 //!   `compact_once` callers (manual + background).
 
+use super::durable::DurableStore;
 use super::segment::{MemRow, Memtable, SealedSegment};
 use super::{IngestConfig, IngestStats};
-use crate::fingerprint::Fingerprint;
+use crate::fingerprint::{Database, Fingerprint};
 use std::collections::HashSet;
+use std::io;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex, Weak};
 
@@ -31,6 +33,9 @@ pub trait BaseOps: Send + Sync {
     fn rows(&self) -> usize;
     /// Whether global id `id` is physically present in the base.
     fn contains(&self, id: u64) -> bool;
+    /// The raw base contents — fingerprints + their global-id map — for
+    /// the durability layer to persist at a compaction install.
+    fn parts(&self) -> (&Database, &[u64]);
 }
 
 /// An epoch-tagged, fully immutable view of the segment stack.
@@ -146,26 +151,52 @@ pub(crate) struct MutableCore<B> {
     pub(crate) stats: Arc<IngestStats>,
     /// Background compactor bookkeeping (stop flag + join handle).
     compactor: Mutex<Option<(Arc<AtomicBool>, std::thread::JoinHandle<()>)>>,
+    /// Durability sink, when this index is the durable family
+    /// (`serve --live --data-dir`): every mutation is WAL-framed here
+    /// *before* it applies, and every seal/compaction install persists
+    /// its output before the snapshot swap.
+    store: Option<Arc<DurableStore>>,
 }
 
 impl<B: BaseOps> MutableCore<B> {
     pub fn new(base: B, next_id: u64, cfg: IngestConfig) -> Self {
+        Self::with_state(base, Vec::new(), Memtable::empty(), HashSet::new(), next_id, cfg, None)
+    }
+
+    /// Construct over an explicit segment stack — the recovery path
+    /// ([`super::durable::recover`]) rebuilds sealed segments, memtable
+    /// and tombstones from disk and hands them here, optionally attaching
+    /// the durable store all subsequent mutations are logged to.
+    pub fn with_state(
+        base: B,
+        sealed: Vec<Arc<SealedSegment>>,
+        mem: Memtable,
+        tombstones: HashSet<u64>,
+        next_id: u64,
+        cfg: IngestConfig,
+        store: Option<Arc<DurableStore>>,
+    ) -> Self {
+        let base_dead = tombstones.iter().filter(|&&t| base.contains(t)).count();
         let snap = Snapshot {
             epoch: 0,
             base: Arc::new(base),
-            sealed: Vec::new(),
-            mem: Memtable::empty(),
-            tombstones: Arc::new(HashSet::new()),
-            base_dead: 0,
+            sealed,
+            mem,
+            tombstones: Arc::new(tombstones),
+            base_dead,
         };
-        Self {
+        let core = Self {
             snapshot: Mutex::new(Arc::new(snap)),
             writer: Mutex::new(WriterState { next_id }),
             compact_lock: Mutex::new(()),
             cfg,
             stats: Arc::new(IngestStats::default()),
             compactor: Mutex::new(None),
-        }
+            store,
+        };
+        let snap = core.snapshot();
+        core.refresh_gauges(&snap);
+        core
     }
 
     /// The current immutable view (readers' entry point; one short lock).
@@ -173,31 +204,56 @@ impl<B: BaseOps> MutableCore<B> {
         self.snapshot.lock().unwrap().clone()
     }
 
-    /// Swap in `snap` and refresh the gauges. Caller holds the writer lock.
-    fn publish(&self, snap: Snapshot<B>) {
+    /// The attached durable store, if any.
+    pub fn store(&self) -> Option<&Arc<DurableStore>> {
+        self.store.as_ref()
+    }
+
+    fn refresh_gauges(&self, snap: &Snapshot<B>) {
         let st = &self.stats;
         // ordering: Relaxed — monitoring gauges with no pairing load; the
-        // snapshot itself is published via the Mutex below, which is the
-        // real synchronization edge. Stale gauge reads are acceptable.
+        // snapshot itself is published via the Mutex in `publish`, which
+        // is the real synchronization edge. Stale gauge reads are
+        // acceptable.
         st.memtable_rows.store(snap.mem.rows() as u64, Ordering::Relaxed);
         st.sealed_segments.store(snap.sealed.len() as u64, Ordering::Relaxed);
         st.sealed_rows
             .store(snap.sealed.iter().map(|s| s.len() as u64).sum(), Ordering::Relaxed);
         st.tombstones.store(snap.tombstones.len() as u64, Ordering::Relaxed);
+    }
+
+    /// Swap in `snap` and refresh the gauges. Caller holds the writer lock.
+    fn publish(&self, snap: Snapshot<B>) {
+        self.refresh_gauges(&snap);
         *self.snapshot.lock().unwrap() = Arc::new(snap);
     }
 
     /// Append one row; returns its assigned global id. Seals the memtable
     /// into an immutable segment once it reaches `cfg.seal_rows`.
-    pub fn add(&self, fp: Fingerprint) -> u64 {
+    ///
+    /// **Ack point** — with a durable store attached, the row is framed
+    /// into the WAL (fsynced per policy) *before* any in-memory state
+    /// changes: `Ok` is the durability acknowledgement. On `Err` the add
+    /// was not applied, nothing was acknowledged, and the store is
+    /// poisoned (fail-stop; docs/durability.md).
+    pub fn try_add(&self, fp: Fingerprint) -> io::Result<u64> {
         let mut w = self.writer.lock().unwrap();
         let id = w.next_id;
-        w.next_id += 1;
+        if let Some(store) = &self.store {
+            store.log_add(id, &fp)?;
+        }
+        w.next_id = id + 1;
         let cur = self.snapshot();
         let mut sealed = cur.sealed.clone();
         let mut mem = cur.mem.appended(MemRow::new(id, fp));
         if mem.rows() >= self.cfg.seal_rows.max(1) {
-            sealed.push(Arc::new(SealedSegment::from_memtable(&mem)));
+            let seg = Arc::new(SealedSegment::from_memtable(&mem));
+            if let Some(store) = &self.store {
+                // Segment file + manifest before the in-memory seal: a
+                // crash inside leaves the rows replayable from the WAL.
+                store.install_seal(&seg.rows, &cur.tombstones, w.next_id)?;
+            }
+            sealed.push(seg);
             mem = Memtable::empty();
             // ordering: Relaxed — monotonic event counter, no pairing
             // load; exactness is guaranteed by the writer lock held here.
@@ -213,7 +269,13 @@ impl<B: BaseOps> MutableCore<B> {
             tombstones: cur.tombstones.clone(),
             base_dead: cur.base_dead,
         });
-        id
+        Ok(id)
+    }
+
+    /// Infallible [`MutableCore::try_add`] for store-less indexes (the
+    /// only I/O is the durable store's, so without one this cannot fail).
+    pub fn add(&self, fp: Fingerprint) -> u64 {
+        self.try_add(fp).expect("add failed: durable store I/O error")
     }
 
     /// Tombstone a live row. Returns `false` (and changes nothing) when
@@ -225,15 +287,22 @@ impl<B: BaseOps> MutableCore<B> {
     /// a delete-heavy deploy running `--no-compactor` should expect the
     /// cost to grow with the uncompacted tombstone count (a chunked
     /// tombstone log, like the memtable's, is the upgrade path).
-    pub fn delete(&self, id: u64) -> bool {
+    /// Fallible delete with the same ack point as [`MutableCore::try_add`]:
+    /// validation happens first (an unknown or already-deleted id returns
+    /// `Ok(false)` without touching the WAL), then the DEL is framed, then
+    /// the tombstone applies.
+    pub fn try_delete(&self, id: u64) -> io::Result<bool> {
         let _w = self.writer.lock().unwrap();
         let cur = self.snapshot();
         if cur.tombstones.contains(&id) {
-            return false;
+            return Ok(false);
         }
         let in_base = cur.base.contains(id);
         if !in_base && !cur.delta_contains(id) {
-            return false;
+            return Ok(false);
+        }
+        if let Some(store) = &self.store {
+            store.log_del(id)?;
         }
         let mut tombs: HashSet<u64> = cur.tombstones.as_ref().clone();
         tombs.insert(id);
@@ -248,7 +317,12 @@ impl<B: BaseOps> MutableCore<B> {
             tombstones: Arc::new(tombs),
             base_dead: cur.base_dead + usize::from(in_base),
         });
-        true
+        Ok(true)
+    }
+
+    /// Infallible [`MutableCore::try_delete`] for store-less indexes.
+    pub fn delete(&self, id: u64) -> bool {
+        self.try_delete(id).expect("delete failed: durable store I/O error")
     }
 
     /// Tombstones the compactor could fold away right now (they target a
@@ -266,7 +340,22 @@ impl<B: BaseOps> MutableCore<B> {
     /// that arrived during the build — new sealed segments, memtable rows,
     /// new tombstones — is preserved verbatim.
     pub fn install(&self, captured: &Snapshot<B>, new_base: B, applied: &HashSet<u64>) {
-        let _w = self.writer.lock().unwrap();
+        self.try_install(captured, new_base, applied)
+            .expect("compaction install failed: durable store I/O error")
+    }
+
+    /// Fallible [`MutableCore::install`]: with a durable store attached,
+    /// the new base file, the rotated WAL (re-seeded with the current
+    /// memtable) and the manifest swap all land on disk *before* the
+    /// in-memory snapshot swap — on `Err` the old generation is still
+    /// fully live, in memory and on disk.
+    pub fn try_install(
+        &self,
+        captured: &Snapshot<B>,
+        new_base: B,
+        applied: &HashSet<u64>,
+    ) -> io::Result<()> {
+        let w = self.writer.lock().unwrap();
         let cur = self.snapshot();
         // Sealing only appends and compactions are serialized, so the
         // captured sealed list is a prefix of the current one.
@@ -287,6 +376,20 @@ impl<B: BaseOps> MutableCore<B> {
         // target a physically present base row (zero after a purging
         // rebuild; the HNSW extend path keeps its dead rows in place).
         let base_dead = tombs.iter().filter(|&&t| new_base.contains(t)).count();
+        if let Some(store) = &self.store {
+            let (db, globals) = new_base.parts();
+            // Sealed segments that arrived during the build keep their
+            // files; only the captured prefix was folded into the new base.
+            store.install_compaction(
+                db,
+                globals,
+                consumed,
+                &cur.mem.to_rows(),
+                &tombs,
+                w.next_id,
+                cur.epoch + 1,
+            )?;
+        }
         // ordering: Relaxed — monotonic event counter, no pairing load;
         // exactness is guaranteed by the writer lock held here.
         self.stats.compactions.fetch_add(1, Ordering::Relaxed);
@@ -298,6 +401,16 @@ impl<B: BaseOps> MutableCore<B> {
             tombstones: Arc::new(tombs),
             base_dead,
         });
+        Ok(())
+    }
+
+    /// Flush the WAL so every applied mutation is durable (clean shutdown
+    /// under `fsync batch|never`; no-op without a store).
+    pub fn flush(&self) -> io::Result<()> {
+        match &self.store {
+            Some(store) => store.flush(),
+            None => Ok(()),
+        }
     }
 
     /// Whether the background compactor should run a cycle on `snap`.
@@ -377,6 +490,12 @@ impl<B> Drop for MutableCore<B> {
                 // compactor loop (no join here; the flag is the only edge).
                 stop.store(true, Ordering::Release);
             }
+        }
+        // A clean exit never loses an applied write: flush the WAL even
+        // under `fsync batch|never` (best effort — a dead disk stays dead,
+        // and the store's own Drop retries).
+        if let Some(store) = &self.store {
+            let _ = store.flush();
         }
     }
 }

@@ -1,0 +1,412 @@
+//! The write-ahead log: an append-only stream of length-prefixed,
+//! CRC-framed mutation records, written **before** the in-memory apply so
+//! an acknowledged mutation is already durable (per the fsync policy)
+//! when the client sees `OK`.
+//!
+//! Frame layout (all little-endian):
+//!
+//! ```text
+//! ┌────────────┬────────────┬──────────────────────────┐
+//! │ len: u32   │ crc32: u32 │ body: len bytes          │
+//! └────────────┴────────────┴──────────────────────────┘
+//! body = tag: u8 ++ payload
+//!   tag 1  ADD     id: u64, words: u32, fp words × u64
+//!   tag 2  DEL     id: u64
+//!   tag 3  SEAL    upto: u64   (control: segment file installed)
+//!   tag 4  COMPACT epoch: u64  (control: log retired by a compaction)
+//! ```
+//!
+//! The reader validates each frame and stops at the first bad one
+//! (truncated header, impossible length, CRC mismatch, unknown tag) —
+//! the *truncated-tail* rule: a torn final record is indistinguishable
+//! from a record that was never written, so both recover to the same
+//! state. Control records are markers for the replay cursor and for
+//! diagnostics; replay itself skips them (docs/durability.md).
+
+use super::io::WalFile;
+use crate::fingerprint::Fingerprint;
+use crate::util::crc::crc32;
+use std::io;
+
+/// When a WAL append becomes durable relative to the acknowledgement.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FsyncPolicy {
+    /// fsync before every ack: an acked mutation survives any crash.
+    Every,
+    /// fsync once per this many records: bounded loss window, amortized
+    /// sync cost. A clean shutdown still flushes everything.
+    Batch(u32),
+    /// Never fsync on the mutation path (the OS flushes eventually, and a
+    /// clean shutdown flushes explicitly): fastest, no crash guarantee.
+    Never,
+}
+
+impl std::str::FromStr for FsyncPolicy {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "every" => Ok(Self::Every),
+            "batch" => Ok(Self::Batch(64)),
+            "never" => Ok(Self::Never),
+            other => {
+                if let Some(n) = other.strip_prefix("batch:") {
+                    let n: u32 = n.parse().map_err(|_| format!("bad batch size {n:?}"))?;
+                    return Ok(Self::Batch(n.max(1)));
+                }
+                Err(format!("unknown fsync policy {other:?} (expected every|batch[:N]|never)"))
+            }
+        }
+    }
+}
+
+/// One WAL record. `Add`/`Del` replay; `Seal`/`Compact` are control
+/// markers written by the durable installs.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WalRecord {
+    Add { id: u64, fp: Fingerprint },
+    Del { id: u64 },
+    Seal { upto: u64 },
+    Compact { epoch: u64 },
+}
+
+const TAG_ADD: u8 = 1;
+const TAG_DEL: u8 = 2;
+const TAG_SEAL: u8 = 3;
+const TAG_COMPACT: u8 = 4;
+
+/// Upper bound on one record body — far above any real record (an ADD is
+/// ~1 KiB at the full fingerprint width) and small enough that a corrupt
+/// length prefix cannot demand a pathological allocation.
+pub const MAX_RECORD_BYTES: u32 = 1 << 20;
+
+impl WalRecord {
+    fn encode_body(&self, out: &mut Vec<u8>) {
+        match self {
+            WalRecord::Add { id, fp } => {
+                out.push(TAG_ADD);
+                out.extend_from_slice(&id.to_le_bytes());
+                out.extend_from_slice(&(fp.words().len() as u32).to_le_bytes());
+                for w in fp.words() {
+                    out.extend_from_slice(&w.to_le_bytes());
+                }
+            }
+            WalRecord::Del { id } => {
+                out.push(TAG_DEL);
+                out.extend_from_slice(&id.to_le_bytes());
+            }
+            WalRecord::Seal { upto } => {
+                out.push(TAG_SEAL);
+                out.extend_from_slice(&upto.to_le_bytes());
+            }
+            WalRecord::Compact { epoch } => {
+                out.push(TAG_COMPACT);
+                out.extend_from_slice(&epoch.to_le_bytes());
+            }
+        }
+    }
+
+    /// The full frame (header + body) for this record.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut body = Vec::with_capacity(32);
+        self.encode_body(&mut body);
+        let mut frame = Vec::with_capacity(8 + body.len());
+        frame.extend_from_slice(&(body.len() as u32).to_le_bytes());
+        frame.extend_from_slice(&crc32(&body).to_le_bytes());
+        frame.extend_from_slice(&body);
+        frame
+    }
+
+    fn decode_body(body: &[u8]) -> Result<WalRecord, String> {
+        let read_u64 = |at: usize| -> Result<u64, String> {
+            body.get(at..at + 8)
+                .map(|b| u64::from_le_bytes(b.try_into().unwrap_or([0; 8])))
+                .ok_or_else(|| "record body truncated".to_string())
+        };
+        match body.first() {
+            Some(&TAG_ADD) => {
+                let id = read_u64(1)?;
+                let words = body
+                    .get(9..13)
+                    .map(|b| u32::from_le_bytes(b.try_into().unwrap_or([0; 4])))
+                    .ok_or("ADD record truncated")? as usize;
+                // The width must be exactly what this build serves — a
+                // record from a different build (or a corrupted count)
+                // must not materialize a mis-sized fingerprint.
+                if words != crate::fingerprint::FP_BITS / 64 {
+                    return Err(format!("ADD fingerprint is {words} words, expected {}", crate::fingerprint::FP_BITS / 64));
+                }
+                if body.len() != 13 + words * 8 {
+                    return Err(format!("ADD body is {} bytes, expected {}", body.len(), 13 + words * 8));
+                }
+                let ws: Vec<u64> = (0..words).map(|i| read_u64(13 + i * 8)).collect::<Result<_, _>>()?;
+                Ok(WalRecord::Add { id, fp: Fingerprint::from_words(ws) })
+            }
+            Some(&TAG_DEL) if body.len() == 9 => Ok(WalRecord::Del { id: read_u64(1)? }),
+            Some(&TAG_SEAL) if body.len() == 9 => Ok(WalRecord::Seal { upto: read_u64(1)? }),
+            Some(&TAG_COMPACT) if body.len() == 9 => Ok(WalRecord::Compact { epoch: read_u64(1)? }),
+            Some(&tag) => Err(format!("unknown or mis-sized record (tag {tag}, {} bytes)", body.len())),
+            None => Err("empty record body".to_string()),
+        }
+    }
+}
+
+/// How reading a WAL ended.
+#[derive(Debug, PartialEq, Eq)]
+pub enum WalTail {
+    /// Every byte parsed as a valid frame.
+    Clean,
+    /// Parsing stopped at byte `at` (torn/corrupt frame); everything
+    /// before it replayed normally. `why` is diagnostic only.
+    Truncated { at: u64, why: String },
+}
+
+/// Parse every valid record starting at byte `from`. Returns the records
+/// and whether the tail was clean or truncated. `from` beyond the buffer
+/// reads as an empty clean log (the manifest's replay cursor can be ahead
+/// of an unsynced-and-lost WAL suffix; everything before the cursor is
+/// covered by segment files and the manifest tombstone set).
+pub fn read_records(bytes: &[u8], from: u64) -> (Vec<WalRecord>, WalTail) {
+    let mut records = Vec::new();
+    let mut at = from as usize;
+    if at >= bytes.len() {
+        return (records, WalTail::Clean);
+    }
+    loop {
+        if at == bytes.len() {
+            return (records, WalTail::Clean);
+        }
+        let bad = |why: String| WalTail::Truncated { at: at as u64, why };
+        let Some(header) = bytes.get(at..at + 8) else {
+            return (records, bad("truncated frame header".into()));
+        };
+        let len = u32::from_le_bytes(header[0..4].try_into().unwrap_or([0; 4]));
+        let crc = u32::from_le_bytes(header[4..8].try_into().unwrap_or([0; 4]));
+        if len > MAX_RECORD_BYTES {
+            return (records, bad(format!("frame length {len} exceeds {MAX_RECORD_BYTES}")));
+        }
+        let Some(body) = bytes.get(at + 8..at + 8 + len as usize) else {
+            return (records, bad("truncated frame body".into()));
+        };
+        if crc32(body) != crc {
+            return (records, bad("frame checksum mismatch".into()));
+        }
+        match WalRecord::decode_body(body) {
+            Ok(rec) => records.push(rec),
+            Err(why) => return (records, bad(why)),
+        }
+        at += 8 + len as usize;
+    }
+}
+
+/// The writer half: frames records onto a [`WalFile`] and tracks the
+/// byte offset (the manifest's replay cursor) plus the policy's unsynced
+/// count.
+pub struct Wal {
+    file: Box<dyn WalFile>,
+    policy: FsyncPolicy,
+    offset: u64,
+    unsynced: u32,
+}
+
+impl Wal {
+    pub fn new(file: Box<dyn WalFile>, policy: FsyncPolicy) -> Self {
+        Self { file, policy, offset: 0, unsynced: 0 }
+    }
+
+    /// Bytes framed so far — the replay cursor a manifest may point at.
+    pub fn offset(&self) -> u64 {
+        self.offset
+    }
+
+    /// Append one record and apply the fsync policy. On `Ok`, `Every`
+    /// guarantees the record is durable; `Batch`/`Never` guarantee it is
+    /// written (a clean [`Wal::sync`] later makes it durable).
+    pub fn append(&mut self, rec: &WalRecord) -> io::Result<()> {
+        let frame = rec.encode();
+        self.file.append(&frame)?;
+        self.offset += frame.len() as u64;
+        self.unsynced += 1;
+        match self.policy {
+            FsyncPolicy::Every => self.sync(),
+            FsyncPolicy::Batch(n) => {
+                if self.unsynced >= n.max(1) {
+                    self.sync()
+                } else {
+                    Ok(())
+                }
+            }
+            FsyncPolicy::Never => Ok(()),
+        }
+    }
+
+    /// Append + fsync regardless of policy — the durable installs (seal,
+    /// compaction, manifest swaps) always pin their control records down.
+    pub fn append_durable(&mut self, rec: &WalRecord) -> io::Result<()> {
+        let frame = rec.encode();
+        self.file.append(&frame)?;
+        self.offset += frame.len() as u64;
+        self.unsynced += 1;
+        self.sync()
+    }
+
+    /// Flush everything appended so far (clean shutdown; batch boundary).
+    pub fn sync(&mut self) -> io::Result<()> {
+        if self.unsynced > 0 {
+            self.file.sync()?;
+            self.unsynced = 0;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::io::MemDir;
+    use super::*;
+    use crate::fingerprint::{ChemblModel, Database};
+
+    fn sample_records() -> Vec<WalRecord> {
+        let db = Database::synthesize(3, &ChemblModel::default(), 5);
+        vec![
+            WalRecord::Add { id: 7, fp: db.fps[0].clone() },
+            WalRecord::Del { id: 3 },
+            WalRecord::Seal { upto: 7 },
+            WalRecord::Add { id: 8, fp: db.fps[1].clone() },
+            WalRecord::Compact { epoch: 41 },
+            WalRecord::Add { id: 9, fp: db.fps[2].clone() },
+        ]
+    }
+
+    #[test]
+    fn frames_round_trip_through_a_wal_file() {
+        let dir = MemDir::new();
+        let mut wal = Wal::new(dir.create_wal("wal").unwrap(), FsyncPolicy::Every);
+        let recs = sample_records();
+        let mut offsets = Vec::new();
+        for r in &recs {
+            wal.append(r).unwrap();
+            offsets.push(wal.offset());
+        }
+        let bytes = dir.read("wal").unwrap();
+        assert_eq!(bytes.len() as u64, wal.offset());
+        let (got, tail) = read_records(&bytes, 0);
+        assert_eq!(tail, WalTail::Clean);
+        assert_eq!(got, recs);
+        // Reading from a mid-stream cursor yields exactly the suffix.
+        let (suffix, tail) = read_records(&bytes, offsets[2]);
+        assert_eq!(tail, WalTail::Clean);
+        assert_eq!(suffix, recs[3..]);
+        // A cursor beyond the buffer is an empty clean log.
+        let (none, tail) = read_records(&bytes, bytes.len() as u64 + 100);
+        assert!(none.is_empty());
+        assert_eq!(tail, WalTail::Clean);
+    }
+
+    #[test]
+    fn truncation_at_every_byte_of_the_last_record_recovers_the_prefix() {
+        let dir = MemDir::new();
+        let mut wal = Wal::new(dir.create_wal("wal").unwrap(), FsyncPolicy::Every);
+        let recs = sample_records();
+        for r in &recs {
+            wal.append(r).unwrap();
+        }
+        let bytes = dir.read("wal").unwrap();
+        let (_, prefix_end) = {
+            // Byte offset where the last record's frame starts.
+            let last = recs.last().unwrap().encode();
+            (last.len(), bytes.len() - last.len())
+        };
+        for cut in prefix_end..bytes.len() {
+            let (got, tail) = read_records(&bytes[..cut], 0);
+            assert_eq!(got, recs[..recs.len() - 1], "cut at byte {cut}");
+            if cut == prefix_end {
+                // Cutting exactly at the frame boundary is a clean log.
+                assert_eq!(tail, WalTail::Clean);
+            } else {
+                assert!(matches!(tail, WalTail::Truncated { .. }), "cut at byte {cut}");
+            }
+        }
+    }
+
+    #[test]
+    fn corrupt_frames_stop_the_replay_never_panic() {
+        let dir = MemDir::new();
+        let mut wal = Wal::new(dir.create_wal("wal").unwrap(), FsyncPolicy::Every);
+        let recs = sample_records();
+        for r in &recs {
+            wal.append(r).unwrap();
+        }
+        let pristine = dir.read("wal").unwrap();
+        // Bit flips anywhere: replay returns some prefix of the true
+        // records and flags the tail (a flip in frame i kills records ≥ i).
+        for byte in 0..pristine.len() {
+            let mut bytes = pristine.clone();
+            bytes[byte] ^= 1 << (byte % 8);
+            let (got, tail) = read_records(&bytes, 0);
+            assert!(got.len() < recs.len(), "flip at {byte} must drop at least one record");
+            assert_eq!(got[..], recs[..got.len()], "flip at {byte}: surviving prefix is exact");
+            assert!(matches!(tail, WalTail::Truncated { .. }), "flip at {byte} flags the tail");
+        }
+        // Trailing garbage after a clean log.
+        let mut bytes = pristine.clone();
+        bytes.extend_from_slice(b"\xDE\xAD\xBE\xEF garbage");
+        let (got, tail) = read_records(&bytes, 0);
+        assert_eq!(got, recs);
+        assert!(matches!(tail, WalTail::Truncated { .. }));
+        // An absurd length prefix must not allocate.
+        let mut bytes = pristine;
+        let at = bytes.len();
+        bytes.extend_from_slice(&u32::MAX.to_le_bytes());
+        bytes.extend_from_slice(&[0u8; 4]);
+        let (got, tail) = read_records(&bytes, 0);
+        assert_eq!(got, recs);
+        assert_eq!(
+            tail,
+            WalTail::Truncated {
+                at: at as u64,
+                why: format!("frame length {} exceeds {}", u32::MAX, MAX_RECORD_BYTES)
+            }
+        );
+    }
+
+    #[test]
+    fn fsync_policies_gate_durability() {
+        // Every: survives a crash immediately after the ack.
+        let dir = MemDir::new();
+        let mut wal = Wal::new(dir.create_wal("wal").unwrap(), FsyncPolicy::Every);
+        wal.append(&WalRecord::Del { id: 1 }).unwrap();
+        dir.crash();
+        let (got, _) = read_records(&dir.read("wal").unwrap(), 0);
+        assert_eq!(got.len(), 1, "policy=every is durable at ack");
+
+        // Never: lost on crash, kept after an explicit flush.
+        let dir = MemDir::new();
+        let mut wal = Wal::new(dir.create_wal("wal").unwrap(), FsyncPolicy::Never);
+        wal.append(&WalRecord::Del { id: 1 }).unwrap();
+        dir.crash();
+        let (got, _) = read_records(&dir.read("wal").unwrap(), 0);
+        assert!(got.is_empty(), "policy=never has no crash guarantee");
+        wal.append(&WalRecord::Del { id: 2 }).unwrap();
+        wal.sync().unwrap();
+        dir.crash();
+        let (got, _) = read_records(&dir.read("wal").unwrap(), 0);
+        assert_eq!(got, vec![WalRecord::Del { id: 2 }], "clean flush pins the log");
+
+        // Batch(2): the second append carries the first across the sync.
+        let dir = MemDir::new();
+        let mut wal = Wal::new(dir.create_wal("wal").unwrap(), FsyncPolicy::Batch(2));
+        wal.append(&WalRecord::Del { id: 1 }).unwrap();
+        dir.crash();
+        assert!(read_records(&dir.read("wal").unwrap(), 0).0.is_empty());
+        // The batch counter survived the crash-simulation (writer state is
+        // process state): one more append reaches the batch size and syncs.
+        wal.append(&WalRecord::Del { id: 2 }).unwrap();
+        dir.crash();
+        let (got, _) = read_records(&dir.read("wal").unwrap(), 0);
+        assert_eq!(got, vec![WalRecord::Del { id: 2 }], "batch boundary syncs");
+
+        assert!("bogus".parse::<FsyncPolicy>().is_err());
+        assert_eq!("batch:8".parse::<FsyncPolicy>(), Ok(FsyncPolicy::Batch(8)));
+    }
+}

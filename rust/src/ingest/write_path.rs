@@ -12,27 +12,43 @@
 
 use super::IngestStats;
 use crate::fingerprint::{morgan::MorganGenerator, Fingerprint, FP_BITS};
+use std::io;
 use std::sync::{Arc, Mutex};
 
 /// A serving index that accepts live mutations — implemented by
 /// [`super::MutableIndex`] (any rebuildable exhaustive index) and
 /// [`super::MutableHnsw`].
+///
+/// The mutation methods are fallible because a target may own a durable
+/// store ([`super::DurableStore`]): its `Ok` is the durability
+/// acknowledgement (WAL-framed and fsynced per policy *before* the
+/// in-memory apply), and its `Err` means the mutation was neither logged
+/// nor applied. Store-less targets never fail.
 pub trait MutableWriter: Send + Sync {
     /// Ingest one fingerprint; returns the assigned global id.
-    fn ingest(&self, fp: Fingerprint) -> u64;
-    /// Tombstone a live row; `false` when unknown or already deleted.
-    fn remove(&self, id: u64) -> bool;
+    fn ingest(&self, fp: Fingerprint) -> io::Result<u64>;
+    /// Tombstone a live row; `Ok(false)` when unknown or already deleted.
+    fn remove(&self, id: u64) -> io::Result<bool>;
+    /// Make every applied mutation durable (clean shutdown; no-op for
+    /// store-less targets).
+    fn flush(&self) -> io::Result<()>;
     /// This index's ingestion gauges.
     fn ingest_stats(&self) -> Arc<IngestStats>;
 }
 
 impl<I: crate::shard::ShardableIndex> MutableWriter for super::MutableIndex<I> {
-    fn ingest(&self, fp: Fingerprint) -> u64 {
-        self.add(fp)
+    fn ingest(&self, fp: Fingerprint) -> io::Result<u64> {
+        self.try_add(fp)
     }
 
-    fn remove(&self, id: u64) -> bool {
-        self.delete(id)
+    fn remove(&self, id: u64) -> io::Result<bool> {
+        self.try_delete(id)
+    }
+
+    fn flush(&self) -> io::Result<()> {
+        // Fully qualified: the inherent `MutableIndex::flush`, not this
+        // trait method recursing into itself.
+        super::MutableIndex::flush(self)
     }
 
     fn ingest_stats(&self) -> Arc<IngestStats> {
@@ -41,12 +57,16 @@ impl<I: crate::shard::ShardableIndex> MutableWriter for super::MutableIndex<I> {
 }
 
 impl MutableWriter for super::MutableHnsw {
-    fn ingest(&self, fp: Fingerprint) -> u64 {
-        self.add(fp)
+    fn ingest(&self, fp: Fingerprint) -> io::Result<u64> {
+        self.try_add(fp)
     }
 
-    fn remove(&self, id: u64) -> bool {
-        self.delete(id)
+    fn remove(&self, id: u64) -> io::Result<bool> {
+        self.try_delete(id)
+    }
+
+    fn flush(&self) -> io::Result<()> {
+        super::MutableHnsw::flush(self)
     }
 
     fn ingest_stats(&self) -> Arc<IngestStats> {
@@ -73,6 +93,14 @@ impl WritePath {
 
     /// Ingest a full-width fingerprint into every target; returns the
     /// (shared) global id.
+    ///
+    /// **Ack point** — target 0 is the durable family when one is
+    /// configured (`serve --live --data-dir` registers the exact index
+    /// first): its ingest performs the WAL append + policy fsync, so an
+    /// `Ok` from here *is* the durability acknowledgement the client
+    /// receives. On `Err` from the durable target, nothing was logged or
+    /// applied anywhere (fail-stop) and no ack is sent. The store-less
+    /// targets that follow cannot fail.
     pub fn add_fingerprint(&self, fp: Fingerprint) -> Result<u64, String> {
         if fp.bits() != FP_BITS {
             return Err(format!("expected a {FP_BITS}-bit fingerprint, got {}", fp.bits()));
@@ -80,7 +108,10 @@ impl WritePath {
         let _order = self.order.lock().unwrap();
         // Eager: every target must apply the add (the assertion below is
         // compiled out in release builds).
-        let ids: Vec<u64> = self.targets.iter().map(|t| t.ingest(fp.clone())).collect();
+        let mut ids = Vec::with_capacity(self.targets.len());
+        for t in &self.targets {
+            ids.push(t.ingest(fp.clone()).map_err(|e| format!("ingest failed: {e}"))?);
+        }
         debug_assert!(
             ids.iter().all(|&id| id == ids[0]),
             "write targets drifted: differing global ids for one add"
@@ -94,16 +125,26 @@ impl WritePath {
         self.add_fingerprint(fp)
     }
 
-    /// Delete global id `id` from every target. `true` iff the row was
-    /// live (the targets agree by construction).
-    pub fn delete(&self, id: u64) -> bool {
+    /// Delete global id `id` from every target. `Ok(true)` iff the row
+    /// was live (the targets agree by construction); same ack contract as
+    /// [`WritePath::add_fingerprint`].
+    pub fn delete(&self, id: u64) -> Result<bool, String> {
         let _order = self.order.lock().unwrap();
         let mut ok = false;
         for t in &self.targets {
-            let r = t.remove(id);
-            ok = ok || r;
+            ok |= t.remove(id).map_err(|e| format!("delete failed: {e}"))?;
         }
-        ok
+        Ok(ok)
+    }
+
+    /// Flush every target's WAL so each applied mutation is durable —
+    /// clean shutdown under `fsync batch|never` never loses acked writes.
+    pub fn flush(&self) -> std::io::Result<()> {
+        let _order = self.order.lock().unwrap();
+        for t in &self.targets {
+            t.flush()?;
+        }
+        Ok(())
     }
 
     /// Gauges of every target, labelled by position (the serving layer
@@ -146,8 +187,8 @@ mod tests {
         let (ap_hits, _) = approx.knn(&extra.fps[7], 1, 16);
         assert_eq!(ap_hits[0].id, 207);
 
-        assert!(wp.delete(207), "live row deletes once");
-        assert!(!wp.delete(207), "second delete rejected");
+        assert!(wp.delete(207).unwrap(), "live row deletes once");
+        assert!(!wp.delete(207).unwrap(), "second delete rejected");
         assert_ne!(exact.search(&extra.fps[7], 1)[0].id, 207);
         assert_ne!(approx.knn(&extra.fps[7], 1, 16).0[0].id, 207);
 

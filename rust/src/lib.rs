@@ -29,7 +29,7 @@
 //! | [`index`] | brute force, BitBound (Eq. 2), folding schemes 1 & 2 (Fig. 3), two-stage search, multi-query scan sharing (`search_batch` union-of-ranges walk, docs/batching.md) |
 //! | [`shard`] | database partitioning (round-robin / popcount-striped), per-shard index builds, shard-parallel exact search (docs/sharding.md) |
 //! | [`hnsw`] | hierarchical navigable small world graph: build + Algorithms 1 & 2, plus shard-parallel sub-graphs with exact cross-shard merge (`ShardedHnsw`, `serve --mode hnsw --shards N`, `bench_hnsw_sharded`; docs/hnsw_sharding.md) |
-//! | [`ingest`] | live ingestion: memtable delta segments, tombstone deletes, background compaction — mutable serving over every backend (`serve --live`, `ADD`/`ADDFP`/`DEL`, docs/ingest.md) |
+//! | [`ingest`] | live ingestion: memtable delta segments, tombstone deletes, background compaction — mutable serving over every backend (`serve --live`, `ADD`/`ADDFP`/`DEL`, docs/ingest.md) — plus durability: WAL + on-disk segments + manifest, crash recovery on `serve --live --data-dir` (docs/durability.md) |
 //! | [`kernel`] | runtime-dispatched SIMD scan kernels (AVX2/AVX-512/NEON/scalar) + transposed bit-sliced layout; bit-identical across backends, `MOLFPGA_KERNEL` override (docs/kernels.md) |
 //! | [`hwmodel`] | analytical Alveo U280 resource/frequency/bandwidth model |
 //! | [`simulator`] | cycle-level query-engine pipeline simulator |

@@ -11,6 +11,7 @@
 //!                   [--mode exact|hnsw|both] \
 //!                   [--max-batch 16] [--max-wait-us 2000] \
 //!                   [--live] [--seal-rows 4096] [--no-compactor] \
+//!                   [--data-dir data/live] [--fsync every|batch[:N]|never] \
 //!                   [--reply-timeout-ms 60000]
 //! molfpga bench-qps --db data/db.bin --queries 200 [--pjrt] [--shards 4] \
 //!                   [--max-batch 16]
@@ -39,6 +40,15 @@
 //! bounds the exact-scanned delta, `--no-compactor` pins the segment
 //! stack (benchmarks / tests), and `--reply-timeout-ms` caps how long a
 //! connection waits on a wedged pool before answering `BUSY`.
+//!
+//! `--data-dir <d>` makes `--live` **durable** (docs/durability.md): every
+//! write is WAL-logged before it is acknowledged, sealed segments and
+//! compacted bases persist as CRC-framed files named by an atomically
+//! swapped manifest, and a restart against the same directory recovers the
+//! exact pre-crash serving state (the `--db`/`--n-db` seed is only used
+//! the first time, to create the initial base). `--fsync` picks the WAL
+//! durability/throughput trade (`every` = fsync per write, the default;
+//! `batch[:N]` = fsync every N writes; `never` = leave it to the OS).
 
 use anyhow::{bail, Context, Result};
 use molfpga::coordinator::backend::{
@@ -52,7 +62,10 @@ use molfpga::coordinator::{EnginePool, Query, QueryMode, QueryPool, Router, Shar
 use molfpga::fingerprint::{morgan::MorganGenerator, ChemblModel, Database};
 use molfpga::hnsw::{HnswParams, ShardedHnsw};
 use molfpga::index::{BitBoundFoldingIndex, TwoStageConfig};
-use molfpga::ingest::{IngestConfig, MutableHnsw, MutableIndex, MutableWriter, WritePath};
+use molfpga::ingest::{
+    open_or_create, AtomicDir, DurableStore, FsyncPolicy, IngestConfig, MutableHnsw,
+    MutableIndex, MutableWriter, RealDir, Recovered, WritePath,
+};
 use molfpga::runtime::ArtifactSet;
 use molfpga::shard::{
     PartitionPolicy, ShardedBuildConfig, ShardedDatabase, ShardedSearchIndex,
@@ -241,17 +254,67 @@ fn build_live_router(
         if run_compactor { "on" } else { "off" }
     );
 
+    // Durable serving state (--data-dir): recover the previous generation
+    // from manifest + segments + WAL tail, or create a fresh one seeded
+    // from the loaded database. The exact family owns the store (its WAL
+    // append is the ack point); the HNSW family rebuilds its graph from
+    // the recovered rows — the graph is derived data, never persisted.
+    let durable: Option<(Recovered, Arc<DurableStore>)> = match args.get("data-dir") {
+        Some(path) => {
+            let policy: FsyncPolicy =
+                args.get("fsync").unwrap_or("every").parse().map_err(anyhow::Error::msg)?;
+            let dir: Arc<dyn AtomicDir> = Arc::new(
+                RealDir::open(path).with_context(|| format!("opening --data-dir {path}"))?,
+            );
+            let recovering = molfpga::ingest::durable::manifest_exists(&dir);
+            let seed = db.clone();
+            let (rec, store) = open_or_create(dir, policy, move || Ok(seed))
+                .with_context(|| format!("recovering --data-dir {path}"))?;
+            if recovering {
+                use molfpga::ingest::wal::WalTail;
+                eprintln!(
+                    "[molfpga] recovered {path}: base {} rows, {} sealed segment(s), \
+                     {} WAL-tail row(s), {} tombstone(s){}{}",
+                    rec.db.len(),
+                    rec.segments.len(),
+                    rec.mem_rows.len(),
+                    rec.tombstones.len(),
+                    match &rec.wal_tail {
+                        WalTail::Clean => String::new(),
+                        WalTail::Truncated { at, why } =>
+                            format!(" (WAL tail truncated at byte {at}: {why})"),
+                    },
+                    if args.get("db").is_some() { "; ignoring --db seed" } else { "" },
+                );
+            } else {
+                eprintln!("[molfpga] created durable state in {path} ({} base rows)", db.len());
+            }
+            Some((rec, store))
+        }
+        None => None,
+    };
+
     // Exhaustive family: one shared mutable index (sharded base when
     // --shards > 1 and --mode includes it), replicated read workers.
     let (ex, exact_writer): (Arc<dyn QueryPool>, Arc<dyn MutableWriter>) = if shards > 1
         && shard_exact
     {
         let cfg = ShardedBuildConfig { shards, policy, inner: two_stage };
-        let idx = Arc::new(MutableIndex::<ShardedSearchIndex<BitBoundFoldingIndex>>::new(
-            db.clone(),
-            cfg,
-            icfg.clone(),
-        ));
+        let idx = Arc::new(match &durable {
+            Some((rec, store)) => {
+                MutableIndex::<ShardedSearchIndex<BitBoundFoldingIndex>>::from_recovered(
+                    rec,
+                    store.clone(),
+                    cfg,
+                    icfg.clone(),
+                )
+            }
+            None => MutableIndex::<ShardedSearchIndex<BitBoundFoldingIndex>>::new(
+                db.clone(),
+                cfg,
+                icfg.clone(),
+            ),
+        });
         if run_compactor {
             idx.clone().spawn_compactor();
         }
@@ -263,11 +326,19 @@ fn build_live_router(
             idx,
         )
     } else {
-        let idx = Arc::new(MutableIndex::<BitBoundFoldingIndex>::new(
-            db.clone(),
-            two_stage,
-            icfg.clone(),
-        ));
+        let idx = Arc::new(match &durable {
+            Some((rec, store)) => MutableIndex::<BitBoundFoldingIndex>::from_recovered(
+                rec,
+                store.clone(),
+                two_stage,
+                icfg.clone(),
+            ),
+            None => MutableIndex::<BitBoundFoldingIndex>::new(
+                db.clone(),
+                two_stage,
+                icfg.clone(),
+            ),
+        });
         if run_compactor {
             idx.clone().spawn_compactor();
         }
@@ -285,10 +356,15 @@ fn build_live_router(
     // --shards > 1 and --mode includes it), replicated read workers.
     eprintln!("[molfpga] building mutable HNSW base…");
     let params = HnswParams::new(hnsw_m, ef_c, 7);
-    let approx = Arc::new(if shards > 1 && shard_hnsw {
-        MutableHnsw::new_sharded(db.clone(), shards, policy, params, icfg)
-    } else {
-        MutableHnsw::new_single(db.clone(), params, icfg)
+    let shard_shape = (shards > 1 && shard_hnsw).then_some((shards, policy));
+    let approx = Arc::new(match &durable {
+        Some((rec, _)) => MutableHnsw::from_recovered(rec, params, shard_shape, icfg),
+        None => match shard_shape {
+            Some((shards, policy)) => {
+                MutableHnsw::new_sharded(db.clone(), shards, policy, params, icfg)
+            }
+            None => MutableHnsw::new_single(db.clone(), params, icfg),
+        },
     });
     if run_compactor {
         approx.clone().spawn_compactor();
@@ -317,6 +393,9 @@ fn build_router(
 ) -> Result<(Arc<Router>, Arc<Metrics>, Option<Arc<WritePath>>)> {
     if args.flag("live") {
         return build_live_router(args, db);
+    }
+    if args.get("data-dir").is_some() {
+        bail!("--data-dir requires --live (durability is a live-ingestion feature)");
     }
     let metrics = Arc::new(Metrics::new());
     let workers = args.get_or("workers", 2usize)?;

@@ -6,6 +6,8 @@
 //! replacements for exactly the functionality the rest of the crate needs:
 //!
 //! * [`prng`] — deterministic SplitMix64 / PCG64 generators (replaces `rand`)
+//! * [`crc`] — CRC-32 frame checksum for the durability file formats
+//!   (replaces `crc32fast`)
 //! * [`cli`] — flag/option argument parsing (replaces `clap`)
 //! * [`stats`] — mean/std/percentiles/Gaussian fit/histograms
 //! * [`bench`] — a timing harness for `harness = false` bench targets
@@ -16,6 +18,7 @@
 
 pub mod bench;
 pub mod cli;
+pub mod crc;
 pub mod minijson;
 pub mod proptest;
 pub mod prng;

@@ -1,0 +1,224 @@
+//! Restart end-to-end: churn a real `molfpga serve --live --data-dir`
+//! process over TCP, hard-kill it mid-stream (SIGKILL, no shutdown
+//! hooks), restart against the same directory, and require that the
+//! recovered server answers `SEARCH` identically to a from-scratch
+//! oracle over the acknowledged rows — ids exact, scores exact at the
+//! wire's 6-decimal encoding — with consistent ingestion gauges and a
+//! continuous id sequence.
+//!
+//! Runs with the tier-1 suite and is re-run optimized in the
+//! release-smoke CI lane (`cargo test --release --test recovery_e2e`).
+
+use molfpga::coordinator::server::{fingerprint_to_hex, Client};
+use molfpga::fingerprint::{ChemblModel, Database, Fingerprint};
+use molfpga::topk::{topk_reference, Scored};
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::SocketAddr;
+use std::process::{Child, Command, Stdio};
+use std::sync::mpsc;
+use std::time::Duration;
+
+/// Seed shape shared with the server (`--n-db 60 --seed 11`).
+const N_DB: usize = 60;
+const SEED: u64 = 11;
+
+/// Spawn `molfpga serve --live --data-dir <dir>` on an ephemeral port and
+/// wait for its bound address (printed to stderr). `--m 1 --cutoff 0.0`
+/// makes the exact family oracle-comparable; `--fsync every` makes every
+/// `OK` a durability ack; `--no-compactor` keeps the file set deterministic.
+fn spawn_server(data_dir: &std::path::Path) -> (Child, SocketAddr) {
+    let mut child = Command::new(env!("CARGO_BIN_EXE_molfpga"))
+        .args([
+            "serve",
+            "--live",
+            "--port",
+            "0",
+            "--data-dir",
+            data_dir.to_str().expect("utf-8 temp path"),
+            "--fsync",
+            "every",
+            "--no-compactor",
+            "--seal-rows",
+            "6",
+            "--n-db",
+            "60",
+            "--seed",
+            "11",
+            "--m",
+            "1",
+            "--cutoff",
+            "0.0",
+            "--hnsw-m",
+            "4",
+            "--ef-construction",
+            "16",
+            "--ef",
+            "16",
+            "--workers",
+            "1",
+        ])
+        .stdout(Stdio::null())
+        .stderr(Stdio::piped())
+        .spawn()
+        .expect("spawn molfpga serve");
+    let stderr = child.stderr.take().expect("piped stderr");
+    let (tx, rx) = mpsc::channel();
+    // Drain stderr for the life of the child (the periodic metrics line
+    // would otherwise fill the pipe), forwarding the bound address.
+    std::thread::spawn(move || {
+        for line in BufReader::new(stderr).lines() {
+            let Ok(line) = line else { return };
+            if let Some(addr) = line.strip_prefix("[molfpga] bound ") {
+                let _ = tx.send(addr.trim().to_string());
+            }
+        }
+    });
+    let addr = rx
+        .recv_timeout(Duration::from_secs(60))
+        .expect("server printed its bound address")
+        .parse()
+        .expect("bound address parses");
+    (child, addr)
+}
+
+/// The score a client parses back from the wire's `{:.6}` encoding.
+fn wire(score: f64) -> f64 {
+    format!("{score:.6}").parse().expect("wire score round-trips")
+}
+
+/// Assert an exact-family SEARCH equals the brute-force oracle over the
+/// model: same ids in the same order, scores identical at wire precision.
+fn check_search(
+    client: &mut Client,
+    model: &BTreeMap<u64, Fingerprint>,
+    q: &Fingerprint,
+    k: usize,
+    what: &str,
+) {
+    let got = client.search(q, k, "exact").expect("SEARCH ok");
+    let scored: Vec<Scored> =
+        model.iter().map(|(id, fp)| Scored::new(q.tanimoto(fp), *id)).collect();
+    let want = topk_reference(&scored, k);
+    assert_eq!(got.len(), want.len(), "{what}: result size");
+    for (rank, (g, w)) in got.iter().zip(&want).enumerate() {
+        assert_eq!(g.0, w.id, "{what}: rank {rank} id");
+        assert_eq!(g.1, wire(w.score), "{what}: rank {rank} score at wire precision");
+    }
+}
+
+#[test]
+fn restart_recovers_to_bit_identical_serving() {
+    let data_dir = std::env::temp_dir().join(format!("molfpga-rec-e2e-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&data_dir);
+
+    // The oracle's model of acknowledged rows: the synthetic seed the
+    // server builds on first boot, then every acked ADDFP minus every
+    // acked DEL.
+    let seed = Database::synthesize(N_DB, &ChemblModel::default(), SEED);
+    let extra = Database::synthesize(40, &ChemblModel::default(), SEED + 1);
+    let mut model: BTreeMap<u64, Fingerprint> =
+        seed.fps.iter().enumerate().map(|(i, fp)| (i as u64, fp.clone())).collect();
+
+    // --- Server 1: churn, then die without warning. -----------------------
+    let (mut child, addr) = spawn_server(&data_dir);
+    let mut c = Client::connect(addr).expect("connect");
+    for (i, fp) in extra.fps.iter().take(30).enumerate() {
+        let id = c.add_fp(fp).expect("acked add");
+        assert_eq!(id, (N_DB + i) as u64, "ids are the continuous sequence");
+        model.insert(id, fp.clone());
+        if i == 14 {
+            // Mid-stream read-your-writes check across base + delta.
+            check_search(&mut c, &model, &extra.fps[14], 7, "mid-churn q0");
+            check_search(&mut c, &model, &seed.fps[3], 7, "mid-churn q1");
+        }
+    }
+    for id in [5u64, 62, 70] {
+        assert!(c.del(id).expect("DEL replies"), "live row deletes (id {id})");
+        model.remove(&id);
+    }
+    assert!(!c.del(999).expect("DEL replies"), "unknown id rejected");
+    check_search(&mut c, &model, &extra.fps[2], 10, "pre-kill q0");
+
+    // One more acked write, then one the server may or may not have
+    // processed when it dies: written raw, reply never read.
+    let acked_id = c.add_fp(&extra.fps[30]).expect("acked add");
+    assert_eq!(acked_id, 90);
+    model.insert(90, extra.fps[30].clone());
+    let mut raw = std::net::TcpStream::connect(addr).expect("raw connect");
+    raw.write_all(format!("ADDFP {}\n", fingerprint_to_hex(&extra.fps[31])).as_bytes())
+        .expect("in-flight write");
+    raw.flush().expect("flush");
+
+    child.kill().expect("SIGKILL server 1");
+    child.wait().expect("reap server 1");
+    drop(raw);
+    drop(c);
+
+    // --- Server 2: recover the same directory. ----------------------------
+    let (mut child2, addr2) = spawn_server(&data_dir);
+    let mut c = Client::connect(addr2).expect("reconnect");
+
+    // The in-flight write is the one permitted ambiguity: the id sequence
+    // tells us whether it became durable before the kill. Everything
+    // acked must have survived; nothing else may exist.
+    let next = c.add_fp(&extra.fps[32]).expect("post-restart add");
+    match next {
+        92 => {
+            model.insert(91, extra.fps[31].clone());
+        }
+        91 => {}
+        other => panic!("id sequence broke across restart: got {other}, want 91 or 92"),
+    }
+    model.insert(next, extra.fps[32].clone());
+
+    // Tombstones recovered: pre-restart deletes stay deleted…
+    assert!(!c.del(5).expect("DEL replies"), "pre-restart tombstone survives (id 5)");
+    assert!(!c.del(62).expect("DEL replies"), "pre-restart tombstone survives (id 62)");
+    // …and fresh mutations keep working on recovered rows.
+    assert!(c.del(61).expect("DEL replies"), "recovered row deletes");
+    assert!(!c.del(61).expect("DEL replies"), "double delete still rejected");
+    model.remove(&61);
+
+    // SEARCH battery: recovered serving is the oracle over exactly the
+    // surviving rows, at every k shape.
+    for (qi, q) in [&extra.fps[33], &seed.fps[7], &extra.fps[0], &seed.fps[5], &extra.fps[31]]
+        .into_iter()
+        .enumerate()
+    {
+        for k in [1usize, 7, 13] {
+            check_search(&mut c, &model, q, k, &format!("post-restart q{qi} k{k}"));
+        }
+    }
+
+    // Gauges are consistent with the recovered state: base + sealed +
+    // memtable − tombstones == live rows (no compactor is folding).
+    let stats = c.request("STATS").expect("STATS replies");
+    let toks: Vec<&str> = stats.split_whitespace().collect();
+    let at = toks
+        .iter()
+        .position(|t| *t == "ingest[exact]")
+        .unwrap_or_else(|| panic!("no exact gauges in: {stats}"));
+    let field = |key: &str| -> u64 {
+        let i = toks[at..].iter().position(|t| *t == key).unwrap_or_else(|| {
+            panic!("gauge {key} missing in: {stats}")
+        });
+        toks[at + i + 1].parse().unwrap_or_else(|_| panic!("gauge {key} non-numeric: {stats}"))
+    };
+    let mem = field("mem");
+    let tombstones = field("tombstones");
+    let sealed_rows: u64 = {
+        let i = toks[at..].iter().position(|t| *t == "sealed").expect("sealed gauge");
+        let (_segs, rows) = toks[at + i + 1].split_once('x').expect("SxR shape");
+        rows.parse().expect("sealed rows numeric")
+    };
+    assert_eq!(
+        N_DB as u64 + sealed_rows + mem - tombstones,
+        model.len() as u64,
+        "gauges vs model: {stats}"
+    );
+
+    child2.kill().expect("SIGKILL server 2");
+    child2.wait().expect("reap server 2");
+    let _ = std::fs::remove_dir_all(&data_dir);
+}
