@@ -163,48 +163,64 @@ impl Manifest {
         if crc32(body) != crc {
             return Err(bad("manifest checksum mismatch (corrupt or truncated)".into()));
         }
-        let mut at = 0usize;
-        let mut take = |n: usize| -> io::Result<&[u8]> {
-            let slice = body
-                .get(at..at + n)
-                .ok_or_else(|| bad("manifest body truncated".into()))?;
-            at += n;
-            Ok(slice)
-        };
-        let mut take_u64 = || -> io::Result<u64> {
-            Ok(u64::from_le_bytes(take(8)?.try_into().unwrap_or([0; 8])))
-        };
-        let next_id = take_u64()?;
-        let file_seq = take_u64()?;
-        let replay_from = take_u64()?;
-        let mut take_name = || -> io::Result<String> {
-            let len = u32::from_le_bytes(take(4)?.try_into().unwrap_or([0; 4])) as usize;
-            if len > 4096 {
-                return Err(bad(format!("manifest name of {len} bytes is implausible")));
+        // Single owner of the cursor state: the closure version of this
+        // (take / take_u64 / take_name) holds overlapping mutable borrows
+        // and does not borrow-check.
+        struct Cursor<'a> {
+            body: &'a [u8],
+            at: usize,
+        }
+        impl<'a> Cursor<'a> {
+            fn take(&mut self, n: usize) -> io::Result<&'a [u8]> {
+                let slice = self
+                    .body
+                    .get(self.at..self.at + n)
+                    .ok_or_else(|| bad("manifest body truncated".into()))?;
+                self.at += n;
+                Ok(slice)
             }
-            String::from_utf8(take(len)?.to_vec())
-                .map_err(|_| bad("manifest name is not UTF-8".into()))
-        };
-        let base = take_name()?;
-        let wal = take_name()?;
-        let nsegs = u32::from_le_bytes(take(4)?.try_into().unwrap_or([0; 4]));
+            fn take_u32(&mut self) -> io::Result<u32> {
+                Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap_or([0; 4])))
+            }
+            fn take_u64(&mut self) -> io::Result<u64> {
+                Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap_or([0; 8])))
+            }
+            fn take_name(&mut self) -> io::Result<String> {
+                let len = self.take_u32()? as usize;
+                if len > 4096 {
+                    return Err(bad(format!("manifest name of {len} bytes is implausible")));
+                }
+                String::from_utf8(self.take(len)?.to_vec())
+                    .map_err(|_| bad("manifest name is not UTF-8".into()))
+            }
+            fn remaining(&self) -> usize {
+                self.body.len() - self.at
+            }
+        }
+        let mut cur = Cursor { body, at: 0 };
+        let next_id = cur.take_u64()?;
+        let file_seq = cur.take_u64()?;
+        let replay_from = cur.take_u64()?;
+        let base = cur.take_name()?;
+        let wal = cur.take_name()?;
+        let nsegs = cur.take_u32()?;
         if nsegs > 1 << 20 {
             return Err(bad(format!("manifest claims {nsegs} segments")));
         }
         let mut segments = Vec::with_capacity(nsegs as usize);
         for _ in 0..nsegs {
-            segments.push(take_name()?);
+            segments.push(cur.take_name()?);
         }
-        let ntombs = take_u64()?;
-        if (ntombs as usize).checked_mul(8).map(|b| b != body.len() - at).unwrap_or(true) {
+        let ntombs = cur.take_u64()?;
+        if (ntombs as usize).checked_mul(8).map(|b| b != cur.remaining()).unwrap_or(true) {
             return Err(bad(format!(
                 "manifest claims {ntombs} tombstones but {} bytes remain",
-                body.len() - at
+                cur.remaining()
             )));
         }
         let mut tombstones = Vec::with_capacity(ntombs as usize);
         for _ in 0..ntombs {
-            tombstones.push(take_u64()?);
+            tombstones.push(cur.take_u64()?);
         }
         Ok(Self { next_id, file_seq, base, segments, wal, replay_from, tombstones })
     }

@@ -285,8 +285,10 @@ struct Injection {
     /// Once tripped, every subsequent operation fails (the process is
     /// "dead" — only a fresh recovery handle may touch the state again).
     tripped: bool,
-    /// Tear the final append: persist a deterministic prefix of the very
-    /// buffer whose append crashed, modelling a torn sector write.
+    /// Tear the final append: persist the file's buffered-but-unsynced
+    /// bytes plus a deterministic prefix of the very buffer whose append
+    /// crashed, modelling a sequential write stream torn mid-sector — the
+    /// torn frame sits at its true offset, never atop a dropped gap.
     torn: bool,
 }
 
@@ -366,6 +368,15 @@ struct CrashWal {
 
 impl WalFile for CrashWal {
     fn append(&mut self, buf: &[u8]) -> io::Result<()> {
+        // Snapshot this file's unsynced bytes before charging: charge()
+        // crashes the shared state (clearing every pending buffer), but a
+        // tear inside this append means the sequential write stream
+        // reached the tear point — so everything buffered ahead of this
+        // record persists too, keeping the torn frame at its true offset.
+        let pending = {
+            let st = self.fs.mem.state.lock().unwrap();
+            st.files.get(&self.name).map(|f| f.pending.clone())
+        };
         match self.fs.charge() {
             Ok(false) => self.inner.append(buf),
             Ok(true) => {
@@ -376,6 +387,9 @@ impl WalFile for CrashWal {
                 let keep = (self.fs.ops() as usize * 7) % (buf.len() + 1);
                 let mut st = self.fs.mem.state.lock().unwrap();
                 if let Some(f) = st.files.get_mut(&self.name) {
+                    if let Some(p) = &pending {
+                        f.durable.extend_from_slice(p);
+                    }
                     f.durable.extend_from_slice(&buf[..keep]);
                 }
                 Err(self.fs.crash_err())
@@ -494,6 +508,24 @@ mod tests {
         let left = fs.after_crash().read("wal").unwrap();
         assert!(left.len() < 10, "only a prefix survives");
         assert_eq!(&b"0123456789"[..left.len()], &left[..], "and it is a prefix");
+    }
+
+    #[test]
+    fn torn_mode_keeps_pending_records_ahead_of_the_tear_point() {
+        // Under fsync=batch/never earlier records can still be unsynced
+        // when the tearing append runs; the write stream reached the tear
+        // point, so those buffered bytes persist in full and the torn
+        // prefix lands at its true offset (no silent gap before it).
+        let fs = CrashPointFs::new(MemDir::new(), Some(3), true);
+        let mut wal = fs.create_wal("wal").unwrap(); // op 1
+        wal.append(b"ab").unwrap(); // op 2: buffered, never synced
+        let err = wal.append(b"0123456789AB").unwrap_err(); // op 3: torn crash
+        assert!(err.to_string().contains("injected crash"));
+        let left = fs.after_crash().read("wal").unwrap();
+        assert!(left.starts_with(b"ab"), "pending bytes survive ahead of the tear: {left:?}");
+        let tail = &left[2..];
+        assert!(tail.len() < 12, "the crashing record itself is torn");
+        assert_eq!(&b"0123456789AB"[..tail.len()], tail, "and what landed is a prefix");
     }
 
     #[test]
