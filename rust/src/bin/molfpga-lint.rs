@@ -4,6 +4,7 @@
 //! molfpga-lint                 # scan rust/src (fixtures excluded); exit 1 on errors
 //! molfpga-lint --root DIR      # scan an explicit tree (CI points this at the fixtures)
 //! molfpga-lint --list-rules    # print the rule catalog
+//! molfpga-lint --timings       # print per-rule wall time after the scan
 //! ```
 
 use molfpga::lint;
@@ -14,10 +15,11 @@ fn print_help() {
     println!(
         "molfpga-lint: repo-specific static analysis (docs/static_analysis.md)\n\
          \n\
-         USAGE: molfpga-lint [--root DIR] [--list-rules]\n\
+         USAGE: molfpga-lint [--root DIR] [--list-rules] [--timings]\n\
          \n\
          --root DIR     scan DIR instead of the crate's src/ tree\n\
          --list-rules   print the rule catalog and exit\n\
+         --timings      print per-rule wall time after the scan\n\
          \n\
          Exit status: 0 clean, 1 error-severity diagnostics, 2 usage/IO failure."
     );
@@ -27,6 +29,7 @@ fn main() -> ExitCode {
     let mut args = std::env::args().skip(1);
     let mut root: Option<PathBuf> = None;
     let mut list = false;
+    let mut timings = false;
     while let Some(arg) = args.next() {
         match arg.as_str() {
             "--root" => match args.next() {
@@ -37,6 +40,7 @@ fn main() -> ExitCode {
                 }
             },
             "--list-rules" => list = true,
+            "--timings" => timings = true,
             "-h" | "--help" => {
                 print_help();
                 return ExitCode::SUCCESS;
@@ -56,6 +60,9 @@ fn main() -> ExitCode {
             };
             println!("{:<24} {:<8} {}", rule.name, sev, rule.summary);
         }
+        for (name, summary) in lint::global::global_rules() {
+            println!("{name:<24} {:<8} {summary} [cross-file]", "error");
+        }
         return ExitCode::SUCCESS;
     }
 
@@ -69,6 +76,14 @@ fn main() -> ExitCode {
     };
     for d in &report.diagnostics {
         println!("{}", d.render());
+    }
+    if timings {
+        let total: std::time::Duration = report.timings.iter().map(|(_, d)| *d).sum();
+        println!("molfpga-lint: per-rule timings");
+        for (name, dur) in &report.timings {
+            println!("  {name:<24} {:>9.3} ms", dur.as_secs_f64() * 1e3);
+        }
+        println!("  {:<24} {:>9.3} ms", "total", total.as_secs_f64() * 1e3);
     }
     let errors = report.errors();
     let warnings = report.diagnostics.len() - errors;

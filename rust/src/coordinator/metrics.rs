@@ -40,9 +40,11 @@ pub struct Metrics {
     pub rejected: AtomicU64,
     pub errors: AtomicU64,
     /// Completed-query latencies. Bounded reservoir (Algorithm R).
+    // lock-order: latencies
     latencies: Mutex<Reservoir>,
     /// Live-ingestion gauge sources, registered per mutable index at
     /// serve wiring time (`serve --live`); read at snapshot time.
+    // lock-order: metrics_ingest
     ingest: Mutex<Vec<(&'static str, Arc<IngestStats>)>>,
 }
 
@@ -53,6 +55,7 @@ const RESERVOIR: usize = 65_536;
 /// inner state is a reservoir/registration list — worst case one sample
 /// is half-written, which percentiles tolerate).
 fn lock_unpoisoned<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    // lint: allow(lock-order, reason = "generic poison-tolerance helper; callers pass leaf metrics locks")
     m.lock().unwrap_or_else(|e| e.into_inner())
 }
 

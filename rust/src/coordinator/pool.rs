@@ -117,6 +117,7 @@ impl EnginePool {
                         loop {
                             // Take one job (queue closed ⇒ exit).
                             let job = {
+                                // lint: allow(lock-order, reason = "local channel handle shared by workers, not a struct lock field")
                                 let guard = rx.lock().unwrap();
                                 guard.recv()
                             };
@@ -235,6 +236,7 @@ impl QueryPool for EnginePool {
 /// cross-shard reduction state. Shared (`Arc`) across all shard workers.
 struct ShardJob {
     batch: Vec<Query>,
+    // lock-order: shard_job_state
     state: Mutex<ShardJobState>,
     respond: Sender<QueryResult>,
 }

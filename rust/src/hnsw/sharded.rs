@@ -48,6 +48,7 @@ pub struct ShardedHnsw {
     /// a long-lived `ShardedHnsw` performs no per-query O(rows) visited
     /// allocation. Epoch tagging makes a scratch safely reusable across
     /// shards of different sizes.
+    // lock-order: hnsw_scratch
     scratch_pool: Mutex<Vec<SearchScratch>>,
 }
 

@@ -30,6 +30,7 @@
 //! never drift ahead of a durable state it silently stopped writing
 //! (fail-stop; restart recovers — docs/durability.md).
 
+use super::chk_yield;
 use super::io::AtomicDir;
 use super::segment::MemRow;
 use super::wal::{read_records, FsyncPolicy, Wal, WalRecord, WalTail};
@@ -98,6 +99,7 @@ pub fn decode_segment(bytes: &[u8]) -> io::Result<(Vec<u64>, Database)> {
     if db.len() != ids.len() {
         return Err(bad(format!("segment has {} ids but {} rows", ids.len(), db.len())));
     }
+    // lint: allow(panic-free-serving, reason = "windows(2) slices always hold exactly two elements")
     if ids.windows(2).any(|w| w[0] >= w[1]) {
         return Err(bad("segment ids are not strictly ascending".into()));
     }
@@ -266,11 +268,14 @@ impl StoreInner {
 /// installs (see `ingest::state`).
 pub struct DurableStore {
     dir: Arc<dyn AtomicDir>,
+    // Held across `dir`/`wal` I/O, which may take the in-memory fs locks.
+    // lock-order: store_inner < mem_state
     inner: Mutex<StoreInner>,
 }
 
 impl DurableStore {
     /// Initialize a fresh directory: base file, empty WAL, manifest.
+    // lint: allow(wal-before-apply, reason = "fresh store: nothing precedes the first manifest, so there is no log to order against")
     pub fn create(
         dir: Arc<dyn AtomicDir>,
         policy: FsyncPolicy,
@@ -339,7 +344,7 @@ impl DurableStore {
     /// swallowed: an orphan is re-collected on the next boot, and GC must
     /// never fail an install whose manifest is already durable.
     fn gc(&self, live: impl Fn(&StoreInner) -> HashSet<String>) {
-        let inner = self.inner.lock().unwrap();
+        let inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
         let live = live(&inner);
         drop(inner);
         let Ok(names) = self.dir.list() else { return };
@@ -356,7 +361,10 @@ impl DurableStore {
 
     /// Run `f` under the store lock with fail-stop poisoning.
     fn mutate<T>(&self, f: impl FnOnce(&mut StoreInner) -> io::Result<T>) -> io::Result<T> {
-        let mut inner = self.inner.lock().unwrap();
+        // Hook before the store lock: scenarios keep a single writer, so
+        // parking with the lock free cannot stall an unmanaged thread.
+        chk_yield!("store:mutate");
+        let mut inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
         if inner.poisoned {
             return Err(io::Error::new(
                 io::ErrorKind::Other,
@@ -390,6 +398,7 @@ impl DurableStore {
         tombstones: &HashSet<u64>,
         next_id: u64,
     ) -> io::Result<()> {
+        chk_yield!("durable:install_seal");
         self.mutate(|inner| {
             let upto = rows.last().map(|r| r.id).unwrap_or(0);
             inner.wal.append_durable(&WalRecord::Seal { upto })?;

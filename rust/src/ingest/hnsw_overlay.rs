@@ -86,6 +86,7 @@ pub struct MutableHnsw {
     params: HnswParams,
     /// `Some` = the base is sharded and compaction rebuilds at this shape.
     shard_shape: Option<(usize, PartitionPolicy)>,
+    // lock-order: overlay_scratch
     scratch_pool: Mutex<Vec<SearchScratch>>,
 }
 

@@ -165,6 +165,9 @@ struct MemState {
 /// hold one handle for writing and another for post-crash recovery.
 #[derive(Clone, Default)]
 pub struct MemDir {
+    // `CrashWal::append` holds this while charging the injector (the torn
+    // branch records the partial frame before reporting the crash).
+    // lock-order: mem_state < inj
     state: Arc<Mutex<MemState>>,
 }
 
@@ -176,7 +179,7 @@ impl MemDir {
     /// Simulate a crash: every unsynced (pending) byte is lost; durable
     /// contents survive. The handle stays usable — recovery reopens it.
     pub fn crash(&self) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
         for f in st.files.values_mut() {
             f.pending.clear();
         }
@@ -186,24 +189,26 @@ impl MemDir {
     /// bit flips, truncation, trailing garbage — things a real disk does
     /// that `write_atomic` never would).
     pub fn corrupt(&self, name: &str, bytes: Vec<u8>) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
         st.files.insert(name.to_string(), MemFile { durable: bytes, pending: Vec::new() });
     }
 
     /// Durable bytes of `name` (what a crash would leave behind).
     pub fn durable_bytes(&self, name: &str) -> Option<Vec<u8>> {
-        self.state.lock().unwrap().files.get(name).map(|f| f.durable.clone())
+        self.state.lock().unwrap_or_else(|e| e.into_inner()).files.get(name).map(|f| f.durable.clone())
     }
 }
 
 struct MemWal {
+    // Same shared `Arc` as [`MemDir::state`] — one lock, one identity.
+    // lock-order: mem_state
     state: Arc<Mutex<MemState>>,
     name: String,
 }
 
 impl WalFile for MemWal {
     fn append(&mut self, buf: &[u8]) -> io::Result<()> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
         match st.files.get_mut(&self.name) {
             Some(f) => {
                 f.pending.extend_from_slice(buf);
@@ -214,7 +219,7 @@ impl WalFile for MemWal {
     }
 
     fn sync(&mut self) -> io::Result<()> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
         match st.files.get_mut(&self.name) {
             Some(f) => {
                 let pending = std::mem::take(&mut f.pending);
@@ -228,13 +233,13 @@ impl WalFile for MemWal {
 
 impl AtomicDir for MemDir {
     fn create_wal(&self, name: &str) -> io::Result<Box<dyn WalFile>> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
         st.files.insert(name.to_string(), MemFile::default());
         Ok(Box::new(MemWal { state: self.state.clone(), name: name.to_string() }))
     }
 
     fn read(&self, name: &str) -> io::Result<Vec<u8>> {
-        let st = self.state.lock().unwrap();
+        let st = self.state.lock().unwrap_or_else(|e| e.into_inner());
         match st.files.get(name) {
             // A live read sees written-but-unsynced bytes, like the page
             // cache would; only a crash distinguishes durable from pending.
@@ -248,18 +253,18 @@ impl AtomicDir for MemDir {
     }
 
     fn write_atomic(&self, name: &str, bytes: &[u8]) -> io::Result<()> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
         st.files
             .insert(name.to_string(), MemFile { durable: bytes.to_vec(), pending: Vec::new() });
         Ok(())
     }
 
     fn exists(&self, name: &str) -> bool {
-        self.state.lock().unwrap().files.contains_key(name)
+        self.state.lock().unwrap_or_else(|e| e.into_inner()).files.contains_key(name)
     }
 
     fn remove(&self, name: &str) -> io::Result<()> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
         match st.files.remove(name) {
             Some(_) => Ok(()),
             None => Err(io::Error::new(io::ErrorKind::NotFound, format!("no file {name}"))),
@@ -267,7 +272,7 @@ impl AtomicDir for MemDir {
     }
 
     fn list(&self) -> io::Result<Vec<String>> {
-        Ok(self.state.lock().unwrap().files.keys().cloned().collect())
+        Ok(self.state.lock().unwrap_or_else(|e| e.into_inner()).files.keys().cloned().collect())
     }
 }
 
@@ -299,6 +304,7 @@ struct Injection {
 #[derive(Clone)]
 pub struct CrashPointFs {
     mem: MemDir,
+    // lock-order: inj
     inj: Arc<Mutex<Injection>>,
 }
 
@@ -320,12 +326,12 @@ impl CrashPointFs {
     /// Durable-effect operations observed so far (the sizing pass reads
     /// this to bound the sweep).
     pub fn ops(&self) -> u64 {
-        self.inj.lock().unwrap().ops
+        self.inj.lock().unwrap_or_else(|e| e.into_inner()).ops
     }
 
     /// Whether the injected crash has fired.
     pub fn tripped(&self) -> bool {
-        self.inj.lock().unwrap().tripped
+        self.inj.lock().unwrap_or_else(|e| e.into_inner()).tripped
     }
 
     /// The post-crash filesystem, as a recovery process would see it.
@@ -337,7 +343,7 @@ impl CrashPointFs {
     /// must not take effect; `Ok(torn)` carries the tear request for the
     /// append that trips the crash.
     fn charge(&self) -> io::Result<bool> {
-        let mut inj = self.inj.lock().unwrap();
+        let mut inj = self.inj.lock().unwrap_or_else(|e| e.into_inner());
         if inj.tripped {
             return Err(io::Error::new(io::ErrorKind::Other, "crashed (post-trip op)"));
         }
@@ -374,7 +380,7 @@ impl WalFile for CrashWal {
         // reached the tear point — so everything buffered ahead of this
         // record persists too, keeping the torn frame at its true offset.
         let pending = {
-            let st = self.fs.mem.state.lock().unwrap();
+            let st = self.fs.mem.state.lock().unwrap_or_else(|e| e.into_inner());
             st.files.get(&self.name).map(|f| f.pending.clone())
         };
         match self.fs.charge() {
@@ -385,7 +391,7 @@ impl WalFile for CrashWal {
                 // function of the op counter, so every crash point tears at
                 // a different boundary across the sweep.
                 let keep = (self.fs.ops() as usize * 7) % (buf.len() + 1);
-                let mut st = self.fs.mem.state.lock().unwrap();
+                let mut st = self.fs.mem.state.lock().unwrap_or_else(|e| e.into_inner());
                 if let Some(f) = st.files.get_mut(&self.name) {
                     if let Some(p) = &pending {
                         f.durable.extend_from_slice(p);

@@ -62,11 +62,35 @@
 pub mod durable;
 pub mod hnsw_overlay;
 pub mod io;
+#[cfg(any(test, feature = "modelcheck"))]
+pub mod modelcheck;
 pub mod mutable;
 pub mod segment;
 pub mod state;
 pub mod wal;
 pub mod write_path;
+
+/// Preemption hook for the deterministic interleaving model checker
+/// ([`modelcheck`]): under `cfg(test)` (or the `modelcheck` feature) a
+/// scheduler-managed thread parks here and the schedule decides who runs
+/// next; on every unmanaged thread — and in release builds, where the
+/// macro expands to nothing — it costs nothing. Placement rule: never at
+/// a point holding a std lock another scenario thread contends
+/// (docs/static_analysis.md §model checker).
+#[cfg(any(test, feature = "modelcheck"))]
+macro_rules! chk_yield {
+    ($tag:expr) => {
+        $crate::ingest::modelcheck::yield_point($tag)
+    };
+}
+
+/// Release builds: the hook compiles away entirely.
+#[cfg(not(any(test, feature = "modelcheck")))]
+macro_rules! chk_yield {
+    ($tag:expr) => {{}};
+}
+
+pub(crate) use chk_yield;
 
 pub use state::{BaseOps, Snapshot};
 pub use durable::{open_or_create, recover, DurableStore, Recovered};

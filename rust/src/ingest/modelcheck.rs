@@ -1,0 +1,732 @@
+//! Deterministic interleaving model checker for the ingest/durability
+//! core — a miniature loom (docs/static_analysis.md §model checker).
+//!
+//! The production code is instrumented with `chk_yield!("tag")` hooks
+//! (compiled out of release builds; see `ingest::chk_yield`). A
+//! [`Scheduler`] turns those hooks into a cooperative round-robin: every
+//! scenario thread parks at each hook and exactly **one** thread runs
+//! between grants, so a whole concurrent execution is reduced to the
+//! sequence of grant choices — a *schedule*. [`explore`] enumerates all
+//! schedules up to a step bound with a depth-first odometer (tier-1
+//! scale), [`explore_random`] samples seeded random schedules (nightly
+//! depth), and any failure carries the exact schedule + trace needed to
+//! replay it with [`run_once`].
+//!
+//! Two kinds of checkable properties:
+//!
+//! * **Invariants over real code** — a scenario drives the real
+//!   [`super::MutableIndex`]/[`super::DurableStore`] stack and returns a
+//!   checker closure evaluated after the threads finish (epochs monotone,
+//!   acked rows visible and crash-durable, …).
+//! * **Deadlocks over virtual locks** — [`ChkMutex`] is a scheduler-
+//!   managed lock token: a blocked thread parks instead of blocking the
+//!   OS thread, so a cyclic wait is *detected and reported* (with its
+//!   schedule) rather than hanging the test run.
+//!
+//! Hook-placement rule for real-code scenarios: a `chk_yield!` must never
+//! park while holding a std lock that another scenario thread contends —
+//! the holder would park forever waiting for a grant while the contender
+//! blocks in the OS, and the harness stalls. The shipped hooks only park
+//! holding the writer lock, and scenarios use a single writer thread.
+
+use crate::util::prng::SplitMix64;
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::thread::{JoinHandle, ThreadId};
+
+thread_local! {
+    static CURRENT: RefCell<Option<Arc<Scheduler>>> = RefCell::new(None);
+}
+
+/// The hook behind `chk_yield!`: park the calling thread until the
+/// scheduler grants it the next step. A no-op on threads not spawned by
+/// a [`Scheduler`] — which is every thread in a normal test run, so the
+/// instrumented production code behaves identically outside a scenario.
+pub fn yield_point(tag: &'static str) {
+    let sched = CURRENT.with(|c| c.borrow().clone());
+    if let Some(sched) = sched {
+        sched.pause(tag);
+    }
+}
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Run {
+    Running,
+    Parked,
+    Finished,
+}
+
+struct SchedState {
+    /// OS thread → scenario-thread index, filled at thread start.
+    ids: HashMap<ThreadId, usize>,
+    names: Vec<&'static str>,
+    run: Vec<Run>,
+    /// Grant pending: set by the coordinator, cleared by the thread.
+    go: Vec<bool>,
+    parked_tag: Vec<&'static str>,
+    /// Virtual-lock table: `holder[l]` = thread holding [`ChkMutex`] `l`.
+    holder: Vec<Option<usize>>,
+    /// Virtual lock each thread is waiting for, if any.
+    blocked_on: Vec<Option<usize>>,
+    trace: Vec<(usize, &'static str)>,
+    /// Per grant: (choice index among enabled, enabled count).
+    choices: Vec<(usize, usize)>,
+    prefix: Vec<usize>,
+    rng: Option<SplitMix64>,
+    /// Set on deadlock/step-limit: threads free-run to completion.
+    abort: bool,
+}
+
+/// Outcome of driving one schedule to completion.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RunOutcome {
+    /// Every thread finished under scheduler control.
+    Complete,
+    /// Every live thread was waiting on a held virtual lock.
+    Deadlock,
+    /// The step bound was hit; threads were released to free-run.
+    StepLimit,
+    /// A scenario thread panicked (a bug in the code under test).
+    Panicked,
+}
+
+/// Cooperative deterministic scheduler: one scenario thread runs between
+/// grants; the grant sequence *is* the schedule.
+pub struct Scheduler {
+    // lock-order: chk_sched
+    inner: Mutex<SchedState>,
+    cv: Condvar,
+    // lock-order: chk_handles < chk_sched
+    handles: Mutex<Vec<JoinHandle<()>>>,
+    max_steps: usize,
+}
+
+impl Scheduler {
+    /// A scheduler that follows `prefix` for its first choices, then the
+    /// seeded `rng` if given, then always the first enabled thread.
+    pub fn new(max_steps: usize, prefix: Vec<usize>, rng: Option<SplitMix64>) -> Arc<Self> {
+        Arc::new(Self {
+            inner: Mutex::new(SchedState {
+                ids: HashMap::new(),
+                names: Vec::new(),
+                run: Vec::new(),
+                go: Vec::new(),
+                parked_tag: Vec::new(),
+                holder: Vec::new(),
+                blocked_on: Vec::new(),
+                trace: Vec::new(),
+                choices: Vec::new(),
+                prefix,
+                rng,
+                abort: false,
+            }),
+            cv: Condvar::new(),
+            handles: Mutex::new(Vec::new()),
+            max_steps,
+        })
+    }
+
+    fn st(&self) -> MutexGuard<'_, SchedState> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Register and start one scenario thread. It parks immediately and
+    /// only runs when granted, so every spawned thread is under scheduler
+    /// control from its first instruction.
+    pub fn spawn_thread(self: &Arc<Self>, name: &'static str, f: impl FnOnce() + Send + 'static) {
+        let me = {
+            let mut st = self.st();
+            st.names.push(name);
+            st.run.push(Run::Parked);
+            st.go.push(false);
+            st.parked_tag.push("start");
+            st.blocked_on.push(None);
+            st.run.len() - 1
+        };
+        let sched = self.clone();
+        let handle = std::thread::Builder::new()
+            .name(format!("chk-{name}"))
+            .spawn(move || {
+                CURRENT.with(|c| *c.borrow_mut() = Some(sched.clone()));
+                {
+                    let mut st = sched.st();
+                    st.ids.insert(std::thread::current().id(), me);
+                    while !st.go[me] && !st.abort {
+                        st = sched.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+                    }
+                    st.go[me] = false;
+                    st.run[me] = Run::Running;
+                }
+                f();
+                {
+                    let mut st = sched.st();
+                    st.run[me] = Run::Finished;
+                }
+                sched.cv.notify_all();
+                CURRENT.with(|c| *c.borrow_mut() = None);
+            })
+            .expect("spawn model-check thread");
+        self.handles.lock().unwrap_or_else(|e| e.into_inner()).push(handle);
+    }
+
+    /// Park until granted. Called from [`yield_point`] and [`ChkMutex`].
+    fn pause(&self, tag: &'static str) {
+        let mut st = self.st();
+        let Some(&me) = st.ids.get(&std::thread::current().id()) else {
+            return;
+        };
+        if st.abort {
+            return;
+        }
+        st.parked_tag[me] = tag;
+        st.run[me] = Run::Parked;
+        self.cv.notify_all();
+        while !st.go[me] && !st.abort {
+            st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+        st.go[me] = false;
+        st.run[me] = Run::Running;
+    }
+
+    /// Drive the registered threads to completion, choosing one enabled
+    /// thread per step. Returns the outcome, the per-step
+    /// `(choice, enabled-count)` record (the odometer's raw material),
+    /// and the rendered trace.
+    pub fn drive(self: &Arc<Self>) -> (RunOutcome, Vec<(usize, usize)>, String) {
+        let mut outcome = RunOutcome::Complete;
+        let mut steps = 0usize;
+        {
+            let mut st = self.st();
+            loop {
+                // Quiescence: nobody running, no grant pending on a live
+                // thread.
+                while st
+                    .run
+                    .iter()
+                    .zip(&st.go)
+                    .any(|(r, g)| *r == Run::Running || (*g && *r != Run::Finished))
+                {
+                    st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+                }
+                if st.run.iter().all(|r| *r == Run::Finished) {
+                    break;
+                }
+                if st.abort {
+                    // Draining after deadlock/step-limit: wake everyone
+                    // again (late parkers included) and wait.
+                    for g in &mut st.go {
+                        *g = true;
+                    }
+                    self.cv.notify_all();
+                    st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+                    continue;
+                }
+                let enabled: Vec<usize> = (0..st.run.len())
+                    .filter(|&i| st.run[i] == Run::Parked)
+                    .filter(|&i| match st.blocked_on[i] {
+                        None => true,
+                        Some(l) => st.holder[l].is_none(),
+                    })
+                    .collect();
+                if enabled.is_empty() || steps >= self.max_steps {
+                    outcome = if enabled.is_empty() {
+                        RunOutcome::Deadlock
+                    } else {
+                        RunOutcome::StepLimit
+                    };
+                    st.abort = true;
+                    for g in &mut st.go {
+                        *g = true;
+                    }
+                    self.cv.notify_all();
+                    continue;
+                }
+                let k = st.choices.len();
+                let pick = if k < st.prefix.len() {
+                    st.prefix[k].min(enabled.len() - 1)
+                } else if let Some(rng) = st.rng.as_mut() {
+                    (rng.next_u64() % enabled.len() as u64) as usize
+                } else {
+                    0
+                };
+                let chosen = enabled[pick];
+                st.choices.push((pick, enabled.len()));
+                let tag = st.parked_tag[chosen];
+                st.trace.push((chosen, tag));
+                st.go[chosen] = true;
+                steps += 1;
+                self.cv.notify_all();
+            }
+        }
+        let handles =
+            std::mem::take(&mut *self.handles.lock().unwrap_or_else(|e| e.into_inner()));
+        let mut panicked = false;
+        for h in handles {
+            if h.join().is_err() {
+                panicked = true;
+            }
+        }
+        let st = self.st();
+        if panicked && outcome == RunOutcome::Complete {
+            outcome = RunOutcome::Panicked;
+        }
+        let trace = st
+            .trace
+            .iter()
+            .enumerate()
+            .map(|(i, (t, tag))| format!("  step {i:>3}: {} @ {tag}", st.names[*t]))
+            .collect::<Vec<_>>()
+            .join("\n");
+        (outcome, st.choices.clone(), trace)
+    }
+}
+
+/// A scheduler-managed lock token for toy scenarios. Mutual exclusion is
+/// already guaranteed by the scheduler (one thread runs at a time), so
+/// the lock is pure bookkeeping — which is what lets a cyclic wait be
+/// *detected* (every live thread parked on a held token) instead of
+/// hanging the harness the way an inverted pair of `std::sync::Mutex`es
+/// would.
+pub struct ChkMutex {
+    sched: Arc<Scheduler>,
+    id: usize,
+    name: &'static str,
+}
+
+impl ChkMutex {
+    /// Register a new lock token with the scheduler.
+    pub fn new(sched: &Arc<Scheduler>, name: &'static str) -> Self {
+        let id = {
+            let mut st = sched.st();
+            st.holder.push(None);
+            st.holder.len() - 1
+        };
+        Self { sched: sched.clone(), id, name }
+    }
+
+    /// Acquire: parks (scheduler-visible) while another thread holds the
+    /// token. After an abort the token is granted unconditionally so
+    /// threads can drain.
+    pub fn lock(&self) -> ChkGuard<'_> {
+        loop {
+            {
+                let mut st = self.sched.st();
+                let me = st.ids.get(&std::thread::current().id()).copied();
+                if st.abort || st.holder[self.id].is_none() {
+                    st.holder[self.id] = me;
+                    if let Some(me) = me {
+                        st.blocked_on[me] = None;
+                    }
+                    return ChkGuard { m: self };
+                }
+                if let Some(me) = me {
+                    st.blocked_on[me] = Some(self.id);
+                }
+            }
+            yield_point(self.name);
+        }
+    }
+}
+
+/// RAII release for [`ChkMutex::lock`].
+pub struct ChkGuard<'a> {
+    m: &'a ChkMutex,
+}
+
+impl Drop for ChkGuard<'_> {
+    fn drop(&mut self) {
+        let mut st = self.m.sched.st();
+        st.holder[self.m.id] = None;
+    }
+}
+
+/// A scenario's post-run invariant check.
+pub type Checker = Box<dyn FnOnce() -> Result<(), String>>;
+
+/// Exploration bounds.
+pub struct CheckConfig {
+    /// Grants per schedule before the run is truncated.
+    pub max_steps: usize,
+    /// Schedules explored before [`explore`] gives up on exhausting.
+    pub max_schedules: usize,
+}
+
+impl Default for CheckConfig {
+    fn default() -> Self {
+        Self { max_steps: 400, max_schedules: 50_000 }
+    }
+}
+
+/// A failing schedule: what went wrong, and exactly how to replay it.
+#[derive(Debug)]
+pub struct Failure {
+    /// `deadlock: …`, `invariant violated: …`, or `thread panicked`.
+    pub kind: String,
+    /// Grant choices; feed to [`run_once`] to reproduce.
+    pub schedule: Vec<usize>,
+    /// Rendered per-step trace (thread @ yield tag).
+    pub trace: String,
+}
+
+/// Result of an exploration.
+#[derive(Debug)]
+pub struct Explored {
+    /// Schedules executed.
+    pub schedules: usize,
+    /// Schedules cut off at the step bound (excluded from invariant
+    /// checking — an aborted free-run is not a scheduled execution).
+    pub truncated: usize,
+    /// Whether the schedule space was fully enumerated.
+    pub exhausted: bool,
+    /// First failing schedule, if any.
+    pub failure: Option<Failure>,
+}
+
+fn run_schedule<S>(max_steps: usize, prefix: Vec<usize>, rng: Option<SplitMix64>, scenario: &S)
+    -> (RunOutcome, Vec<(usize, usize)>, String, Option<String>)
+where
+    S: Fn(&Arc<Scheduler>) -> Checker,
+{
+    let sched = Scheduler::new(max_steps, prefix, rng);
+    let check = scenario(&sched);
+    let (outcome, choices, trace) = sched.drive();
+    let invariant = match outcome {
+        // A truncated run free-ran past the scheduler; its final state is
+        // not a scheduled execution, so the checker is skipped.
+        RunOutcome::StepLimit => None,
+        _ => check().err(),
+    };
+    (outcome, choices, trace, invariant)
+}
+
+fn failure_for(outcome: RunOutcome, invariant: Option<String>) -> Option<String> {
+    match outcome {
+        RunOutcome::Deadlock => {
+            Some("deadlock: every live thread waits on a held lock".to_string())
+        }
+        RunOutcome::Panicked => Some("thread panicked".to_string()),
+        RunOutcome::Complete | RunOutcome::StepLimit => {
+            invariant.map(|msg| format!("invariant violated: {msg}"))
+        }
+    }
+}
+
+/// Exhaustively enumerate schedules depth-first: run one, then bump the
+/// deepest choice that still has an unexplored sibling (an odometer over
+/// the choice tree). Stops at the first failure, at exhaustion, or at
+/// `max_schedules`.
+pub fn explore<S>(cfg: &CheckConfig, scenario: S) -> Explored
+where
+    S: Fn(&Arc<Scheduler>) -> Checker,
+{
+    let mut prefix: Vec<usize> = Vec::new();
+    let mut schedules = 0usize;
+    let mut truncated = 0usize;
+    loop {
+        let (outcome, choices, trace, invariant) =
+            run_schedule(cfg.max_steps, prefix.clone(), None, &scenario);
+        schedules += 1;
+        if outcome == RunOutcome::StepLimit {
+            truncated += 1;
+        }
+        if let Some(kind) = failure_for(outcome, invariant) {
+            return Explored {
+                schedules,
+                truncated,
+                exhausted: false,
+                failure: Some(Failure {
+                    kind,
+                    schedule: choices.iter().map(|c| c.0).collect(),
+                    trace,
+                }),
+            };
+        }
+        let mut advanced = false;
+        for i in (0..choices.len()).rev() {
+            let (pick, n) = choices[i];
+            if pick + 1 < n {
+                prefix = choices[..i].iter().map(|c| c.0).collect();
+                prefix.push(pick + 1);
+                advanced = true;
+                break;
+            }
+        }
+        if !advanced {
+            return Explored { schedules, truncated, exhausted: true, failure: None };
+        }
+        if schedules >= cfg.max_schedules {
+            return Explored { schedules, truncated, exhausted: false, failure: None };
+        }
+    }
+}
+
+/// Seeded random deep exploration (the nightly mode behind
+/// `MOLFPGA_MODELCHECK_DEEP`): `runs` schedules driven by independent
+/// streams derived from `seed`. Deterministic given the seed; a failure
+/// records the concrete schedule, so reproduction needs only
+/// [`run_once`], not the seed.
+pub fn explore_random<S>(cfg: &CheckConfig, seed: u64, runs: usize, scenario: S) -> Explored
+where
+    S: Fn(&Arc<Scheduler>) -> Checker,
+{
+    let mut master = SplitMix64::new(seed);
+    let mut schedules = 0usize;
+    let mut truncated = 0usize;
+    for _ in 0..runs {
+        let rng = SplitMix64::new(master.next_u64());
+        let (outcome, choices, trace, invariant) =
+            run_schedule(cfg.max_steps, Vec::new(), Some(rng), &scenario);
+        schedules += 1;
+        if outcome == RunOutcome::StepLimit {
+            truncated += 1;
+        }
+        if let Some(kind) = failure_for(outcome, invariant) {
+            return Explored {
+                schedules,
+                truncated,
+                exhausted: false,
+                failure: Some(Failure {
+                    kind,
+                    schedule: choices.iter().map(|c| c.0).collect(),
+                    trace,
+                }),
+            };
+        }
+    }
+    Explored { schedules, truncated, exhausted: false, failure: None }
+}
+
+/// Replay one recorded schedule (e.g. a [`Failure::schedule`]). Returns
+/// the failure it reproduces, or `None` if the run passes.
+pub fn run_once<S>(max_steps: usize, schedule: &[usize], scenario: S) -> Option<Failure>
+where
+    S: Fn(&Arc<Scheduler>) -> Checker,
+{
+    let (outcome, choices, trace, invariant) =
+        run_schedule(max_steps, schedule.to_vec(), None, &scenario);
+    failure_for(outcome, invariant).map(|kind| Failure {
+        kind,
+        schedule: choices.iter().map(|c| c.0).collect(),
+        trace,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fingerprint::{ChemblModel, Database};
+    use crate::index::BruteForceIndex;
+    use crate::ingest::{
+        open_or_create, recover, AtomicDir, FsyncPolicy, IngestConfig, MemDir, MutableIndex,
+    };
+    use std::collections::HashSet;
+
+    /// The real ingest/durability stack under a single writer and a
+    /// snapshot reader: every `chk_yield!` hook in `state.rs`/`durable.rs`
+    /// becomes a preemption point.
+    fn ingest_scenario(sched: &Arc<Scheduler>) -> Checker {
+        let mem = MemDir::new();
+        let dir: Arc<dyn AtomicDir> = Arc::new(mem.clone());
+        let db = Arc::new(Database::synthesize(4, &ChemblModel::default(), 11));
+        let (rec, store) =
+            open_or_create(dir.clone(), FsyncPolicy::Every, || Ok(db.clone())).expect("create");
+        // seal_rows large: sealing has its own hooks and would widen the
+        // schedule space past tier-1 budgets; the seal path is covered by
+        // the crash-point harness in tests/recovery.rs.
+        let cfg = IngestConfig { seal_rows: 64, ..IngestConfig::default() };
+        let idx =
+            Arc::new(MutableIndex::<BruteForceIndex>::from_recovered(&rec, store, (), cfg));
+        let acked: Arc<Mutex<Vec<u64>>> = Arc::new(Mutex::new(Vec::new()));
+        let violations: Arc<Mutex<Vec<String>>> = Arc::new(Mutex::new(Vec::new()));
+        let extra = Database::synthesize(2, &ChemblModel::default(), 12);
+
+        let w_idx = idx.clone();
+        let w_acked = acked.clone();
+        let fps = extra.fps.clone();
+        sched.spawn_thread("writer", move || {
+            for fp in fps {
+                let id = w_idx.try_add(fp).expect("MemDir add cannot fail");
+                w_acked.lock().unwrap().push(id);
+            }
+        });
+
+        let r_acked = acked.clone();
+        let r_viol = violations.clone();
+        sched.spawn_thread("reader", move || {
+            let mut last_epoch = 0u64;
+            for _ in 0..3 {
+                // Copy the ack log *before* taking the snapshot: an id
+                // acked before the copy was published before the copy, so
+                // any later snapshot must contain it.
+                let seen: Vec<u64> = r_acked.lock().unwrap().clone();
+                let snap = idx.snapshot();
+                let mut v = Vec::new();
+                if snap.epoch < last_epoch {
+                    v.push(format!("epoch went backwards: {last_epoch} -> {}", snap.epoch));
+                }
+                last_epoch = snap.epoch;
+                for id in seen {
+                    if !snap.delta_contains(id) {
+                        v.push(format!("acked id {id} invisible at epoch {}", snap.epoch));
+                    }
+                }
+                if !v.is_empty() {
+                    r_viol.lock().unwrap().extend(v);
+                }
+            }
+        });
+
+        Box::new(move || {
+            let v = violations.lock().unwrap().clone();
+            if !v.is_empty() {
+                return Err(v.join("; "));
+            }
+            // Hard crash at whatever point the schedule stopped: unsynced
+            // bytes die. Under `fsync every` each ack happened only after
+            // its WAL frame synced, so every acked add must survive.
+            mem.crash();
+            let rec2 = recover(&dir).map_err(|e| format!("recover after crash: {e}"))?;
+            let live: HashSet<u64> = rec2.live_rows().iter().map(|(id, _)| *id).collect();
+            for id in acked.lock().unwrap().iter() {
+                if !live.contains(id) {
+                    return Err(format!("acked id {id} lost by crash recovery"));
+                }
+            }
+            Ok(())
+        })
+    }
+
+    #[test]
+    fn exhaustive_real_core_invariants() {
+        let res = explore(&CheckConfig::default(), ingest_scenario);
+        assert!(res.failure.is_none(), "unexpected failure: {:?}", res.failure);
+        assert!(res.exhausted, "tier-1 bounds must exhaust the schedule space");
+        assert!(res.truncated == 0, "no schedule should hit the step bound");
+        assert!(
+            res.schedules > 10,
+            "expected meaningful interleaving coverage, got {}",
+            res.schedules
+        );
+    }
+
+    /// Two virtual locks taken in opposite orders — the classic inversion
+    /// the `lock-order` analysis rejects statically, here demonstrated
+    /// dynamically: some schedule deadlocks, and that schedule replays.
+    fn inversion_scenario(sched: &Arc<Scheduler>) -> Checker {
+        let a = Arc::new(ChkMutex::new(sched, "A"));
+        let b = Arc::new(ChkMutex::new(sched, "B"));
+        let (a1, b1) = (a.clone(), b.clone());
+        sched.spawn_thread("t1", move || {
+            let _ga = a1.lock();
+            yield_point("t1:between");
+            let _gb = b1.lock();
+        });
+        sched.spawn_thread("t2", move || {
+            let _gb = b.lock();
+            yield_point("t2:between");
+            let _ga = a.lock();
+        });
+        Box::new(|| Ok(()))
+    }
+
+    #[test]
+    fn toy_lock_inversion_is_caught_and_replayable() {
+        let res = explore(&CheckConfig::default(), inversion_scenario);
+        let failure = res.failure.expect("some schedule must deadlock");
+        assert!(failure.kind.contains("deadlock"), "{}", failure.kind);
+        assert!(!failure.trace.is_empty());
+        let replay = run_once(400, &failure.schedule, inversion_scenario)
+            .expect("the recorded schedule must reproduce the deadlock");
+        assert!(replay.kind.contains("deadlock"), "{}", replay.kind);
+    }
+
+    #[derive(Default)]
+    struct ToyStore {
+        wal: Mutex<Vec<u64>>,
+        applied: Mutex<Vec<u64>>,
+        acked: Mutex<Vec<u64>>,
+        /// `(wal, acked)` captured by the crash thread.
+        crash_image: Mutex<Option<(Vec<u64>, Vec<u64>)>>,
+    }
+
+    /// A miniature write path with a crash thread that snapshots the
+    /// durable log + ack log at one schedule-chosen instant. `wal_first`
+    /// selects the correct ordering (WAL append before apply/ack) or the
+    /// bug the `wal-before-apply` analysis exists to prevent.
+    fn wal_scenario(wal_first: bool) -> impl Fn(&Arc<Scheduler>) -> Checker {
+        move |sched| {
+            let st = Arc::new(ToyStore::default());
+            let w = st.clone();
+            sched.spawn_thread("writer", move || {
+                for id in 0..2u64 {
+                    if wal_first {
+                        w.wal.lock().unwrap().push(id);
+                        yield_point("wal:logged");
+                        w.applied.lock().unwrap().push(id);
+                        w.acked.lock().unwrap().push(id);
+                    } else {
+                        // BUG: apply + ack before the WAL append.
+                        w.applied.lock().unwrap().push(id);
+                        w.acked.lock().unwrap().push(id);
+                        yield_point("wal:reordered");
+                        w.wal.lock().unwrap().push(id);
+                    }
+                }
+            });
+            let c = st.clone();
+            sched.spawn_thread("crash", move || {
+                yield_point("crash:arm");
+                // No yield between the two reads: the image is atomic.
+                let wal = c.wal.lock().unwrap().clone();
+                let acked = c.acked.lock().unwrap().clone();
+                *c.crash_image.lock().unwrap() = Some((wal, acked));
+            });
+            Box::new(move || {
+                let img = st.crash_image.lock().unwrap().clone();
+                let (wal, acked) = img.ok_or("crash thread never captured an image")?;
+                for id in &acked {
+                    if !wal.contains(id) {
+                        return Err(format!("acked id {id} missing from the WAL at crash"));
+                    }
+                }
+                Ok(())
+            })
+        }
+    }
+
+    #[test]
+    fn wal_reorder_bug_is_caught() {
+        let res = explore(&CheckConfig::default(), wal_scenario(false));
+        let failure = res.failure.expect("the reordered apply must be caught");
+        assert!(failure.kind.contains("missing from the WAL"), "{}", failure.kind);
+        let replay = run_once(400, &failure.schedule, wal_scenario(false))
+            .expect("the recorded schedule must reproduce the loss");
+        assert!(replay.kind.contains("missing from the WAL"), "{}", replay.kind);
+    }
+
+    #[test]
+    fn wal_before_apply_order_is_clean() {
+        let res = explore(&CheckConfig::default(), wal_scenario(true));
+        assert!(res.failure.is_none(), "correct ordering flagged: {:?}", res.failure);
+        assert!(res.exhausted);
+    }
+
+    /// Nightly depth: seeded random schedules over the real core.
+    /// Opt-in via `MOLFPGA_MODELCHECK_DEEP="<seed>[:<runs>]"` (see CI's
+    /// nightly sanitizer job); a silent no-op otherwise so tier-1 stays
+    /// within budget.
+    #[test]
+    fn deep_seeded_random_mode() {
+        let Ok(spec) = std::env::var("MOLFPGA_MODELCHECK_DEEP") else {
+            return;
+        };
+        let (seed, runs) = match spec.split_once(':') {
+            Some((s, r)) => (s.parse().unwrap_or(1), r.parse().unwrap_or(2_000)),
+            None => (spec.parse().unwrap_or(1), 2_000),
+        };
+        let res = explore_random(&CheckConfig::default(), seed, runs, ingest_scenario);
+        assert!(res.failure.is_none(), "deep mode failure: {:?}", res.failure);
+        assert_eq!(res.schedules, runs);
+    }
+}

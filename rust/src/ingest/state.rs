@@ -17,7 +17,7 @@
 
 use super::durable::DurableStore;
 use super::segment::{MemRow, Memtable, SealedSegment};
-use super::{IngestConfig, IngestStats};
+use super::{chk_yield, IngestConfig, IngestStats};
 use crate::fingerprint::{Database, Fingerprint};
 use std::collections::HashSet;
 use std::io;
@@ -143,13 +143,17 @@ struct WriterState {
 
 /// The shared mutable-core: snapshot pointer + writer/compaction locks.
 pub(crate) struct MutableCore<B> {
+    // lock-order: snapshot
     snapshot: Mutex<Arc<Snapshot<B>>>,
+    // lock-order: writer < store_inner, snapshot
     writer: Mutex<WriterState>,
     /// Serializes `compact_once` callers (manual + background thread).
+    // lock-order: compact_lock < writer
     pub(crate) compact_lock: Mutex<()>,
     pub(crate) cfg: IngestConfig,
     pub(crate) stats: Arc<IngestStats>,
     /// Background compactor bookkeeping (stop flag + join handle).
+    // lock-order: compactor
     compactor: Mutex<Option<(Arc<AtomicBool>, std::thread::JoinHandle<()>)>>,
     /// Durability sink, when this index is the durable family
     /// (`serve --live --data-dir`): every mutation is WAL-framed here
@@ -201,6 +205,9 @@ impl<B: BaseOps> MutableCore<B> {
 
     /// The current immutable view (readers' entry point; one short lock).
     pub fn snapshot(&self) -> Arc<Snapshot<B>> {
+        // Hook sits *before* the lock: a parked reader must never hold
+        // the snapshot lock the writer's publish needs.
+        chk_yield!("snapshot:read");
         self.snapshot.lock().unwrap().clone()
     }
 
@@ -237,11 +244,13 @@ impl<B: BaseOps> MutableCore<B> {
     /// was not applied, nothing was acknowledged, and the store is
     /// poisoned (fail-stop; docs/durability.md).
     pub fn try_add(&self, fp: Fingerprint) -> io::Result<u64> {
+        chk_yield!("add:enter");
         let mut w = self.writer.lock().unwrap();
         let id = w.next_id;
         if let Some(store) = &self.store {
             store.log_add(id, &fp)?;
         }
+        chk_yield!("add:logged");
         w.next_id = id + 1;
         let cur = self.snapshot();
         let mut sealed = cur.sealed.clone();
@@ -261,6 +270,9 @@ impl<B: BaseOps> MutableCore<B> {
         }
         // ordering: Relaxed — monotonic event counter (see seals above).
         self.stats.adds.fetch_add(1, Ordering::Relaxed);
+        // The logged-but-not-published window the model checker probes:
+        // a crash here must replay the row from the WAL.
+        chk_yield!("add:pre-publish");
         self.publish(Snapshot {
             epoch: cur.epoch + 1,
             base: cur.base.clone(),
@@ -292,6 +304,7 @@ impl<B: BaseOps> MutableCore<B> {
     /// `Ok(false)` without touching the WAL), then the DEL is framed, then
     /// the tombstone applies.
     pub fn try_delete(&self, id: u64) -> io::Result<bool> {
+        chk_yield!("del:enter");
         let _w = self.writer.lock().unwrap();
         let cur = self.snapshot();
         if cur.tombstones.contains(&id) {
@@ -355,6 +368,7 @@ impl<B: BaseOps> MutableCore<B> {
         new_base: B,
         applied: &HashSet<u64>,
     ) -> io::Result<()> {
+        chk_yield!("install:enter");
         let w = self.writer.lock().unwrap();
         let cur = self.snapshot();
         // Sealing only appends and compactions are serialized, so the
@@ -497,5 +511,84 @@ impl<B> Drop for MutableCore<B> {
         if let Some(store) = &self.store {
             let _ = store.flush();
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fingerprint::ChemblModel;
+
+    /// The smallest [`BaseOps`]: the write path only asks a base for
+    /// membership and its raw parts, so a plain id list suffices.
+    struct TestBase {
+        db: Database,
+        globals: Vec<u64>,
+    }
+
+    impl BaseOps for TestBase {
+        fn rows(&self) -> usize {
+            self.globals.len()
+        }
+        fn contains(&self, id: u64) -> bool {
+            self.globals.contains(&id)
+        }
+        fn parts(&self) -> (&Database, &[u64]) {
+            (&self.db, &self.globals)
+        }
+    }
+
+    fn core(seal_rows: usize) -> MutableCore<TestBase> {
+        let db = Database::synthesize(3, &ChemblModel::default(), 7);
+        let cfg = IngestConfig { seal_rows, ..IngestConfig::default() };
+        MutableCore::new(TestBase { db, globals: vec![0, 1, 2] }, 3, cfg)
+    }
+
+    #[test]
+    fn publishes_monotone_epochs_and_exposes_new_rows() {
+        let c = core(2);
+        let extra = Database::synthesize(3, &ChemblModel::default(), 8);
+        let mut last = c.snapshot().epoch;
+        for (i, fp) in extra.fps.iter().enumerate() {
+            let id = c.add(fp.clone());
+            assert_eq!(id, 3 + i as u64, "global ids are the monotone sequence");
+            let snap = c.snapshot();
+            assert!(snap.epoch > last, "every publish bumps the epoch");
+            last = snap.epoch;
+            assert!(snap.delta_contains(id), "a published row is reader-visible");
+        }
+        // seal_rows = 2: the first two adds sealed one segment, the third
+        // restarted the memtable.
+        let snap = c.snapshot();
+        assert_eq!(snap.sealed.len(), 1);
+        assert_eq!(snap.mem.rows(), 1);
+        assert_eq!(snap.delta_rows(), 3);
+    }
+
+    #[test]
+    fn delete_is_validated_then_masked() {
+        let c = core(64);
+        assert!(!c.delete(99), "unknown ids are rejected before any tombstone");
+        assert!(c.delete(1), "a live base row tombstones once");
+        assert!(!c.delete(1), "the second delete is a no-op");
+        let snap = c.snapshot();
+        assert!(snap.tombstones.contains(&1));
+        assert_eq!(snap.base_dead, 1, "the tombstone targets a physical base row");
+        let extra = Database::synthesize(1, &ChemblModel::default(), 9);
+        let id = c.add(extra.fps[0].clone());
+        assert!(c.delete(id), "delta rows tombstone too");
+        assert_eq!(c.snapshot().base_dead, 1, "a delta tombstone is not base-dead");
+    }
+
+    #[test]
+    fn captured_snapshots_are_immutable() {
+        let c = core(64);
+        let before = c.snapshot();
+        let extra = Database::synthesize(1, &ChemblModel::default(), 10);
+        let id = c.add(extra.fps[0].clone());
+        c.delete(id);
+        assert!(!before.delta_contains(id), "a captured snapshot never mutates");
+        assert!(before.tombstones.is_empty());
+        assert!(c.snapshot().epoch > before.epoch);
     }
 }

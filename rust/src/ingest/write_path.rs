@@ -78,6 +78,7 @@ impl MutableWriter for super::MutableHnsw {
 /// deployment (`ADD`/`ADDFP`/`DEL` land here from the server).
 pub struct WritePath {
     /// Serializes mutations across targets so id sequences stay aligned.
+    // lock-order: order < writer
     order: Mutex<()>,
     targets: Vec<Arc<dyn MutableWriter>>,
     morgan: MorganGenerator,
@@ -105,18 +106,21 @@ impl WritePath {
         if fp.bits() != FP_BITS {
             return Err(format!("expected a {FP_BITS}-bit fingerprint, got {}", fp.bits()));
         }
-        let _order = self.order.lock().unwrap();
+        let _order = self.order.lock().unwrap_or_else(|e| e.into_inner());
         // Eager: every target must apply the add (the assertion below is
         // compiled out in release builds).
         let mut ids = Vec::with_capacity(self.targets.len());
         for t in &self.targets {
             ids.push(t.ingest(fp.clone()).map_err(|e| format!("ingest failed: {e}"))?);
         }
+        let Some(&id) = ids.first() else {
+            return Err("write path has no ingest targets".to_string());
+        };
         debug_assert!(
-            ids.iter().all(|&id| id == ids[0]),
+            ids.iter().all(|&i| i == id),
             "write targets drifted: differing global ids for one add"
         );
-        Ok(ids[0])
+        Ok(id)
     }
 
     /// Parse `smiles` through the Morgan generator and ingest the result.
@@ -129,7 +133,7 @@ impl WritePath {
     /// was live (the targets agree by construction); same ack contract as
     /// [`WritePath::add_fingerprint`].
     pub fn delete(&self, id: u64) -> Result<bool, String> {
-        let _order = self.order.lock().unwrap();
+        let _order = self.order.lock().unwrap_or_else(|e| e.into_inner());
         let mut ok = false;
         for t in &self.targets {
             ok |= t.remove(id).map_err(|e| format!("delete failed: {e}"))?;
@@ -140,7 +144,7 @@ impl WritePath {
     /// Flush every target's WAL so each applied mutation is durable —
     /// clean shutdown under `fsync batch|never` never loses acked writes.
     pub fn flush(&self) -> std::io::Result<()> {
-        let _order = self.order.lock().unwrap();
+        let _order = self.order.lock().unwrap_or_else(|e| e.into_inner());
         for t in &self.targets {
             t.flush()?;
         }

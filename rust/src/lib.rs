@@ -29,7 +29,7 @@
 //! | [`index`] | brute force, BitBound (Eq. 2), folding schemes 1 & 2 (Fig. 3), two-stage search, multi-query scan sharing (`search_batch` union-of-ranges walk, docs/batching.md) |
 //! | [`shard`] | database partitioning (round-robin / popcount-striped), per-shard index builds, shard-parallel exact search (docs/sharding.md) |
 //! | [`hnsw`] | hierarchical navigable small world graph: build + Algorithms 1 & 2, plus shard-parallel sub-graphs with exact cross-shard merge (`ShardedHnsw`, `serve --mode hnsw --shards N`, `bench_hnsw_sharded`; docs/hnsw_sharding.md) |
-//! | [`ingest`] | live ingestion: memtable delta segments, tombstone deletes, background compaction — mutable serving over every backend (`serve --live`, `ADD`/`ADDFP`/`DEL`, docs/ingest.md) — plus durability: WAL + on-disk segments + manifest, crash recovery on `serve --live --data-dir` (docs/durability.md) |
+//! | [`ingest`] | live ingestion: memtable delta segments, tombstone deletes, background compaction — mutable serving over every backend (`serve --live`, `ADD`/`ADDFP`/`DEL`, docs/ingest.md) — plus durability: WAL + on-disk segments + manifest, crash recovery on `serve --live --data-dir` (docs/durability.md) — and `ingest::modelcheck`, the deterministic interleaving model checker over the instrumented core (docs/static_analysis.md) |
 //! | [`kernel`] | runtime-dispatched SIMD scan kernels (AVX2/AVX-512/NEON/scalar) + transposed bit-sliced layout; bit-identical across backends, `MOLFPGA_KERNEL` override (docs/kernels.md) |
 //! | [`hwmodel`] | analytical Alveo U280 resource/frequency/bandwidth model |
 //! | [`simulator`] | cycle-level query-engine pipeline simulator |
@@ -37,7 +37,7 @@
 //! | [`coordinator`] | serving layer: router, scan-sharing batcher (`serve --max-batch`, docs/batching.md), engine pool, metrics |
 //! | [`baselines`] | CPU brute-force / BitBound / HNSW and GPU model comparators |
 //! | [`exp`] | shared experiment harnesses behind the figure/table drivers |
-//! | [`lint`] | repo-specific static analysis (`molfpga-lint` binary): unsafe placement, ad-hoc similarity, atomic-ordering audit, panic-free serving, deterministic simulation (docs/static_analysis.md) |
+//! | [`lint`] | repo-specific static analysis (`molfpga-lint` binary): unsafe placement, ad-hoc similarity, atomic-ordering audit, panic-free serving, deterministic simulation, plus whole-program lock-order / WAL-before-apply / io-confinement analyses (docs/static_analysis.md) |
 //! | [`util`] | PRNG, CLI parsing, stats, mini-bench, JSON writer, property-test helpers |
 
 // `unsafe` is a kernel-only privilege: the SIMD backends (`kernel::x86`,

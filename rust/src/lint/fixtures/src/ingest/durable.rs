@@ -1,0 +1,22 @@
+//! `wal-before-apply` fixture: a mutation path that publishes before it
+//! frames the record into the WAL — the exact ordering bug the analysis
+//! exists to prevent. Linted by the self-tests, never compiled (the rule
+//! scopes to `ingest/durable.rs`, hence this file's name).
+
+use std::sync::Mutex;
+
+pub struct BadStore {
+    // lock-order: fix_wal_log
+    wal: Mutex<WalLog>,
+}
+
+impl BadStore {
+    /// BUG on purpose: the reader-visible publish lands before the WAL
+    /// append, so a crash between the two loses an acked mutation.
+    pub fn apply_then_log(&self, rec: &[u8]) {
+        self.publish(rec);
+        self.wal.append(rec);
+    }
+
+    fn publish(&self, _rec: &[u8]) {}
+}

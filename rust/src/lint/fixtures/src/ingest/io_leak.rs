@@ -1,0 +1,8 @@
+//! `io-confinement` fixture: direct `std::fs` access outside the
+//! `ingest/io.rs` seam, invisible to crash-point fault injection. Linted
+//! by the self-tests, never compiled.
+
+/// BUG on purpose: writes through `std::fs` instead of an `AtomicDir`.
+pub fn sneaky_write(path: &str, bytes: &[u8]) -> std::io::Result<()> {
+    std::fs::write(path, bytes)
+}

@@ -1,0 +1,31 @@
+//! `lock-order` fixture: an inverted acquisition, an unannotated lock
+//! field, and a declared-order cycle — every diagnostic here is the
+//! point. Linted by the self-tests, never compiled.
+
+use std::sync::Mutex;
+
+pub struct Pair {
+    // lock-order: fix_alpha < fix_beta
+    alpha: Mutex<u32>,
+    // lock-order: fix_beta
+    beta: Mutex<u32>,
+    /// Deliberately left without an ordering annotation.
+    naked: Mutex<u32>,
+}
+
+pub struct Cyclic {
+    // lock-order: fix_gamma < fix_delta
+    gamma: Mutex<u32>,
+    // lock-order: fix_delta < fix_gamma
+    delta: Mutex<u32>,
+}
+
+impl Pair {
+    /// BUG on purpose: takes `fix_beta` first, then `fix_alpha`, but the
+    /// declared order only has `fix_alpha < fix_beta`.
+    pub fn inverted(&self) -> u32 {
+        let b = self.beta.lock().unwrap();
+        let a = self.alpha.lock().unwrap();
+        *a + *b
+    }
+}

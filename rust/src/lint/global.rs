@@ -1,0 +1,1258 @@
+//! Cross-file (whole-program) analyses over the token/item scan.
+//!
+//! Three rules that no per-line pass can check:
+//!
+//! * **`lock-order`** — every `Mutex`/`RwLock` field in the concurrency
+//!   core (`ingest/`, `coordinator/`, `hnsw/sharded.rs`,
+//!   `runtime/client.rs`) declares its identity and position in the
+//!   global acquisition order with a `// lock-order:` annotation; the
+//!   declared edges must be acyclic; and no fn body may acquire a lock
+//!   while holding one that is not ordered before it — including locks
+//!   reached through calls (call-graph approximation).
+//! * **`wal-before-apply`** — in `ingest/write_path.rs` and
+//!   `ingest/durable.rs`, any path that reaches an apply primitive
+//!   (`write_atomic`, `publish`) must reach a WAL append first.
+//! * **`io-confinement`** — direct `std::fs`/`File::`/`OpenOptions` use
+//!   is confined to `ingest/io.rs` (the fault-injection seam), the
+//!   analyzer itself, and a short allowlist of offline data-prep files.
+//!
+//! Approximations and blind spots are documented in
+//! `docs/static_analysis.md`.
+
+use super::syntax::{parse_items, statement_start, Call, CallKind, ParsedFile, Tok};
+use super::{Diagnostic, Severity, SourceFile};
+use std::collections::{HashMap, HashSet};
+
+pub const LOCK_ORDER: &str = "lock-order";
+pub const WAL_BEFORE_APPLY: &str = "wal-before-apply";
+pub const IO_CONFINEMENT: &str = "io-confinement";
+
+/// Name + one-line summary for each cross-file rule (catalog order).
+pub fn global_rules() -> Vec<(&'static str, &'static str)> {
+    vec![
+        (
+            LOCK_ORDER,
+            "every concurrency-core lock declares its `// lock-order:` identity; \
+             acquisitions respect the declared partial order",
+        ),
+        (
+            WAL_BEFORE_APPLY,
+            "mutation paths in ingest/write_path.rs + durable.rs append to the WAL \
+             before any snapshot-install/apply",
+        ),
+        (
+            IO_CONFINEMENT,
+            "direct std::fs/File use is confined to ingest/io.rs so the \
+             fault-injection seam stays total",
+        ),
+    ]
+}
+
+/// Is `name` one of the cross-file rules?
+pub fn is_global_rule(name: &str) -> bool {
+    global_rules().iter().any(|(n, _)| *n == name)
+}
+
+// ---------------------------------------------------------------------------
+// Shared context
+// ---------------------------------------------------------------------------
+
+/// Files the lock-order analysis covers.
+fn lock_scope(rel: &str) -> bool {
+    rel.starts_with("ingest/")
+        || rel.starts_with("coordinator/")
+        || rel == "hnsw/sharded.rs"
+        || rel == "runtime/client.rs"
+}
+
+/// Files the wal-before-apply analysis covers.
+fn wal_scope(rel: &str) -> bool {
+    rel == "ingest/write_path.rs" || rel == "ingest/durable.rs"
+}
+
+/// A declared lock: identity + declaration site.
+struct LockDecl {
+    identity: String,
+    file_idx: usize,
+    line: usize,
+}
+
+/// One `a < b` edge from an annotation.
+struct OrderEdge {
+    before: String,
+    after: String,
+    file_idx: usize,
+    line: usize,
+}
+
+/// Everything the analyses need, built once per scan.
+pub struct Ctx<'a> {
+    files: &'a [SourceFile],
+    parsed: Vec<ParsedFile>,
+    /// fn name -> (file_idx, fn_idx) definition sites, whole tree.
+    fns_by_name: HashMap<String, Vec<(usize, usize)>>,
+    /// impl/trait type name -> fn name -> definition sites.
+    fns_by_type: HashMap<String, HashMap<String, Vec<(usize, usize)>>>,
+    /// field name -> candidate type names (whole tree, deduped).
+    field_types: HashMap<String, Vec<String>>,
+    /// `lock_by_field[file_idx]` maps field -> identity for same-file
+    /// resolution, `lock_fields_global` the cross-file fallback
+    /// (field -> identities).
+    lock_by_field: Vec<HashMap<String, String>>,
+    lock_fields_global: HashMap<String, Vec<String>>,
+    /// identity -> set of identities it precedes (transitive closure).
+    before: HashMap<String, HashSet<String>>,
+    /// Brace depth at each token, per file.
+    depth_at: Vec<Vec<i32>>,
+}
+
+/// Strip smart-pointer/container wrappers off a field type expression and
+/// return the first meaningful type ident (`Option<Arc<DurableStore>>` →
+/// `DurableStore`, `Box<dyn WalFile>` → `WalFile`).
+fn field_type_name(toks: &[&str]) -> Option<String> {
+    const WRAPPERS: &[&str] = &[
+        "Option", "Arc", "Box", "Rc", "Weak", "Mutex", "RwLock", "dyn", "pub", "crate", "std",
+        "sync", "boxed", "option",
+    ];
+    toks.iter()
+        .find(|t| {
+            t.chars().next().map_or(false, |c| c.is_ascii_alphabetic())
+                && !WRAPPERS.contains(&t.as_ref())
+        })
+        .map(|t| t.to_string())
+}
+
+/// Parse a `lock-order:` annotation body: `id` or `id < succ, succ < …`.
+/// Returns `(identity, edges)` where edges are (before, after) pairs, or
+/// an error message.
+fn parse_lock_order(body: &str) -> Result<(String, Vec<(String, String)>), String> {
+    let segments: Vec<Vec<String>> = body
+        .split('<')
+        .map(|seg| {
+            seg.split(',')
+                .map(|n| n.trim().to_string())
+                .filter(|n| !n.is_empty())
+                .collect()
+        })
+        .collect();
+    if segments.is_empty() || segments[0].is_empty() {
+        return Err("empty `lock-order:` annotation".into());
+    }
+    if segments.iter().skip(1).any(Vec::is_empty) {
+        return Err("dangling `<` with no successor names".into());
+    }
+    let ident_ok = |n: &str| n.chars().all(|c| c == '_' || c.is_ascii_alphanumeric());
+    for seg in &segments {
+        for n in seg {
+            if !ident_ok(n) {
+                return Err(format!("`{n}` is not a valid lock identity"));
+            }
+        }
+    }
+    if segments[0].len() != 1 {
+        return Err("the first name must be this field's single identity".into());
+    }
+    let identity = segments[0][0].clone();
+    let mut edges = Vec::new();
+    for w in segments.windows(2) {
+        for a in &w[0] {
+            for b in &w[1] {
+                edges.push((a.clone(), b.clone()));
+            }
+        }
+    }
+    Ok((identity, edges))
+}
+
+/// Find the `lock-order:` annotation for the field declared at `idx`:
+/// same-line comment or the contiguous comment block directly above.
+fn annotation_for(file: &SourceFile, idx: usize) -> Option<(String, usize)> {
+    let pick = |comment: &str| {
+        comment
+            .find("lock-order:")
+            .map(|p| comment[p + "lock-order:".len()..].trim().to_string())
+    };
+    if let Some(body) = pick(&file.lines[idx].comment) {
+        return Some((body, idx));
+    }
+    let mut j = idx;
+    for _ in 0..8 {
+        if j == 0 {
+            break;
+        }
+        j -= 1;
+        let line = &file.lines[j];
+        let trimmed = line.raw.trim();
+        let comment_only = trimmed.starts_with("//") || trimmed.starts_with("#[");
+        if !comment_only {
+            break;
+        }
+        if let Some(body) = pick(&line.comment) {
+            return Some((body, j));
+        }
+    }
+    None
+}
+
+/// Does this line's blanked code declare a struct field of Mutex/RwLock
+/// type? Returns the field name.
+fn lock_field_decl(code: &str) -> Option<String> {
+    if !code.contains("Mutex<") && !code.contains("RwLock<") {
+        return None;
+    }
+    let t = code.trim_start();
+    for skip in ["let ", "static ", "fn ", "impl", "type ", "const ", "return ", "= "] {
+        if t.starts_with(skip) {
+            return None;
+        }
+    }
+    let t = t
+        .strip_prefix("pub(crate) ")
+        .or_else(|| t.strip_prefix("pub(super) "))
+        .or_else(|| t.strip_prefix("pub "))
+        .unwrap_or(t);
+    let name: String =
+        t.chars().take_while(|c| *c == '_' || c.is_ascii_alphanumeric()).collect();
+    if name.is_empty() {
+        return None;
+    }
+    let rest = t[name.len()..].trim_start();
+    if !rest.starts_with(':') || rest.starts_with("::") {
+        return None;
+    }
+    // `state: &Mutex<…>` is a reference parameter, not an owning field.
+    if rest[1..].trim_start().starts_with('&') {
+        return None;
+    }
+    Some(name)
+}
+
+/// Any struct field declaration (`name: Type`) on this blanked-code line,
+/// for the field → type map used by method resolution.
+fn any_field_decl(code: &str) -> Option<(String, String)> {
+    let t = code.trim_start();
+    for skip in
+        ["let ", "static ", "fn ", "impl", "type ", "const ", "return ", "use ", "mod ", "= "]
+    {
+        if t.starts_with(skip) {
+            return None;
+        }
+    }
+    let t = t
+        .strip_prefix("pub(crate) ")
+        .or_else(|| t.strip_prefix("pub(super) "))
+        .or_else(|| t.strip_prefix("pub "))
+        .unwrap_or(t);
+    let name: String =
+        t.chars().take_while(|c| *c == '_' || c.is_ascii_alphanumeric()).collect();
+    if name.is_empty() {
+        return None;
+    }
+    let rest = t[name.len()..].trim_start();
+    if !rest.starts_with(':') || rest.starts_with("::") {
+        return None;
+    }
+    // Heuristic: a field line ends with `,` or the type expression runs
+    // to end-of-line; a match arm / type ascription in code would carry
+    // `=>` or `;` — skip those. References are parameters, not fields.
+    if rest.contains("=>") || rest.contains(';') || rest.contains('=') {
+        return None;
+    }
+    if rest[1..].trim_start().starts_with('&') {
+        return None;
+    }
+    Some((name, rest[1..].trim().trim_end_matches(',').to_string()))
+}
+
+impl<'a> Ctx<'a> {
+    pub fn build(files: &'a [SourceFile]) -> (Ctx<'a>, Vec<Diagnostic>) {
+        let mut diags = Vec::new();
+        let parsed: Vec<ParsedFile> = files.iter().map(parse_items).collect();
+
+        let mut fns_by_name: HashMap<String, Vec<(usize, usize)>> = HashMap::new();
+        let mut fns_by_type: HashMap<String, HashMap<String, Vec<(usize, usize)>>> =
+            HashMap::new();
+        for (fi, pf) in parsed.iter().enumerate() {
+            for (gi, f) in pf.fns.iter().enumerate() {
+                fns_by_name.entry(f.name.clone()).or_default().push((fi, gi));
+                if let Some(ty) = &f.impl_type {
+                    fns_by_type
+                        .entry(ty.clone())
+                        .or_default()
+                        .entry(f.name.clone())
+                        .or_default()
+                        .push((fi, gi));
+                }
+                if let Some(tr) = &f.trait_name {
+                    fns_by_type
+                        .entry(tr.clone())
+                        .or_default()
+                        .entry(f.name.clone())
+                        .or_default()
+                        .push((fi, gi));
+                }
+            }
+        }
+
+        let mut field_types: HashMap<String, Vec<String>> = HashMap::new();
+        let mut decls = Vec::new();
+        let mut lock_by_field: Vec<HashMap<String, String>> = vec![HashMap::new(); files.len()];
+        let mut lock_fields_global: HashMap<String, Vec<String>> = HashMap::new();
+        let mut edges = Vec::new();
+
+        for (fi, file) in files.iter().enumerate() {
+            for (idx, line) in file.lines.iter().enumerate() {
+                if line.in_test {
+                    continue;
+                }
+                if let Some((name, ty)) = any_field_decl(&line.code) {
+                    let toks: Vec<&str> = ty
+                        .split(|c: char| !(c == '_' || c.is_ascii_alphanumeric()))
+                        .filter(|s| !s.is_empty())
+                        .collect();
+                    if let Some(t) = field_type_name(&toks) {
+                        let entry = field_types.entry(name.clone()).or_default();
+                        if !entry.contains(&t) {
+                            entry.push(t);
+                        }
+                    }
+                }
+                let Some(field) = lock_field_decl(&line.code) else {
+                    continue;
+                };
+                if !lock_scope(&file.rel) {
+                    continue;
+                }
+                match annotation_for(file, idx) {
+                    None => diags.push(Diagnostic {
+                        rule: LOCK_ORDER,
+                        file: file.rel.clone(),
+                        line: idx + 1,
+                        message: format!(
+                            "lock field `{field}` has no `// lock-order:` annotation — declare \
+                             its identity and position, e.g. `// lock-order: {field}` or \
+                             `// lock-order: {field} < <next>`"
+                        ),
+                        severity: Severity::Error,
+                    }),
+                    Some((body, ann_idx)) => match parse_lock_order(&body) {
+                        Err(msg) => diags.push(Diagnostic {
+                            rule: LOCK_ORDER,
+                            file: file.rel.clone(),
+                            line: ann_idx + 1,
+                            message: format!("bad `lock-order:` annotation: {msg}"),
+                            severity: Severity::Error,
+                        }),
+                        Ok((identity, es)) => {
+                            lock_by_field[fi].insert(field.clone(), identity.clone());
+                            let g = lock_fields_global.entry(field.clone()).or_default();
+                            if !g.contains(&identity) {
+                                g.push(identity.clone());
+                            }
+                            decls.push(LockDecl { identity, file_idx: fi, line: idx + 1 });
+                            for (a, b) in es {
+                                edges.push(OrderEdge {
+                                    before: a,
+                                    after: b,
+                                    file_idx: fi,
+                                    line: ann_idx + 1,
+                                });
+                            }
+                        }
+                    },
+                }
+            }
+        }
+
+        // Every identity referenced by an edge must be declared somewhere.
+        let declared: HashSet<&str> = decls.iter().map(|d| d.identity.as_str()).collect();
+        for e in &edges {
+            for name in [&e.before, &e.after] {
+                if !declared.contains(name.as_str()) {
+                    diags.push(Diagnostic {
+                        rule: LOCK_ORDER,
+                        file: files[e.file_idx].rel.clone(),
+                        line: e.line,
+                        message: format!(
+                            "`lock-order:` edge references `{name}`, which no lock field \
+                             declares as its identity"
+                        ),
+                        severity: Severity::Error,
+                    });
+                }
+            }
+        }
+
+        // Transitive closure + cycle detection over the declared edges.
+        let mut succ: HashMap<String, HashSet<String>> = HashMap::new();
+        for e in &edges {
+            succ.entry(e.before.clone()).or_default().insert(e.after.clone());
+        }
+        let mut before: HashMap<String, HashSet<String>> = HashMap::new();
+        for d in &decls {
+            let mut seen = HashSet::new();
+            let mut stack: Vec<&str> = vec![&d.identity];
+            while let Some(n) = stack.pop() {
+                if let Some(nexts) = succ.get(n) {
+                    for nx in nexts {
+                        if seen.insert(nx.clone()) {
+                            stack.push(nx);
+                        }
+                    }
+                }
+            }
+            if seen.contains(&d.identity) {
+                diags.push(Diagnostic {
+                    rule: LOCK_ORDER,
+                    file: files[d.file_idx].rel.clone(),
+                    line: d.line,
+                    message: format!(
+                        "declared lock order contains a cycle through `{}` — a deadlock \
+                         by construction; break one edge",
+                        d.identity
+                    ),
+                    severity: Severity::Error,
+                });
+            }
+            before.insert(d.identity.clone(), seen);
+        }
+
+        let depth_at: Vec<Vec<i32>> = parsed
+            .iter()
+            .map(|pf| {
+                let mut depths = Vec::with_capacity(pf.toks.len());
+                let mut d = 0i32;
+                for t in &pf.toks {
+                    match t.text.as_str() {
+                        "{" => {
+                            depths.push(d);
+                            d += 1;
+                        }
+                        "}" => {
+                            d -= 1;
+                            depths.push(d);
+                        }
+                        _ => depths.push(d),
+                    }
+                }
+                depths
+            })
+            .collect();
+
+        (
+            Ctx {
+                files,
+                parsed,
+                fns_by_name,
+                fns_by_type,
+                field_types,
+                lock_by_field,
+                lock_fields_global,
+                before,
+                depth_at,
+            },
+            diags,
+        )
+    }
+
+    /// Declared ordering: may `a` be held while acquiring `b`?
+    fn ordered(&self, a: &str, b: &str) -> bool {
+        self.before.get(a).map_or(false, |s| s.contains(b))
+    }
+
+    /// Resolve a lock acquisition's receiver tail to a declared identity:
+    /// same-file field first, then the globally-unique fallback.
+    fn lock_identity(&self, file_idx: usize, recv_tail: &str) -> Option<&str> {
+        if let Some(id) = self.lock_by_field[file_idx].get(recv_tail) {
+            return Some(id);
+        }
+        match self.lock_fields_global.get(recv_tail) {
+            Some(ids) if ids.len() == 1 => Some(&ids[0]),
+            _ => None,
+        }
+    }
+
+    /// Candidate definition sites for a call, using receiver/path type
+    /// hints where available, falling back to a whole-tree name match.
+    /// Test-only fns are never candidates: production code cannot call
+    /// into a `#[cfg(test)]` item, so a name collision with a test helper
+    /// (`fn spawn` in a test mod vs. `thread::Builder::spawn`) must not
+    /// pull the helper's lock footprint into the production call graph.
+    fn candidates(&self, caller_file: usize, caller_fn: usize, call: &Call) -> Vec<(usize, usize)> {
+        let live = |v: Vec<(usize, usize)>| -> Vec<(usize, usize)> {
+            v.into_iter().filter(|&(fi, gi)| !self.parsed[fi].fns[gi].is_test).collect()
+        };
+        let by_name =
+            || live(self.fns_by_name.get(&call.name).cloned().unwrap_or_default());
+        let by_type = |ty: &str| -> Option<Vec<(usize, usize)>> {
+            self.fns_by_type.get(ty).and_then(|m| m.get(&call.name)).cloned().map(&live)
+        };
+        match call.kind {
+            CallKind::Method => {
+                let tail = call.recv.last().map(String::as_str);
+                if tail == Some("self") || (call.recv.first().map(String::as_str) == Some("self")
+                    && call.recv.len() == 1)
+                {
+                    let owner = &self.parsed[caller_file].fns[caller_fn];
+                    if let Some(ty) = &owner.impl_type {
+                        if let Some(c) = by_type(ty) {
+                            return c;
+                        }
+                    }
+                    return by_name();
+                }
+                if let Some(tail) = tail {
+                    let tys = self.field_types.get(tail);
+                    if let Some(tys) = tys {
+                        if tys.len() == 1 {
+                            if let Some(c) = by_type(&tys[0]) {
+                                return c;
+                            }
+                            // A type hint with no in-tree method of this
+                            // name: almost certainly a std/container call.
+                            return Vec::new();
+                        }
+                    }
+                }
+                // An atomic-op method whose receiver did not resolve to a
+                // typed field is an `AtomicU64`-style local or chain —
+                // falling back to a name match would alias it onto any
+                // in-tree fn that happens to share the name (`load`,
+                // `store`, `swap`). Treat it as external instead.
+                const ATOMIC_METHODS: &[&str] = &[
+                    "load", "store", "swap", "fetch_add", "fetch_sub", "fetch_or", "fetch_and",
+                    "fetch_xor", "fetch_update", "compare_exchange", "compare_exchange_weak",
+                ];
+                if ATOMIC_METHODS.contains(&call.name.as_str()) {
+                    return Vec::new();
+                }
+                by_name()
+            }
+            CallKind::Plain => {
+                if let Some(seg) = call.recv.last() {
+                    if let Some(c) = by_type(seg) {
+                        return c;
+                    }
+                    // A lowercase segment is a module path — fall through
+                    // to the free-fn name match. An uppercase one is a
+                    // type with no in-tree impl of that name: external
+                    // (`Arc::new`, `Vec::with_capacity`).
+                    if seg.chars().next().map_or(true, |c| !c.is_lowercase()) {
+                        return Vec::new();
+                    }
+                }
+                by_name()
+            }
+        }
+    }
+
+    /// Does fn `(fi, gi)` carry a reasoned `wal-before-apply` pragma on
+    /// its signature line, the line above, or anywhere in its body? Such
+    /// a fn is escaped from the WAL analysis entirely — its own applies
+    /// are accepted and the violation does not cascade into callers
+    /// (`DurableStore::create` is the canonical case: a freshly-created
+    /// store has nothing to replay, so the first manifest write has no
+    /// WAL frame to follow).
+    fn wal_escaped(&self, fi: usize, gi: usize) -> bool {
+        let f = &self.parsed[fi].fns[gi];
+        let file = &self.files[fi];
+        let start = f.line.saturating_sub(2);
+        let last = if f.body.1 > f.body.0 {
+            self.parsed[fi].toks[f.body.1 - 1].line
+        } else {
+            f.line
+        };
+        let start = start.min(file.lines.len());
+        let last = last.min(file.lines.len());
+        file.lines[start..last].iter().any(|l| {
+            super::parse_pragmas(&l.comment).iter().any(|p| {
+                p.rule == WAL_BEFORE_APPLY
+                    && p.reason.as_deref().map_or(false, |r| !r.trim().is_empty())
+            })
+        })
+    }
+
+    /// The set of lock identities fn `(fi, gi)` may acquire, directly or
+    /// through calls (memoized, bounded recursion).
+    fn may_acquire(
+        &self,
+        fi: usize,
+        gi: usize,
+        memo: &mut HashMap<(usize, usize), HashSet<String>>,
+        in_progress: &mut HashSet<(usize, usize)>,
+        depth: usize,
+    ) -> HashSet<String> {
+        if let Some(s) = memo.get(&(fi, gi)) {
+            return s.clone();
+        }
+        if depth > 6 || !in_progress.insert((fi, gi)) {
+            return HashSet::new();
+        }
+        let mut acq = HashSet::new();
+        let f = &self.parsed[fi].fns[gi];
+        for call in &f.calls {
+            if is_lock_acquisition(call) {
+                if let Some(tail) = call.recv.last() {
+                    if let Some(id) = self.lock_identity(fi, tail) {
+                        acq.insert(id.to_string());
+                    }
+                }
+                continue;
+            }
+            if call.name == "drop" {
+                continue;
+            }
+            for (cfi, cgi) in self.candidates(fi, gi, call) {
+                if (cfi, cgi) == (fi, gi) {
+                    continue;
+                }
+                acq.extend(self.may_acquire(cfi, cgi, memo, in_progress, depth + 1));
+            }
+        }
+        in_progress.remove(&(fi, gi));
+        memo.insert((fi, gi), acq.clone());
+        acq
+    }
+}
+
+/// Is this call a lock acquisition? (`.lock()` method calls; `read`/
+/// `write` count only when the receiver resolves to a declared lock
+/// field, which the caller checks.)
+fn is_lock_acquisition(call: &Call) -> bool {
+    call.kind == CallKind::Method && call.name == "lock"
+}
+
+// ---------------------------------------------------------------------------
+// Rule: lock-order
+// ---------------------------------------------------------------------------
+
+/// Guard lifetime classes, per the statement head that binds the guard.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum GuardKind {
+    /// `let g = m.lock()…;` — lives until the enclosing block closes
+    /// (depth drops *below* the acquisition depth).
+    Let,
+    /// `if let`/`while let`/`match` head — lives while depth stays
+    /// *above* the acquisition depth.
+    Scoped,
+    /// Temporary (chained or unbound): released within its statement;
+    /// approximated as never held.
+    Temp,
+}
+
+struct Held {
+    identity: String,
+    depth: i32,
+    kind: GuardKind,
+    var: Option<String>,
+}
+
+/// Classify the guard produced by the lock call at token `tok`: does the
+/// chain end at the poison adapter (persistent) or continue (temporary),
+/// and what statement head binds it?
+fn classify_guard(toks: &[Tok], call_tok: usize) -> (GuardKind, Option<String>) {
+    // Walk forward past `lock ( )` then any `. unwrap ( )` /
+    // `. expect ( … )` / `. unwrap_or_else ( … )` adapters.
+    let mut i = call_tok + 1; // at `(`
+    let skip_parens = |toks: &[Tok], mut i: usize| -> usize {
+        // toks[i] == "(": skip to just past the matching ")".
+        let mut d = 0i32;
+        while i < toks.len() {
+            match toks[i].text.as_str() {
+                "(" => d += 1,
+                ")" => {
+                    d -= 1;
+                    if d == 0 {
+                        return i + 1;
+                    }
+                }
+                _ => {}
+            }
+            i += 1;
+        }
+        i
+    };
+    i = skip_parens(toks, i);
+    loop {
+        if i + 1 < toks.len()
+            && toks[i].text == "."
+            && matches!(toks[i + 1].text.as_str(), "unwrap" | "expect" | "unwrap_or_else")
+        {
+            let j = i + 2;
+            if j < toks.len() && toks[j].text == "(" {
+                i = skip_parens(toks, j);
+                continue;
+            }
+        }
+        break;
+    }
+    let start = statement_start(toks, call_tok);
+    let head: Vec<&str> = toks[start..call_tok].iter().map(|t| t.text.as_str()).collect();
+    let scoped = head.first() == Some(&"if") || head.first() == Some(&"while");
+    let is_let = head.first() == Some(&"let") || (scoped && head.get(1) == Some(&"let"));
+    // A `let g = …lock()…;` statement binds a guard for the enclosing
+    // block; an `if let`/`while let` head whose chain ends at the body
+    // `{` binds one for that body. Anything else (chained `.clone()`,
+    // unbound expression) is a within-statement temporary.
+    let persistent = match toks.get(i).map(|t| t.text.as_str()) {
+        Some(";") => is_let,
+        Some("{") => scoped && is_let,
+        _ => false,
+    };
+    if !persistent {
+        return (GuardKind::Temp, None);
+    }
+    // Guard var: last ident before `=`.
+    let mut var = None;
+    for t in &toks[start..call_tok] {
+        if t.text == "=" {
+            break;
+        }
+        if t.is_ident && !matches!(t.text.as_str(), "let" | "mut" | "ref" | "if" | "while") {
+            var = Some(t.text.clone());
+        }
+    }
+    (if scoped { GuardKind::Scoped } else { GuardKind::Let }, var)
+}
+
+pub fn check_lock_order(ctx: &Ctx, out: &mut Vec<Diagnostic>) {
+    let mut memo = HashMap::new();
+    for (fi, pf) in ctx.parsed.iter().enumerate() {
+        if !lock_scope(&pf.rel) {
+            continue;
+        }
+        for (gi, f) in pf.fns.iter().enumerate() {
+            if f.is_test {
+                continue;
+            }
+            let mut held: Vec<Held> = Vec::new();
+            let mut prev_tok = f.body.0;
+            for call in &f.calls {
+                // Release guards whose scope closed between calls.
+                let min_depth = ctx.depth_at[fi][prev_tok..=call.tok.min(ctx.depth_at[fi].len() - 1)]
+                    .iter()
+                    .copied()
+                    .min()
+                    .unwrap_or(0);
+                held.retain(|h| match h.kind {
+                    GuardKind::Let => min_depth >= h.depth,
+                    GuardKind::Scoped => min_depth > h.depth,
+                    GuardKind::Temp => false,
+                });
+                prev_tok = call.tok;
+
+                if call.name == "drop" && call.kind == CallKind::Plain {
+                    // `drop(guard)` releases by name.
+                    if let Some(arg) = ctx.parsed[fi].toks.get(call.tok + 2) {
+                        if arg.is_ident {
+                            held.retain(|h| h.var.as_deref() != Some(arg.text.as_str()));
+                        }
+                    }
+                    continue;
+                }
+
+                if is_lock_acquisition(call) {
+                    let Some(tail) = call.recv.last() else {
+                        continue; // `make().lock()` — cannot resolve; rare
+                    };
+                    let Some(id) = ctx.lock_identity(fi, tail) else {
+                        out.push(Diagnostic {
+                            rule: LOCK_ORDER,
+                            file: pf.rel.clone(),
+                            line: call.line,
+                            message: format!(
+                                "acquisition of `{tail}.lock()` does not resolve to any \
+                                 annotated lock field — annotate the field or funnel the \
+                                 lock through a declared identity"
+                            ),
+                            severity: Severity::Error,
+                        });
+                        continue;
+                    };
+                    let id = id.to_string();
+                    for h in &held {
+                        if h.identity == id {
+                            out.push(Diagnostic {
+                                rule: LOCK_ORDER,
+                                file: pf.rel.clone(),
+                                line: call.line,
+                                message: format!(
+                                    "re-entrant acquisition of `{id}` while already held — \
+                                     self-deadlock"
+                                ),
+                                severity: Severity::Error,
+                            });
+                        } else if !ctx.ordered(&h.identity, &id) {
+                            out.push(Diagnostic {
+                                rule: LOCK_ORDER,
+                                file: pf.rel.clone(),
+                                line: call.line,
+                                message: format!(
+                                    "acquires `{id}` while holding `{h}` but the declared \
+                                     order has no `{h} < … < {id}` path — declare the edge \
+                                     or restructure",
+                                    h = h.identity
+                                ),
+                                severity: Severity::Error,
+                            });
+                        }
+                    }
+                    let (kind, var) = classify_guard(&pf.toks, call.tok);
+                    if kind != GuardKind::Temp {
+                        held.push(Held {
+                            identity: id,
+                            depth: ctx.depth_at[fi][call.tok],
+                            kind,
+                            var,
+                        });
+                    }
+                    continue;
+                }
+
+                // A plain call while holding locks: whatever the callee
+                // may acquire must be ordered after everything held.
+                if held.is_empty() {
+                    continue;
+                }
+                let mut acquired = HashSet::new();
+                let mut in_progress = HashSet::new();
+                for (cfi, cgi) in ctx.candidates(fi, gi, call) {
+                    if (cfi, cgi) == (fi, gi) {
+                        // A name-collision candidate pointing back at the
+                        // caller itself (e.g. `t.flush()` inside a fn also
+                        // named `flush`) — direct re-entrancy is caught at
+                        // the acquisition site instead.
+                        continue;
+                    }
+                    acquired.extend(ctx.may_acquire(cfi, cgi, &mut memo, &mut in_progress, 0));
+                }
+                for a in &acquired {
+                    for h in &held {
+                        if &h.identity == a {
+                            out.push(Diagnostic {
+                                rule: LOCK_ORDER,
+                                file: pf.rel.clone(),
+                                line: call.line,
+                                message: format!(
+                                    "call to `{}` may re-acquire `{a}`, already held here — \
+                                     self-deadlock",
+                                    call.name
+                                ),
+                                severity: Severity::Error,
+                            });
+                        } else if !ctx.ordered(&h.identity, a) {
+                            out.push(Diagnostic {
+                                rule: LOCK_ORDER,
+                                file: pf.rel.clone(),
+                                line: call.line,
+                                message: format!(
+                                    "call to `{}` may acquire `{a}` while `{h}` is held, \
+                                     but the declared order has no `{h} < … < {a}` path",
+                                    call.name,
+                                    h = h.identity
+                                ),
+                                severity: Severity::Error,
+                            });
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Rule: wal-before-apply
+// ---------------------------------------------------------------------------
+
+/// Is this call a WAL append primitive? (`append`/`append_durable` on a
+/// receiver chain that goes through a `wal`.)
+fn is_wal_event(call: &Call) -> bool {
+    matches!(call.name.as_str(), "append" | "append_durable")
+        && call.recv.iter().any(|s| s == "wal")
+}
+
+/// Is this call an apply/install primitive? (`write_atomic` lands bytes
+/// the manifest points at; `publish` swaps the reader-visible snapshot.)
+fn is_apply_event(call: &Call) -> bool {
+    matches!(call.name.as_str(), "write_atomic" | "publish")
+}
+
+#[derive(Clone, Copy, Default)]
+struct WalSummary {
+    /// Contains a WAL append somewhere (any path).
+    has_wal: bool,
+    /// Reaches an apply primitive before any WAL append.
+    violating: bool,
+}
+
+fn wal_summary(
+    ctx: &Ctx,
+    fi: usize,
+    gi: usize,
+    memo: &mut HashMap<(usize, usize), WalSummary>,
+    in_progress: &mut HashSet<(usize, usize)>,
+    depth: usize,
+) -> WalSummary {
+    if let Some(s) = memo.get(&(fi, gi)) {
+        return *s;
+    }
+    if depth > 8 || !in_progress.insert((fi, gi)) {
+        return WalSummary::default();
+    }
+    if ctx.wal_escaped(fi, gi) {
+        let s = WalSummary::default();
+        in_progress.remove(&(fi, gi));
+        memo.insert((fi, gi), s);
+        return s;
+    }
+    let f = &ctx.parsed[fi].fns[gi];
+    let mut walled = false;
+    let mut summary = WalSummary::default();
+    for call in &f.calls {
+        if is_wal_event(call) {
+            walled = true;
+            summary.has_wal = true;
+            continue;
+        }
+        if is_apply_event(call) {
+            if !walled {
+                summary.violating = true;
+            }
+            continue;
+        }
+        for (cfi, cgi) in ctx.candidates(fi, gi, call) {
+            if (cfi, cgi) == (fi, gi) {
+                continue;
+            }
+            let s = wal_summary(ctx, cfi, cgi, memo, in_progress, depth + 1);
+            if !walled && s.violating {
+                summary.violating = true;
+            }
+            if s.has_wal {
+                walled = true;
+                summary.has_wal = true;
+            }
+        }
+    }
+    in_progress.remove(&(fi, gi));
+    memo.insert((fi, gi), summary);
+    summary
+}
+
+/// The line to anchor a wal-before-apply diagnostic at: the first direct
+/// apply (or violating call) with no prior WAL event in this body.
+fn wal_violation_line(ctx: &Ctx, fi: usize, gi: usize, memo: &mut HashMap<(usize, usize), WalSummary>) -> Option<(usize, String)> {
+    let f = &ctx.parsed[fi].fns[gi];
+    let mut walled = false;
+    for call in &f.calls {
+        if is_wal_event(call) {
+            walled = true;
+            continue;
+        }
+        if is_apply_event(call) {
+            if !walled {
+                return Some((call.line, call.name.clone()));
+            }
+            continue;
+        }
+        let mut any_wal = false;
+        for (cfi, cgi) in ctx.candidates(fi, gi, call) {
+            if (cfi, cgi) == (fi, gi) {
+                continue;
+            }
+            let mut in_progress = HashSet::new();
+            let s = wal_summary(ctx, cfi, cgi, memo, &mut in_progress, 0);
+            if !walled && s.violating {
+                return Some((call.line, call.name.clone()));
+            }
+            any_wal |= s.has_wal;
+        }
+        if any_wal {
+            walled = true;
+        }
+    }
+    None
+}
+
+pub fn check_wal_before_apply(ctx: &Ctx, out: &mut Vec<Diagnostic>) {
+    let mut memo = HashMap::new();
+    for (fi, pf) in ctx.parsed.iter().enumerate() {
+        if !wal_scope(&pf.rel) {
+            continue;
+        }
+        for (gi, f) in pf.fns.iter().enumerate() {
+            if f.is_test {
+                continue;
+            }
+            let mut in_progress = HashSet::new();
+            let s = wal_summary(ctx, fi, gi, &mut memo, &mut in_progress, 0);
+            if !s.violating {
+                continue;
+            }
+            let (line, which) = wal_violation_line(ctx, fi, gi, &mut memo)
+                .unwrap_or((f.line, "apply".to_string()));
+            out.push(Diagnostic {
+                rule: WAL_BEFORE_APPLY,
+                file: pf.rel.clone(),
+                line,
+                message: format!(
+                    "`{}` reaches a snapshot-install/apply (`{which}`) with no prior WAL \
+                     append on this path — frame the mutation into the WAL first, or add a \
+                     reasoned pragma for a non-mutating path",
+                    f.name
+                ),
+                severity: Severity::Error,
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Rule: io-confinement
+// ---------------------------------------------------------------------------
+
+/// Files allowed to touch `std::fs` directly, with the reason recorded
+/// here (and in docs/static_analysis.md). Everything else must go
+/// through the `ingest/io.rs` seam or carry a reasoned pragma.
+const IO_ALLOWLIST: &[(&str, &str)] = &[
+    ("fingerprint/dataset.rs", "offline dataset loading, never on the serving path"),
+    ("baselines/cpu.rs", "offline baseline harness, never on the serving path"),
+    ("util/minijson.rs", "bench JSON snapshot writer, offline"),
+    ("runtime/artifacts.rs", "compile-artifact cache for the offline runtime"),
+    ("main.rs", "CLI entry: dataset/artifact loading before serving starts"),
+];
+
+fn io_exempt(rel: &str) -> bool {
+    rel == "ingest/io.rs"
+        || rel.starts_with("lint/")
+        || rel.starts_with("bin/")
+        || IO_ALLOWLIST.iter().any(|(f, _)| *f == rel)
+}
+
+/// Word-boundary match for `needle::` in blanked code.
+fn path_use(code: &str, needle: &str) -> bool {
+    let pat = format!("{needle}::");
+    let mut start = 0;
+    while let Some(pos) = code[start..].find(&pat) {
+        let at = start + pos;
+        let before_ok = at == 0
+            || !code[..at]
+                .chars()
+                .last()
+                .map_or(false, |c| c == '_' || c.is_ascii_alphanumeric() || c == ':');
+        if before_ok {
+            return true;
+        }
+        start = at + pat.len();
+    }
+    false
+}
+
+pub fn check_io_confinement(ctx: &Ctx, out: &mut Vec<Diagnostic>) {
+    for file in ctx.files {
+        if io_exempt(&file.rel) {
+            continue;
+        }
+        for (i, line) in file.lines.iter().enumerate() {
+            if line.in_test {
+                continue;
+            }
+            let code = &line.code;
+            let hit = code.contains("std::fs")
+                || path_use(code, "fs")
+                || path_use(code, "File")
+                || code.contains("OpenOptions");
+            if hit {
+                out.push(Diagnostic {
+                    rule: IO_CONFINEMENT,
+                    file: file.rel.clone(),
+                    line: i + 1,
+                    message: "direct filesystem access outside ingest/io.rs — route it \
+                              through the `AtomicDir`/`WalFile` seam so crash-point fault \
+                              injection covers it, or add a reasoned pragma for an offline \
+                              path"
+                        .to_string(),
+                    severity: Severity::Error,
+                });
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Entry points
+// ---------------------------------------------------------------------------
+
+/// Run every cross-file analysis over `files`, appending diagnostics.
+pub fn analyze(files: &[SourceFile], out: &mut Vec<Diagnostic>) {
+    let (diags, _timings) = analyze_timed(files);
+    out.extend(diags);
+}
+
+/// As [`analyze`], returning per-rule wall time for `--timings`.
+pub fn analyze_timed(
+    files: &[SourceFile],
+) -> (Vec<Diagnostic>, Vec<(&'static str, std::time::Duration)>) {
+    let mut out = Vec::new();
+    let mut timings = Vec::new();
+
+    let t0 = std::time::Instant::now();
+    let (ctx, decl_diags) = Ctx::build(files);
+    out.extend(decl_diags);
+    timings.push(("syntax-scan", t0.elapsed()));
+
+    let t = std::time::Instant::now();
+    check_lock_order(&ctx, &mut out);
+    timings.push((LOCK_ORDER, t.elapsed()));
+
+    let t = std::time::Instant::now();
+    check_wal_before_apply(&ctx, &mut out);
+    timings.push((WAL_BEFORE_APPLY, t.elapsed()));
+
+    let t = std::time::Instant::now();
+    check_io_confinement(&ctx, &mut out);
+    timings.push((IO_CONFINEMENT, t.elapsed()));
+
+    (out, timings)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::scan_str;
+
+    #[test]
+    fn missing_annotation_is_an_error() {
+        let src = "pub struct S {\n    snapshot: Mutex<u32>,\n}\n";
+        let diags = scan_str("ingest/state.rs", src);
+        assert!(
+            diags.iter().any(|d| d.rule == LOCK_ORDER && d.message.contains("no `// lock-order:`")),
+            "{diags:?}"
+        );
+    }
+
+    #[test]
+    fn annotated_leaf_lock_is_clean() {
+        let src = "pub struct S {\n    // lock-order: snapshot\n    snapshot: Mutex<u32>,\n}\n";
+        assert!(scan_str("ingest/state.rs", src).is_empty());
+    }
+
+    #[test]
+    fn declared_cycle_is_flagged() {
+        let src = "pub struct S {\n    // lock-order: a < b\n    a: Mutex<u32>,\n    // lock-order: b < a\n    b: Mutex<u32>,\n}\n";
+        let diags = scan_str("ingest/state.rs", src);
+        assert!(diags.iter().any(|d| d.rule == LOCK_ORDER && d.message.contains("cycle")), "{diags:?}");
+    }
+
+    #[test]
+    fn inversion_against_declared_order_is_flagged() {
+        let src = "pub struct S {\n    // lock-order: a < b\n    a: Mutex<u32>,\n    // lock-order: b\n    b: Mutex<u32>,\n}\nimpl S {\n    fn bad(&self) {\n        let g = self.b.lock().unwrap();\n        let h = self.a.lock().unwrap();\n    }\n    fn good(&self) {\n        let g = self.a.lock().unwrap();\n        let h = self.b.lock().unwrap();\n    }\n}\n";
+        let diags = scan_str("ingest/state.rs", src);
+        let inversions: Vec<_> =
+            diags.iter().filter(|d| d.message.contains("while holding")).collect();
+        assert_eq!(inversions.len(), 1, "{diags:?}");
+        assert_eq!(inversions[0].line, 10);
+    }
+
+    #[test]
+    fn indirect_acquisition_through_calls_is_checked() {
+        let src = "pub struct S {\n    // lock-order: a\n    a: Mutex<u32>,\n    // lock-order: b\n    b: Mutex<u32>,\n}\nimpl S {\n    fn inner_lock(&self) {\n        let g = self.b.lock().unwrap();\n    }\n    fn outer(&self) {\n        let g = self.a.lock().unwrap();\n        self.inner_lock();\n    }\n}\n";
+        let diags = scan_str("ingest/state.rs", src);
+        assert!(
+            diags.iter().any(|d| d.rule == LOCK_ORDER && d.message.contains("may acquire `b`")),
+            "{diags:?}"
+        );
+    }
+
+    #[test]
+    fn scope_block_and_drop_release_guards() {
+        let src = "pub struct S {\n    // lock-order: a\n    a: Mutex<u32>,\n    // lock-order: b\n    b: Mutex<u32>,\n}\nimpl S {\n    fn scoped(&self) {\n        {\n            let g = self.b.lock().unwrap();\n        }\n        let h = self.a.lock().unwrap();\n    }\n    fn dropped(&self) {\n        let g = self.b.lock().unwrap();\n        drop(g);\n        let h = self.a.lock().unwrap();\n    }\n}\n";
+        assert!(scan_str("ingest/state.rs", src).is_empty());
+    }
+
+    #[test]
+    fn reentrant_acquisition_is_flagged() {
+        let src = "pub struct S {\n    // lock-order: a\n    a: Mutex<u32>,\n}\nimpl S {\n    fn twice(&self) {\n        let g = self.a.lock().unwrap();\n        let h = self.a.lock().unwrap();\n    }\n}\n";
+        let diags = scan_str("ingest/state.rs", src);
+        assert!(diags.iter().any(|d| d.message.contains("re-entrant")), "{diags:?}");
+    }
+
+    #[test]
+    fn wal_before_apply_orders_events() {
+        let bad = "impl Store {\n    pub fn apply_first(&self) {\n        self.dir.write_atomic(name, bytes);\n        self.inner.wal.append(rec);\n    }\n}\n";
+        let diags = scan_str("ingest/durable.rs", bad);
+        assert!(diags.iter().any(|d| d.rule == WAL_BEFORE_APPLY), "{diags:?}");
+
+        let good = "impl Store {\n    pub fn wal_first(&self) {\n        self.inner.wal.append(rec);\n        self.dir.write_atomic(name, bytes);\n    }\n}\n";
+        assert!(scan_str("ingest/durable.rs", good).is_empty());
+    }
+
+    #[test]
+    fn wal_before_apply_sees_through_calls() {
+        let src = "impl Store {\n    fn swap(&self) {\n        self.dir.write_atomic(name, bytes);\n    }\n    pub fn entry(&self) {\n        self.swap();\n    }\n}\n";
+        let diags = scan_str("ingest/durable.rs", src);
+        // Both the helper and the entry are flagged: neither path logs.
+        assert!(
+            diags.iter().filter(|d| d.rule == WAL_BEFORE_APPLY).count() >= 2,
+            "{diags:?}"
+        );
+        let walled = "impl Store {\n    fn swap(&self) {\n        self.dir.write_atomic(name, bytes);\n    }\n    pub fn entry(&self) {\n        self.inner.wal.append(rec);\n        self.swap();\n    }\n}\n";
+        let diags = scan_str("ingest/durable.rs", walled);
+        // The entry logs first, so only the bare helper remains flagged.
+        let flagged: Vec<_> = diags.iter().filter(|d| d.rule == WAL_BEFORE_APPLY).collect();
+        assert_eq!(flagged.len(), 1, "{diags:?}");
+        assert_eq!(flagged[0].line, 3, "anchored at the direct apply inside `swap`");
+    }
+
+    #[test]
+    fn wal_pragma_escapes_fn_and_callers() {
+        let src = "impl Store {\n    pub fn create(&self) {\n        // lint: allow(wal-before-apply, reason = \"fresh store: nothing to replay yet\")\n        self.dir.write_atomic(name, bytes);\n    }\n    pub fn open(&self) {\n        self.create();\n    }\n}\n";
+        let diags = scan_str("ingest/durable.rs", src);
+        assert!(
+            diags.iter().all(|d| d.rule != WAL_BEFORE_APPLY),
+            "a reasoned pragma escapes the fn and does not cascade to callers: {diags:?}"
+        );
+    }
+
+    #[test]
+    fn io_confinement_scopes_and_allowlist() {
+        let src = "use std::fs;\npub fn leak() { fs::write(p, b); }\n";
+        assert!(scan_str("ingest/segment.rs", src)
+            .iter()
+            .any(|d| d.rule == IO_CONFINEMENT));
+        assert!(scan_str("ingest/io.rs", src).is_empty(), "the seam itself is exempt");
+        assert!(
+            scan_str("fingerprint/dataset.rs", src).is_empty(),
+            "allowlisted offline path"
+        );
+        assert!(scan_str("hnsw/graph.rs", src)
+            .iter()
+            .any(|d| d.rule == IO_CONFINEMENT));
+    }
+
+    #[test]
+    fn io_confinement_pragma_escape() {
+        let src = "pub fn snapshot_debug() {\n    // lint: allow(io-confinement, reason = \"debug dump, not a serving path\")\n    std::fs::write(p, b).ok();\n}\n";
+        assert!(scan_str("ingest/segment.rs", src).is_empty());
+    }
+
+    #[test]
+    fn parse_lock_order_grammar() {
+        let (id, edges) = parse_lock_order("writer < store_inner, snapshot").unwrap();
+        assert_eq!(id, "writer");
+        assert_eq!(
+            edges,
+            vec![
+                ("writer".to_string(), "store_inner".to_string()),
+                ("writer".to_string(), "snapshot".to_string()),
+            ]
+        );
+        let (id, edges) = parse_lock_order("a < b < c").unwrap();
+        assert_eq!(id, "a");
+        assert_eq!(edges.len(), 2);
+        assert_eq!(edges[1], ("b".to_string(), "c".to_string()));
+        assert!(parse_lock_order("a, b < c").is_err(), "identity must be single");
+        assert!(parse_lock_order("").is_err());
+    }
+}

@@ -28,7 +28,9 @@
 //! * The tree walk skips `lint/fixtures/` — those files exist to violate
 //!   the rules (the self-tests point the scanner at them explicitly).
 
+pub mod global;
 pub mod rules;
+pub mod syntax;
 
 use std::fs;
 use std::io;
@@ -456,14 +458,16 @@ fn suppressed(file: &SourceFile, d: &Diagnostic) -> bool {
     false
 }
 
-/// Scan one file's text: run every rule, validate pragmas, apply
-/// suppressions. `rel` decides which rules are in scope.
+/// Scan one file's text: run every rule (the cross-file analyses see a
+/// one-file tree), validate pragmas, apply suppressions. `rel` decides
+/// which rules are in scope.
 pub fn scan_str(rel: &str, text: &str) -> Vec<Diagnostic> {
     let file = SourceFile::parse(rel, text);
     let mut out = Vec::new();
     for rule in rules::registry() {
         (rule.check)(&file, &mut out);
     }
+    global::analyze(std::slice::from_ref(&file), &mut out);
     pragma_diagnostics(&file, &mut out);
     out.retain(|d| !suppressed(&file, d));
     out
@@ -474,6 +478,9 @@ pub struct Report {
     /// `.rs` files scanned (fixtures excluded).
     pub files: usize,
     pub diagnostics: Vec<Diagnostic>,
+    /// Per-rule wall time (`--timings`): per-file rules, the syntax scan,
+    /// and each cross-file analysis.
+    pub timings: Vec<(&'static str, std::time::Duration)>,
 }
 
 impl Report {
@@ -512,10 +519,10 @@ pub fn default_src_root() -> PathBuf {
 
 /// Scan every `.rs` file under `root`, skipping `lint/fixtures/` (those
 /// files violate the rules on purpose; the self-tests scan them with an
-/// explicit root).
+/// explicit root). Per-file rules run file by file; the cross-file
+/// analyses in [`global`] run once over the whole parsed set.
 pub fn scan_tree(root: &Path) -> io::Result<Report> {
-    let mut diagnostics = Vec::new();
-    let mut files = 0;
+    let mut parsed: Vec<SourceFile> = Vec::new();
     for path in collect_rs_files(root)? {
         let rel = path
             .strip_prefix(root)
@@ -526,11 +533,30 @@ pub fn scan_tree(root: &Path) -> io::Result<Report> {
             continue;
         }
         let text = fs::read_to_string(&path)?;
-        files += 1;
-        diagnostics.extend(scan_str(&rel, &text));
+        parsed.push(SourceFile::parse(&rel, &text));
     }
+
+    let mut diagnostics = Vec::new();
+    let mut timings = Vec::new();
+    for rule in rules::registry() {
+        let t = std::time::Instant::now();
+        for file in &parsed {
+            (rule.check)(file, &mut diagnostics);
+        }
+        timings.push((rule.name, t.elapsed()));
+    }
+    for file in &parsed {
+        pragma_diagnostics(file, &mut diagnostics);
+    }
+    let (global_diags, global_timings) = global::analyze_timed(&parsed);
+    diagnostics.extend(global_diags);
+    timings.extend(global_timings);
+
+    let by_rel: std::collections::HashMap<&str, &SourceFile> =
+        parsed.iter().map(|f| (f.rel.as_str(), f)).collect();
+    diagnostics.retain(|d| by_rel.get(d.file.as_str()).map_or(true, |f| !suppressed(f, d)));
     diagnostics.sort_by(|a, b| a.file.cmp(&b.file).then(a.line.cmp(&b.line)));
-    Ok(Report { files, diagnostics })
+    Ok(Report { files: parsed.len(), diagnostics, timings })
 }
 
 #[cfg(test)]
@@ -703,6 +729,9 @@ mod tests {
             ("coordinator/server.rs", rules::PANIC_FREE_SERVING),
             ("simulator/clock.rs", rules::NONDETERMINISTIC_SIM),
             ("ingest/bad_pragma.rs", PRAGMA_RULE),
+            ("ingest/lock_cycle.rs", global::LOCK_ORDER),
+            ("ingest/durable.rs", global::WAL_BEFORE_APPLY),
+            ("ingest/io_leak.rs", global::IO_CONFINEMENT),
         ];
         for (rel, rule) in cases {
             let path = fixtures_root().join(rel);
@@ -734,6 +763,29 @@ mod tests {
             rendered.is_empty(),
             "HEAD must pass molfpga-lint:\n{}",
             rendered.join("\n")
+        );
+    }
+
+    /// `--timings` must account for every per-file rule, the syntax scan,
+    /// and each cross-file analysis — and the whole pass must stay cheap
+    /// enough to ride every `cargo test` (the clean-tree test above runs
+    /// the same scan, so a blown budget doubles tier-1 wall time).
+    #[test]
+    fn timings_cover_every_analysis_within_budget() {
+        let report = scan_tree(&default_src_root()).expect("scan src tree");
+        let names: Vec<&str> = report.timings.iter().map(|(n, _)| *n).collect();
+        for rule in rules::registry() {
+            assert!(names.contains(&rule.name), "no timing entry for rule {}", rule.name);
+        }
+        for name in
+            ["syntax-scan", global::LOCK_ORDER, global::WAL_BEFORE_APPLY, global::IO_CONFINEMENT]
+        {
+            assert!(names.contains(&name), "no timing entry for {name}");
+        }
+        let total: std::time::Duration = report.timings.iter().map(|(_, d)| *d).sum();
+        assert!(
+            total < std::time::Duration::from_secs(30),
+            "whole-tree lint pass blew its budget: {total:?}"
         );
     }
 }

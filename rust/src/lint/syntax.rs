@@ -1,0 +1,469 @@
+//! Token/item-level Rust scanner for the cross-file analyses.
+//!
+//! The line lexer in [`super`] blanks strings and comments; this module
+//! re-reads those blanked lines as a token stream and recovers just
+//! enough structure for whole-program analysis: `impl` blocks (with
+//! their type and trait names), `fn` items with body spans, and the
+//! calls + method calls each body makes (with receiver chains, so
+//! `self.store.log_add(..)` resolves to a callee candidate set better
+//! than a bare name match).
+//!
+//! This is deliberately not a Rust parser — no `syn`, no dependencies,
+//! same offline constraint as the rest of the linter. The known
+//! approximations (closures inlined into their lexical owner, generics
+//! skipped by bracket matching, locals untyped) are documented in
+//! `docs/static_analysis.md` under "call-graph approximation".
+
+use super::SourceFile;
+
+/// One token from the blanked code: an identifier/number run or a single
+/// punctuation character. `line` is 1-based.
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub text: String,
+    pub line: usize,
+    pub is_ident: bool,
+}
+
+/// Tokenize the blanked code of every line (test lines included — item
+/// extraction keeps the `in_test` flag per fn instead).
+pub fn tokenize(file: &SourceFile) -> Vec<Tok> {
+    let mut out = Vec::new();
+    for (idx, line) in file.lines.iter().enumerate() {
+        let ln = idx + 1;
+        let chars: Vec<char> = line.code.chars().collect();
+        let mut i = 0;
+        while i < chars.len() {
+            let c = chars[i];
+            if c == '_' || c.is_ascii_alphanumeric() {
+                let start = i;
+                while i < chars.len() && (chars[i] == '_' || chars[i].is_ascii_alphanumeric()) {
+                    i += 1;
+                }
+                out.push(Tok {
+                    text: chars[start..i].iter().collect(),
+                    line: ln,
+                    is_ident: true,
+                });
+            } else if c.is_whitespace() {
+                i += 1;
+            } else {
+                out.push(Tok { text: c.to_string(), line: ln, is_ident: false });
+                i += 1;
+            }
+        }
+    }
+    out
+}
+
+/// How a call site names its callee.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CallKind {
+    /// `foo(..)` or `path::foo(..)` — `recv` holds the path segments.
+    Plain,
+    /// `.foo(..)` — `recv` holds the receiver chain (`self.store.foo()`
+    /// gives `["self", "store"]`; an unreconstructable prefix like
+    /// `make().foo()` leaves the chain empty).
+    Method,
+}
+
+/// One call site inside a fn body.
+#[derive(Debug, Clone)]
+pub struct Call {
+    pub name: String,
+    pub kind: CallKind,
+    pub recv: Vec<String>,
+    pub line: usize,
+    /// Token index of the callee identifier (for statement-context
+    /// queries like guard-binding detection).
+    pub tok: usize,
+}
+
+/// One `fn` item: name, enclosing impl context, body token span.
+#[derive(Debug)]
+pub struct FnDef {
+    pub name: String,
+    /// `impl Foo { .. }` or `impl Trait for Foo { .. }` → `Some("Foo")`.
+    pub impl_type: Option<String>,
+    /// `impl Trait for Foo { .. }` → `Some("Trait")`.
+    pub trait_name: Option<String>,
+    /// 1-based line of the `fn` keyword.
+    pub line: usize,
+    /// Declared inside a `#[cfg(test)]` region.
+    pub is_test: bool,
+    /// Token range of the body, braces included: `[start, end)`.
+    /// `start == end` for bodyless trait-method declarations.
+    pub body: (usize, usize),
+    /// Calls made inside the body, in source order.
+    pub calls: Vec<Call>,
+}
+
+/// A file parsed to item level.
+pub struct ParsedFile {
+    pub rel: String,
+    pub toks: Vec<Tok>,
+    pub fns: Vec<FnDef>,
+}
+
+const KEYWORDS: &[&str] = &[
+    "if", "while", "match", "for", "loop", "return", "in", "as", "move", "fn", "let", "else",
+    "impl", "pub", "unsafe", "dyn", "ref", "mut", "where", "use", "crate", "super", "break",
+    "continue",
+];
+
+/// Skip a balanced `<...>` generics group starting at `toks[i] == "<"`.
+/// Returns the index just past the matching `>`. Conservative: `->`
+/// inside generics would confuse this, but impl headers and fn
+/// signatures in this codebase don't nest closures into generics.
+fn skip_generics(toks: &[Tok], mut i: usize) -> usize {
+    let mut depth = 0usize;
+    while i < toks.len() {
+        match toks[i].text.as_str() {
+            "<" => depth += 1,
+            ">" => {
+                depth = depth.saturating_sub(1);
+                if depth == 0 {
+                    return i + 1;
+                }
+            }
+            "{" | ";" => return i, // malformed — bail before the body
+            _ => {}
+        }
+        i += 1;
+    }
+    i
+}
+
+/// Parse an `impl` header starting just past the `impl` token. Returns
+/// `(type_name, trait_name, index_of_body_open_brace)`.
+fn parse_impl_header(toks: &[Tok], mut i: usize) -> (Option<String>, Option<String>, usize) {
+    if i < toks.len() && toks[i].text == "<" {
+        i = skip_generics(toks, i);
+    }
+    // Collect path idents until `for`, `{`, or `where`.
+    let mut first_path: Option<String> = None;
+    let mut second_path: Option<String> = None;
+    let mut saw_for = false;
+    while i < toks.len() {
+        let t = &toks[i];
+        match t.text.as_str() {
+            "{" => break,
+            "for" => {
+                saw_for = true;
+                i += 1;
+            }
+            "where" => {
+                // Skip ahead to the body brace.
+                while i < toks.len() && toks[i].text != "{" {
+                    i += 1;
+                }
+                break;
+            }
+            "<" => i = skip_generics(toks, i),
+            _ => {
+                if t.is_ident && !KEYWORDS.contains(&t.text.as_str()) {
+                    let slot = if saw_for { &mut second_path } else { &mut first_path };
+                    // Last ident of the path wins (`ingest::Wal` → `Wal`).
+                    *slot = Some(t.text.clone());
+                }
+                i += 1;
+            }
+        }
+    }
+    if saw_for {
+        (second_path, first_path, i)
+    } else {
+        (first_path, None, i)
+    }
+}
+
+/// Find the body `{` of a fn whose signature starts at `i` (just past
+/// the fn name), or the terminating `;` for a bodyless declaration.
+/// Returns `(body_open_index, has_body)`.
+fn find_fn_body(toks: &[Tok], mut i: usize) -> (usize, bool) {
+    let mut paren = 0i64;
+    let mut angle = 0i64;
+    while i < toks.len() {
+        match toks[i].text.as_str() {
+            "(" | "[" => paren += 1,
+            ")" | "]" => paren -= 1,
+            "<" if paren == 0 => angle += 1,
+            ">" if paren == 0 && angle > 0 => angle -= 1,
+            "{" if paren == 0 => return (i, true),
+            ";" if paren == 0 => return (i, false),
+            _ => {}
+        }
+        i += 1;
+    }
+    (i, false)
+}
+
+/// Walk back from a `.` at `toks[dot]` reconstructing the receiver
+/// chain: `self.fs.mem.state` → `["self", "fs", "mem", "state"]`.
+/// Stops (possibly empty) at anything that isn't `ident.ident.…`.
+fn receiver_chain(toks: &[Tok], dot: usize) -> Vec<String> {
+    let mut chain = Vec::new();
+    let mut i = dot; // toks[i] == "."
+    loop {
+        if i == 0 {
+            break;
+        }
+        let prev = &toks[i - 1];
+        if !prev.is_ident {
+            break; // `make().foo()`, `arr[k].foo()` — unreconstructable
+        }
+        chain.push(prev.text.clone());
+        if i < 2 || toks[i - 2].text != "." {
+            break;
+        }
+        i -= 2;
+    }
+    chain.reverse();
+    chain
+}
+
+/// Walk back over `ident::ident::…` path segments ending at `colon2`
+/// (the index of the second `:` before the callee name).
+fn path_chain(toks: &[Tok], mut i: usize) -> Vec<String> {
+    // toks[i] and toks[i-1] are the `::` pair preceding the callee.
+    let mut chain = Vec::new();
+    loop {
+        if i < 2 || toks[i].text != ":" || toks[i - 1].text != ":" {
+            break;
+        }
+        if !toks[i - 2].is_ident {
+            break;
+        }
+        chain.push(toks[i - 2].text.clone());
+        if i < 4 {
+            break;
+        }
+        i -= 3;
+    }
+    chain.reverse();
+    chain
+}
+
+/// Extract calls from a body token span, in source order.
+fn extract_calls(toks: &[Tok], body: (usize, usize)) -> Vec<Call> {
+    let mut out = Vec::new();
+    for i in body.0..body.1 {
+        let t = &toks[i];
+        if !t.is_ident || KEYWORDS.contains(&t.text.as_str()) {
+            continue;
+        }
+        if i + 1 >= toks.len() || toks[i + 1].text != "(" {
+            continue;
+        }
+        if i > 0 && toks[i - 1].text == "fn" {
+            continue; // nested fn definition, not a call
+        }
+        let (kind, recv) = if i > 0 && toks[i - 1].text == "." {
+            (CallKind::Method, receiver_chain(toks, i - 1))
+        } else if i > 1 && toks[i - 1].text == ":" && toks[i - 2].text == ":" {
+            (CallKind::Plain, path_chain(toks, i - 1))
+        } else {
+            (CallKind::Plain, Vec::new())
+        };
+        out.push(Call { name: t.text.clone(), kind, recv, line: t.line, tok: i });
+    }
+    out
+}
+
+/// Parse a scanned file to item level.
+pub fn parse_items(file: &SourceFile) -> ParsedFile {
+    let toks = tokenize(file);
+    let mut fns = Vec::new();
+
+    // Impl regions as a stack of (close_depth, type, trait).
+    let mut impl_stack: Vec<(i64, Option<String>, Option<String>)> = Vec::new();
+    let mut depth: i64 = 0;
+    let mut i = 0;
+    while i < toks.len() {
+        let t = &toks[i];
+        match t.text.as_str() {
+            "{" => {
+                depth += 1;
+                i += 1;
+            }
+            "}" => {
+                depth -= 1;
+                while let Some(&(d, _, _)) = impl_stack.last() {
+                    if depth <= d {
+                        impl_stack.pop();
+                    } else {
+                        break;
+                    }
+                }
+                i += 1;
+            }
+            "impl" => {
+                let (ty, tr, brace) = parse_impl_header(&toks, i + 1);
+                if brace < toks.len() && toks[brace].text == "{" {
+                    impl_stack.push((depth, ty, tr));
+                    depth += 1;
+                    i = brace + 1;
+                } else {
+                    i = brace.max(i + 1);
+                }
+            }
+            "fn" => {
+                let Some(name_tok) = toks.get(i + 1) else {
+                    break;
+                };
+                if !name_tok.is_ident {
+                    i += 1;
+                    continue;
+                }
+                let name = name_tok.text.clone();
+                let line = t.line;
+                let is_test = file
+                    .lines
+                    .get(line - 1)
+                    .map(|l| l.in_test)
+                    .unwrap_or(false);
+                let (open, has_body) = find_fn_body(&toks, i + 2);
+                let (impl_type, trait_name) = impl_stack
+                    .last()
+                    .map(|(_, ty, tr)| (ty.clone(), tr.clone()))
+                    .unwrap_or((None, None));
+                if !has_body {
+                    fns.push(FnDef {
+                        name,
+                        impl_type,
+                        trait_name,
+                        line,
+                        is_test,
+                        body: (open, open),
+                        calls: Vec::new(),
+                    });
+                    i = open + 1;
+                    continue;
+                }
+                // Match the body braces to find the close.
+                let mut d = 0i64;
+                let mut j = open;
+                while j < toks.len() {
+                    match toks[j].text.as_str() {
+                        "{" => d += 1,
+                        "}" => {
+                            d -= 1;
+                            if d == 0 {
+                                break;
+                            }
+                        }
+                        _ => {}
+                    }
+                    j += 1;
+                }
+                let end = (j + 1).min(toks.len());
+                let body = (open, end);
+                let calls = extract_calls(&toks, body);
+                fns.push(FnDef { name, impl_type, trait_name, line, is_test, body, calls });
+                // Continue scanning *inside* the body too (nested fns,
+                // closures) — resume just past the open brace.
+                depth += 1;
+                i = open + 1;
+            }
+            _ => i += 1,
+        }
+    }
+    ParsedFile { rel: file.rel.clone(), toks, fns }
+}
+
+/// The token index of the start of the statement containing `tok`:
+/// scans back to the nearest `;`, `{`, or `}` and returns the index
+/// just past it.
+pub fn statement_start(toks: &[Tok], tok: usize) -> usize {
+    let mut i = tok;
+    while i > 0 {
+        match toks[i - 1].text.as_str() {
+            ";" | "{" | "}" => return i,
+            _ => i -= 1,
+        }
+    }
+    0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::SourceFile;
+
+    fn parse(src: &str) -> ParsedFile {
+        parse_items(&SourceFile::parse("x.rs", src))
+    }
+
+    #[test]
+    fn fn_items_and_impl_context() {
+        let p = parse(
+            "impl<B: Clone> Core<B> {\n    pub fn snapshot(&self) -> u32 { self.inner.lock() }\n}\nimpl WalFile for MemWal {\n    fn sync(&mut self) {}\n}\nfn free() {}\n",
+        );
+        let names: Vec<(&str, Option<&str>, Option<&str>)> = p
+            .fns
+            .iter()
+            .map(|f| (f.name.as_str(), f.impl_type.as_deref(), f.trait_name.as_deref()))
+            .collect();
+        assert_eq!(
+            names,
+            vec![
+                ("snapshot", Some("Core"), None),
+                ("sync", Some("MemWal"), Some("WalFile")),
+                ("free", None, None),
+            ]
+        );
+    }
+
+    #[test]
+    fn method_calls_carry_receiver_chains() {
+        let p = parse(
+            "fn f(&self) {\n    self.fs.mem.state.lock();\n    helper(1);\n    Wal::new(x);\n    made().lock();\n}\n",
+        );
+        let calls = &p.fns[0].calls;
+        assert_eq!(calls[0].name, "lock");
+        assert_eq!(calls[0].kind, CallKind::Method);
+        assert_eq!(calls[0].recv, vec!["self", "fs", "mem", "state"]);
+        assert_eq!(calls[1].name, "helper");
+        assert_eq!(calls[1].kind, CallKind::Plain);
+        assert!(calls[1].recv.is_empty());
+        assert_eq!(calls[2].name, "new");
+        assert_eq!(calls[2].recv, vec!["Wal"]);
+        // `made()` is a call; `made().lock()` is a method call with an
+        // unreconstructable receiver.
+        assert_eq!(calls[3].name, "made");
+        assert_eq!(calls[4].name, "lock");
+        assert!(calls[4].recv.is_empty());
+    }
+
+    #[test]
+    fn closure_calls_belong_to_the_lexical_owner() {
+        let p = parse("fn f(&self) {\n    self.mutate(|inner| inner.wal.append(rec))\n}\n");
+        let names: Vec<&str> = p.fns[0].calls.iter().map(|c| c.name.as_str()).collect();
+        assert_eq!(names, vec!["mutate", "append"]);
+        assert_eq!(p.fns[0].calls[1].recv, vec!["inner", "wal"]);
+    }
+
+    #[test]
+    fn bodyless_trait_methods_have_empty_spans() {
+        let p = parse("trait T {\n    fn sync(&mut self) -> io::Result<()>;\n    fn done(&self) {}\n}\n");
+        assert_eq!(p.fns[0].name, "sync");
+        assert_eq!(p.fns[0].body.0, p.fns[0].body.1);
+        assert_eq!(p.fns[1].name, "done");
+        assert!(p.fns[1].body.1 > p.fns[1].body.0);
+    }
+
+    #[test]
+    fn test_fns_are_marked() {
+        let p = parse("#[cfg(test)]\nmod tests {\n    fn helper() { x.lock(); }\n}\nfn live() {}\n");
+        assert!(p.fns[0].is_test);
+        assert!(!p.fns[1].is_test);
+    }
+
+    #[test]
+    fn statement_start_scans_to_separators() {
+        let p = parse("fn f() {\n    let a = 1;\n    let g = m.lock();\n}\n");
+        let lock = p.fns[0].calls.iter().find(|c| c.name == "lock").unwrap();
+        let start = statement_start(&p.toks, lock.tok);
+        assert_eq!(p.toks[start].text, "let");
+    }
+}

@@ -14,6 +14,7 @@ use std::sync::Mutex;
 /// Wrapper owning the PJRT client and a path-keyed executable cache.
 pub struct PjRt {
     client: xla::PjRtClient,
+    // lock-order: pjrt_cache
     cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
 }
 
