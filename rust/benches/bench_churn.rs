@@ -19,7 +19,10 @@
 
 use molfpga::fingerprint::{ChemblModel, Database};
 use molfpga::index::{BitBoundFoldingIndex, SearchIndex, TwoStageConfig};
-use molfpga::ingest::{IngestConfig, MutableIndex};
+use molfpga::ingest::{open_or_create, AtomicDir, FsyncPolicy, IngestConfig, MutableIndex, RealDir};
+use molfpga::obs::hist::HistSnapshot;
+use molfpga::obs::trace::Stage;
+use molfpga::obs::OBS;
 use molfpga::util::bench::black_box;
 use molfpga::util::minijson::Json;
 use molfpga::util::stats::percentile;
@@ -27,6 +30,33 @@ use std::sync::Arc;
 use std::time::Instant;
 
 const WRITE_RATIOS: [f64; 4] = [0.0, 0.01, 0.05, 0.20];
+
+/// Stage-latency columns each churn point reports (scan/merge stay 0 —
+/// the loop calls the index directly, not a worker pool — but the schema
+/// matches `BENCH_exhaustive.json`; the WAL columns go live on the
+/// durable point).
+const OBS_STAGES: [(Stage, &str); 4] = [
+    (Stage::Scan, "scan"),
+    (Stage::Merge, "merge"),
+    (Stage::WalAppend, "wal_append"),
+    (Stage::WalFsync, "wal_fsync"),
+];
+
+fn obs_snapshot() -> Vec<HistSnapshot> {
+    OBS_STAGES.iter().map(|(s, _)| OBS.stage(*s).snapshot()).collect()
+}
+
+/// Attach the per-point stage columns (mean µs + count deltas against
+/// `before`, from the process-global registry) to a point object.
+fn obs_columns(before: &[HistSnapshot], mut point: Json) -> Json {
+    for ((stage, name), b) in OBS_STAGES.iter().zip(before) {
+        let d = OBS.stage(*stage).snapshot().since(b);
+        point = point
+            .set(&format!("{name}_us"), d.mean_us())
+            .set(&format!("{name}_count"), d.total());
+    }
+    point
+}
 
 struct PointResult {
     wall_qps: f64,
@@ -126,6 +156,7 @@ fn main() {
             if compactor {
                 idx.clone().spawn_compactor();
             }
+            let obs0 = obs_snapshot();
             let r = run_point(&idx, &queries, &pool, reads, k, write_ratio);
             idx.stop_compactor();
             println!(
@@ -140,10 +171,12 @@ fn main() {
                 r.delta_rows_at_end,
                 baseline_qps / r.read_qps.max(1e-9),
             );
-            points.push(
+            points.push(obs_columns(
+                &obs0,
                 Json::obj()
                     .set("write_ratio", write_ratio)
                     .set("compactor", compactor)
+                    .set("durable", false)
                     .set("read_qps", r.read_qps)
                     .set("wall_qps", r.wall_qps)
                     .set("p50_us", r.p50_us)
@@ -152,8 +185,62 @@ fn main() {
                     .set("compactions", r.compactions)
                     .set("delta_rows_at_end", r.delta_rows_at_end as u64)
                     .set("qps_vs_baseline", r.read_qps / baseline_qps.max(1e-9)),
-            );
+            ));
         }
+    }
+
+    // Durable point: the same churn with a WAL underneath (`--data-dir`
+    // serving, fsync per write) — what durability costs the read stream,
+    // and the point where the wal_append/wal_fsync columns go live.
+    {
+        let wal_dir =
+            std::env::temp_dir().join(format!("molfpga-bench-churn-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&wal_dir);
+        let dir: Arc<dyn AtomicDir> =
+            Arc::new(RealDir::open(&wal_dir).expect("bench wal dir"));
+        let seed = db.clone();
+        let (rec, store) =
+            open_or_create(dir, FsyncPolicy::Every, move || Ok(seed)).expect("durable state");
+        let idx = Arc::new(MutableIndex::<BitBoundFoldingIndex>::from_recovered(
+            &rec,
+            store,
+            two_stage.clone(),
+            IngestConfig { seal_rows: 2048, ..IngestConfig::default() },
+        ));
+        let write_ratio = 0.05;
+        let obs0 = obs_snapshot();
+        let r = run_point(&idx, &queries, &pool, reads, k, write_ratio);
+        let wal = OBS.stage(Stage::WalAppend).snapshot().since(&obs0[2]);
+        let fsync = OBS.stage(Stage::WalFsync).snapshot().since(&obs0[3]);
+        println!(
+            "[bench_churn] ratio={write_ratio:.2} durable (fsync every): {:.1} read QPS, \
+             p99 {:.0} us, {} adds, wal_append {:.1} us x{}, wal_fsync {:.1} us x{} \
+             ({:.2}x baseline)",
+            r.read_qps,
+            r.p99_us,
+            r.adds,
+            wal.mean_us(),
+            wal.total(),
+            fsync.mean_us(),
+            fsync.total(),
+            baseline_qps / r.read_qps.max(1e-9),
+        );
+        points.push(obs_columns(
+            &obs0,
+            Json::obj()
+                .set("write_ratio", write_ratio)
+                .set("compactor", false)
+                .set("durable", true)
+                .set("read_qps", r.read_qps)
+                .set("wall_qps", r.wall_qps)
+                .set("p50_us", r.p50_us)
+                .set("p99_us", r.p99_us)
+                .set("adds", r.adds)
+                .set("compactions", r.compactions)
+                .set("delta_rows_at_end", r.delta_rows_at_end as u64)
+                .set("qps_vs_baseline", r.read_qps / baseline_qps.max(1e-9)),
+        ));
+        let _ = std::fs::remove_dir_all(&wal_dir);
     }
 
     let doc = Json::obj()

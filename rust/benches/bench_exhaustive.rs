@@ -9,16 +9,28 @@
 //! `BENCH_exhaustive.json` (the file `ScanCalibration::from_bench_json`
 //! reads back for hwmodel calibration).
 
+use molfpga::coordinator::backend::NativeExhaustive;
+use molfpga::coordinator::metrics::Metrics;
+use molfpga::coordinator::{EnginePool, Query, QueryMode};
 use molfpga::fingerprint::{packed, ChemblModel, Database};
 use molfpga::hwmodel::qps::engine_speedup_vs_cpu;
 use molfpga::index::{BitBoundFoldingIndex, BruteForceIndex, SearchIndex};
 use molfpga::kernel::{self, sliced::BitSliced, RowKernel};
+use molfpga::obs::trace::{self, Stage};
+use molfpga::obs::OBS;
 use molfpga::util::bench::{black_box, Bencher};
 use molfpga::util::minijson::Json;
 use std::sync::Arc;
 
 /// The paper's H1 anchor: compounds/s for one FPGA query engine.
 const FPGA_ENGINE_CPS: f64 = 450e6;
+
+/// Stage-latency columns the serving section reports into
+/// `BENCH_exhaustive.json` (merge/wal_fsync stay 0 here — this bench has
+/// no shards and no WAL — but the columns keep a stable schema with
+/// `BENCH_churn.json`).
+const SERVING_STAGES: [(Stage, &str); 3] =
+    [(Stage::Scan, "scan"), (Stage::Merge, "merge"), (Stage::WalFsync, "wal_fsync")];
 
 fn main() {
     let mut b = Bencher::new();
@@ -131,6 +143,57 @@ fn main() {
         }
     }
 
+    // ---- Serving-pipeline QPS (tracing-overhead gate) ------------------
+    // The same engine behind the real worker pool, so per-query span
+    // recording (scan + reply spans, completion check) rides every
+    // request. Running this binary under MOLFPGA_TRACE=off and =on
+    // measures the tracing overhead directly; the release-smoke CI step
+    // holds the on/off `serving_qps` ratio within 5%.
+    let metrics = Arc::new(Metrics::new());
+    let dbp = db.clone();
+    let pool = EnginePool::new("bench-serve", 2, 256, metrics.clone(), move |_| {
+        NativeExhaustive::factory(dbp.clone(), 4, 0.8)
+    });
+    let obs_before: Vec<_> =
+        SERVING_STAGES.iter().map(|(s, _)| OBS.stage(*s).snapshot()).collect();
+    let serve_n = 512usize;
+    let t0 = std::time::Instant::now();
+    let mut served = 0usize;
+    while served < serve_n {
+        let wave = 64.min(serve_n - served);
+        let rxs: Vec<_> = (0..wave)
+            .map(|i| {
+                let qi = served + i;
+                pool.submit(Query::new(
+                    qi as u64,
+                    queries[qi % queries.len()].clone(),
+                    k,
+                    QueryMode::Exhaustive,
+                ))
+                .expect("bench submit")
+            })
+            .collect();
+        for rx in rxs {
+            black_box(rx.recv().expect("bench reply"));
+        }
+        served += wave;
+    }
+    let serving_qps = serve_n as f64 / t0.elapsed().as_secs_f64();
+    pool.shutdown();
+    eprintln!(
+        "[bench_exhaustive] serving pipeline: {serving_qps:.1} QPS over {serve_n} queries \
+         (trace {})",
+        if trace::enabled() { "on" } else { "off" }
+    );
+    let mut obs_json = Json::obj();
+    for ((stage, name), before) in SERVING_STAGES.iter().zip(&obs_before) {
+        let d = OBS.stage(*stage).snapshot().since(before);
+        eprintln!("[bench_exhaustive] stage {name}: n={} mean={:.3} us", d.total(), d.mean_us());
+        obs_json = obs_json
+            .set(&format!("{name}_us"), d.mean_us())
+            .set(&format!("{name}_count"), d.total());
+    }
+
     // ---- Snapshot: BENCH_exhaustive.json (reviewable in-repo) ----------
     let sweep_json: Vec<Json> = sweep
         .iter()
@@ -160,6 +223,9 @@ fn main() {
             ),
         )
         .set("anchor_compounds_per_sec", FPGA_ENGINE_CPS)
+        .set("serving_qps", serving_qps)
+        .set("trace_enabled", trace::enabled())
+        .set("obs", obs_json)
         .set("sweep", Json::Arr(sweep_json));
     match std::fs::write("BENCH_exhaustive.json", doc.to_string() + "\n") {
         Ok(()) => eprintln!("[bench_exhaustive] wrote BENCH_exhaustive.json"),

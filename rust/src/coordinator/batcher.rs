@@ -52,7 +52,9 @@ impl Batcher {
     }
 
     fn run(pool: Arc<dyn QueryPool>, policy: BatchPolicy, rx: Receiver<Msg>) {
-        let mut pending: Vec<(Query, Sender<QueryResult>)> = Vec::new();
+        // (query, responder, enqueue time) — the enqueue stamp closes the
+        // per-query `batch` span at dispatch (docs/observability.md).
+        let mut pending: Vec<(Query, Sender<QueryResult>, Instant)> = Vec::new();
         let mut oldest: Option<Instant> = None;
         loop {
             // Wait bounded by the flush deadline.
@@ -68,10 +70,11 @@ impl Batcher {
             let mut force = false;
             match msg {
                 Ok(Msg::Enqueue(q, resp)) => {
+                    let now = Instant::now();
                     if pending.is_empty() {
-                        oldest = Some(Instant::now());
+                        oldest = Some(now);
                     }
-                    pending.push((q, resp));
+                    pending.push((q, resp, now));
                 }
                 Ok(Msg::Flush) => force = true,
                 Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
@@ -91,18 +94,19 @@ impl Batcher {
         }
     }
 
-    fn dispatch(pool: &dyn QueryPool, pending: &mut Vec<(Query, Sender<QueryResult>)>) {
+    fn dispatch(pool: &dyn QueryPool, pending: &mut Vec<(Query, Sender<QueryResult>, Instant)>) {
         if pending.is_empty() {
             return;
         }
-        let items: Vec<(Query, Sender<QueryResult>)> = pending.drain(..).collect();
-        let (queries, responders): (Vec<Query>, Vec<Sender<QueryResult>>) =
-            items.into_iter().unzip();
-        let by_id: std::collections::HashMap<u64, Sender<QueryResult>> = queries
-            .iter()
-            .map(|q| q.id)
-            .zip(responders)
-            .collect();
+        let mut queries = Vec::with_capacity(pending.len());
+        let mut by_id: std::collections::HashMap<u64, Sender<QueryResult>> =
+            std::collections::HashMap::with_capacity(pending.len());
+        for (q, resp, enqueued) in pending.drain(..) {
+            // The `batch` span/histogram covers enqueue → pool handoff.
+            crate::obs::record_stage(q.id, crate::obs::trace::Stage::Batch, enqueued, 0);
+            by_id.insert(q.id, resp);
+            queries.push(q);
+        }
         match pool.submit_batch(queries) {
             Ok(rx) => {
                 // Relay thread: fan results back to per-query responders.

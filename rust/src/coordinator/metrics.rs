@@ -1,36 +1,22 @@
 //! Serving metrics: counters and latency percentiles.
 //!
-//! Lock-protected reservoir (queries are milliseconds-scale; a mutex per
-//! completion is far off the hot path). Snapshot-on-read so reporters
-//! never block the serving path for long.
+//! Latency lives in a lock-free log-bucketed histogram
+//! ([`obs::hist::Hist`]) — recording a completion is a handful of
+//! `Relaxed` atomic RMWs, so scrapes (`STATS`, `METRICS`) can never stall
+//! the serving path. This retired the old mutex-guarded reservoir, whose
+//! `snapshot()` cloned and sorted 64k samples *under the latency lock*
+//! and stalled every concurrent `record_complete` behind the scrape
+//! (`scrapes_do_not_stall_recorders` is the regression test).
+//!
+//! `STATS` percentiles are now histogram quantiles: linear interpolation
+//! inside a ~2-buckets/octave landing bucket, clamped to the observed
+//! min/max (see `obs::hist`) — the summary line format is unchanged.
 
 use crate::ingest::IngestStats;
-use crate::util::prng::SplitMix64;
+use crate::obs::hist::{Hist, HistSnapshot};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
-
-/// Reservoir-sampled latency state (Vitter's Algorithm R): once full,
-/// completion `t` replaces a uniformly random slot with probability
-/// `RESERVOIR / t`, so *every* completion of the run is retained with
-/// equal probability and the percentiles describe the whole run, not the
-/// recent past. (The previous deterministic odd-multiplier overwrite
-/// cycled a fixed slot sequence, systematically over-representing recent
-/// completions in long runs.)
-#[derive(Debug)]
-struct Reservoir {
-    /// Retained latency samples (seconds).
-    samples: Vec<f64>,
-    /// Completions observed so far (Algorithm R's stream position).
-    seen: u64,
-    rng: SplitMix64,
-}
-
-impl Default for Reservoir {
-    fn default() -> Self {
-        Self { samples: Vec::new(), seen: 0, rng: SplitMix64::new(0x6d65_7472_6963_73) }
-    }
-}
 
 /// Shared metrics sink.
 #[derive(Debug, Default)]
@@ -39,21 +25,26 @@ pub struct Metrics {
     pub completed: AtomicU64,
     pub rejected: AtomicU64,
     pub errors: AtomicU64,
-    /// Completed-query latencies. Bounded reservoir (Algorithm R).
-    // lock-order: latencies
-    latencies: Mutex<Reservoir>,
+    /// Completed-query latencies (end-to-end, submit → completion).
+    latency: Hist,
     /// Live-ingestion gauge sources, registered per mutable index at
     /// serve wiring time (`serve --live`); read at snapshot time.
     // lock-order: metrics_ingest
     ingest: Mutex<Vec<(&'static str, Arc<IngestStats>)>>,
 }
 
-/// Reservoir cap — enough for stable p99 at any realistic test length.
-const RESERVOIR: usize = 65_536;
+/// Point-in-time copy of the four query counters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QueryCounts {
+    pub submitted: u64,
+    pub completed: u64,
+    pub rejected: u64,
+    pub errors: u64,
+}
 
 /// Poison-tolerant lock: metrics must survive a panicking holder (the
-/// inner state is a reservoir/registration list — worst case one sample
-/// is half-written, which percentiles tolerate).
+/// inner state is a registration list — a half-pushed entry at worst
+/// drops one gauge line from a report).
 fn lock_unpoisoned<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
     // lint: allow(lock-order, reason = "generic poison-tolerance helper; callers pass leaf metrics locks")
     m.lock().unwrap_or_else(|e| e.into_inner())
@@ -80,45 +71,46 @@ impl Metrics {
         self.errors.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record one completion. Lock-free: a counter bump plus the
+    /// histogram's atomic RMWs.
     pub fn record_complete(&self, latency: Duration) {
         // ordering: Relaxed — monotonic counter (see record_submit).
         self.completed.fetch_add(1, Ordering::Relaxed);
-        let mut r = lock_unpoisoned(&self.latencies);
-        r.seen += 1;
-        if r.samples.len() < RESERVOIR {
-            r.samples.push(latency.as_secs_f64());
-        } else {
-            // Algorithm R: keep this completion with probability R/seen by
-            // drawing a slot uniformly from [0, seen). (The modulo bias at
-            // u64 width is ~seen/2^64 — immaterial.)
-            let seen = r.seen;
-            let j = r.rng.next_u64() % seen;
-            if (j as usize) < RESERVOIR {
-                r.samples[j as usize] = latency.as_secs_f64();
-            }
+        self.latency.record(latency);
+    }
+
+    /// The end-to-end latency histogram (`METRICS` exposition source).
+    pub fn latency_hist(&self) -> &Hist {
+        &self.latency
+    }
+
+    /// Point-in-time copy of the query counters.
+    pub fn query_counts(&self) -> QueryCounts {
+        // ordering: Relaxed — counter reads for a point-in-time report;
+        // no acquire pairing needed (nothing is read through them).
+        QueryCounts {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            errors: self.errors.load(Ordering::Relaxed),
         }
     }
 
     /// Register a mutable index's ingestion gauges under `label`
-    /// (e.g. "exact" / "hnsw"); they ride every subsequent snapshot and
-    /// the `STATS` server reply.
+    /// (e.g. "exact" / "hnsw"); they ride every subsequent snapshot, the
+    /// `STATS` server reply, and the `METRICS` exposition.
     pub fn register_ingest(&self, label: &'static str, stats: Arc<IngestStats>) {
         lock_unpoisoned(&self.ingest).push((label, stats));
     }
 
+    /// The registered ingest gauge sources (label + shared stats).
+    pub fn ingest_list(&self) -> Vec<(&'static str, Arc<IngestStats>)> {
+        lock_unpoisoned(&self.ingest).clone()
+    }
+
     /// Snapshot of the current state.
     pub fn snapshot(&self) -> MetricsSnapshot {
-        let mut lat = lock_unpoisoned(&self.latencies).samples.clone();
-        // total_cmp: samples are finite, but a total order keeps the sort
-        // panic-free by construction (partial_cmp().unwrap() was not).
-        lat.sort_by(f64::total_cmp);
-        let pct = |p: f64| -> f64 {
-            if lat.is_empty() {
-                0.0
-            } else {
-                crate::util::stats::percentile(&lat, p)
-            }
-        };
+        let lat: HistSnapshot = self.latency.snapshot();
         let ingest = lock_unpoisoned(&self.ingest)
             .iter()
             .map(|(label, st)| IngestGauges {
@@ -136,18 +128,16 @@ impl Metrics {
                 deletes: st.deletes.load(Ordering::Relaxed),
             })
             .collect();
+        let q = self.query_counts();
         MetricsSnapshot {
-            // ordering: Relaxed — counter reads for a point-in-time
-            // report; no acquire pairing needed (nothing is read through
-            // the counters).
-            submitted: self.submitted.load(Ordering::Relaxed),
-            completed: self.completed.load(Ordering::Relaxed),
-            rejected: self.rejected.load(Ordering::Relaxed),
-            errors: self.errors.load(Ordering::Relaxed),
-            p50_s: pct(50.0),
-            p90_s: pct(90.0),
-            p99_s: pct(99.0),
-            mean_s: if lat.is_empty() { 0.0 } else { lat.iter().sum::<f64>() / lat.len() as f64 },
+            submitted: q.submitted,
+            completed: q.completed,
+            rejected: q.rejected,
+            errors: q.errors,
+            p50_s: lat.quantile(50.0),
+            p90_s: lat.quantile(90.0),
+            p99_s: lat.quantile(99.0),
+            mean_s: lat.mean_seconds(),
             ingest,
         }
     }
@@ -216,6 +206,7 @@ impl MetricsSnapshot {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::time::Instant;
 
     #[test]
     fn counters_and_percentiles() {
@@ -260,50 +251,64 @@ mod tests {
     }
 
     #[test]
-    fn reservoir_does_not_grow_unbounded() {
+    fn latency_state_is_fixed_size() {
+        // The histogram replaces the 64k-sample reservoir: memory is a
+        // fixed bucket array no matter how many completions stream in.
         let m = Metrics::new();
-        for _ in 0..(RESERVOIR + 1000) {
-            m.record_complete(Duration::from_micros(10));
+        for i in 0..200_000u64 {
+            m.record_complete(Duration::from_micros(10 + (i % 90)));
         }
-        assert!(m.latencies.lock().unwrap().samples.len() <= RESERVOIR);
+        let s = m.snapshot();
+        assert_eq!(s.completed, 200_000);
+        assert_eq!(m.latency_hist().count(), 200_000);
+        // Every completion is represented exactly (no sampling): the
+        // histogram total matches the counter.
+        assert_eq!(m.latency_hist().snapshot().total(), 200_000);
     }
 
     #[test]
-    fn reservoir_stays_representative_over_long_runs() {
-        // Algorithm R keeps every completion with equal probability, so on
-        // a 4×RESERVOIR stream whose latency encodes its index, the
-        // retained mean index must sit near the stream midpoint and every
-        // quarter of the stream must stay represented. (The old
-        // deterministic odd-multiplier overwrite cycled fixed slots and
-        // skewed retention toward recent completions.)
-        let m = Metrics::new();
-        let n = 4 * RESERVOIR;
-        for i in 0..n {
-            m.record_complete(Duration::from_nanos(i as u64));
+    fn scrapes_do_not_stall_recorders() {
+        // Regression test for the retired reservoir's snapshot(), which
+        // cloned + sorted 64k samples while holding the latency mutex —
+        // recorders calling record_complete stalled for the full scrape.
+        // With the lock-free histogram a completion's cost must stay flat
+        // (well under 10µs amortized) even while a scraper thread hammers
+        // snapshot() continuously.
+        let m = Arc::new(Metrics::new());
+        // Pre-fill so each scrape does nontrivial rendering work.
+        for i in 0..50_000u64 {
+            m.record_complete(Duration::from_micros(i % 1_000));
         }
-        let samples = m.latencies.lock().unwrap().samples.clone();
-        assert_eq!(samples.len(), RESERVOIR);
-        let mean_idx = samples.iter().map(|&s| s * 1e9).sum::<f64>() / samples.len() as f64;
-        let expect = (n as f64 - 1.0) / 2.0;
+        let stop = Arc::new(AtomicU64::new(0));
+        let scraper = {
+            let m = m.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                let mut scrapes = 0u64;
+                // ordering: Relaxed — plain stop flag for a test loop; the
+                // join below is the synchronization point.
+                while stop.load(Ordering::Relaxed) == 0 {
+                    let s = m.snapshot();
+                    assert!(s.completed >= 50_000);
+                    scrapes += 1;
+                }
+                scrapes
+            })
+        };
+        let n = 50_000u64;
+        let t0 = Instant::now();
+        for _ in 0..n {
+            m.record_complete(Duration::from_micros(100));
+        }
+        let per_record = t0.elapsed() / n as u32;
+        // ordering: Relaxed — plain stop flag (see above).
+        stop.store(1, Ordering::Relaxed);
+        let scrapes = scraper.join().unwrap();
+        assert!(scrapes > 0, "scraper made progress during the record storm");
         assert!(
-            (mean_idx - expect).abs() < expect * 0.05,
-            "retained mean index {mean_idx:.0} far from stream midpoint {expect:.0}"
+            per_record < Duration::from_micros(10),
+            "record_complete stalled behind scrapes: {per_record:?} per record"
         );
-        let quarter = (n / 4) as f64;
-        for qi in 0..4 {
-            let lo = qi as f64 * quarter;
-            let in_quarter = samples
-                .iter()
-                .filter(|&&s| {
-                    let idx = s * 1e9;
-                    idx >= lo && idx < lo + quarter
-                })
-                .count();
-            // Expected 25% each; demand at least 15%.
-            assert!(
-                in_quarter * 100 >= RESERVOIR * 15,
-                "stream quarter {qi} under-represented: {in_quarter}/{RESERVOIR}"
-            );
-        }
+        assert_eq!(m.snapshot().completed, 50_000 + n);
     }
 }

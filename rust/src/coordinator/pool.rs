@@ -129,18 +129,42 @@ impl EnginePool {
                                     .iter()
                                     .map(|&qi| &job.batch[qi].fingerprint)
                                     .collect();
+                                let scan_t0 = std::time::Instant::now();
                                 match backend.search_batch(&fps, k) {
                                     Ok(all_hits) => {
+                                        // One shared scan served the whole
+                                        // k-group: each rider gets a scan
+                                        // span of the same duration (tag 0:
+                                        // an unsharded pool is one "shard").
+                                        let scan_dur = scan_t0.elapsed();
                                         for (&qi, hits) in qis.iter().zip(all_hits) {
                                             let q = &job.batch[qi];
+                                            crate::obs::OBS
+                                                .stage(crate::obs::trace::Stage::Scan)
+                                                .record(scan_dur);
+                                            crate::obs::trace::record_with(
+                                                q.id,
+                                                crate::obs::trace::Stage::Scan,
+                                                scan_t0,
+                                                scan_dur,
+                                                0,
+                                            );
                                             let latency = q.submitted.elapsed();
                                             metrics.record_complete(latency);
+                                            let reply_t0 = std::time::Instant::now();
                                             let _ = job.respond.send(QueryResult {
                                                 id: q.id,
                                                 hits,
                                                 latency,
                                                 backend: backend.name(),
                                             });
+                                            crate::obs::record_stage(
+                                                q.id,
+                                                crate::obs::trace::Stage::Reply,
+                                                reply_t0,
+                                                0,
+                                            );
+                                            crate::obs::trace::note_complete(q.id, latency);
                                             // ordering: Relaxed — advisory
                                             // load gauge; the mpsc channels
                                             // carry the real happens-before.
@@ -323,9 +347,25 @@ impl ShardedEnginePool {
                             for (k, qis) in group_by_k(&job.batch) {
                                 let fps: Vec<&crate::fingerprint::Fingerprint> =
                                     qis.iter().map(|&qi| &job.batch[qi].fingerprint).collect();
+                                let scan_t0 = std::time::Instant::now();
                                 match backend.search_batch(&fps, k) {
                                     Ok(all_hits) => {
+                                        // Per-shard scan span for every
+                                        // rider of this k-group's shared
+                                        // slice scan (tag = shard index).
+                                        let scan_dur = scan_t0.elapsed();
                                         for (&qi, local) in qis.iter().zip(all_hits) {
+                                            let q = &job.batch[qi];
+                                            crate::obs::OBS
+                                                .stage(crate::obs::trace::Stage::Scan)
+                                                .record(scan_dur);
+                                            crate::obs::trace::record_with(
+                                                q.id,
+                                                crate::obs::trace::Stage::Scan,
+                                                scan_t0,
+                                                scan_dur,
+                                                si as u64,
+                                            );
                                             let global: Vec<Scored> = local
                                                 .into_iter()
                                                 .map(|s| {
@@ -397,14 +437,30 @@ impl ShardedEnginePool {
                                     if fail {
                                         continue; // error already recorded
                                     }
+                                    let merge_t0 = std::time::Instant::now();
+                                    let hits = merge.finish();
+                                    crate::obs::record_stage(
+                                        q.id,
+                                        crate::obs::trace::Stage::Merge,
+                                        merge_t0,
+                                        0,
+                                    );
                                     let latency = q.submitted.elapsed();
                                     metrics.record_complete(latency);
+                                    let reply_t0 = std::time::Instant::now();
                                     let _ = job.respond.send(QueryResult {
                                         id: q.id,
-                                        hits: merge.finish(),
+                                        hits,
                                         latency,
                                         backend: backend.name(),
                                     });
+                                    crate::obs::record_stage(
+                                        q.id,
+                                        crate::obs::trace::Stage::Reply,
+                                        reply_t0,
+                                        0,
+                                    );
+                                    crate::obs::trace::note_complete(q.id, latency);
                                 }
                             }
                         }

@@ -64,12 +64,19 @@ impl Router {
     /// a pool worker — the server turns the message into an `ERR`
     /// response. The result arrives on the receiver (closed channel =
     /// busy/rejected).
+    ///
+    /// The query's trace begins here: its wire id is the trace id, and
+    /// validation + routing is the `router` span (docs/observability.md).
     pub fn try_submit(&self, q: Query) -> Result<Receiver<QueryResult>, String> {
+        let t0 = std::time::Instant::now();
+        let qid = q.id;
         q.validate()?;
-        Ok(match self.route_of(&q) {
+        let rx = match self.route_of(&q) {
             QueryMode::Exhaustive => self.exhaustive.submit(q),
             QueryMode::Approximate | QueryMode::Auto => self.approximate.submit(q),
-        })
+        };
+        crate::obs::record_stage(qid, crate::obs::trace::Stage::Router, t0, 0);
+        Ok(rx)
     }
 
     /// Submit a query; the result arrives on the receiver (closed channel

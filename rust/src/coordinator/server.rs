@@ -11,6 +11,9 @@
 //! ADDFP <hex>    → OK <id>
 //! DEL <id>       → OK <id> | ERR unknown or already-deleted id
 //! STATS → OK <metrics summary (incl. ingest gauges when --live)>
+//! METRICS      → Prometheus-style exposition text, terminated by "# EOF"
+//! TRACE <qid>  → span tree for that query id, then "OK trace <n>"
+//! TRACE SLOW   → retained slow-query dumps, then "OK trace <n>"
 //! PING  → PONG
 //! QUIT  → closes the connection
 //! ```
@@ -252,6 +255,37 @@ fn dispatch_line(line: &str, ctx: &ConnCtx, id_base: u64, served: &mut u64) -> O
     match parts.next() {
         Some("PING") => Some("PONG".into()),
         Some("STATS") => Some(format!("OK {}", router.metrics().snapshot().report())),
+        Some("METRICS") => {
+            // The exposition ends with "# EOF\n"; trim the trailing newline
+            // so handle_conn's line terminator doesn't double it.
+            Some(crate::obs::expo::render(router.metrics()).trim_end().to_string())
+        }
+        Some("TRACE") => match parts.next() {
+            Some("SLOW") => {
+                let dumps = crate::obs::trace::slow_log();
+                let mut out = String::new();
+                for d in &dumps {
+                    out.push_str(d);
+                    out.push('\n');
+                }
+                out.push_str(&format!("OK trace {}", dumps.len()));
+                Some(out)
+            }
+            Some(arg) => match arg.parse::<u64>() {
+                Ok(qid) => {
+                    let spans = crate::obs::trace::collect(qid);
+                    let mut out = String::new();
+                    for l in crate::obs::trace::render(&spans) {
+                        out.push_str(&l);
+                        out.push('\n');
+                    }
+                    out.push_str(&format!("OK trace {}", spans.len()));
+                    Some(out)
+                }
+                Err(_) => Some(format!("ERR bad trace id {arg:?}")),
+            },
+            None => Some("ERR usage: TRACE <qid> | TRACE SLOW".into()),
+        },
         Some("QUIT") => None,
         Some("SEARCH") => {
             let k: usize = match parts.next().and_then(|s| s.parse().ok()) {
@@ -297,6 +331,12 @@ fn dispatch_line(line: &str, ctx: &ConnCtx, id_base: u64, served: &mut u64) -> O
             if smiles.is_empty() {
                 return Some("ERR missing smiles".into());
             }
+            // Writes run synchronously on this thread; the op guard
+            // attributes their WAL append/fsync spans to this op id
+            // (`TRACE <qid>`; docs/observability.md).
+            let qid = conn_qid(id_base, *served);
+            *served += 1;
+            let _op = crate::obs::trace::OpGuard::new(qid);
             match ingest.add_smiles(smiles) {
                 Ok(id) => Some(format!("OK {id}")),
                 Err(e) => Some(format!("ERR {e}")),
@@ -311,6 +351,10 @@ fn dispatch_line(line: &str, ctx: &ConnCtx, id_base: u64, served: &mut u64) -> O
                 Some(Err(e)) => return Some(format!("ERR {e}")),
                 None => return Some("ERR missing fingerprint".into()),
             };
+            // Same WAL-span attribution as ADD.
+            let qid = conn_qid(id_base, *served);
+            *served += 1;
+            let _op = crate::obs::trace::OpGuard::new(qid);
             match ingest.add_fingerprint(fp) {
                 Ok(id) => Some(format!("OK {id}")),
                 Err(e) => Some(format!("ERR {e}")),
@@ -324,6 +368,10 @@ fn dispatch_line(line: &str, ctx: &ConnCtx, id_base: u64, served: &mut u64) -> O
                 Some(id) => id,
                 None => return Some("ERR bad id".into()),
             };
+            // Same WAL-span attribution as ADD.
+            let qid = conn_qid(id_base, *served);
+            *served += 1;
+            let _op = crate::obs::trace::OpGuard::new(qid);
             match ingest.delete(id) {
                 Ok(true) => Some(format!("OK {id}")),
                 Ok(false) => Some(format!("ERR unknown or already-deleted id {id}")),
@@ -369,6 +417,61 @@ impl Client {
             })
         } else {
             Err(std::io::Error::new(std::io::ErrorKind::Other, reply))
+        }
+    }
+
+    /// `METRICS` convenience: the full Prometheus-style exposition text,
+    /// including its terminating `# EOF` marker line.
+    pub fn metrics(&mut self) -> std::io::Result<String> {
+        self.writer.write_all(b"METRICS\n")?;
+        let mut text = String::new();
+        loop {
+            let mut line = String::new();
+            if self.reader.read_line(&mut line)? == 0 {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "connection closed mid-exposition",
+                ));
+            }
+            let done = line.trim_end() == "# EOF";
+            text.push_str(&line);
+            if done {
+                return Ok(text);
+            }
+        }
+    }
+
+    /// `TRACE <qid>` convenience: the rendered span-tree lines (without
+    /// the trailing `OK trace <n>` terminator).
+    pub fn trace(&mut self, qid: u64) -> std::io::Result<Vec<String>> {
+        self.writer.write_all(format!("TRACE {qid}\n").as_bytes())?;
+        self.read_trace_lines()
+    }
+
+    /// `TRACE SLOW` convenience: retained slow-query dump lines.
+    pub fn trace_slow(&mut self) -> std::io::Result<Vec<String>> {
+        self.writer.write_all(b"TRACE SLOW\n")?;
+        self.read_trace_lines()
+    }
+
+    fn read_trace_lines(&mut self) -> std::io::Result<Vec<String>> {
+        let mut lines = Vec::new();
+        loop {
+            let mut line = String::new();
+            if self.reader.read_line(&mut line)? == 0 {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "connection closed mid-trace",
+                ));
+            }
+            let line = line.trim_end().to_string();
+            if line.starts_with("OK trace") {
+                return Ok(lines);
+            }
+            if line.starts_with("ERR") {
+                return Err(std::io::Error::new(std::io::ErrorKind::Other, line));
+            }
+            lines.push(line);
         }
     }
 
@@ -752,6 +855,139 @@ mod tests {
         assert!(client.request("STATS").unwrap().starts_with("OK"));
 
         assert_eq!(client.request("QUIT").ok(), Some(String::new()));
+        stop.store(true, Ordering::Relaxed);
+        let _ = handle.join();
+    }
+
+    #[test]
+    fn metrics_verb_serves_a_valid_exposition() {
+        let db = Arc::new(Database::synthesize(500, &ChemblModel::default(), 37));
+        let metrics = Arc::new(Metrics::new());
+        let dbc = db.clone();
+        let ex = Arc::new(EnginePool::new("metrics-ex", 1, 8, metrics.clone(), move |_| {
+            NativeExhaustive::factory(dbc.clone(), 1, 0.0)
+        }));
+        let graph = NativeHnsw::build_graph(&db, 6, 32, 3);
+        let dbc2 = db.clone();
+        let ap = Arc::new(EnginePool::new("metrics-ap", 1, 8, metrics.clone(), move |_| {
+            NativeHnsw::factory(dbc2.clone(), graph.clone(), 32)
+        }));
+        let router = Arc::new(Router::new(
+            ex,
+            ap,
+            BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+            metrics,
+        ));
+        let server = Arc::new(Server::new(router));
+        let stop = server.stop_handle();
+        let (addr, handle) = spawn(server);
+        let mut c = Client::connect(addr).unwrap();
+        for i in 0..7usize {
+            let hits = c.search(&db.fps[i * 3], 3, "exact").unwrap();
+            assert_eq!(hits.len(), 3);
+        }
+        // The scrape must parse as well-formed Prometheus exposition text
+        // (the validator is the same one the CI scrape gate uses)…
+        let text = c.metrics().unwrap();
+        let exp = crate::obs::expo::selftest::parse_and_validate(&text)
+            .unwrap_or_else(|e| panic!("METRICS reply failed validation: {e}\n{text}"));
+        // …and carry this router's query counters plus the global stage
+        // histograms the searches just fed.
+        let completed = exp
+            .value("molfpga_queries_total", &[("outcome", "completed")])
+            .expect("completed counter present");
+        assert!(completed >= 7.0, "completed {completed} < 7");
+        let scans = exp
+            .value("molfpga_stage_latency_seconds_count", &[("stage", "scan")])
+            .expect("scan stage histogram present");
+        assert!(scans >= 1.0, "scan stage never recorded");
+        assert!(text.trim_end().ends_with("# EOF"));
+        assert_eq!(c.request("QUIT").ok(), Some(String::new()));
+        stop.store(true, Ordering::Relaxed);
+        let _ = handle.join();
+    }
+
+    #[test]
+    fn trace_verb_shows_every_stage_of_a_sharded_query() {
+        use super::super::pool::ShardedEnginePool;
+        use crate::shard::{PartitionPolicy, ShardedDatabase};
+        let db = Arc::new(Database::synthesize(1200, &ChemblModel::default(), 41));
+        let sharded = Arc::new(ShardedDatabase::partition(
+            db.clone(),
+            3,
+            PartitionPolicy::PopcountStriped,
+        ));
+        let metrics = Arc::new(Metrics::new());
+        let ex = Arc::new(ShardedEnginePool::new(
+            "trace-ex",
+            &sharded,
+            8,
+            metrics.clone(),
+            |_si, shard_db| NativeExhaustive::factory(shard_db, 1, 0.0),
+        ));
+        let graph = NativeHnsw::build_graph(&db, 6, 32, 3);
+        let dbc2 = db.clone();
+        let ap = Arc::new(EnginePool::new("trace-ap", 1, 8, metrics.clone(), move |_| {
+            NativeHnsw::factory(dbc2.clone(), graph.clone(), 32)
+        }));
+        let router = Arc::new(Router::new(
+            ex,
+            ap,
+            BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+            metrics,
+        ));
+        let server = Arc::new(Server::new(router));
+        let stop = server.stop_handle();
+        let (addr, handle) = spawn(server);
+
+        // Burn the first qid block on a throwaway connection so this
+        // test's query ids sit in the second block — no other test in the
+        // process records spans there (the trace rings are process-global).
+        {
+            let mut burn = Client::connect(addr).unwrap();
+            assert_eq!(burn.request("PING").unwrap(), "PONG");
+            assert_eq!(burn.request("QUIT").ok(), Some(String::new()));
+        }
+        let mut c = Client::connect(addr).unwrap();
+        let hits = c.search(&db.fps[17], 5, "exact").unwrap();
+        assert_eq!(hits[0].0, 17);
+        // First SEARCH on the second connection: qid_base = 1 + QID_BLOCK,
+        // qid = base + 1.
+        let qid = 1 + QID_BLOCK + 1;
+
+        // The reply span is recorded just after the result is sent, so the
+        // full tree can trail the client's receive by a beat — poll for it.
+        let needed = ["stage=router", "stage=batch", "stage=scan", "stage=merge", "stage=reply"];
+        let t0 = std::time::Instant::now();
+        loop {
+            let lines = c.trace(qid).unwrap();
+            let all = lines.join("\n");
+            if needed.iter().all(|s| all.contains(s)) {
+                // One scan span per shard, tagged with its shard index.
+                for si in 0..3 {
+                    assert!(all.contains(&format!("shard={si}")), "missing shard {si}:\n{all}");
+                }
+                // Durations are clamped non-zero at record time.
+                for l in &lines {
+                    assert!(l.contains("dur_us="), "malformed span line: {l}");
+                    assert!(!l.contains("dur_us=0.000"), "zero-duration span: {l}");
+                }
+                break;
+            }
+            assert!(
+                t0.elapsed() < Duration::from_secs(10),
+                "span tree never completed; last reply:\n{all}"
+            );
+            std::thread::sleep(Duration::from_millis(20));
+        }
+
+        // Malformed TRACE arguments are ERRs, not dead connections.
+        assert!(c.request("TRACE nope").unwrap().starts_with("ERR"));
+        assert!(c.request("TRACE").unwrap().starts_with("ERR usage"));
+        // An unknown qid answers an empty tree, not an error.
+        assert!(c.trace(999_999_999).unwrap().is_empty());
+        assert_eq!(c.request("PING").unwrap(), "PONG");
+        assert_eq!(c.request("QUIT").ok(), Some(String::new()));
         stop.store(true, Ordering::Relaxed);
         let _ = handle.join();
     }

@@ -303,6 +303,14 @@ impl<'a> Searcher<'a> {
         let ef = ef.max(k);
         let mut results = self.search_layer_base(q, qc, &[ep], ef, 0, &mut stats);
         results.truncate(k);
+        // Fold this query's work profile into the process-wide exposition
+        // tallies (molfpga_hnsw_*); the caller still gets its own copy.
+        crate::obs::OBS.add_hnsw(
+            stats.hops as u64,
+            stats.pq_ops as u64,
+            stats.distance_evals as u64,
+            stats.upper_steps as u64,
+        );
         (results, stats)
     }
 }

@@ -169,8 +169,16 @@ impl SearchIndex for BitBoundIndex {
     fn search(&self, query: &Fingerprint, k: usize) -> Vec<Scored> {
         let qc = query.count_ones();
         let range = self.candidate_range(qc);
+        // Per-scan tallies (never per row): Eq. 2 pruning outcome + kernel
+        // dispatch volume for the METRICS exposition.
+        crate::obs::OBS
+            .add_bitbound((self.db.len() - range.len()) as u64, range.len() as u64);
         let mut tk = TopKMerge::new(k);
         if let Some(s) = self.sliced() {
+            kernel::note_block_dispatches(
+                kernel::selection().backend,
+                super::blocks_covering(&range) as u64,
+            );
             // The sorted-order slice makes the Eq. 2 window a contiguous
             // block walk: same positions, same ascending order, same
             // integer intersections — bit-identical to the row path.
@@ -180,6 +188,7 @@ impl SearchIndex for BitBoundIndex {
             });
             return tk.finish();
         }
+        kernel::note_row_dispatches(kernel::selection().backend, range.len() as u64);
         for &row in &self.order[range] {
             let fp = &self.db.fps[row as usize];
             let s = query.tanimoto_with_counts(fp, qc, self.db.counts[row as usize]);
@@ -206,6 +215,14 @@ impl SearchIndex for BitBoundIndex {
         let qcs: Vec<u32> = queries.iter().map(|q| q.count_ones()).collect();
         let ranges: Vec<std::ops::Range<usize>> =
             qcs.iter().map(|&qc| self.candidate_range(qc)).collect();
+        // Per-scan tallies, summed over the batch's riders: each query is
+        // pruned/scored against its own Eq. 2 window even though the rows
+        // are fetched once through the union sweep.
+        let scored: usize = ranges.iter().map(|r| r.len()).sum();
+        crate::obs::OBS.add_bitbound(
+            (queries.len() * self.db.len() - scored) as u64,
+            scored as u64,
+        );
         let mut banks: Vec<TopKMerge> = (0..queries.len()).map(|_| TopKMerge::new(k)).collect();
         if let Some(s) = self.sliced() {
             // Block-granular union sweep: each covered block is streamed
@@ -215,6 +232,11 @@ impl SearchIndex for BitBoundIndex {
             // sequential walk exactly.
             use crate::kernel::sliced::BLOCK;
             let backend = kernel::selection().backend;
+            // One block_counts call per (query, covered block).
+            kernel::note_block_dispatches(
+                backend,
+                ranges.iter().map(|r| super::blocks_covering(r) as u64).sum(),
+            );
             let mut bc = [0u32; BLOCK];
             super::union_sweep_blocks(&ranges, |blk, active| {
                 let base = blk * BLOCK;
@@ -237,6 +259,7 @@ impl SearchIndex for BitBoundIndex {
             });
             return banks.into_iter().map(TopKMerge::finish).collect();
         }
+        kernel::note_row_dispatches(kernel::selection().backend, scored as u64);
         super::union_sweep(&ranges, |pos, active| {
             let row = self.order[pos] as usize;
             let fp = &self.db.fps[row];

@@ -206,6 +206,17 @@ pub fn union_sweep_blocks(
     union_sweep(&block_ranges, &mut visit);
 }
 
+/// Number of bit-sliced blocks a sorted-position row range touches — the
+/// per-query kernel dispatch volume of one block-granular sweep
+/// ([`crate::kernel::note_block_dispatches`]).
+pub(crate) fn blocks_covering(r: &std::ops::Range<usize>) -> usize {
+    use crate::kernel::sliced::BLOCK;
+    if r.start >= r.end {
+        return 0;
+    }
+    r.end.div_ceil(BLOCK) - r.start / BLOCK
+}
+
 /// Top-k recall of `got` against ground truth `truth` (paper's accuracy
 /// metric: "Top-K search matching rate between the proposed and brute-force
 /// algorithms").

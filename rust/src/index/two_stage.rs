@@ -129,6 +129,12 @@ impl SearchIndex for BitBoundFoldingIndex {
             return self.bitbound.search(query, k);
         }
 
+        // Per-scan tallies (the m<=1 delegation tallies inside the inner
+        // BitBound index): Eq. 2 pruning outcome + stage-1 kernel volume.
+        crate::obs::OBS.add_bitbound(
+            (self.folded.folded_fps().len() - range.len()) as u64,
+            range.len() as u64,
+        );
         // Stage 1: folded scores over the candidate range only.
         let fq = self.folded.fold_query(query);
         let fqc = fq.count_ones();
@@ -137,12 +143,17 @@ impl SearchIndex for BitBoundFoldingIndex {
         let folded_fps = self.folded.folded_fps();
         let folded_counts = self.folded.folded_counts();
         if let Some(s) = self.sliced() {
+            kernel::note_block_dispatches(
+                kernel::selection().backend,
+                super::blocks_covering(&range) as u64,
+            );
             s.for_each_intersection(kernel::selection().backend, fq.words(), range, |pos, inter| {
                 let row = self.order[pos] as usize;
                 let score = packed::tanimoto_from_counts(inter, fqc, folded_counts[row]);
                 tk1.push(Scored::new(score, row as u64));
             });
         } else {
+            kernel::note_row_dispatches(kernel::selection().backend, range.len() as u64);
             for &row in &self.order[range] {
                 let r = row as usize;
                 tk1.push(Scored::new(
@@ -178,6 +189,14 @@ impl SearchIndex for BitBoundFoldingIndex {
         let ranges: Vec<std::ops::Range<usize>> =
             qcs.iter().map(|&qc| self.bitbound.candidate_range(qc)).collect();
 
+        // Per-batch tallies: each rider logically scans its own Eq. 2
+        // window even though the union sweep streams shared rows once.
+        let scored: usize = ranges.iter().map(std::ops::Range::len).sum();
+        crate::obs::OBS.add_bitbound(
+            (queries.len() * self.folded.folded_fps().len() - scored) as u64,
+            scored as u64,
+        );
+
         // Stage 1 (shared): one folded scan of the union of candidate
         // ranges. Per-query k1 mirrors the sequential path exactly.
         let fqs: Vec<Fingerprint> = queries.iter().map(|q| self.folded.fold_query(q)).collect();
@@ -194,6 +213,12 @@ impl SearchIndex for BitBoundFoldingIndex {
             // query's sequential stage-1 push order exactly.
             use crate::kernel::sliced::BLOCK;
             let backend = kernel::selection().backend;
+            // One tally per `block_counts` call the sweep will make: each
+            // query touches exactly the blocks covering its own range.
+            kernel::note_block_dispatches(
+                backend,
+                ranges.iter().map(|r| super::blocks_covering(r) as u64).sum(),
+            );
             let mut bc = [0u32; BLOCK];
             super::union_sweep_blocks(&ranges, |blk, active| {
                 let base = blk * BLOCK;
@@ -216,6 +241,7 @@ impl SearchIndex for BitBoundFoldingIndex {
                 }
             });
         } else {
+            kernel::note_row_dispatches(kernel::selection().backend, scored as u64);
             super::union_sweep(&ranges, |pos, active| {
                 let row = self.order[pos] as usize;
                 for &qi in active {

@@ -560,6 +560,7 @@ pub fn manifest_exists(dir: &Arc<dyn AtomicDir>) -> bool {
 /// would break the exactness contract). A torn or missing WAL *tail* is
 /// expected crash damage and recovers to the last durable record.
 pub fn recover(dir: &Arc<dyn AtomicDir>) -> io::Result<Recovered> {
+    let replay_t0 = std::time::Instant::now();
     let manifest = Manifest::decode(&dir.read(MANIFEST)?)?;
     let (globals, db) = decode_segment(&dir.read(&manifest.base).map_err(|e| {
         bad(format!("manifest references base {:?}: {e}", manifest.base))
@@ -602,6 +603,9 @@ pub fn recover(dir: &Arc<dyn AtomicDir>) -> io::Result<Recovered> {
             WalRecord::Seal { .. } | WalRecord::Compact { .. } => {}
         }
     }
+    // Manifest + segments + WAL-tail replay time, exposed as the
+    // molfpga_recovery_replay_seconds gauge.
+    crate::obs::OBS.note_recovery_replay(replay_t0.elapsed());
     Ok(Recovered {
         db: Arc::new(db),
         globals,

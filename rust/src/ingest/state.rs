@@ -369,6 +369,7 @@ impl<B: BaseOps> MutableCore<B> {
         applied: &HashSet<u64>,
     ) -> io::Result<()> {
         chk_yield!("install:enter");
+        let install_t0 = std::time::Instant::now();
         let w = self.writer.lock().unwrap();
         let cur = self.snapshot();
         // Sealing only appends and compactions are serialized, so the
@@ -415,6 +416,9 @@ impl<B: BaseOps> MutableCore<B> {
             tombstones: Arc::new(tombs),
             base_dead,
         });
+        // Install duration + the epoch it published, for the METRICS
+        // exposition (molfpga_compaction_*).
+        crate::obs::OBS.note_compaction(install_t0.elapsed(), cur.epoch + 1);
         Ok(())
     }
 

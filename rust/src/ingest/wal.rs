@@ -209,6 +209,14 @@ pub struct Wal {
     unsynced: u32,
 }
 
+/// Feed the `wal_append`/`wal_fsync` stage histogram and, when the calling
+/// thread is serving a traced write op ([`crate::obs::trace::OpGuard`]),
+/// that op's span tree. Background threads (compactor) have op id 0 and
+/// contribute to the histogram only.
+fn note_wal(stage: crate::obs::trace::Stage, t0: std::time::Instant) {
+    crate::obs::record_stage(crate::obs::trace::current_op(), stage, t0, 0);
+}
+
 impl Wal {
     pub fn new(file: Box<dyn WalFile>, policy: FsyncPolicy) -> Self {
         Self { file, policy, offset: 0, unsynced: 0 }
@@ -224,7 +232,9 @@ impl Wal {
     /// written (a clean [`Wal::sync`] later makes it durable).
     pub fn append(&mut self, rec: &WalRecord) -> io::Result<()> {
         let frame = rec.encode();
+        let t0 = std::time::Instant::now();
         self.file.append(&frame)?;
+        note_wal(crate::obs::trace::Stage::WalAppend, t0);
         self.offset += frame.len() as u64;
         self.unsynced += 1;
         match self.policy {
@@ -244,7 +254,9 @@ impl Wal {
     /// compaction, manifest swaps) always pin their control records down.
     pub fn append_durable(&mut self, rec: &WalRecord) -> io::Result<()> {
         let frame = rec.encode();
+        let t0 = std::time::Instant::now();
         self.file.append(&frame)?;
+        note_wal(crate::obs::trace::Stage::WalAppend, t0);
         self.offset += frame.len() as u64;
         self.unsynced += 1;
         self.sync()
@@ -253,7 +265,9 @@ impl Wal {
     /// Flush everything appended so far (clean shutdown; batch boundary).
     pub fn sync(&mut self) -> io::Result<()> {
         if self.unsynced > 0 {
+            let t0 = std::time::Instant::now();
             self.file.sync()?;
+            note_wal(crate::obs::trace::Stage::WalFsync, t0);
             self.unsynced = 0;
         }
         Ok(())

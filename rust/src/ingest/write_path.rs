@@ -9,6 +9,11 @@
 //! the mutation stream across its targets: every target applies the same
 //! adds/deletes in the same order, so their id sequences stay identical
 //! (asserted in debug builds).
+//!
+//! Observability: writes execute synchronously on the caller's thread, so
+//! the WAL append/fsync timings recorded inside a durable target attach to
+//! whatever op id that thread carries ([`crate::obs::trace::OpGuard`], set
+//! by the server's write verbs) — no id plumbing through this layer.
 
 use super::IngestStats;
 use crate::fingerprint::{morgan::MorganGenerator, Fingerprint, FP_BITS};

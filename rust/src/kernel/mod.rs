@@ -77,6 +77,19 @@ impl Backend {
         }
     }
 
+    /// Stable slot index into the per-backend observability tallies
+    /// ([`crate::obs::KERNEL_BACKEND_NAMES`] is index-matched; asserted by
+    /// a test below).
+    pub fn index(self) -> usize {
+        match self {
+            Backend::Scalar => 0,
+            Backend::Popcnt => 1,
+            Backend::Avx2 => 2,
+            Backend::Avx512 => 3,
+            Backend::Neon => 4,
+        }
+    }
+
     /// Parse a backend name (the specific-backend forms of `MOLFPGA_KERNEL`).
     pub fn parse(s: &str) -> Option<Backend> {
         match s {
@@ -296,6 +309,21 @@ pub(crate) fn block_dispatch(
     }
 }
 
+/// Tally `rows` scored through the row kernel on `backend` into the
+/// process metrics (`molfpga_kernel_dispatch_rows_total`). Call once per
+/// scan with the scan's row count — never per row; the counters are shared
+/// across workers and per-row RMWs would thrash the cache line.
+pub fn note_row_dispatches(backend: Backend, rows: u64) {
+    crate::obs::OBS.add_kernel_rows(backend.index(), rows);
+}
+
+/// Tally `blocks` scored through the block kernel on `backend`
+/// (`molfpga_kernel_dispatch_blocks_total`). Same per-scan discipline as
+/// [`note_row_dispatches`].
+pub fn note_block_dispatches(backend: Backend, blocks: u64) {
+    crate::obs::OBS.add_kernel_blocks(backend.index(), blocks);
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -328,6 +356,33 @@ mod tests {
             assert_eq!(Backend::parse(b.name()), Some(b));
         }
         assert_eq!(Backend::parse("warp9"), None);
+    }
+
+    #[test]
+    fn backend_index_matches_the_exposition_label_table() {
+        for &b in
+            &[Backend::Scalar, Backend::Popcnt, Backend::Avx2, Backend::Avx512, Backend::Neon]
+        {
+            assert_eq!(crate::obs::KERNEL_BACKEND_NAMES[b.index()], b.name());
+        }
+        assert_eq!(crate::obs::N_KERNEL_BACKENDS, 5);
+    }
+
+    #[test]
+    fn dispatch_tallies_accumulate_by_backend_slot() {
+        let before = crate::obs::OBS.snapshot_kernel_rows(Backend::Scalar.index());
+        note_row_dispatches(Backend::Scalar, 123);
+        note_row_dispatches(Backend::Scalar, 7);
+        assert_eq!(
+            crate::obs::OBS.snapshot_kernel_rows(Backend::Scalar.index()),
+            before + 130
+        );
+        let blocks_before = crate::obs::OBS.snapshot_kernel_blocks(Backend::Scalar.index());
+        note_block_dispatches(Backend::Scalar, 9);
+        assert_eq!(
+            crate::obs::OBS.snapshot_kernel_blocks(Backend::Scalar.index()),
+            blocks_before + 9
+        );
     }
 
     #[test]

@@ -35,6 +35,7 @@
 //! | [`simulator`] | cycle-level query-engine pipeline simulator |
 //! | [`runtime`] | PJRT client: load `artifacts/*.hlo.txt`, compile, execute |
 //! | [`coordinator`] | serving layer: router, scan-sharing batcher (`serve --max-batch`, docs/batching.md), engine pool, metrics |
+//! | [`obs`] | observability: per-stage lock-free latency histograms, per-query span traces + slow-query log, Prometheus exposition (`METRICS`/`TRACE` verbs, docs/observability.md) |
 //! | [`baselines`] | CPU brute-force / BitBound / HNSW and GPU model comparators |
 //! | [`exp`] | shared experiment harnesses behind the figure/table drivers |
 //! | [`lint`] | repo-specific static analysis (`molfpga-lint` binary): unsafe placement, ad-hoc similarity, atomic-ordering audit, panic-free serving, deterministic simulation, plus whole-program lock-order / WAL-before-apply / io-confinement analyses (docs/static_analysis.md) |
@@ -67,6 +68,7 @@ pub mod index;
 pub mod ingest;
 pub mod kernel;
 pub mod lint;
+pub mod obs;
 pub mod runtime;
 pub mod shard;
 pub mod simulator;

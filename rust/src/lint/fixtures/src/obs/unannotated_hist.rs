@@ -1,0 +1,17 @@
+//! Lint fixture (never compiled): an obs-style histogram cell updated
+//! with no `// ordering:` pairing note. With the audit scope extended to
+//! `obs/`, `atomic-ordering-audit` must flag both accesses.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+pub struct MiniHist {
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+}
+
+impl MiniHist {
+    pub fn record_ns(&self, ns: u64) {
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+}

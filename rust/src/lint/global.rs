@@ -61,6 +61,7 @@ pub fn is_global_rule(name: &str) -> bool {
 fn lock_scope(rel: &str) -> bool {
     rel.starts_with("ingest/")
         || rel.starts_with("coordinator/")
+        || rel.starts_with("obs/")
         || rel == "hnsw/sharded.rs"
         || rel == "runtime/client.rs"
 }

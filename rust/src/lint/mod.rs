@@ -726,6 +726,7 @@ mod tests {
             ("kernel/missing_safety.rs", rules::UNSAFE_OUTSIDE_KERNEL),
             ("index/adhoc_tanimoto.rs", rules::ADHOC_TANIMOTO),
             ("ingest/unannotated_atomic.rs", rules::ATOMIC_ORDERING_AUDIT),
+            ("obs/unannotated_hist.rs", rules::ATOMIC_ORDERING_AUDIT),
             ("coordinator/server.rs", rules::PANIC_FREE_SERVING),
             ("simulator/clock.rs", rules::NONDETERMINISTIC_SIM),
             ("ingest/bad_pragma.rs", PRAGMA_RULE),

@@ -179,6 +179,7 @@ fn check_atomic_ordering_audit(file: &SourceFile, out: &mut Vec<Diagnostic>) {
     ];
     let scoped = file.rel.starts_with("ingest/")
         || file.rel.starts_with("coordinator/")
+        || file.rel.starts_with("obs/")
         || file.rel == "hnsw/parallel.rs";
     if !scoped {
         return;

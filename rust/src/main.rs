@@ -12,7 +12,7 @@
 //!                   [--max-batch 16] [--max-wait-us 2000] \
 //!                   [--live] [--seal-rows 4096] [--no-compactor] \
 //!                   [--data-dir data/live] [--fsync every|batch[:N]|never] \
-//!                   [--reply-timeout-ms 60000]
+//!                   [--reply-timeout-ms 60000] [--slow-query-ms 250]
 //! molfpga bench-qps --db data/db.bin --queries 200 [--pjrt] [--shards 4] \
 //!                   [--max-batch 16]
 //! ```
@@ -49,6 +49,11 @@
 //! the first time, to create the initial base). `--fsync` picks the WAL
 //! durability/throughput trade (`every` = fsync per write, the default;
 //! `batch[:N]` = fsync every N writes; `never` = leave it to the OS).
+//!
+//! `--slow-query-ms <t>` arms the slow-query log (docs/observability.md):
+//! any query whose submit→reply latency exceeds `t` dumps its span tree to
+//! stderr and into the capped ring served by the `TRACE SLOW` verb. The
+//! `METRICS` verb exposes Prometheus-style text either way.
 
 use anyhow::{bail, Context, Result};
 use molfpga::coordinator::backend::{
@@ -495,6 +500,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let db = load_db(args)?;
     let (router, metrics, ingest) = build_router(args, db)?;
     let port = args.get_or("port", 7878u16)?;
+    if let Some(ms) = args.get("slow-query-ms") {
+        let ms: u64 = ms.parse().with_context(|| format!("--slow-query-ms {ms:?}"))?;
+        molfpga::obs::trace::set_slow_query_threshold(Some(
+            std::time::Duration::from_millis(ms),
+        ));
+        eprintln!("[molfpga] slow-query log armed at {ms}ms (TRACE SLOW to read)");
+    }
     let mut server = Server::new(router).with_reply_timeout(std::time::Duration::from_millis(
         args.get_or("reply-timeout-ms", 60_000u64)?,
     ));

@@ -1,0 +1,612 @@
+//! Prometheus text exposition for the `METRICS` protocol verb.
+//!
+//! [`render`] serializes the process-wide [`OBS`](super::OBS) registry and
+//! the server's `coordinator::Metrics` (query counters, end-to-end latency
+//! histogram, per-ingest gauges) as Prometheus text format, version
+//! 0.0.4: `# HELP`/`# TYPE` headers, `_bucket{le=...}`/`_sum`/`_count`
+//! histogram triples with cumulative monotone buckets, and a final
+//! `# EOF` line the wire protocol uses as the reply terminator.
+//!
+//! Self-consistency contract: every histogram's `_count` is derived from
+//! the same per-bucket snapshot its `_bucket` lines are rendered from, so
+//! `+Inf` always equals `_count` even while writers are recording.
+//!
+//! [`selftest`] is a hand-rolled parser/validator for the format —
+//! deliberately independent of the renderer — shared by the golden unit
+//! test, the `tests/obs_scrape.rs` integration test, and the release-smoke
+//! CI gate.
+
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::coordinator::metrics::Metrics;
+
+use super::hist::{bucket_bounds_ns, HistSnapshot, N_BOUNDS};
+use super::trace::Stage;
+use super::{KERNEL_BACKEND_NAMES, OBS};
+
+/// Render the full exposition (ends with `# EOF\n`).
+pub fn render(metrics: &Metrics) -> String {
+    let mut out = String::with_capacity(16 * 1024);
+
+    // --- query counters + end-to-end latency (per-server Metrics) ---
+    let q = metrics.query_counts();
+    header(&mut out, "molfpga_queries_total", "Queries by outcome.", "counter");
+    for (outcome, v) in [
+        ("submitted", q.submitted),
+        ("completed", q.completed),
+        ("rejected", q.rejected),
+        ("errors", q.errors),
+    ] {
+        sample(&mut out, "molfpga_queries_total", &[("outcome", outcome)], &fmt_u64(v));
+    }
+    header(
+        &mut out,
+        "molfpga_query_latency_seconds",
+        "End-to-end query latency (submit to completion).",
+        "histogram",
+    );
+    hist_series(&mut out, "molfpga_query_latency_seconds", &[], &metrics.latency_hist().snapshot());
+
+    // --- per-stage latency histograms (global OBS) ---
+    header(
+        &mut out,
+        "molfpga_stage_latency_seconds",
+        "Per-stage pipeline latency (docs/observability.md).",
+        "histogram",
+    );
+    for st in Stage::ALL {
+        hist_series(
+            &mut out,
+            "molfpga_stage_latency_seconds",
+            &[("stage", st.name())],
+            &OBS.stage(st).snapshot(),
+        );
+    }
+
+    // --- ingest durability: compaction + recovery ---
+    header(
+        &mut out,
+        "molfpga_compaction_seconds",
+        "Compaction install (durable + snapshot publish) duration.",
+        "histogram",
+    );
+    hist_series(&mut out, "molfpga_compaction_seconds", &[], &OBS.compaction_hist().snapshot());
+    header(
+        &mut out,
+        "molfpga_compaction_installed_epoch",
+        "Epoch installed by the most recent compaction.",
+        "gauge",
+    );
+    sample(
+        &mut out,
+        "molfpga_compaction_installed_epoch",
+        &[],
+        &fmt_u64(load(&OBS.compaction_installed_epoch)),
+    );
+    header(
+        &mut out,
+        "molfpga_recovery_replay_seconds",
+        "WAL/segment replay time of the last recovery.",
+        "gauge",
+    );
+    sample(
+        &mut out,
+        "molfpga_recovery_replay_seconds",
+        &[],
+        &fmt_f64(load(&OBS.recovery_replay_ns) as f64 / 1e9),
+    );
+
+    // --- kernel dispatch tallies ---
+    header(
+        &mut out,
+        "molfpga_kernel_dispatch_rows_total",
+        "Rows fed through the row kernel, by backend.",
+        "counter",
+    );
+    for (i, name) in KERNEL_BACKEND_NAMES.iter().enumerate() {
+        sample(
+            &mut out,
+            "molfpga_kernel_dispatch_rows_total",
+            &[("backend", name)],
+            &fmt_u64(load(&OBS.kernel_rows[i])),
+        );
+    }
+    header(
+        &mut out,
+        "molfpga_kernel_dispatch_blocks_total",
+        "Bit-sliced blocks fed through the block kernel, by backend.",
+        "counter",
+    );
+    for (i, name) in KERNEL_BACKEND_NAMES.iter().enumerate() {
+        sample(
+            &mut out,
+            "molfpga_kernel_dispatch_blocks_total",
+            &[("backend", name)],
+            &fmt_u64(load(&OBS.kernel_blocks[i])),
+        );
+    }
+
+    // --- BitBound pruning ---
+    header(
+        &mut out,
+        "molfpga_bitbound_rows_total",
+        "BitBound scan rows, pruned by the popcount bound vs Tanimoto-scored.",
+        "counter",
+    );
+    for (outcome, cell) in
+        [("pruned", &OBS.bitbound_rows_pruned), ("scored", &OBS.bitbound_rows_scored)]
+    {
+        sample(&mut out, "molfpga_bitbound_rows_total", &[("outcome", outcome)], &fmt_u64(load(cell)));
+    }
+
+    // --- HNSW traversal work ---
+    for (name, help, cell) in [
+        ("molfpga_hnsw_hops_total", "HNSW base-layer hops.", &OBS.hnsw_hops),
+        ("molfpga_hnsw_pq_ops_total", "HNSW priority-queue operations.", &OBS.hnsw_pq_ops),
+        (
+            "molfpga_hnsw_distance_evals_total",
+            "HNSW distance evaluations.",
+            &OBS.hnsw_distance_evals,
+        ),
+        ("molfpga_hnsw_upper_steps_total", "HNSW upper-layer greedy steps.", &OBS.hnsw_upper_steps),
+    ] {
+        header(&mut out, name, help, "counter");
+        sample(&mut out, name, &[], &fmt_u64(load(cell)));
+    }
+
+    // --- per-ingest gauges/counters (per-server Metrics) ---
+    let ingests = metrics.ingest_list();
+    if !ingests.is_empty() {
+        let gauges: [(&str, &str, fn(&crate::ingest::IngestStats) -> &AtomicU64); 4] = [
+            ("molfpga_ingest_memtable_rows", "Rows in the unsealed memtable.", |s| {
+                &s.memtable_rows
+            }),
+            ("molfpga_ingest_sealed_segments", "Sealed segments awaiting compaction.", |s| {
+                &s.sealed_segments
+            }),
+            ("molfpga_ingest_sealed_rows", "Rows across sealed segments.", |s| &s.sealed_rows),
+            ("molfpga_ingest_tombstones", "Live tombstones.", |s| &s.tombstones),
+        ];
+        for (name, help, get) in gauges {
+            header(&mut out, name, help, "gauge");
+            for (idx, stats) in &ingests {
+                sample(&mut out, name, &[("index", *idx)], &fmt_u64(load(get(stats.as_ref()))));
+            }
+        }
+        let counters: [(&str, &str, fn(&crate::ingest::IngestStats) -> &AtomicU64); 4] = [
+            ("molfpga_ingest_adds_total", "Accepted row insertions.", |s| &s.adds),
+            ("molfpga_ingest_deletes_total", "Accepted deletes.", |s| &s.deletes),
+            ("molfpga_ingest_seals_total", "Memtable seals.", |s| &s.seals),
+            ("molfpga_ingest_compactions_total", "Completed compactions.", |s| &s.compactions),
+        ];
+        for (name, help, get) in counters {
+            header(&mut out, name, help, "counter");
+            for (idx, stats) in &ingests {
+                sample(&mut out, name, &[("index", *idx)], &fmt_u64(load(get(stats.as_ref()))));
+            }
+        }
+    }
+
+    out.push_str("# EOF\n");
+    out
+}
+
+/// Point-in-time read of one statistics cell.
+fn load(cell: &AtomicU64) -> u64 {
+    // ordering: Relaxed — statistics read for a point-in-time report; no
+    // data is read through these cells.
+    cell.load(Ordering::Relaxed)
+}
+
+fn header(out: &mut String, name: &str, help: &str, ty: &str) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} {ty}");
+}
+
+fn sample(out: &mut String, name: &str, labels: &[(&str, &str)], value: &str) {
+    out.push_str(name);
+    push_labels(out, labels, None);
+    let _ = writeln!(out, " {value}");
+}
+
+fn push_labels(out: &mut String, labels: &[(&str, &str)], le: Option<&str>) {
+    if labels.is_empty() && le.is_none() {
+        return;
+    }
+    out.push('{');
+    let mut first = true;
+    for (k, v) in labels {
+        if !first {
+            out.push(',');
+        }
+        let _ = write!(out, "{k}=\"{v}\"");
+        first = false;
+    }
+    if let Some(le) = le {
+        if !first {
+            out.push(',');
+        }
+        let _ = write!(out, "le=\"{le}\"");
+    }
+    out.push('}');
+}
+
+/// One histogram series: cumulative `_bucket` lines (monotone by
+/// construction), `_sum`, and `_count` == the `+Inf` bucket.
+fn hist_series(out: &mut String, name: &str, labels: &[(&str, &str)], s: &HistSnapshot) {
+    let bounds = bucket_bounds_ns();
+    let mut cum = 0u64;
+    for (i, &c) in s.counts.iter().enumerate() {
+        cum += c;
+        out.push_str(name);
+        out.push_str("_bucket");
+        let le = if i < N_BOUNDS { fmt_f64(bounds[i] as f64 / 1e9) } else { "+Inf".to_string() };
+        push_labels(out, labels, Some(&le));
+        let _ = writeln!(out, " {cum}");
+    }
+    out.push_str(name);
+    out.push_str("_sum");
+    push_labels(out, labels, None);
+    let _ = writeln!(out, " {}", fmt_f64(s.sum_ns as f64 / 1e9));
+    out.push_str(name);
+    out.push_str("_count");
+    push_labels(out, labels, None);
+    let _ = writeln!(out, " {cum}");
+}
+
+fn fmt_u64(v: u64) -> String {
+    v.to_string()
+}
+
+fn fmt_f64(v: f64) -> String {
+    // Shortest round-trip repr; the validator re-parses with f64::parse.
+    format!("{v}")
+}
+
+pub mod selftest {
+    //! Hand-rolled Prometheus text-format parser + structural validator.
+    //!
+    //! Independent of the renderer on purpose: it re-derives the rules the
+    //! exposition must satisfy (headers before samples, histogram triple
+    //! naming, cumulative monotone buckets, `+Inf` == `_count`, trailing
+    //! `# EOF`) so renderer bugs cannot hide behind shared code. Used by
+    //! the golden unit test, `tests/obs_scrape.rs`, and the release-smoke
+    //! CI scrape gate — not on any serving path.
+
+    use std::collections::HashMap;
+
+    /// One parsed sample line.
+    #[derive(Debug, Clone, PartialEq)]
+    pub struct Sample {
+        pub name: String,
+        pub labels: Vec<(String, String)>,
+        pub value: f64,
+    }
+
+    /// A parsed + validated exposition.
+    #[derive(Debug, Default)]
+    pub struct Exposition {
+        pub samples: Vec<Sample>,
+        /// Declared metric families: name → type ("counter"/"gauge"/"histogram").
+        pub types: HashMap<String, String>,
+    }
+
+    impl Exposition {
+        /// First sample whose name matches and whose labels contain every
+        /// `(k, v)` pair in `labels`.
+        pub fn value(&self, name: &str, labels: &[(&str, &str)]) -> Option<f64> {
+            self.samples
+                .iter()
+                .find(|s| {
+                    s.name == name
+                        && labels.iter().all(|(k, v)| {
+                            s.labels.iter().any(|(sk, sv)| sk == k && sv == v)
+                        })
+                })
+                .map(|s| s.value)
+        }
+    }
+
+    /// Parse `text` and validate the structural rules. Returns the parsed
+    /// exposition or a one-line description of the first violation.
+    pub fn parse_and_validate(text: &str) -> Result<Exposition, String> {
+        let mut expo = Exposition::default();
+        let mut saw_eof = false;
+        for (ln, line) in text.lines().enumerate() {
+            let ln = ln + 1;
+            if saw_eof {
+                return Err(format!("line {ln}: content after # EOF"));
+            }
+            if line.trim().is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix("# ") {
+                if rest == "EOF" {
+                    saw_eof = true;
+                } else if let Some(spec) = rest.strip_prefix("TYPE ") {
+                    let mut it = spec.split_whitespace();
+                    let name = it.next().ok_or(format!("line {ln}: TYPE without name"))?;
+                    let ty = it.next().ok_or(format!("line {ln}: TYPE without type"))?;
+                    if !matches!(ty, "counter" | "gauge" | "histogram") {
+                        return Err(format!("line {ln}: unknown type {ty}"));
+                    }
+                    if expo.types.insert(name.to_string(), ty.to_string()).is_some() {
+                        return Err(format!("line {ln}: duplicate TYPE for {name}"));
+                    }
+                } else if !rest.starts_with("HELP ") {
+                    return Err(format!("line {ln}: unknown comment {line:?}"));
+                }
+                continue;
+            }
+            let sample = parse_sample(line).map_err(|e| format!("line {ln}: {e}"))?;
+            let family = family_of(&sample.name, &expo.types)
+                .ok_or(format!("line {ln}: sample {} has no TYPE declaration", sample.name))?;
+            if expo.types[&family] == "histogram"
+                && !["_bucket", "_sum", "_count"]
+                    .iter()
+                    .any(|sfx| sample.name == format!("{family}{sfx}"))
+            {
+                return Err(format!("line {ln}: bad histogram sample name {}", sample.name));
+            }
+            expo.samples.push(sample);
+        }
+        if !saw_eof {
+            return Err("missing trailing # EOF".into());
+        }
+        validate_histograms(&expo)?;
+        Ok(expo)
+    }
+
+    /// Resolve a sample name to its declared family (exact, or a
+    /// histogram base name when the sample carries a histogram suffix).
+    fn family_of(name: &str, types: &HashMap<String, String>) -> Option<String> {
+        if types.contains_key(name) {
+            return Some(name.to_string());
+        }
+        for sfx in ["_bucket", "_sum", "_count"] {
+            if let Some(base) = name.strip_suffix(sfx) {
+                if types.get(base).map(String::as_str) == Some("histogram") {
+                    return Some(base.to_string());
+                }
+            }
+        }
+        None
+    }
+
+    fn parse_sample(line: &str) -> Result<Sample, String> {
+        let (name_labels, value) =
+            line.rsplit_once(' ').ok_or_else(|| format!("no value in {line:?}"))?;
+        let value: f64 = if value == "+Inf" {
+            f64::INFINITY
+        } else {
+            value.parse().map_err(|_| format!("bad value {value:?}"))?
+        };
+        let (name, labels) = match name_labels.split_once('{') {
+            None => (name_labels.to_string(), Vec::new()),
+            Some((name, rest)) => {
+                let body =
+                    rest.strip_suffix('}').ok_or_else(|| format!("unclosed labels in {line:?}"))?;
+                let mut labels = Vec::new();
+                for pair in body.split(',').filter(|p| !p.is_empty()) {
+                    let (k, v) =
+                        pair.split_once('=').ok_or_else(|| format!("bad label {pair:?}"))?;
+                    let v = v
+                        .strip_prefix('"')
+                        .and_then(|v| v.strip_suffix('"'))
+                        .ok_or_else(|| format!("unquoted label value {pair:?}"))?;
+                    labels.push((k.to_string(), v.to_string()));
+                }
+                (name.to_string(), labels)
+            }
+        };
+        if name.is_empty()
+            || !name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+        {
+            return Err(format!("bad metric name {name:?}"));
+        }
+        Ok(Sample { name, labels, value })
+    }
+
+    /// Histogram rules: per series (base name + non-`le` labels), buckets
+    /// are cumulative monotone non-decreasing in order of appearance, a
+    /// `+Inf` bucket exists, and it equals the series' `_count`.
+    fn validate_histograms(expo: &Exposition) -> Result<(), String> {
+        type SeriesKey = (String, Vec<(String, String)>);
+        let mut last_bucket: HashMap<SeriesKey, f64> = HashMap::new();
+        let mut inf_bucket: HashMap<SeriesKey, f64> = HashMap::new();
+        let mut counts: HashMap<SeriesKey, f64> = HashMap::new();
+        for s in &expo.samples {
+            if let Some(base) = s.name.strip_suffix("_bucket") {
+                if expo.types.get(base).map(String::as_str) != Some("histogram") {
+                    continue;
+                }
+                let mut le = None;
+                let mut rest: Vec<(String, String)> = Vec::new();
+                for (k, v) in &s.labels {
+                    if k == "le" {
+                        le = Some(v.clone());
+                    } else {
+                        rest.push((k.clone(), v.clone()));
+                    }
+                }
+                let le = le.ok_or(format!("{}: bucket without le label", s.name))?;
+                let key = (base.to_string(), rest);
+                if let Some(prev) = last_bucket.get(&key) {
+                    if s.value < *prev {
+                        return Err(format!(
+                            "{} le={le}: bucket {} < previous {prev} (not cumulative)",
+                            s.name, s.value
+                        ));
+                    }
+                }
+                last_bucket.insert(key.clone(), s.value);
+                if le == "+Inf" {
+                    inf_bucket.insert(key, s.value);
+                }
+            } else if let Some(base) = s.name.strip_suffix("_count") {
+                if expo.types.get(base).map(String::as_str) == Some("histogram") {
+                    counts.insert((base.to_string(), s.labels.clone()), s.value);
+                }
+            }
+        }
+        for (key, count) in &counts {
+            let inf = inf_bucket
+                .get(key)
+                .ok_or(format!("{}: histogram series without +Inf bucket", key.0))?;
+            if (inf - count).abs() > f64::EPSILON {
+                return Err(format!("{}: +Inf bucket {inf} != _count {count}", key.0));
+            }
+        }
+        for key in inf_bucket.keys() {
+            if !counts.contains_key(key) {
+                return Err(format!("{}: histogram series without _count", key.0));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::selftest::parse_and_validate;
+    use super::*;
+    use std::sync::atomic::AtomicU64 as TestCounter;
+    use std::sync::Arc;
+    use std::time::{Duration, Instant};
+
+    fn seeded_metrics() -> Metrics {
+        let m = Metrics::new();
+        for i in 1..=20u64 {
+            m.record_submit();
+            m.record_complete(Duration::from_millis(i));
+        }
+        m.record_reject();
+        m
+    }
+
+    #[test]
+    fn golden_exposition_parses_and_validates() {
+        let m = seeded_metrics();
+        super::super::record_stage(
+            0xffff_2000_0000_0001,
+            Stage::Scan,
+            Instant::now() - Duration::from_millis(2),
+            0,
+        );
+        OBS.note_compaction(Duration::from_millis(12), 3);
+        OBS.add_bitbound(100, 28);
+        let text = render(&m);
+        let expo = parse_and_validate(&text).expect("exposition must validate");
+        assert_eq!(
+            expo.value("molfpga_queries_total", &[("outcome", "completed")]),
+            Some(20.0)
+        );
+        assert_eq!(expo.value("molfpga_query_latency_seconds_count", &[]), Some(20.0));
+        assert!(
+            expo.value("molfpga_stage_latency_seconds_count", &[("stage", "scan")])
+                .unwrap_or(0.0)
+                >= 1.0
+        );
+        assert_eq!(expo.value("molfpga_compaction_installed_epoch", &[]), Some(3.0));
+        assert!(
+            expo.value("molfpga_bitbound_rows_total", &[("outcome", "pruned")]).unwrap_or(0.0)
+                >= 100.0
+        );
+        // Every declared family produced at least one sample.
+        for name in expo.types.keys() {
+            assert!(
+                expo.samples.iter().any(|s| s.name.starts_with(name.as_str())),
+                "family {name} has no samples"
+            );
+        }
+        assert!(text.ends_with("# EOF\n"));
+    }
+
+    #[test]
+    fn ingest_gauges_ride_the_exposition() {
+        let m = Metrics::new();
+        let stats = Arc::new(crate::ingest::IngestStats::default());
+        stats.adds.store(7, std::sync::atomic::Ordering::Relaxed);
+        stats.memtable_rows.store(5, std::sync::atomic::Ordering::Relaxed);
+        m.register_ingest("live", stats);
+        let expo = parse_and_validate(&render(&m)).expect("validates");
+        assert_eq!(expo.value("molfpga_ingest_adds_total", &[("index", "live")]), Some(7.0));
+        assert_eq!(expo.value("molfpga_ingest_memtable_rows", &[("index", "live")]), Some(5.0));
+    }
+
+    #[test]
+    fn concurrent_scrape_never_sees_torn_counts() {
+        // `_count` must always be ≥ the number of increments a recorder
+        // has finished before the scrape began (no torn/backsliding reads).
+        let m = Arc::new(seeded_metrics());
+        let observed = Arc::new(TestCounter::new(0));
+        let recorder = {
+            let observed = observed.clone();
+            std::thread::spawn(move || {
+                for _ in 0..2_000u32 {
+                    OBS.stage(Stage::Reply).record_ns(1_500);
+                    // ordering: Release — publishes "this record finished"
+                    // to the scraper's Acquire floor-read below.
+                    observed.fetch_add(1, std::sync::atomic::Ordering::Release);
+                }
+            })
+        };
+        let base = {
+            // A floor from before the recorder started cannot exceed any
+            // concurrent scrape.
+            let expo = parse_and_validate(&render(&m)).expect("validates");
+            expo.value("molfpga_stage_latency_seconds_count", &[("stage", "reply")]).unwrap()
+        };
+        for _ in 0..20 {
+            // ordering: Acquire — pairs with the recorder's Release; the
+            // records behind `floor` are visible to this scrape.
+            let floor = observed.load(std::sync::atomic::Ordering::Acquire) as f64;
+            let expo = parse_and_validate(&render(&m)).expect("validates under concurrency");
+            let count = expo
+                .value("molfpga_stage_latency_seconds_count", &[("stage", "reply")])
+                .unwrap();
+            assert!(
+                count >= base + floor - f64::EPSILON,
+                "count {count} < base {base} + floor {floor}"
+            );
+        }
+        recorder.join().unwrap();
+        let expo = parse_and_validate(&render(&m)).expect("validates");
+        let count =
+            expo.value("molfpga_stage_latency_seconds_count", &[("stage", "reply")]).unwrap();
+        assert!(count >= base + 2_000.0);
+    }
+
+    #[test]
+    fn validator_rejects_malformed_expositions() {
+        // Missing EOF.
+        assert!(parse_and_validate("# TYPE x counter\nx 1\n").is_err());
+        // Sample without a TYPE declaration.
+        assert!(parse_and_validate("x 1\n# EOF\n").is_err());
+        // Non-cumulative buckets.
+        let bad = "# TYPE h histogram\n\
+                   h_bucket{le=\"0.1\"} 5\nh_bucket{le=\"+Inf\"} 3\nh_sum 1\nh_count 3\n# EOF\n";
+        assert!(parse_and_validate(bad).unwrap_err().contains("not cumulative"));
+        // +Inf != _count.
+        let bad = "# TYPE h histogram\n\
+                   h_bucket{le=\"+Inf\"} 3\nh_sum 1\nh_count 4\n# EOF\n";
+        assert!(parse_and_validate(bad).unwrap_err().contains("!= _count"));
+        // Histogram series missing its +Inf bucket.
+        let bad = "# TYPE h histogram\nh_bucket{le=\"0.1\"} 3\nh_sum 1\nh_count 3\n# EOF\n";
+        assert!(parse_and_validate(bad).unwrap_err().contains("+Inf"));
+    }
+
+    #[test]
+    fn validator_accepts_the_reference_shapes() {
+        let good = "# HELP c A counter.\n# TYPE c counter\nc{a=\"b\"} 1\n\
+                    # TYPE g gauge\ng 0.5\n\
+                    # TYPE h histogram\n\
+                    h_bucket{le=\"0.1\"} 2\nh_bucket{le=\"+Inf\"} 3\nh_sum 0.25\nh_count 3\n\
+                    # EOF\n";
+        let expo = parse_and_validate(good).expect("reference exposition validates");
+        assert_eq!(expo.value("c", &[("a", "b")]), Some(1.0));
+        assert_eq!(expo.value("g", &[]), Some(0.5));
+        assert_eq!(expo.value("h_count", &[]), Some(3.0));
+    }
+}

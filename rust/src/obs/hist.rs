@@ -1,0 +1,329 @@
+//! Lock-free log-bucketed latency histograms (HDR-style).
+//!
+//! One histogram per pipeline stage replaces the coordinator's old
+//! mutex-guarded latency reservoir: recording is a handful of `Relaxed`
+//! atomic RMWs (no lock, no allocation), so scrapes (`METRICS`, `STATS`)
+//! can never stall a completion on the serving path.
+//!
+//! Bucket scheme (docs/observability.md): geometric bounds at **2 buckets
+//! per octave** spanning 1 µs – 60 s — `bound[i] = 1 µs · 2^(i/2)` — plus
+//! one overflow bucket. Values below 1 µs land in the first bucket.
+//! Quantiles linearly interpolate inside the landing bucket and clamp to
+//! the observed min/max, which keeps `STATS` percentiles within a few
+//! percent of the retired reservoir's on realistic latency streams while
+//! the mean stays exact (`sum / count` is tracked directly).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
+use std::time::Duration;
+
+/// Number of finite bucket bounds: `1 µs · 2^(i/2)` for `i = 0..=52`
+/// (the last bound, 2^26 µs ≈ 67 s, covers the 60 s design ceiling).
+pub const N_BOUNDS: usize = 53;
+
+/// Buckets = finite bounds + one overflow bucket (`+Inf`).
+pub const N_BUCKETS: usize = N_BOUNDS + 1;
+
+/// Upper bucket bounds in nanoseconds, ascending.
+pub fn bucket_bounds_ns() -> &'static [u64; N_BOUNDS] {
+    static BOUNDS: OnceLock<[u64; N_BOUNDS]> = OnceLock::new();
+    BOUNDS.get_or_init(|| {
+        let mut b = [0u64; N_BOUNDS];
+        for (i, slot) in b.iter_mut().enumerate() {
+            *slot = (1000.0 * (i as f64 / 2.0).exp2()).round() as u64;
+        }
+        b
+    })
+}
+
+/// A fixed-size atomic histogram. `const`-constructible so stage
+/// histograms can live in `static` registries and plain struct fields
+/// alike; zero-valued until the first record.
+#[derive(Debug)]
+pub struct Hist {
+    /// Per-bucket (non-cumulative) counts; `counts[N_BOUNDS]` is overflow.
+    counts: [AtomicU64; N_BUCKETS],
+    /// Exact sum of recorded values in nanoseconds (mean = sum / count).
+    sum_ns: AtomicU64,
+    /// Total records (kept alongside the buckets for a cheap hot read;
+    /// exposition derives `_count` from the bucket sum for
+    /// self-consistency under concurrent scrapes).
+    count: AtomicU64,
+    /// Smallest recorded value (ns); `u64::MAX` until the first record.
+    min_ns: AtomicU64,
+    /// Largest recorded value (ns).
+    max_ns: AtomicU64,
+}
+
+impl Hist {
+    pub const fn new() -> Self {
+        // Const-item trick: a `const` atomic is re-instantiated per array
+        // element (atomics are not Copy).
+        const ZERO: AtomicU64 = AtomicU64::new(0);
+        Self {
+            counts: [ZERO; N_BUCKETS],
+            sum_ns: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+            min_ns: AtomicU64::new(u64::MAX),
+            max_ns: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one latency observation.
+    #[inline]
+    pub fn record(&self, d: Duration) {
+        self.record_ns(d.as_nanos().min(u128::from(u64::MAX)) as u64);
+    }
+
+    /// Record one observation in nanoseconds.
+    pub fn record_ns(&self, ns: u64) {
+        let bounds = bucket_bounds_ns();
+        let idx = bounds.partition_point(|&b| b < ns); // N_BOUNDS ⇒ overflow
+        // ordering: Relaxed — independent monotonic statistics cells; no
+        // data is published through them and scrapes tolerate a record
+        // that is mid-flight (bucket bumped, count not yet), so no
+        // acquire/release pairing is needed on any of these RMWs.
+        self.counts[idx].fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.min_ns.fetch_min(ns, Ordering::Relaxed);
+        self.max_ns.fetch_max(ns, Ordering::Relaxed);
+    }
+
+    /// Total observations (cheap counter read, for gating/logging).
+    pub fn count(&self) -> u64 {
+        // ordering: Relaxed — monotonic statistics read (see record_ns).
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Point-in-time copy of the histogram state. Loads are `Relaxed` and
+    /// per-cell, so a snapshot taken concurrently with writers may lag
+    /// individual cells — never torn within a cell, and `total()` is
+    /// derived from the bucket counts so the exposition stays internally
+    /// consistent.
+    pub fn snapshot(&self) -> HistSnapshot {
+        let mut counts = [0u64; N_BUCKETS];
+        for (i, c) in self.counts.iter().enumerate() {
+            // ordering: Relaxed — statistics reads for a point-in-time
+            // report; nothing is read through these cells.
+            counts[i] = c.load(Ordering::Relaxed);
+        }
+        HistSnapshot {
+            counts,
+            // ordering: Relaxed — statistics reads (see above).
+            sum_ns: self.sum_ns.load(Ordering::Relaxed),
+            min_ns: self.min_ns.load(Ordering::Relaxed),
+            max_ns: self.max_ns.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl Default for Hist {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Plain-data copy of a [`Hist`]: quantiles, mean, and the bucket counts
+/// the Prometheus exposition renders.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HistSnapshot {
+    pub counts: [u64; N_BUCKETS],
+    pub sum_ns: u64,
+    pub min_ns: u64,
+    pub max_ns: u64,
+}
+
+impl HistSnapshot {
+    /// Total observations, derived from the buckets (the `+Inf` cumulative
+    /// count — what `_count` must equal in the exposition).
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// Exact mean in seconds (0.0 when empty).
+    pub fn mean_seconds(&self) -> f64 {
+        let n = self.total();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum_ns as f64 / n as f64 / 1e9
+        }
+    }
+
+    /// Mean in microseconds (bench reporting convenience).
+    pub fn mean_us(&self) -> f64 {
+        self.mean_seconds() * 1e6
+    }
+
+    /// The delta `self − earlier` over a monotone pair of snapshots of
+    /// the same histogram: counts and sum subtract bucket-wise
+    /// (saturating, since relaxed per-cell loads can lag each other);
+    /// min/max keep `self`'s values — they are lifetime extrema, not
+    /// differentiable. Lets benches report per-window stage means off
+    /// the process-global registry.
+    pub fn since(&self, earlier: &HistSnapshot) -> HistSnapshot {
+        let mut counts = [0u64; N_BUCKETS];
+        for (i, c) in counts.iter_mut().enumerate() {
+            *c = self.counts[i].saturating_sub(earlier.counts[i]);
+        }
+        HistSnapshot {
+            counts,
+            sum_ns: self.sum_ns.saturating_sub(earlier.sum_ns),
+            min_ns: self.min_ns,
+            max_ns: self.max_ns,
+        }
+    }
+
+    /// Estimated `p`-th percentile (`p` in `[0, 100]`) in seconds.
+    ///
+    /// Linear interpolation inside the landing bucket, clamped to the
+    /// observed `[min, max]` — the clamp matters at the top quantiles,
+    /// where a sparsely filled bucket would otherwise extrapolate past
+    /// the largest value ever recorded.
+    pub fn quantile(&self, p: f64) -> f64 {
+        let total = self.total();
+        if total == 0 {
+            return 0.0;
+        }
+        let bounds = bucket_bounds_ns();
+        let target = (p.clamp(0.0, 100.0) / 100.0) * total as f64;
+        let mut cum_before = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let cum = cum_before + c;
+            if (cum as f64) >= target {
+                let lower = if i == 0 { 0 } else { bounds[i - 1] };
+                let upper = if i < N_BOUNDS { bounds[i] } else { self.max_ns };
+                let pos = ((target - cum_before as f64) / c as f64).clamp(0.0, 1.0);
+                let est = lower as f64 + pos * (upper.saturating_sub(lower)) as f64;
+                let min = if self.min_ns == u64::MAX { 0 } else { self.min_ns };
+                return est.clamp(min as f64, self.max_ns as f64) / 1e9;
+            }
+            cum_before = cum;
+        }
+        self.max_ns as f64 / 1e9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bounds_are_strictly_increasing_and_span_the_design_range() {
+        let b = bucket_bounds_ns();
+        assert_eq!(b[0], 1_000, "first bound is 1µs");
+        for w in b.windows(2) {
+            assert!(w[0] < w[1], "bounds must strictly increase: {w:?}");
+        }
+        assert!(*b.last().unwrap() >= 60_000_000_000, "last bound covers 60s");
+        // ~2 buckets per octave: consecutive bounds are ~√2 apart.
+        for w in b.windows(2) {
+            let ratio = w[1] as f64 / w[0] as f64;
+            assert!((ratio - std::f64::consts::SQRT_2).abs() < 0.01, "ratio {ratio}");
+        }
+    }
+
+    #[test]
+    fn empty_hist_reports_zeroes() {
+        let h = Hist::new();
+        let s = h.snapshot();
+        assert_eq!(s.total(), 0);
+        assert_eq!(s.mean_seconds(), 0.0);
+        assert_eq!(s.quantile(50.0), 0.0);
+    }
+
+    #[test]
+    fn records_land_in_ordered_buckets_and_mean_is_exact() {
+        let h = Hist::new();
+        h.record(Duration::from_micros(1));
+        h.record(Duration::from_millis(1));
+        h.record(Duration::from_secs(1));
+        h.record(Duration::from_secs(100)); // past the last bound ⇒ overflow
+        let s = h.snapshot();
+        assert_eq!(s.total(), 4);
+        assert_eq!(s.counts[N_BOUNDS], 1, "100s lands in the overflow bucket");
+        let expect_mean = (1e-6 + 1e-3 + 1.0 + 100.0) / 4.0;
+        assert!((s.mean_seconds() - expect_mean).abs() < 1e-9);
+        assert_eq!(s.min_ns, 1_000);
+        assert_eq!(s.max_ns, 100_000_000_000);
+    }
+
+    #[test]
+    fn since_isolates_the_window_between_two_snapshots() {
+        let h = Hist::new();
+        h.record(Duration::from_micros(10));
+        let before = h.snapshot();
+        h.record(Duration::from_micros(30));
+        h.record(Duration::from_micros(50));
+        let delta = h.snapshot().since(&before);
+        assert_eq!(delta.total(), 2, "only the window's records remain");
+        assert!((delta.mean_us() - 40.0).abs() < 1e-6, "mean over the window only");
+        // Degenerate: identical snapshots difference to an empty window.
+        let s = h.snapshot();
+        assert_eq!(s.since(&s).total(), 0);
+        assert_eq!(s.since(&s).mean_us(), 0.0);
+    }
+
+    #[test]
+    fn sub_microsecond_values_land_in_the_first_bucket() {
+        let h = Hist::new();
+        h.record_ns(1);
+        h.record_ns(999);
+        assert_eq!(h.snapshot().counts[0], 2);
+    }
+
+    #[test]
+    fn quantiles_interpolate_within_a_few_percent_on_uniform_data() {
+        // The reservoir-replacement contract: on a uniform 1..=100ms
+        // stream the interpolated percentiles must track the exact ones
+        // closely enough for the STATS line tolerances.
+        let h = Hist::new();
+        for i in 1..=100u64 {
+            h.record(Duration::from_millis(i));
+        }
+        let s = h.snapshot();
+        let p50 = s.quantile(50.0) * 1e3;
+        let p90 = s.quantile(90.0) * 1e3;
+        let p99 = s.quantile(99.0) * 1e3;
+        assert!((p50 - 50.0).abs() < 2.0, "p50 {p50}ms");
+        assert!((p90 - 90.0).abs() < 4.0, "p90 {p90}ms");
+        assert!(p99 > 90.0 && p99 <= 100.0, "p99 {p99}ms clamps to the observed max");
+    }
+
+    #[test]
+    fn quantile_clamps_to_observed_extremes() {
+        let h = Hist::new();
+        h.record(Duration::from_millis(50));
+        let s = h.snapshot();
+        // Single sample: every quantile is that sample (the bucket spans
+        // ~45–64ms, but the clamp pins the estimate to the observation).
+        assert!((s.quantile(0.0) * 1e3 - 50.0).abs() < 1e-9);
+        assert!((s.quantile(99.0) * 1e3 - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn concurrent_recording_loses_nothing() {
+        let h = std::sync::Arc::new(Hist::new());
+        let threads = 8u64;
+        let per = 10_000u64;
+        let handles: Vec<_> = (0..threads)
+            .map(|t| {
+                let h = h.clone();
+                std::thread::spawn(move || {
+                    for i in 0..per {
+                        h.record_ns(1_000 + t * 37 + i);
+                    }
+                })
+            })
+            .collect();
+        for th in handles {
+            th.join().unwrap();
+        }
+        assert_eq!(h.snapshot().total(), threads * per);
+        assert_eq!(h.count(), threads * per);
+    }
+}

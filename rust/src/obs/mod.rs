@@ -1,0 +1,236 @@
+//! Observability substrate: per-stage latency histograms, per-query span
+//! traces, and Prometheus-style metric exposition (docs/observability.md).
+//!
+//! Dependency-free and allocation-free on the recording path:
+//!
+//! * [`hist`] — lock-free log-bucketed latency histograms (atomics only).
+//! * [`trace`] — per-query spans in fixed ring buffers + the slow-query
+//!   log (`--slow-query-ms`, `TRACE <qid>`, `TRACE SLOW`).
+//! * [`expo`] — renders everything as Prometheus text format for the
+//!   `METRICS` protocol verb, plus the hand-rolled format validator the
+//!   golden tests and the CI scrape step share.
+//!
+//! The process-wide registry is [`OBS`]: one histogram per pipeline
+//! [`Stage`], plus counters/gauges for the instrumentation points outside
+//! the coordinator — kernel dispatch tallies, BitBound pruning, HNSW
+//! traversal work, compaction and recovery timing. Query counters and
+//! per-ingest gauges stay on the coordinator's `Metrics` (they are
+//! per-server, not per-process) and join the exposition in
+//! [`expo::render`].
+//!
+//! Overhead contract: recording a stage is one clock read plus a handful
+//! of `Relaxed` atomic RMWs; tracing adds six atomic stores into a ring
+//! slot and is a single load + branch when `MOLFPGA_TRACE=off`. The
+//! release-smoke CI step holds `bench_exhaustive` QPS with tracing on to
+//! within 5% of off.
+
+pub mod expo;
+pub mod hist;
+pub mod trace;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+use hist::Hist;
+use trace::Stage;
+
+/// Number of runtime kernel backends (`kernel::Backend` variants).
+pub const N_KERNEL_BACKENDS: usize = 5;
+
+/// Exposition label for each backend slot, index-matched to
+/// `kernel::Backend::index()` (asserted by a test in `kernel`).
+pub const KERNEL_BACKEND_NAMES: [&str; N_KERNEL_BACKENDS] =
+    ["scalar", "popcnt", "avx2", "avx512", "neon"];
+
+/// Process-wide metric registry. All cells are plain atomics updated with
+/// `Relaxed` ordering: they are independent monotonic statistics (or
+/// last-write-wins gauges) that publish no data — scrapes read them cell
+/// by cell and tolerate mid-flight updates.
+pub struct Obs {
+    /// One latency histogram per pipeline [`Stage`] (index = `Stage as usize`).
+    stages: [Hist; Stage::ALL.len()],
+    /// Background compaction wall-clock duration.
+    compaction: Hist,
+    /// Epoch installed by the most recent compaction (gauge).
+    compaction_installed_epoch: AtomicU64,
+    /// WAL/segment replay time of the last recovery, in ns (gauge).
+    recovery_replay_ns: AtomicU64,
+    /// Rows fed through the row kernel, per backend.
+    kernel_rows: [AtomicU64; N_KERNEL_BACKENDS],
+    /// Bit-sliced blocks fed through the block kernel, per backend.
+    kernel_blocks: [AtomicU64; N_KERNEL_BACKENDS],
+    /// Rows skipped by the BitBound popcount bound (Eq. 2).
+    bitbound_rows_pruned: AtomicU64,
+    /// Rows that survived the bound and were Tanimoto-scored.
+    bitbound_rows_scored: AtomicU64,
+    /// HNSW base-layer hops across all queries.
+    hnsw_hops: AtomicU64,
+    /// HNSW priority-queue operations across all queries.
+    hnsw_pq_ops: AtomicU64,
+    /// HNSW distance evaluations across all queries.
+    hnsw_distance_evals: AtomicU64,
+    /// HNSW upper-layer greedy steps across all queries.
+    hnsw_upper_steps: AtomicU64,
+}
+
+impl Obs {
+    const fn new() -> Self {
+        const ZERO: AtomicU64 = AtomicU64::new(0);
+        const H: Hist = Hist::new();
+        Self {
+            stages: [H; Stage::ALL.len()],
+            compaction: H,
+            compaction_installed_epoch: ZERO,
+            recovery_replay_ns: ZERO,
+            kernel_rows: [ZERO; N_KERNEL_BACKENDS],
+            kernel_blocks: [ZERO; N_KERNEL_BACKENDS],
+            bitbound_rows_pruned: ZERO,
+            bitbound_rows_scored: ZERO,
+            hnsw_hops: ZERO,
+            hnsw_pq_ops: ZERO,
+            hnsw_distance_evals: ZERO,
+            hnsw_upper_steps: ZERO,
+        }
+    }
+
+    /// The latency histogram for one pipeline stage.
+    pub fn stage(&self, s: Stage) -> &Hist {
+        &self.stages[s as usize]
+    }
+
+    /// The compaction-duration histogram.
+    pub fn compaction_hist(&self) -> &Hist {
+        &self.compaction
+    }
+
+    /// Record an installed compaction: duration + the new epoch gauge.
+    pub fn note_compaction(&self, dur: Duration, installed_epoch: u64) {
+        self.compaction.record(dur);
+        // ordering: Relaxed — last-write-wins gauge; scrapes read it as a
+        // free-standing statistic, nothing is published through it.
+        self.compaction_installed_epoch.store(installed_epoch, Ordering::Relaxed);
+    }
+
+    /// Record the WAL/segment replay time of a completed recovery.
+    pub fn note_recovery_replay(&self, dur: Duration) {
+        let ns = dur.as_nanos().min(u128::from(u64::MAX)) as u64;
+        // ordering: Relaxed — last-write-wins gauge (see note_compaction).
+        self.recovery_replay_ns.store(ns, Ordering::Relaxed);
+    }
+
+    /// Tally rows dispatched through the row kernel for backend slot
+    /// `backend_idx` (see [`KERNEL_BACKEND_NAMES`]). Call per scan, not
+    /// per row — the counter is shared across workers.
+    pub fn add_kernel_rows(&self, backend_idx: usize, rows: u64) {
+        if let Some(c) = self.kernel_rows.get(backend_idx) {
+            // ordering: Relaxed — monotonic statistics counter; updates
+            // are independent and publish no data.
+            c.fetch_add(rows, Ordering::Relaxed);
+        }
+    }
+
+    /// Tally bit-sliced blocks dispatched through the block kernel.
+    pub fn add_kernel_blocks(&self, backend_idx: usize, blocks: u64) {
+        if let Some(c) = self.kernel_blocks.get(backend_idx) {
+            // ordering: Relaxed — monotonic statistics counter (see above).
+            c.fetch_add(blocks, Ordering::Relaxed);
+        }
+    }
+
+    /// Tally one BitBound scan's pruning outcome (rows skipped vs scored).
+    pub fn add_bitbound(&self, pruned: u64, scored: u64) {
+        // ordering: Relaxed — monotonic statistics counters; updated per
+        // scan, read only by scrapes.
+        self.bitbound_rows_pruned.fetch_add(pruned, Ordering::Relaxed);
+        self.bitbound_rows_scored.fetch_add(scored, Ordering::Relaxed);
+    }
+
+    /// Fold one HNSW query's traversal stats into the global tallies.
+    pub fn add_hnsw(&self, hops: u64, pq_ops: u64, distance_evals: u64, upper_steps: u64) {
+        // ordering: Relaxed — monotonic statistics counters; updated per
+        // query, read only by scrapes.
+        self.hnsw_hops.fetch_add(hops, Ordering::Relaxed);
+        self.hnsw_pq_ops.fetch_add(pq_ops, Ordering::Relaxed);
+        self.hnsw_distance_evals.fetch_add(distance_evals, Ordering::Relaxed);
+        self.hnsw_upper_steps.fetch_add(upper_steps, Ordering::Relaxed);
+    }
+
+    /// Point-in-time read of the row-kernel tally for one backend slot
+    /// (0 for an out-of-range slot).
+    pub fn snapshot_kernel_rows(&self, backend_idx: usize) -> u64 {
+        self.kernel_rows.get(backend_idx).map_or(0, Self::load)
+    }
+
+    /// Point-in-time read of the block-kernel tally for one backend slot.
+    pub fn snapshot_kernel_blocks(&self, backend_idx: usize) -> u64 {
+        self.kernel_blocks.get(backend_idx).map_or(0, Self::load)
+    }
+
+    /// Point-in-time read of the BitBound (pruned, scored) row tallies.
+    pub fn snapshot_bitbound(&self) -> (u64, u64) {
+        (Self::load(&self.bitbound_rows_pruned), Self::load(&self.bitbound_rows_scored))
+    }
+
+    /// Point-in-time read of the HNSW (hops, pq_ops, distance_evals,
+    /// upper_steps) tallies.
+    pub fn snapshot_hnsw(&self) -> (u64, u64, u64, u64) {
+        (
+            Self::load(&self.hnsw_hops),
+            Self::load(&self.hnsw_pq_ops),
+            Self::load(&self.hnsw_distance_evals),
+            Self::load(&self.hnsw_upper_steps),
+        )
+    }
+
+    /// Point-in-time read of one counter/gauge cell (exposition helper).
+    fn load(cell: &AtomicU64) -> u64 {
+        // ordering: Relaxed — statistics read for a point-in-time report.
+        cell.load(Ordering::Relaxed)
+    }
+}
+
+/// The process-wide registry (see module docs).
+pub static OBS: Obs = Obs::new();
+
+/// Record one pipeline-stage completion for query `qid`: bumps the
+/// stage's global histogram and, when tracing is on, appends a span
+/// covering `start ..= now` (`tag` = shard index for scan spans). One
+/// clock read, shared by both.
+pub fn record_stage(qid: u64, stage: Stage, start: Instant, tag: u64) {
+    let dur = start.elapsed();
+    OBS.stage(stage).record(dur);
+    trace::record_with(qid, stage, start, dur, tag);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_stage_feeds_both_hist_and_trace() {
+        let qid = 0xffff_1000_0000_0001;
+        let before = OBS.stage(Stage::Merge).count();
+        record_stage(qid, Stage::Merge, Instant::now(), 0);
+        assert_eq!(OBS.stage(Stage::Merge).count(), before + 1);
+        let spans = trace::collect(qid);
+        assert!(
+            spans.iter().any(|s| s.stage == Stage::Merge && s.dur_ns >= 1),
+            "span recorded: {spans:?}"
+        );
+    }
+
+    #[test]
+    fn gauges_are_last_write_wins() {
+        OBS.note_recovery_replay(Duration::from_millis(7));
+        OBS.note_recovery_replay(Duration::from_millis(3));
+        assert_eq!(Obs::load(&OBS.recovery_replay_ns), 3_000_000);
+    }
+
+    #[test]
+    fn kernel_tallies_ignore_out_of_range_slots() {
+        OBS.add_kernel_rows(N_KERNEL_BACKENDS + 10, 5); // silently dropped
+        let before = Obs::load(&OBS.kernel_rows[0]);
+        OBS.add_kernel_rows(0, 5);
+        assert_eq!(Obs::load(&OBS.kernel_rows[0]), before + 5);
+    }
+}

@@ -1,0 +1,465 @@
+//! Per-query tracing: spans in fixed per-worker ring buffers.
+//!
+//! Every query gets a trace identity — its wire query id, minted at
+//! `Router::try_submit` — and each pipeline stage records one span
+//! (stage, start, duration, shard/backend tag) as it completes. Spans
+//! land in a small set of fixed-size ring buffers, one per recording
+//! thread group: recording is an index bump plus a handful of atomic
+//! stores — **no allocation, no locks** — so it can ride the hot path.
+//! Setting `MOLFPGA_TRACE=off` turns every record into a single load +
+//! branch.
+//!
+//! Readers (`TRACE <qid>`, the slow-query log) scan the rings for a query
+//! id. Slots are seqlock-stamped: a slot mid-overwrite fails its sequence
+//! check and is dropped. The data is diagnostics-grade by design — a
+//! wrapped ring forgets old spans, a torn slot is skipped — and every
+//! access is an atomic, so concurrent readers are race-free in the
+//! language sense even while writers spin.
+//!
+//! Write-path ops (`ADD`/`ADDFP`/`DEL`) run synchronously on their
+//! connection thread, so their WAL spans are attributed through a
+//! thread-local current-op id ([`OpGuard`]) instead of plumbing ids
+//! through the ingest layer; background compaction threads have no
+//! current op and record nothing.
+
+use std::cell::Cell;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+/// Environment variable gating span recording (`off`/`0`/`false` disable).
+pub const ENV_TRACE: &str = "MOLFPGA_TRACE";
+
+/// Pipeline stages a span can belong to, in pipeline order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    /// Validation + route selection in `Router::try_submit`.
+    Router,
+    /// Wait in the dynamic batcher (enqueue → dispatch).
+    Batch,
+    /// One backend scan; tag = shard index (0 for unsharded pools).
+    Scan,
+    /// Cross-shard top-k reduction (`ShardMerge::finish`).
+    Merge,
+    /// Result fan-out to the responder channel.
+    Reply,
+    /// WAL record framing + write (`serve --live`, write verbs).
+    WalAppend,
+    /// WAL fsync (policy-driven or durable install).
+    WalFsync,
+}
+
+impl Stage {
+    pub const ALL: [Stage; 7] = [
+        Stage::Router,
+        Stage::Batch,
+        Stage::Scan,
+        Stage::Merge,
+        Stage::Reply,
+        Stage::WalAppend,
+        Stage::WalFsync,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Router => "router",
+            Stage::Batch => "batch",
+            Stage::Scan => "scan",
+            Stage::Merge => "merge",
+            Stage::Reply => "reply",
+            Stage::WalAppend => "wal_append",
+            Stage::WalFsync => "wal_fsync",
+        }
+    }
+
+    /// Indent depth in the rendered span tree (router ▸ batch ▸ workers).
+    fn depth(self) -> usize {
+        match self {
+            Stage::Router => 0,
+            Stage::Batch | Stage::WalAppend | Stage::WalFsync => 1,
+            Stage::Scan | Stage::Merge | Stage::Reply => 2,
+        }
+    }
+
+    fn from_index(i: u64) -> Option<Stage> {
+        Stage::ALL.get(i as usize).copied()
+    }
+
+    fn index(self) -> u64 {
+        self as u64
+    }
+}
+
+/// One recorded span, as read back out of the rings.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Span {
+    pub qid: u64,
+    pub stage: Stage,
+    /// Start, nanoseconds since the process trace epoch.
+    pub start_ns: u64,
+    pub dur_ns: u64,
+    /// Shard index for scan spans; 0 otherwise.
+    pub tag: u64,
+}
+
+/// Ring buffers sharded by recording thread (threads round-robin onto
+/// rings at first use, so workers rarely share a cursor cache line).
+const N_RINGS: usize = 8;
+/// Slots per ring; the whole trace store holds `N_RINGS * RING_SLOTS`
+/// spans (~16k) before old spans are overwritten.
+const RING_SLOTS: usize = 2048;
+/// Reply-size cap for one `TRACE <qid>` collection.
+const MAX_SPANS_PER_QID: usize = 256;
+
+/// One seqlock-stamped span slot. `seq == 0` means invalid/mid-write;
+/// writers re-stamp with their (nonzero) ticket after the payload stores.
+struct Slot {
+    seq: AtomicU64,
+    qid: AtomicU64,
+    stage: AtomicU64,
+    start_ns: AtomicU64,
+    dur_ns: AtomicU64,
+    tag: AtomicU64,
+}
+
+struct Ring {
+    cursor: AtomicU64,
+    slots: [Slot; RING_SLOTS],
+}
+
+struct SpanStore {
+    rings: [Ring; N_RINGS],
+}
+
+impl SpanStore {
+    const fn new() -> Self {
+        const SLOT: Slot = Slot {
+            seq: AtomicU64::new(0),
+            qid: AtomicU64::new(0),
+            stage: AtomicU64::new(0),
+            start_ns: AtomicU64::new(0),
+            dur_ns: AtomicU64::new(0),
+            tag: AtomicU64::new(0),
+        };
+        const RING: Ring = Ring { cursor: AtomicU64::new(0), slots: [SLOT; RING_SLOTS] };
+        Self { rings: [RING; N_RINGS] }
+    }
+}
+
+static STORE: SpanStore = SpanStore::new();
+
+/// Whether span recording is on (resolved once from `MOLFPGA_TRACE`).
+pub fn enabled() -> bool {
+    static ON: OnceLock<bool> = OnceLock::new();
+    *ON.get_or_init(|| {
+        let raw = std::env::var(ENV_TRACE).unwrap_or_default();
+        !matches!(raw.trim().to_ascii_lowercase().as_str(), "off" | "0" | "false")
+    })
+}
+
+/// The process trace epoch: span `start_ns` offsets are relative to this.
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Ring assignment: threads take rings round-robin at first record, so
+/// pool workers land on distinct cursors without any coordination.
+fn ring_index() -> usize {
+    thread_local! {
+        static RING: Cell<usize> = const { Cell::new(usize::MAX) };
+    }
+    RING.with(|c| {
+        if c.get() == usize::MAX {
+            static NEXT: AtomicUsize = AtomicUsize::new(0);
+            // ordering: Relaxed — round-robin ticket; only atomicity of
+            // the increment matters, not ordering against anything.
+            c.set(NEXT.fetch_add(1, Ordering::Relaxed) % N_RINGS);
+        }
+        c.get()
+    })
+}
+
+/// Record one span for `qid` covering `start ..= now`. No-op when tracing
+/// is disabled or `qid` is 0 (the "untraced" id). Durations are clamped
+/// up to 1 ns so a recorded stage is always visibly non-zero.
+pub fn record(qid: u64, stage: Stage, start: Instant, tag: u64) {
+    record_with(qid, stage, start, start.elapsed(), tag);
+}
+
+/// [`record`] with the duration already measured (lets `obs::record_stage`
+/// share one clock read between the stage histogram and the span).
+pub(crate) fn record_with(qid: u64, stage: Stage, start: Instant, dur: Duration, tag: u64) {
+    if qid == 0 || !enabled() {
+        return;
+    }
+    let dur_ns = dur.as_nanos().min(u128::from(u64::MAX)) as u64;
+    let start_ns =
+        start.saturating_duration_since(epoch()).as_nanos().min(u128::from(u64::MAX)) as u64;
+    let ring = &STORE.rings[ring_index()];
+    // ordering: Relaxed — the cursor is a slot-claim ticket; slot
+    // visibility to readers is carried by the seq Release stamp below.
+    let ticket = ring.cursor.fetch_add(1, Ordering::Relaxed);
+    let slot = &ring.slots[(ticket as usize) % RING_SLOTS];
+    // Seqlock write: invalidate, store payload, re-stamp. A reader that
+    // overlaps this sees seq 0 or mismatched stamps and drops the slot.
+    // ordering: Release on the seq stores publishes the payload stores
+    // (and the invalidation) to an Acquire reader; the payload cells
+    // themselves are Relaxed — they are only read through a matching
+    // seq stamp pair, and a torn payload fails that check.
+    slot.seq.store(0, Ordering::Release);
+    slot.qid.store(qid, Ordering::Relaxed);
+    slot.stage.store(stage.index(), Ordering::Relaxed);
+    slot.start_ns.store(start_ns, Ordering::Relaxed);
+    slot.dur_ns.store(dur_ns.max(1), Ordering::Relaxed);
+    slot.tag.store(tag, Ordering::Relaxed);
+    slot.seq.store(ticket + 1, Ordering::Release);
+}
+
+/// All retained spans for `qid`, in start order (capped at
+/// [`MAX_SPANS_PER_QID`]). Empty when tracing is off or the spans were
+/// overwritten.
+pub fn collect(qid: u64) -> Vec<Span> {
+    let mut spans = Vec::new();
+    if qid == 0 {
+        return spans;
+    }
+    for ring in &STORE.rings {
+        for slot in &ring.slots {
+            // ordering: Acquire — pairs with the writer's Release stamps;
+            // a stamp seen here means the payload stores preceding it are
+            // visible, and the re-check below rejects slots overwritten
+            // while the payload was being read.
+            let seq = slot.seq.load(Ordering::Acquire);
+            if seq == 0 {
+                continue;
+            }
+            // ordering: Relaxed — payload reads validated by the seq
+            // stamp pair around them (see the writer's protocol).
+            let slot_qid = slot.qid.load(Ordering::Relaxed);
+            if slot_qid != qid {
+                continue;
+            }
+            let stage = slot.stage.load(Ordering::Relaxed);
+            let start_ns = slot.start_ns.load(Ordering::Relaxed);
+            let dur_ns = slot.dur_ns.load(Ordering::Relaxed);
+            let tag = slot.tag.load(Ordering::Relaxed);
+            // ordering: Acquire — seqlock re-check (see above).
+            if slot.seq.load(Ordering::Acquire) != seq {
+                continue;
+            }
+            if let Some(stage) = Stage::from_index(stage) {
+                spans.push(Span { qid, stage, start_ns, dur_ns, tag });
+                if spans.len() >= MAX_SPANS_PER_QID {
+                    break;
+                }
+            }
+        }
+    }
+    spans.sort_by_key(|s| (s.start_ns, s.stage.index()));
+    spans
+}
+
+/// Render `spans` as an indented span tree (one line per span). The line
+/// grammar is stable for tests/clients: each line is
+/// `span stage=<name> [shard=<tag>] start_us=<offset> dur_us=<duration>`
+/// with two leading spaces per tree depth.
+pub fn render(spans: &[Span]) -> Vec<String> {
+    spans
+        .iter()
+        .map(|s| {
+            let indent = "  ".repeat(s.stage.depth());
+            let shard = match s.stage {
+                Stage::Scan => format!(" shard={}", s.tag),
+                _ => String::new(),
+            };
+            format!(
+                "{indent}span stage={}{shard} start_us={:.1} dur_us={:.3}",
+                s.stage.name(),
+                s.start_ns as f64 / 1e3,
+                s.dur_ns as f64 / 1e3,
+            )
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Current-op attribution (write-path WAL spans)
+// ---------------------------------------------------------------------------
+
+thread_local! {
+    /// The op id WAL spans on this thread attribute to (0 = untraced).
+    static CURRENT_OP: Cell<u64> = const { Cell::new(0) };
+}
+
+/// The current thread's op id for span attribution (0 when none).
+pub fn current_op() -> u64 {
+    CURRENT_OP.with(Cell::get)
+}
+
+/// Scope guard setting the thread's current op id; restores the previous
+/// id on drop (panic-safe — the server's catch_unwind fence unwinds
+/// through it).
+pub struct OpGuard {
+    prev: u64,
+}
+
+impl OpGuard {
+    pub fn new(qid: u64) -> Self {
+        let prev = CURRENT_OP.with(|c| c.replace(qid));
+        Self { prev }
+    }
+}
+
+impl Drop for OpGuard {
+    fn drop(&mut self) {
+        CURRENT_OP.with(|c| c.set(self.prev));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Slow-query log
+// ---------------------------------------------------------------------------
+
+/// Latency threshold in microseconds above which a completed query dumps
+/// its span tree (0 = disabled; `serve --slow-query-ms`).
+static SLOW_THRESHOLD_US: AtomicU64 = AtomicU64::new(0);
+
+/// Retained slow-query dumps readable via `TRACE SLOW`.
+const SLOW_CAP: usize = 32;
+
+// lock-order: obs_slow_log
+static SLOW_LOG: Mutex<VecDeque<String>> = Mutex::new(VecDeque::new());
+
+/// Set (or disable, with `None`) the slow-query threshold.
+pub fn set_slow_query_threshold(t: Option<Duration>) {
+    let us = t.map_or(0, |d| d.as_micros().min(u128::from(u64::MAX)) as u64);
+    // ordering: Relaxed — configuration gauge read by completions with a
+    // plain load; no data is published through it.
+    SLOW_THRESHOLD_US.store(us, Ordering::Relaxed);
+}
+
+/// Called at query completion: when `latency` crosses the configured
+/// threshold, render the query's span tree, log it to stderr, and retain
+/// it in the capped in-memory ring (`TRACE SLOW`). Off the fast path for
+/// healthy queries (one relaxed load + compare).
+pub fn note_complete(qid: u64, latency: Duration) {
+    // ordering: Relaxed — configuration gauge (see set_slow_query_threshold).
+    let thr = SLOW_THRESHOLD_US.load(Ordering::Relaxed);
+    if thr == 0 || latency.as_micros() < u128::from(thr) {
+        return;
+    }
+    let mut lines =
+        vec![format!("slow-query qid={qid} latency_ms={:.3}", latency.as_secs_f64() * 1e3)];
+    lines.extend(render(&collect(qid)));
+    let dump = lines.join("\n");
+    eprintln!("[slow-query] {dump}");
+    // Poison-tolerant: a panicking holder leaves at worst one garbled
+    // entry in a diagnostics ring.
+    // lint: allow(lock-order, reason = "obs_slow_log is a leaf lock; held only for the push/drain below, no other lock acquired inside")
+    let mut log = SLOW_LOG.lock().unwrap_or_else(|e| e.into_inner());
+    if log.len() >= SLOW_CAP {
+        log.pop_front();
+    }
+    log.push_back(dump);
+}
+
+/// Retained slow-query dumps, oldest first.
+pub fn slow_log() -> Vec<String> {
+    // lint: allow(lock-order, reason = "obs_slow_log is a leaf lock; clone-and-release, no other lock acquired inside")
+    let log = SLOW_LOG.lock().unwrap_or_else(|e| e.into_inner());
+    log.iter().cloned().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Tests share the process-global rings; qids here use a high prefix
+    /// to stay out of other tests' id spaces.
+    const TQ: u64 = 0xffff_0000_0000_0000;
+
+    #[test]
+    fn record_and_collect_roundtrip_in_order() {
+        let qid = TQ + 1;
+        let t0 = Instant::now();
+        record(qid, Stage::Router, t0, 0);
+        record(qid, Stage::Batch, t0, 0);
+        record(qid, Stage::Scan, t0, 3);
+        let spans = collect(qid);
+        assert_eq!(spans.len(), 3, "all three spans retained: {spans:?}");
+        for s in &spans {
+            assert_eq!(s.qid, qid);
+            assert!(s.dur_ns >= 1, "durations are clamped non-zero");
+        }
+        assert!(spans.iter().any(|s| s.stage == Stage::Scan && s.tag == 3));
+        // Start order is non-decreasing.
+        for w in spans.windows(2) {
+            assert!(w[0].start_ns <= w[1].start_ns);
+        }
+    }
+
+    #[test]
+    fn qid_zero_is_never_recorded() {
+        record(0, Stage::Router, Instant::now(), 0);
+        assert!(collect(0).is_empty());
+    }
+
+    #[test]
+    fn render_emits_the_stable_line_grammar() {
+        let spans = [
+            Span { qid: 9, stage: Stage::Router, start_ns: 1_500, dur_ns: 2_000, tag: 0 },
+            Span { qid: 9, stage: Stage::Scan, start_ns: 9_000, dur_ns: 500, tag: 2 },
+        ];
+        let lines = render(&spans);
+        assert_eq!(lines[0], "span stage=router start_us=1.5 dur_us=2.000");
+        assert_eq!(lines[1], "    span stage=scan shard=2 start_us=9.0 dur_us=0.500");
+    }
+
+    #[test]
+    fn op_guard_nests_and_restores() {
+        assert_eq!(current_op(), 0);
+        {
+            let _g = OpGuard::new(41);
+            assert_eq!(current_op(), 41);
+            {
+                let _inner = OpGuard::new(42);
+                assert_eq!(current_op(), 42);
+            }
+            assert_eq!(current_op(), 41);
+        }
+        assert_eq!(current_op(), 0);
+    }
+
+    #[test]
+    fn slow_query_log_captures_over_threshold_completions() {
+        let qid = TQ + 77;
+        record(qid, Stage::Scan, Instant::now(), 1);
+        set_slow_query_threshold(Some(Duration::from_millis(5)));
+        note_complete(qid, Duration::from_millis(1)); // under: ignored
+        note_complete(qid, Duration::from_millis(50)); // over: retained
+        set_slow_query_threshold(None);
+        let log = slow_log();
+        let entry = log
+            .iter()
+            .find(|e| e.contains(&format!("qid={qid}")))
+            .expect("slow completion retained");
+        assert!(entry.contains("latency_ms=50.000"), "entry: {entry}");
+        assert!(entry.contains("stage=scan"), "span tree attached: {entry}");
+        // Disabled threshold: nothing new is retained.
+        let before = slow_log().len();
+        note_complete(TQ + 78, Duration::from_secs(10));
+        assert_eq!(slow_log().len(), before);
+    }
+
+    #[test]
+    fn slow_log_is_capped() {
+        set_slow_query_threshold(Some(Duration::from_millis(1)));
+        for i in 0..(SLOW_CAP as u64 + 10) {
+            note_complete(TQ + 100 + i, Duration::from_millis(30));
+        }
+        set_slow_query_threshold(None);
+        assert!(slow_log().len() <= SLOW_CAP);
+    }
+}

@@ -5,10 +5,17 @@
 //! /opt/xla-example/README.md): `HloModuleProto::from_text_file` reassigns
 //! instruction ids, sidestepping the 64-bit-id protos jax ≥ 0.5 emits that
 //! xla_extension 0.5.1 rejects.
+//!
+//! Observability (docs/observability.md): compiles are logged with their
+//! wall-clock cost, and the cache keeps hit/miss tallies readable via
+//! [`PjRt::cache_stats`] — a recompile on the serving path is a latency
+//! cliff worth spotting, and the tallies make the compile-once contract
+//! checkable from diagnostics instead of by re-reading this file.
 
 use anyhow::{Context, Result};
 use std::collections::HashMap;
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 /// Wrapper owning the PJRT client and a path-keyed executable cache.
@@ -16,6 +23,10 @@ pub struct PjRt {
     client: xla::PjRtClient,
     // lock-order: pjrt_cache
     cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+    /// Executable-cache hits ([`PjRt::load`] calls answered without a compile).
+    cache_hits: AtomicU64,
+    /// Executable-cache misses (calls that paid an XLA compile).
+    cache_misses: AtomicU64,
 }
 
 impl PjRt {
@@ -24,7 +35,12 @@ impl PjRt {
     /// through XLA).
     pub fn cpu() -> Result<Self> {
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Self { client, cache: Mutex::new(HashMap::new()) })
+        Ok(Self {
+            client,
+            cache: Mutex::new(HashMap::new()),
+            cache_hits: AtomicU64::new(0),
+            cache_misses: AtomicU64::new(0),
+        })
     }
 
     pub fn platform(&self) -> String {
@@ -46,8 +62,14 @@ impl PjRt {
     pub fn load(&self, path: &Path) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
         let key = path.to_string_lossy().into_owned();
         if let Some(exe) = self.cache_lock().get(&key) {
+            // ordering: Relaxed — monotonic statistics counter; updates
+            // are independent and publish no data.
+            self.cache_hits.fetch_add(1, Ordering::Relaxed);
             return Ok(exe.clone());
         }
+        // ordering: Relaxed — monotonic statistics counter (see above).
+        self.cache_misses.fetch_add(1, Ordering::Relaxed);
+        let t0 = std::time::Instant::now();
         let proto = xla::HloModuleProto::from_text_file(path)
             .with_context(|| format!("parsing HLO text {}", path.display()))?;
         let comp = xla::XlaComputation::from_proto(&proto);
@@ -55,6 +77,11 @@ impl PjRt {
             .client
             .compile(&comp)
             .with_context(|| format!("compiling {}", path.display()))?;
+        eprintln!(
+            "[pjrt] compiled {} in {:.1}ms",
+            path.display(),
+            t0.elapsed().as_secs_f64() * 1e3
+        );
         let exe = std::sync::Arc::new(exe);
         self.cache_lock().insert(key, exe.clone());
         Ok(exe)
@@ -70,6 +97,13 @@ impl PjRt {
     /// Number of cached executables (diagnostics).
     pub fn cached(&self) -> usize {
         self.cache_lock().len()
+    }
+
+    /// Point-in-time (hits, misses) of the executable cache. After warmup
+    /// a serving process should only ever grow `hits`.
+    pub fn cache_stats(&self) -> (u64, u64) {
+        // ordering: Relaxed — statistics read for a point-in-time report.
+        (self.cache_hits.load(Ordering::Relaxed), self.cache_misses.load(Ordering::Relaxed))
     }
 }
 
@@ -91,8 +125,10 @@ mod tests {
         let path = dir.join("bitcount_t8192_w32.hlo.txt");
         let _a = rt.load(&path).unwrap();
         assert_eq!(rt.cached(), 1);
+        assert_eq!(rt.cache_stats(), (0, 1), "first load is a compile");
         let _b = rt.load(&path).unwrap();
         assert_eq!(rt.cached(), 1, "second load must hit the cache");
+        assert_eq!(rt.cache_stats(), (1, 1), "second load is a hit");
     }
 
     #[test]

@@ -1,0 +1,277 @@
+//! Observability end-to-end: scrape a real `molfpga serve` process.
+//!
+//! * **Live scrape** — a `--live --data-dir` server absorbs writes and
+//!   ~200 queries over TCP, then `METRICS` must render a valid
+//!   Prometheus-style exposition (checked by the same hand-rolled
+//!   validator the golden tests use) whose stage histograms, WAL
+//!   counters, kernel/BitBound/HNSW tallies and ingest gauges are all
+//!   non-zero where the traffic says they must be. `TRACE <qid>` must
+//!   show every pipeline stage of a traced query — including the
+//!   `wal_append`/`wal_fsync` spans of a durable write — and the
+//!   slow-query log must have fired (`--slow-query-ms 1` plus a 5ms
+//!   batch window makes every query deterministically "slow").
+//! * **Sharded scrape** — a `--shards 3` read-only server must expose
+//!   non-zero `merge` stage counts and ~3 scan spans per query.
+//!
+//! Runs in tier-1 and again under `--release` in the CI release-smoke
+//! lane, where it doubles as the scrape step of the acceptance bar.
+
+use molfpga::coordinator::server::Client;
+use molfpga::fingerprint::{ChemblModel, Database};
+use molfpga::obs::expo::selftest::parse_and_validate;
+use molfpga::obs::KERNEL_BACKEND_NAMES;
+use std::io::{BufRead, BufReader};
+use std::net::SocketAddr;
+use std::process::{Child, Command, Stdio};
+use std::sync::mpsc;
+use std::time::Duration;
+
+/// Spawn `molfpga serve` with `extra` args on an ephemeral port and wait
+/// for the bound address on stderr (drained for the child's lifetime so
+/// slow-query dumps cannot fill the pipe).
+fn spawn_server(extra: &[&str]) -> (Child, SocketAddr) {
+    let mut args = vec!["serve", "--port", "0", "--workers", "2"];
+    args.extend_from_slice(extra);
+    let mut child = Command::new(env!("CARGO_BIN_EXE_molfpga"))
+        .args(&args)
+        .stdout(Stdio::null())
+        .stderr(Stdio::piped())
+        .spawn()
+        .expect("spawn molfpga serve");
+    let stderr = child.stderr.take().expect("piped stderr");
+    let (tx, rx) = mpsc::channel();
+    std::thread::spawn(move || {
+        for line in BufReader::new(stderr).lines() {
+            let Ok(line) = line else { return };
+            if let Some(addr) = line.strip_prefix("[molfpga] bound ") {
+                let _ = tx.send(addr.trim().to_string());
+            }
+        }
+    });
+    let addr = rx
+        .recv_timeout(Duration::from_secs(60))
+        .expect("server printed its bound address")
+        .parse()
+        .expect("bound address parses");
+    (child, addr)
+}
+
+/// Poll `TRACE qid` until every needle appears in the rendered span tree
+/// (the reply span lands just after the client's result; see the server
+/// unit tests) and return the final tree.
+fn poll_trace(c: &mut Client, qid: u64, needles: &[&str]) -> Vec<String> {
+    let t0 = std::time::Instant::now();
+    loop {
+        let lines = c.trace(qid).expect("TRACE replies");
+        let tree = lines.join("\n");
+        if needles.iter().all(|n| tree.contains(n)) {
+            return lines;
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(20),
+            "qid {qid}: stages {needles:?} never all appeared in:\n{tree}"
+        );
+        std::thread::sleep(Duration::from_millis(25));
+    }
+}
+
+#[test]
+fn live_server_metrics_and_traces_cover_the_pipeline() {
+    let data_dir = std::env::temp_dir().join(format!("molfpga-obs-scrape-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&data_dir);
+    // `--max-wait-us 5000` + one-at-a-time requests means every query
+    // waits out the full batch window, so `--slow-query-ms 1` classifies
+    // every query as slow — the slow-log assertions are deterministic,
+    // not a race against a fast scan.
+    let (mut child, addr) = spawn_server(&[
+        "--live",
+        "--data-dir",
+        data_dir.to_str().expect("utf-8 temp path"),
+        "--fsync",
+        "every",
+        "--no-compactor",
+        "--n-db",
+        "2000",
+        "--seed",
+        "11",
+        "--m",
+        "1",
+        "--cutoff",
+        "0.0",
+        "--hnsw-m",
+        "6",
+        "--ef-construction",
+        "32",
+        "--ef",
+        "32",
+        "--max-batch",
+        "16",
+        "--max-wait-us",
+        "5000",
+        "--slow-query-ms",
+        "1",
+    ]);
+    let mut c = Client::connect(addr).expect("connect");
+    let extra = Database::synthesize(20, &ChemblModel::default(), 12);
+
+    // First connection: id_base = 1, so the n-th qid-consuming request
+    // (ADD/ADDFP/DEL/SEARCH — METRICS and TRACE don't burn ids) carries
+    // qid 2 + n. Track n by hand so traces can be fetched by id.
+    let mut op = 0u64;
+    let qid_of = |op: u64| 2 + op;
+
+    // 20 durable writes, then one delete. The first write's qid is kept
+    // for the WAL-span assertion below.
+    let wal_qid = qid_of(op);
+    for (i, fp) in extra.fps.iter().enumerate() {
+        let id = c.add_fp(fp).expect("acked add");
+        assert_eq!(id, 2000 + i as u64);
+        op += 1;
+    }
+    assert!(c.del(2000).expect("DEL replies"));
+    op += 1;
+
+    // ~200 exact + 20 approximate queries.
+    let queries = Database::synthesize(8, &ChemblModel::default(), 31);
+    let search_qid = qid_of(op);
+    for i in 0..200u64 {
+        let q = &queries.fps[(i % 8) as usize];
+        let hits = c.search(q, 10, "exact").expect("SEARCH ok");
+        assert!(!hits.is_empty());
+        op += 1;
+    }
+    for i in 0..20u64 {
+        let q = &queries.fps[(i % 8) as usize];
+        let hits = c.search(q, 10, "hnsw").expect("SEARCH ok");
+        assert!(!hits.is_empty());
+        op += 1;
+    }
+
+    // --- TRACE: a durable write shows its WAL spans… ----------------------
+    let tree = poll_trace(&mut c, wal_qid, &["stage=wal_append", "stage=wal_fsync"]).join("\n");
+    assert!(!tree.contains("dur_us=0.000"), "durations clamp non-zero:\n{tree}");
+
+    // …and a query shows every serving stage with non-zero durations.
+    let tree = poll_trace(
+        &mut c,
+        search_qid,
+        &["stage=router", "stage=batch", "stage=scan", "stage=reply"],
+    )
+    .join("\n");
+    assert!(!tree.contains("dur_us=0.000"), "durations clamp non-zero:\n{tree}");
+
+    // --- METRICS: valid exposition, everything the traffic implies. -------
+    let text = c.metrics().expect("METRICS replies");
+    assert!(text.trim_end().ends_with("# EOF"), "exposition ends in EOF: {text}");
+    let expo = parse_and_validate(&text).expect("valid Prometheus text");
+    let v = |name: &str, labels: &[(&str, &str)]| {
+        expo.value(name, labels)
+            .unwrap_or_else(|| panic!("sample {name}{labels:?} missing from:\n{text}"))
+    };
+    assert!(v("molfpga_queries_total", &[("outcome", "completed")]) >= 220.0);
+    assert!(v("molfpga_query_latency_seconds_count", &[]) >= 220.0);
+    for stage in ["router", "batch", "scan", "reply"] {
+        assert!(
+            v("molfpga_stage_latency_seconds_count", &[("stage", stage)]) >= 220.0,
+            "stage {stage} under-counted in:\n{text}"
+        );
+    }
+    assert!(
+        v("molfpga_stage_latency_seconds_count", &[("stage", "wal_append")]) >= 20.0,
+        "every durable write WAL-appends:\n{text}"
+    );
+    assert!(
+        v("molfpga_stage_latency_seconds_count", &[("stage", "wal_fsync")]) >= 20.0,
+        "--fsync every syncs per write:\n{text}"
+    );
+    assert!(v("molfpga_bitbound_rows_total", &[("outcome", "scored")]) > 0.0);
+    let kernel_work: f64 = KERNEL_BACKEND_NAMES
+        .iter()
+        .map(|&b| {
+            v("molfpga_kernel_dispatch_rows_total", &[("backend", b)])
+                + v("molfpga_kernel_dispatch_blocks_total", &[("backend", b)])
+        })
+        .sum();
+    assert!(kernel_work > 0.0, "exact scans must tally kernel dispatches:\n{text}");
+    assert!(v("molfpga_hnsw_hops_total", &[]) > 0.0, "hnsw queries must tally hops");
+    assert!(v("molfpga_hnsw_distance_evals_total", &[]) > 0.0);
+    // Ingest gauges per registered index; the delete and the adds landed.
+    for index in ["exact", "hnsw"] {
+        assert!(v("molfpga_ingest_adds_total", &[("index", index)]) >= 20.0);
+        assert!(v("molfpga_ingest_deletes_total", &[("index", index)]) >= 1.0);
+    }
+    // Fixed-registry metrics render even when idle.
+    let _ = v("molfpga_compaction_installed_epoch", &[]);
+    let _ = v("molfpga_recovery_replay_seconds", &[]);
+
+    // --- Slow-query log fired (every query waited out the 5ms window). ----
+    let dumps = c.trace_slow().expect("TRACE SLOW replies");
+    assert!(!dumps.is_empty(), "slow-query ring must have retained dumps");
+    assert!(
+        dumps.iter().any(|l| l.contains("slow-query qid=")),
+        "dump headers present: {dumps:?}"
+    );
+
+    child.kill().expect("SIGKILL server");
+    child.wait().expect("reap server");
+    let _ = std::fs::remove_dir_all(&data_dir);
+}
+
+#[test]
+fn sharded_server_exposes_merge_and_per_shard_scans() {
+    let (mut child, addr) = spawn_server(&[
+        "--n-db",
+        "1500",
+        "--seed",
+        "7",
+        "--shards",
+        "3",
+        "--m",
+        "1",
+        "--cutoff",
+        "0.0",
+        "--hnsw-m",
+        "6",
+        "--ef-construction",
+        "32",
+        "--ef",
+        "32",
+        "--max-batch",
+        "8",
+        "--max-wait-us",
+        "1000",
+    ]);
+    let mut c = Client::connect(addr).expect("connect");
+    let queries = Database::synthesize(6, &ChemblModel::default(), 3);
+    for i in 0..30u64 {
+        let hits = c.search(&queries.fps[(i % 6) as usize], 5, "exact").expect("SEARCH ok");
+        assert!(!hits.is_empty());
+    }
+    // First connection, first qid-consuming request → qid 2: its trace
+    // must carry one scan span per shard.
+    let tree = poll_trace(
+        &mut c,
+        2,
+        &["stage=merge", "shard=0", "shard=1", "shard=2", "stage=reply"],
+    )
+    .join("\n");
+    assert!(!tree.contains("dur_us=0.000"), "durations clamp non-zero:\n{tree}");
+
+    let text = c.metrics().expect("METRICS replies");
+    let expo = parse_and_validate(&text).expect("valid Prometheus text");
+    let v = |name: &str, labels: &[(&str, &str)]| {
+        expo.value(name, labels)
+            .unwrap_or_else(|| panic!("sample {name}{labels:?} missing from:\n{text}"))
+    };
+    assert!(
+        v("molfpga_stage_latency_seconds_count", &[("stage", "merge")]) >= 30.0,
+        "every sharded query merges:\n{text}"
+    );
+    assert!(
+        v("molfpga_stage_latency_seconds_count", &[("stage", "scan")]) >= 90.0,
+        "3 shards scan per query:\n{text}"
+    );
+
+    child.kill().expect("SIGKILL server");
+    child.wait().expect("reap server");
+}
